@@ -1,0 +1,91 @@
+//! Cache-policy study: replay a serving access trace through every cache
+//! policy (paper §8.4) and report hit ratios, including the Belady ORACLE
+//! upper bound.
+//!
+//! ```sh
+//! cargo run --release --example cache_study
+//! ```
+
+use moe_infinity::benchsuite::Table;
+use moe_infinity::cache::{
+    ActivationPolicy, CacheCtx, CacheKind, ExpertCache, LfuPolicy, LruPolicy, NeighborPolicy,
+    OraclePolicy, Policy,
+};
+use moe_infinity::engine::SimEngine;
+use moe_infinity::model::{ExpertKey, ModelSpec};
+use moe_infinity::trace::Eam;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let spec = ModelSpec::preset("switch-base-64").unwrap();
+    let dataset = DatasetPreset::by_name("mixed").unwrap();
+    let mut w = Workload::new(&spec, dataset, 11);
+
+    // access trace: the exact demand order the engine would issue
+    let batches: Vec<Vec<_>> = (0..30).map(|_| vec![w.gen_sequence()]).collect();
+    let trace = SimEngine::demand_trace(&spec, &batches);
+    println!("trace: {} expert demands over {} sequences", trace.len(), batches.len());
+
+    // the current-EAM context evolves as the trace replays; rebuild it per
+    // sequence like the engine does
+    let seq_eams: Vec<Eam> = batches
+        .iter()
+        .map(|b| b[0].to_eam(spec.n_layers, spec.experts_per_layer))
+        .collect();
+
+    let capacities = [64usize, 128, 256, 384];
+    let mut table = Table::new(&["policy", "cap=64", "cap=128", "cap=256", "cap=384"]);
+    let kinds: Vec<(&str, CacheKind)> = vec![
+        ("activation (Alg. 2)", CacheKind::Activation),
+        ("lru", CacheKind::Lru),
+        ("lfu", CacheKind::Lfu),
+        ("neighbor", CacheKind::Neighbor),
+        ("oracle (Belady)", CacheKind::Oracle),
+    ];
+
+    for (name, kind) in kinds {
+        let mut cells = vec![name.to_string()];
+        for &cap in &capacities {
+            let policy: Box<dyn Policy> = match kind {
+                CacheKind::Activation => Box::new(ActivationPolicy::new()),
+                CacheKind::Lru => Box::new(LruPolicy::new()),
+                CacheKind::Lfu => Box::new(LfuPolicy::new()),
+                CacheKind::Neighbor => Box::new(NeighborPolicy::new()),
+                CacheKind::Oracle => Box::new(OraclePolicy::from_trace(&trace)),
+            };
+            let mut cache = ExpertCache::new(cap, policy);
+            // replay per sequence so the activation policy sees the right EAM
+            let mut i = 0;
+            for (si, b) in batches.iter().enumerate() {
+                let n: usize = demands_of(&spec, &b[0]);
+                let ctx = CacheCtx {
+                    cur_eam: &seq_eams[si],
+                    n_layers: spec.n_layers,
+                };
+                for key in &trace[i..i + n] {
+                    if !cache.access(*key) {
+                        cache.insert(*key, &ctx);
+                    }
+                }
+                i += n;
+            }
+            cells.push(format!("{:.1}%", cache.hit_ratio() * 100.0));
+        }
+        table.row(&cells);
+    }
+    table.print("Cache hit ratio by policy and capacity (switch-base-64, mixed)");
+}
+
+fn demands_of(spec: &ModelSpec, seq: &moe_infinity::workload::SequenceActivation) -> usize {
+    let mut n = 0;
+    for iter in &seq.routes {
+        for l in 0..spec.n_layers {
+            let mut distinct: std::collections::BTreeSet<u16> = Default::default();
+            for &(e, _) in &iter[l] {
+                distinct.insert(e);
+            }
+            n += distinct.len();
+        }
+    }
+    n
+}

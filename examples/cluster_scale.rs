@@ -1,0 +1,70 @@
+//! Expert-parallel cluster scaling (paper §7, Fig. 13): latency scales down
+//! and throughput scales up with node count.
+//!
+//! ```sh
+//! cargo run --release --example cluster_scale
+//! ```
+
+use moe_infinity::benchsuite::{build_eamc, tier_with, Table};
+use moe_infinity::cache::CacheKind;
+use moe_infinity::cluster::{ClusterModel, Placement};
+use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::model::ModelSpec;
+use moe_infinity::util::fmt_secs;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let spec = ModelSpec::preset("switch-large-128").unwrap();
+    let dataset = DatasetPreset::by_name("mixed").unwrap();
+
+    // placement sanity: balanced across nodes
+    for n in [1, 2, 4, 6] {
+        let p = Placement::round_robin(&spec, n);
+        let load = p.load(0);
+        println!("{} node(s): experts/node in layer 0 = {:?}", n, &load[..load.len().min(6)]);
+    }
+
+    let mut table = Table::new(&["nodes", "mean token latency", "throughput (tokens/s)"]);
+    for nodes in [1usize, 2, 3, 4, 6] {
+        let eamc = build_eamc(&spec, &dataset, 240, 100, 5);
+        // gpu_capacity is PER GPU; MemorySim scales by n_gpus. V100-16GB
+        // minus dense/KV/runtime leaves ~40 switch-large experts per GPU.
+        let mut tier = tier_with(
+            &spec,
+            40,
+            spec.total_experts(),
+            6.0,
+            16.0,
+            CacheKind::Activation,
+        );
+        tier.n_gpus = 4 * nodes;
+        let mut engine = SimEngine::new(
+            spec.clone(),
+            tier,
+            eamc,
+            ComputeModel::v100(),
+            EngineConfig::default(),
+        )
+        .with_cluster(ClusterModel::new(nodes));
+
+        let mut w = Workload::new(&spec, dataset.clone(), 5);
+        let mut lat_sum = 0.0;
+        let mut lat_n = 0;
+        let mut tokens = 0u64;
+        let t0 = engine.now();
+        for _ in 0..10 {
+            let seqs: Vec<_> = (0..4).map(|_| w.gen_sequence()).collect();
+            tokens += seqs.iter().map(|s| s.total_tokens() as u64).sum::<u64>();
+            let r = engine.run_batch(&seqs, engine.now());
+            lat_sum += r.token_latencies.iter().sum::<f64>();
+            lat_n += r.token_latencies.len();
+        }
+        let makespan = engine.now() - t0;
+        table.row(&[
+            nodes.to_string(),
+            fmt_secs(lat_sum / lat_n as f64),
+            format!("{:.0}", tokens as f64 / makespan),
+        ]);
+    }
+    table.print("Cluster scalability (switch-large-128, 4 V100/node)");
+}

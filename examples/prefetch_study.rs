@@ -1,0 +1,68 @@
+//! Prefetch-strategy study: compare the paper's activation-aware predictor
+//! against the ZeRO-Infinity (TopK-by-id) and BrainStorm (Traced-TopK)
+//! baselines on prediction accuracy and end-to-end serving recall.
+//!
+//! ```sh
+//! cargo run --release --example prefetch_study
+//! ```
+
+use moe_infinity::benchsuite::{build_eamc, prediction_accuracy, tier_with, Table};
+use moe_infinity::cache::CacheKind;
+use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::model::ModelSpec;
+use moe_infinity::prefetch::PredictorKind;
+use moe_infinity::trace::Eamc;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let spec = ModelSpec::preset("switch-base-64").unwrap();
+    let dataset = DatasetPreset::by_name("mmlu").unwrap();
+    let eamc = build_eamc(&spec, &dataset, 240, 60, 7);
+
+    let strategies = [
+        ("activation-aware", PredictorKind::ActivationAware { refine: true }),
+        ("one-shot (no refine)", PredictorKind::ActivationAware { refine: false }),
+        ("traced-topk (BrainStorm)", PredictorKind::TracedTopK { k: 8 }),
+        ("topk-by-id (ZeRO)", PredictorKind::TopK { k: 8 }),
+        ("none (on-demand)", PredictorKind::NoPrefetch),
+    ];
+
+    let mut table = Table::new(&["strategy", "pred. accuracy", "serving recall", "mean token lat"]);
+    for (name, kind) in strategies {
+        let mut w = Workload::new(&spec, dataset.clone(), 7);
+        let acc = prediction_accuracy(&spec, kind, &eamc, &mut w, 12);
+
+        // end-to-end recall under the memory simulator
+        let mut w2 = Workload::new(&spec, dataset.clone(), 7);
+        let eamc2 = build_eamc(&spec, &dataset, 240, 60, 7);
+        let mut engine = SimEngine::new(
+            spec.clone(),
+            tier_with(&spec, spec.total_experts() / 2, spec.total_experts(), 6.0, 32.0, CacheKind::Activation),
+            eamc2,
+            ComputeModel::a5000(),
+            EngineConfig {
+                predictor: kind,
+                ..Default::default()
+            },
+        );
+        let mut hits = 0u64;
+        let mut demands = 0u64;
+        let mut lat_sum = 0.0;
+        let mut lat_n = 0usize;
+        for _ in 0..12 {
+            let seq = w2.gen_sequence();
+            let r = engine.run_batch(&[seq], engine.now());
+            hits += r.gpu_hits;
+            demands += r.demands;
+            lat_sum += r.token_latencies.iter().sum::<f64>();
+            lat_n += r.token_latencies.len();
+        }
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}%", acc * 100.0),
+            format!("{:.1}%", hits as f64 / demands as f64 * 100.0),
+            format!("{:.2}ms", lat_sum / lat_n as f64 * 1e3),
+        ]);
+    }
+    table.print("Prefetch strategies (switch-base-64, mmlu)");
+}

@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts, build a tiny MoE with activation-aware
+//! offloading, and generate a few sequences end-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use moe_infinity::engine::{real::tiny_spec, RealMoeEngine};
+use moe_infinity::memory::TierConfig;
+use moe_infinity::model::weights::TinyConfig;
+use moe_infinity::prefetch::PredictorKind;
+use moe_infinity::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+
+    // 1. Model geometry comes from the AOT manifest — rust cannot drift
+    //    from what python compiled.
+    let cfg = TinyConfig::from_manifest(&artifacts)?;
+    let spec = tiny_spec(&cfg);
+
+    // 2. Memory hierarchy: a third of the experts fit the "GPU".
+    let mut tier = TierConfig::default_for(&spec, spec.total_bytes() / 3, spec.total_bytes());
+    tier.gpu_capacity = (spec.total_experts() / 3).max(2);
+
+    // 3. The engine: PJRT-compiled HLO + EAM tracing + prefetch + cache.
+    let mut engine = RealMoeEngine::new(
+        &artifacts,
+        42,
+        4,
+        tier,
+        PredictorKind::ActivationAware { refine: true },
+    )?;
+
+    // 4. Offline tracing phase: build the EAMC from a handful of prompts.
+    let prompts_of = |task: usize| -> Vec<Vec<i32>> {
+        let per = cfg.vocab / 4;
+        (0..cfg.batch)
+            .map(|i| (0..8).map(|j| (task * per + (7 * i + 13 * j) % per) as i32).collect())
+            .collect()
+    };
+    let trace: Vec<_> = (0..4).map(prompts_of).collect();
+    engine.build_eamc(&trace, 8, 12)?;
+    println!("EAMC ready: {} representative activation patterns", engine.eamc().len());
+
+    // 5. Serve a batch.
+    let out = engine.generate(&prompts_of(1), 12)?;
+    for (i, toks) in out.tokens.iter().enumerate() {
+        println!("sequence {i}: {toks:?}");
+    }
+    let lats = out.token_latencies();
+    println!(
+        "per-token latency: mean {} | prefetch recall {:.0}%",
+        fmt_secs(lats.iter().sum::<f64>() / lats.len() as f64),
+        out.recall() * 100.0
+    );
+    Ok(())
+}

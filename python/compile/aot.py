@@ -1,0 +1,160 @@
+"""AOT compile path: lower each model piece to an HLO-text artifact.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (all under ``artifacts/``):
+
+  embed.hlo.txt      attn_step.hlo.txt   router.hlo.txt
+  expert.hlo.txt     combine.hlo.txt     lm_head.hlo.txt
+  manifest.json      — model geometry + per-artifact arg shapes, so the rust
+                       runtime (rust/src/runtime/artifacts.rs) cannot drift
+                       from what was compiled.
+
+Run once via ``make artifacts``; a content hash in the manifest makes the
+target a no-op when inputs are unchanged.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: the rust
+    side unwraps with to_tuple1/to_tuple_len)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(cfg: ModelConfig):
+    """Lower every decode-step piece at the fixed geometry in ``cfg``.
+
+    Returns {name: (hlo_text, arg_shapes, out_arity)}.
+    """
+    B, D, F, V, S, E = cfg.batch, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq, cfg.n_experts
+
+    pieces = {}
+
+    def add(name, fn, specs, out_arity):
+        lowered = jax.jit(fn).lower(*specs)
+        pieces[name] = (
+            to_hlo_text(lowered),
+            [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            out_arity,
+        )
+
+    add(
+        "embed",
+        lambda ids, emb: (model.embed(ids, emb),),
+        [_spec((B,), jnp.int32), _spec((V, D))],
+        1,
+    )
+    add(
+        "attn_step",
+        lambda x, k, v, pos, wq, wk, wv, wo: model.attn_step(
+            x, k, v, pos, wq, wk, wv, wo, n_heads=cfg.n_heads
+        ),
+        [
+            _spec((B, D)),
+            _spec((B, S, D)),
+            _spec((B, S, D)),
+            _spec((), jnp.int32),
+            _spec((D, D)),
+            _spec((D, D)),
+            _spec((D, D)),
+            _spec((D, D)),
+        ],
+        3,
+    )
+    add("router", model.router, [_spec((B, D)), _spec((D, E))], 2)
+    add(
+        "expert",
+        lambda x, w1, b1, w2, b2: (model.expert(x, w1, b1, w2, b2),),
+        [_spec((B, D)), _spec((D, F)), _spec((F,)), _spec((F, D)), _spec((D,))],
+        1,
+    )
+    add(
+        "combine",
+        lambda x, eo, g, sel: (model.combine(x, eo, g, sel),),
+        [_spec((B, D)), _spec((B, D)), _spec((B,)), _spec((B,))],
+        1,
+    )
+    add(
+        "lm_head",
+        lambda x, w: (model.lm_head(x, w),),
+        [_spec((B, D)), _spec((D, V))],
+        1,
+    )
+    return pieces
+
+
+def _input_hash() -> str:
+    """Hash of the compile-path sources, for no-op rebuild detection."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = ModelConfig()
+    src_hash = _input_hash()
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("src_hash") == src_hash:
+            print(f"artifacts up to date (hash {src_hash[:12]}), skipping")
+            return
+
+    pieces = build_artifacts(cfg)
+    manifest = {
+        "src_hash": src_hash,
+        "config": cfg.__dict__,
+        "artifacts": {},
+    }
+    for name, (text, arg_shapes, out_arity) in pieces.items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_shapes,
+            "outputs": out_arity,
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(arg_shapes)} args)")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: Switch-Transformer expert FFN, tiled for TPU VMEM.
+
+The paper's compute hot-spot on the GPU is the per-expert FFN
+``y = relu(x @ w1 + b1) @ w2 + b2``. The CUDA implementation tiles this over
+threadblocks in shared memory; the TPU re-think (DESIGN.md §Hardware
+Adaptation) tiles for VMEM instead:
+
+* token dimension blocked at 8 (f32 sublane granularity),
+* the hidden dimension ``F = d_ff`` blocked at 128 (lane granularity) and
+  walked by the *grid*, so each grid step stages one ``(D, bf)`` slice of
+  ``w1`` and one ``(bf, D)`` slice of ``w2`` HBM -> VMEM (double-buffered by
+  the Pallas pipeline) while accumulating the second matmul into the output
+  block that stays resident in VMEM,
+* the MXU sees ``(bt x D) @ (D x bf)`` and ``(bt x bf) @ (bf x D)`` tiles.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path and the form
+that lowers into the AOT HLO artifact consumed by the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    """Largest d <= cap with n % d == 0 (>= 1). Picks MXU/VPU-aligned tiles
+    when the dims allow and degrades gracefully for odd test shapes."""
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One grid step: o[i] += relu(x[i] @ w1[:, j] + b1[j]) @ w2[j, :].
+
+    Grid is (token blocks, F blocks); j (F) is the reduction axis walked
+    sequentially so the output block accumulates in VMEM.
+    """
+    j = pl.program_id(1)
+    h = jnp.maximum(
+        jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...][None, :],
+        0.0,
+    )
+    part = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part + b2_ref[...][None, :]
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f"))
+def expert_ffn(x, w1, b1, w2, b2, block_t: int = 8, block_f: int = 128):
+    """Pallas expert FFN. Shapes: x [T, D], w1 [D, F], b1 [F], w2 [F, D],
+    b2 [D] -> [T, D]. Computes in f32 and casts back to ``x.dtype``."""
+    T, D = x.shape
+    F = w1.shape[1]
+    bt = _largest_divisor_at_most(T, block_t)
+    bf = _largest_divisor_at_most(F, block_f)
+    grid = (T // bt, F // bf)
+
+    xf = x.astype(jnp.float32)
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i, j: (i, 0)),   # x: stays per i
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),   # w1 slice walks F
+            pl.BlockSpec((bf,), lambda i, j: (j,)),       # b1 slice
+            pl.BlockSpec((bf, D), lambda i, j: (j, 0)),   # w2 slice walks F
+            pl.BlockSpec((D,), lambda i, j: (0,)),        # b2
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), jnp.float32),
+        interpret=True,
+    )(
+        xf,
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )
+    return out.astype(x.dtype)
+
+
+def vmem_bytes(block_t: int, d_model: int, block_f: int, dtype_bytes: int = 4):
+    """Estimated VMEM residency of one grid step (for DESIGN.md §Perf):
+    x block + w1 slice + w2 slice + biases + h + output block."""
+    return dtype_bytes * (
+        block_t * d_model      # x block
+        + d_model * block_f    # w1 slice
+        + block_f * d_model    # w2 slice
+        + block_f + d_model    # biases
+        + block_t * block_f    # h intermediate
+        + block_t * d_model    # output accumulator
+    )

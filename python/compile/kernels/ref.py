@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float tolerance across a hypothesis-driven sweep of
+shapes and dtypes (see python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """Switch-Transformer expert FFN: y = relu(x @ w1 + b1) @ w2 + b2.
+
+    Args:
+      x:  [T, D]  tokens routed to this expert.
+      w1: [D, F]  up projection.
+      b1: [F]
+      w2: [F, D]  down projection.
+      b2: [D]
+    Returns:
+      [T, D]
+    """
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def router_ref(x, wr):
+    """Switch top-1 router: softmax gate + argmax expert index.
+
+    Args:
+      x:  [B, D] token hidden states.
+      wr: [D, E] router weights.
+    Returns:
+      (gates [B] f32, idx [B] i32): the top-1 gate value and expert index.
+    """
+    logits = x @ wr
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    gates = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+    return gates, idx
+
+
+def attention_ref(x, k_cache, v_cache, pos, wq, wk, wv, wo, n_heads):
+    """Single-step causal attention with a fixed-size KV cache.
+
+    Args:
+      x:       [B, D]      current-token hidden states.
+      k_cache: [B, S, D]   key cache (S = max sequence length).
+      v_cache: [B, S, D]   value cache.
+      pos:     []  i32     current position (same for all batch rows; rust
+                           pads per-sequence).
+      wq, wk, wv, wo: [D, D].
+      n_heads: static int.
+    Returns:
+      (out [B, D], new_k [B, S, D], new_v [B, S, D])
+    """
+    B, S, D = k_cache.shape
+    H = n_heads
+    hd = D // H
+    q = (x @ wq).reshape(B, H, hd)
+    k = (x @ wk).reshape(B, H, hd)
+    v = (x @ wv).reshape(B, H, hd)
+    # write k, v at position pos
+    onehot = (jnp.arange(S) == pos).astype(k_cache.dtype)  # [S]
+    new_k = k_cache * (1.0 - onehot)[None, :, None] + onehot[None, :, None] * (
+        k.reshape(B, 1, D)
+    )
+    new_v = v_cache * (1.0 - onehot)[None, :, None] + onehot[None, :, None] * (
+        v.reshape(B, 1, D)
+    )
+    kk = new_k.reshape(B, S, H, hd).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+    vv = new_v.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kk) / jnp.sqrt(float(hd))
+    mask = (jnp.arange(S) <= pos)[None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    ctx = jnp.einsum("bhs,bhsd->bhd", w, vv).reshape(B, D)
+    return ctx @ wo, new_k, new_v

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: Switch top-1 router.
+
+Small (E <= 256, D <= 1024) so a single-block VMEM-resident kernel is the
+right shape: one (B, D) @ (D, E) MXU matmul, then a fused VPU softmax +
+argmax. Emits the top-1 gate value and expert index per token — exactly the
+signal the rust coordinator consumes to update the current EAM (Alg. 1
+steps 5-7).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, wr_ref, gate_ref, idx_ref):
+    logits = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        wr_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    idx = jnp.argmax(p, axis=-1)
+    gate_ref[...] = jnp.max(p, axis=-1)
+    idx_ref[...] = idx.astype(jnp.int32)
+
+
+@jax.jit
+def router(x, wr):
+    """x [B, D], wr [D, E] -> (gates [B] f32, idx [B] i32)."""
+    B, _ = x.shape
+    return pl.pallas_call(
+        _router_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ),
+        interpret=True,
+    )(x, wr)

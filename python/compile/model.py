@@ -1,0 +1,106 @@
+"""L2 JAX model: decoder-only Switch-style MoE transformer, decode-step form.
+
+The model is *deconstructed* into the per-piece functions the rust engine
+needs for expert offloading: because experts migrate between memory tiers at
+runtime, expert weights must be **runtime arguments** to a small per-expert
+executable — a monolithic forward pass would bake a placement in. Each
+function here is lowered to its own HLO-text artifact by ``aot.py`` and
+executed by ``rust/src/runtime``:
+
+  embed      : token ids -> hidden states
+  attn_step  : one causal self-attention step against the rust-owned KV cache
+  router     : Pallas top-1 router (kernels/router.py)
+  expert_ffn : Pallas expert FFN     (kernels/expert_ffn.py)
+  combine    : residual + gate * expert output scatter-combine
+  lm_head    : hidden -> argmax next token (greedy decode)
+
+All pieces are pure functions of their inputs; rust owns every buffer
+(weights, KV cache, hidden states) between calls. Python never runs on the
+request path.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.expert_ffn import expert_ffn
+from .kernels.router import router as pallas_router
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of the small real-compute MoE used end-to-end.
+
+    Mirrors rust/src/model/spec.rs presets; the AOT manifest carries these so
+    the two sides cannot drift.
+    """
+
+    vocab: int = 512
+    d_model: int = 64
+    d_ff: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    n_experts: int = 8
+    max_seq: int = 64
+    batch: int = 4
+
+    @property
+    def expert_param_count(self) -> int:
+        # w1 [D,F] + b1 [F] + w2 [F,D] + b2 [D]
+        return 2 * self.d_model * self.d_ff + self.d_ff + self.d_model
+
+
+def embed(ids, emb):
+    """ids [B] i32, emb [V, D] -> [B, D]."""
+    return jnp.take(emb, ids, axis=0)
+
+
+def attn_step(x, k_cache, v_cache, pos, wq, wk, wv, wo, *, n_heads):
+    """One decode attention step; see kernels/ref.attention_ref for shapes.
+
+    Returns (out_with_residual [B, D], new_k, new_v).
+    """
+    B, S, D = k_cache.shape
+    H = n_heads
+    hd = D // H
+    q = (x @ wq).reshape(B, H, hd)
+    k = (x @ wk).reshape(B, H, hd)
+    v = (x @ wv).reshape(B, H, hd)
+    onehot = (jnp.arange(S) == pos).astype(k_cache.dtype)
+    new_k = k_cache * (1.0 - onehot)[None, :, None] + onehot[None, :, None] * k.reshape(B, 1, D)
+    new_v = v_cache * (1.0 - onehot)[None, :, None] + onehot[None, :, None] * v.reshape(B, 1, D)
+    kk = new_k.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    vv = new_v.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kk) / jnp.sqrt(float(hd))
+    mask = (jnp.arange(S) <= pos)[None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    ctx = jnp.einsum("bhs,bhsd->bhd", w, vv).reshape(B, D)
+    return x + ctx @ wo, new_k, new_v
+
+
+def router(x, wr):
+    """Pallas top-1 router. x [B, D], wr [D, E] -> (gates [B], idx [B] i32)."""
+    return pallas_router(x, wr)
+
+
+def expert(x, w1, b1, w2, b2):
+    """Pallas expert FFN over the tokens routed to one expert. [T,D]->[T,D]."""
+    return expert_ffn(x, w1, b1, w2, b2)
+
+
+def combine(x, expert_out, gates, sel):
+    """Residual + gated combine of per-token expert outputs.
+
+    x [B, D] pre-FFN hidden; expert_out [B, D] rows already gathered back
+    into token order by rust; gates [B]; sel [B] f32 mask (1.0 where the row
+    is a real token, 0.0 for batch padding).
+    """
+    return x + expert_out * (gates * sel)[:, None]
+
+
+def lm_head(x, w_out):
+    """x [B, D], w_out [D, V] -> greedy next token ids [B] i32."""
+    logits = x @ w_out
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

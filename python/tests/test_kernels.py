@@ -1,0 +1,142 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes and dtypes for the Pallas kernels and asserts
+allclose against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.expert_ffn import expert_ffn, vmem_bytes, _largest_divisor_at_most
+from compile.kernels.router import router
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- expert_ffn
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([1, 3, 4, 8, 16]),
+    d=st.sampled_from([8, 16, 64]),
+    f=st.sampled_from([16, 128, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref_f32(t, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _rand(ks[0], (t, d), jnp.float32)
+    w1 = _rand(ks[1], (d, f), jnp.float32) * 0.1
+    b1 = _rand(ks[2], (f,), jnp.float32) * 0.1
+    w2 = _rand(ks[3], (f, d), jnp.float32) * 0.1
+    b2 = _rand(ks[4], (d,), jnp.float32) * 0.1
+    got = expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(jnp.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([2, 8]),
+    d=st.sampled_from([16, 64]),
+    f=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref_bf16(t, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    dt = jnp.bfloat16
+    x = _rand(ks[0], (t, d), dt)
+    w1 = _rand(ks[1], (d, f), dt) * 0.1
+    b1 = _rand(ks[2], (f,), dt) * 0.1
+    w2 = _rand(ks[3], (f, d), dt) * 0.1
+    b2 = _rand(ks[4], (d,), dt) * 0.1
+    got = expert_ffn(x, w1, b1, w2, b2).astype(jnp.float32)
+    want = ref.expert_ffn_ref(
+        x.astype(jnp.float32),
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dt))
+
+
+def test_expert_ffn_odd_shapes_fall_back_to_full_block():
+    # T=5, F=7: no nice divisors; kernel must still be exact.
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = _rand(ks[0], (5, 12), jnp.float32)
+    w1 = _rand(ks[1], (12, 7), jnp.float32)
+    b1 = _rand(ks[2], (7,), jnp.float32)
+    w2 = _rand(ks[3], (7, 12), jnp.float32)
+    b2 = _rand(ks[4], (12,), jnp.float32)
+    got = expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_expert_ffn_grid_accumulation_multi_block():
+    # F=256 with block_f=128 -> 2 reduction steps; checks the accumulate path.
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = _rand(ks[0], (8, 32), jnp.float32)
+    w1 = _rand(ks[1], (32, 256), jnp.float32) * 0.05
+    b1 = _rand(ks[2], (256,), jnp.float32) * 0.05
+    w2 = _rand(ks[3], (256, 32), jnp.float32) * 0.05
+    b2 = _rand(ks[4], (32,), jnp.float32) * 0.05
+    got = expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_largest_divisor():
+    assert _largest_divisor_at_most(256, 128) == 128
+    assert _largest_divisor_at_most(96, 128) == 96
+    assert _largest_divisor_at_most(7, 4) == 1
+    assert _largest_divisor_at_most(12, 8) == 6
+
+
+def test_vmem_budget_for_paper_geometries():
+    # switch-large geometry (d_model=1024, d_ff=2816-ish): one grid step must
+    # fit in 16MB VMEM with bt=8, bf=128.
+    assert vmem_bytes(8, 1024, 128) <= 16 * 2**20
+    # nllb-moe geometry d_model=2048, d_ff=8192
+    assert vmem_bytes(8, 2048, 128) <= 16 * 2**20
+
+
+# -------------------------------------------------------------------- router
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    d=st.sampled_from([8, 64]),
+    e=st.sampled_from([4, 8, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_router_matches_ref(b, d, e, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = _rand(ks[0], (b, d), jnp.float32)
+    wr = _rand(ks[1], (d, e), jnp.float32)
+    g_got, i_got = router(x, wr)
+    g_want, i_want = ref.router_ref(x, wr)
+    np.testing.assert_array_equal(np.asarray(i_got), np.asarray(i_want))
+    np.testing.assert_allclose(np.asarray(g_got), np.asarray(g_want), rtol=1e-5, atol=1e-5)
+
+
+def test_router_gate_is_probability():
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = _rand(ks[0], (16, 32), jnp.float32)
+    wr = _rand(ks[1], (32, 8), jnp.float32)
+    g, i = router(x, wr)
+    g = np.asarray(g)
+    assert ((g > 1.0 / 8 - 1e-6) & (g <= 1.0 + 1e-6)).all()
+    assert ((np.asarray(i) >= 0) & (np.asarray(i) < 8)).all()

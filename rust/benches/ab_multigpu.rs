@@ -1,0 +1,54 @@
+//! §8.6 — multi-GPU server copy optimizations. The paper measures per-expert
+//! copy times on switch-large-128: atomic (fused) tensor copy takes
+//! DRAM->GPU from 7.2ms to 3.3ms and SSD->DRAM from 4ms to 3ms; the NUMA
+//! memory pool brings DRAM->GPU to 2ms. We model an expert as its
+//! constituent tensors (w1, b1, w2, b2) each paying per-transfer setup
+//! latency unless fused, and cross-NUMA traffic paying a bandwidth penalty
+//! unless pooled per NUMA node.
+
+use moe_infinity::benchsuite::Table;
+use moe_infinity::memory::Link;
+use moe_infinity::model::ModelSpec;
+
+/// Per-expert copy-time model: `tensors` transfers of expert_bytes total,
+/// each paying `setup` latency; fused = one transfer; NUMA penalty scales
+/// effective bandwidth.
+fn expert_copy_time(spec: &ModelSpec, link: &Link, fused: bool, numa_pool: bool) -> f64 {
+    // an expert is 4 tensors, and CUDA copies historically split large
+    // transfers into chunks; per-copy driver setup dominates small tensors
+    let setup = 1.7e-3; // driver + allocator overhead per copy batch
+    let n_copies = if fused { 1 } else { 4 };
+    let bw_factor = if numa_pool { 1.0 } else { 0.55 }; // cross-NUMA hop
+    let eff = Link {
+        bandwidth: link.bandwidth * bw_factor,
+        latency: link.latency,
+    };
+    n_copies as f64 * setup + eff.transfer_time(spec.expert_bytes())
+}
+
+fn main() {
+    let spec = ModelSpec::preset("switch-large-128").unwrap();
+    let pcie = Link::new(32.0, 10e-6); // DRAM -> GPU
+    let ssd = Link::new(12.0, 50e-6); // RAID0 SSD -> DRAM
+
+    let mut table = Table::new(&["configuration", "DRAM->GPU /expert", "SSD->DRAM /expert"]);
+    for (name, fused, pool) in [
+        ("baseline (per-tensor copies, no pool)", false, false),
+        ("+ atomic fused copy", true, false),
+        ("+ NUMA memory pool", true, true),
+    ] {
+        table.row(&[
+            name.into(),
+            format!("{:.1}ms", expert_copy_time(&spec, &pcie, fused, pool) * 1e3),
+            format!(
+                "{:.1}ms",
+                // SSD path is unaffected by GPU NUMA pooling
+                expert_copy_time(&spec, &ssd, fused, true) * 1e3
+            ),
+        ]);
+    }
+    table.print("§8.6 — multi-GPU copy optimizations (switch-large-128, per-expert copy time)");
+    println!(
+        "paper anchors: 7.2ms -> 3.3ms (fused) -> 2ms (NUMA pool) DRAM->GPU; 4ms -> 3ms SSD->DRAM"
+    );
+}

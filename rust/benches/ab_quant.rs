@@ -1,0 +1,56 @@
+//! Extension ablation (paper §9, "Model compression ... MoE-Infinity is
+//! complementary with these techniques"): serving latency when experts are
+//! stored/transferred in bf16 instead of f32. Halving the expert byte size
+//! halves transfer time AND doubles every cache tier's expert capacity —
+//! the gains compound, which is exactly why the paper calls quantized
+//! offloading complementary.
+
+use moe_infinity::benchsuite::{build_eamc, tier_with, Table};
+use moe_infinity::cache::CacheKind;
+use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::model::ModelSpec;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let mut table = Table::new(&["model", "dtype", "expert MB", "gpu cache", "mean token lat", "recall"]);
+    for model in ["switch-large-128", "nllb-moe-128"] {
+        let dataset = if model.starts_with("nllb") { "translation" } else { "mixed" };
+        for (dtype, bytes) in [("f32", 4usize), ("bf16", 2)] {
+            let mut spec = ModelSpec::preset(model).unwrap();
+            spec.dtype_bytes = bytes;
+            let ds = DatasetPreset::by_name(dataset).unwrap();
+            let eamc = build_eamc(&spec, &ds, 240, 80, 22);
+            // fixed 15GB GPU expert budget: capacity doubles under bf16
+            let cap = (15e9 as u64 / spec.expert_bytes()) as usize;
+            let mut engine = SimEngine::new(
+                spec.clone(),
+                tier_with(&spec, cap, spec.total_experts(), 6.0, 32.0, CacheKind::Activation),
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            );
+            let mut w = Workload::new(&spec, ds, 22);
+            let mut lat = 0.0;
+            let mut n = 0;
+            let mut hits = 0u64;
+            let mut demands = 0u64;
+            for _ in 0..8 {
+                let seq = w.gen_sequence();
+                let r = engine.run_batch(&[seq], engine.now());
+                lat += r.token_latencies.iter().sum::<f64>();
+                n += r.token_latencies.len();
+                hits += r.gpu_hits;
+                demands += r.demands;
+            }
+            table.row(&[
+                model.into(),
+                dtype.into(),
+                format!("{:.0}", spec.expert_bytes() as f64 / 1e6),
+                cap.to_string(),
+                format!("{:.1}ms", lat / n as f64 * 1e3),
+                format!("{:.0}%", hits as f64 / demands as f64 * 100.0),
+            ]);
+        }
+    }
+    table.print("Extension — bf16 expert offloading (15GB GPU expert budget)");
+}

@@ -1,0 +1,69 @@
+//! Figure 4 — "Impacts of RPS": mean per-token latency vs request rate for
+//! the four models and four systems. Expected shape (paper §8.2):
+//! MoE-Infinity ≪ PyTorch-UM ≪ ZeRO-Offload ≈ ZeRO-Infinity, with
+//! MoE-Infinity sustaining the 1s constraint at several-fold higher RPS.
+
+use moe_infinity::benchsuite::{run_serve, Table};
+use moe_infinity::config::ServeConfig;
+use moe_infinity::util::fmt_secs;
+
+fn main() {
+    let models = [
+        ("switch-base-128", "mixed"),
+        ("switch-base-256", "mixed"),
+        ("switch-large-128", "mixed"),
+        ("nllb-moe-128", "translation"),
+    ];
+    let fast_systems = ["moe-infinity", "pytorch-um"];
+    let slow_systems = ["zero-offload", "zero-infinity"];
+    let rps_grid = [0.5, 1.0, 2.0, 4.0, 8.0];
+
+    for (model, dataset) in models {
+        let mut table = Table::new(&["system", "rps", "mean token lat", "p99", "1s SLO?"]);
+        for system in fast_systems {
+            for &rps in &rps_grid {
+                let mut cfg = ServeConfig::default();
+                cfg.model = model.into();
+                cfg.dataset = dataset.into();
+                cfg.system = system.into();
+                cfg.workload.rps = rps;
+                cfg.workload.duration = 12.0;
+                cfg.eamc.trace_sequences = 300;
+                cfg.eamc.capacity = 100;
+                let mut r = run_serve(&cfg).expect("serve");
+                let mean = r.token_latency.mean();
+                table.row(&[
+                    system.into(),
+                    format!("{rps}"),
+                    fmt_secs(mean),
+                    fmt_secs(r.token_latency.p99()),
+                    if mean <= 1.0 { "yes".into() } else { "NO".into() },
+                ]);
+            }
+        }
+        // ZeRO systems fetch every expert of every layer; a couple of
+        // points suffice to show the >10x gap (and keep runtime sane).
+        for system in slow_systems {
+            for &rps in &rps_grid[..2] {
+                let mut cfg = ServeConfig::default();
+                cfg.model = model.into();
+                cfg.dataset = dataset.into();
+                cfg.system = system.into();
+                cfg.workload.rps = rps;
+                cfg.workload.duration = 4.0;
+                cfg.eamc.trace_sequences = 50;
+                cfg.eamc.capacity = 20;
+                let mut r = run_serve(&cfg).expect("serve");
+                let mean = r.token_latency.mean();
+                table.row(&[
+                    system.into(),
+                    format!("{rps}"),
+                    fmt_secs(mean),
+                    fmt_secs(r.token_latency.p99()),
+                    if mean <= 1.0 { "yes".into() } else { "NO".into() },
+                ]);
+            }
+        }
+        table.print(&format!("Fig. 4 — latency vs RPS ({model})"));
+    }
+}

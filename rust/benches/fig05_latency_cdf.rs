@@ -1,0 +1,44 @@
+//! Figure 5 — latency CDFs under low and high load for switch-large-128 and
+//! nllb-moe-128, MoE-Infinity vs the best baseline (PyTorch-UM). Expected
+//! shape: MoE-Infinity's CDF is steep (stable low latency); PyTorch-UM has a
+//! long tail at low load and shifts wholesale to the right at high load.
+
+use moe_infinity::benchsuite::{run_serve, Table};
+use moe_infinity::config::ServeConfig;
+use moe_infinity::util::fmt_secs;
+
+fn main() {
+    for (model, dataset) in [("switch-large-128", "mixed"), ("nllb-moe-128", "translation")] {
+        for (load, rps) in [("low", 0.3), ("high", 2.0)] {
+            let mut table = Table::new(&["percentile", "moe-infinity", "pytorch-um"]);
+            let mut cdfs = Vec::new();
+            for system in ["moe-infinity", "pytorch-um"] {
+                let mut cfg = ServeConfig::default();
+                cfg.model = model.into();
+                cfg.dataset = dataset.into();
+                cfg.system = system.into();
+                cfg.workload.rps = rps;
+                cfg.workload.duration = 20.0;
+                cfg.eamc.trace_sequences = 300;
+                cfg.eamc.capacity = 100;
+                let mut r = run_serve(&cfg).expect("serve");
+                let pcts: Vec<f64> = [10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9]
+                    .iter()
+                    .map(|&p| r.request_latency.percentile(p))
+                    .collect();
+                cdfs.push(pcts);
+            }
+            for (i, p) in ["p10", "p25", "p50", "p75", "p90", "p99", "p99.9"]
+                .iter()
+                .enumerate()
+            {
+                table.row(&[
+                    p.to_string(),
+                    fmt_secs(cdfs[0][i]),
+                    fmt_secs(cdfs[1][i]),
+                ]);
+            }
+            table.print(&format!("Fig. 5 — request-latency CDF ({model}, {load} load rps={rps})"));
+        }
+    }
+}

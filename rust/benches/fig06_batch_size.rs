@@ -1,0 +1,61 @@
+//! Figure 6 — "Impacts of batch size": per-token latency for batch sizes
+//! 1..64 on switch-large-128 and nllb-moe-128. Expected shape: MoE-Infinity
+//! degrades gracefully (sparse activation + locality persist to batch 64);
+//! PyTorch-UM's latency explodes as aggregated activations defeat LRU.
+
+use moe_infinity::benchsuite::{build_eamc, Table};
+use moe_infinity::config::ServeConfig;
+use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::trace::Eamc;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn run_batches(model: &str, dataset: &str, system: &str, batch: usize) -> f64 {
+    let mut cfg = ServeConfig::default();
+    cfg.model = model.into();
+    cfg.dataset = dataset.into();
+    cfg.system = system.into();
+    let spec = cfg.model_spec().unwrap();
+    let ds = DatasetPreset::by_name(dataset).unwrap();
+    let eamc = if system == "moe-infinity" {
+        build_eamc(&spec, &ds, 300, 100, 3)
+    } else {
+        Eamc::new(8, spec.n_layers, spec.experts_per_layer)
+    };
+    let mut engine = SimEngine::new(
+        spec.clone(),
+        cfg.tier_config().unwrap(),
+        eamc,
+        ComputeModel::a5000(),
+        EngineConfig {
+            predictor: cfg.predictor_kind().unwrap(),
+            fetch_all_experts: moe_infinity::baselines::fetch_all_for(system).unwrap(),
+            ..Default::default()
+        },
+    );
+    let mut w = Workload::new(&spec, ds, 3);
+    let mut lat = 0.0;
+    let mut n = 0;
+    for _ in 0..4 {
+        let seqs: Vec<_> = (0..batch).map(|_| w.gen_sequence()).collect();
+        let r = engine.run_batch(&seqs, engine.now());
+        lat += r.token_latencies.iter().sum::<f64>();
+        n += r.token_latencies.len();
+    }
+    lat / n as f64
+}
+
+fn main() {
+    for (model, dataset) in [("switch-large-128", "mixed"), ("nllb-moe-128", "translation")] {
+        let mut table = Table::new(&["batch", "moe-infinity", "pytorch-um"]);
+        for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+            let mi = run_batches(model, dataset, "moe-infinity", batch);
+            let um = run_batches(model, dataset, "pytorch-um", batch);
+            table.row(&[
+                batch.to_string(),
+                format!("{:.1}ms", mi * 1e3),
+                format!("{:.1}ms", um * 1e3),
+            ]);
+        }
+        table.print(&format!("Fig. 6 — per-token latency vs batch size ({model})"));
+    }
+}

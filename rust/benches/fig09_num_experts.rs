@@ -1,0 +1,31 @@
+//! Figure 9 — prefetch prediction accuracy vs number of experts per layer
+//! (switch-base geometry, 8..256 experts). Expected shape: all strategies
+//! accurate at 8 experts; activation-aware degrades slowest (paper: 55% at
+//! 256 vs 34% traced-topk vs 7% topk).
+
+use moe_infinity::benchsuite::{build_eamc, prediction_accuracy, Table};
+use moe_infinity::model::ModelSpec;
+use moe_infinity::prefetch::PredictorKind;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let mut table = Table::new(&["experts/layer", "activation-aware", "traced-topk", "topk"]);
+    for experts in [8usize, 16, 32, 64, 128, 256] {
+        let name = format!("switch-base-{experts}");
+        let spec = ModelSpec::preset(&name).unwrap();
+        let ds = DatasetPreset::by_name("mixed").unwrap();
+        let eamc = build_eamc(&spec, &ds, 300, 100, 9);
+        let mut row = vec![experts.to_string()];
+        for kind in [
+            PredictorKind::ActivationAware { refine: true },
+            PredictorKind::TracedTopK { k: 8 },
+            PredictorKind::TopK { k: 8 },
+        ] {
+            let mut w = Workload::new(&spec, ds.clone(), 9);
+            let acc = prediction_accuracy(&spec, kind, &eamc, &mut w, 15);
+            row.push(format!("{:.1}%", acc * 100.0));
+        }
+        table.row(&row);
+    }
+    table.print("Fig. 9 — prediction accuracy vs experts per layer (switch-base)");
+}

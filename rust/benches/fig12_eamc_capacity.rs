@@ -1,0 +1,63 @@
+//! Figure 12 — impacts of EAMC capacity: latency and prediction accuracy vs
+//! capacity. Expected shape: both improve with capacity and saturate around
+//! ~100 entries (the workload's distinct activation-pattern count), after
+//! which more capacity is marginal.
+
+use moe_infinity::benchsuite::{build_eamc, prediction_accuracy, tier_with, Table};
+use moe_infinity::cache::CacheKind;
+use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::model::ModelSpec;
+use moe_infinity::prefetch::PredictorKind;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    for (label, model, dataset) in [
+        ("Switch", "switch-large-128", "mixed"),
+        ("NLLB", "nllb-moe-128", "translation"),
+    ] {
+        let spec = ModelSpec::preset(model).unwrap();
+        let ds = DatasetPreset::by_name(dataset).unwrap();
+        let mut table = Table::new(&["EAMC capacity", "pred. accuracy", "mean token lat"]);
+        for cap in [10usize, 25, 50, 100, 150, 300] {
+            let eamc = build_eamc(&spec, &ds, 360, cap, 12);
+            let mut w = Workload::new(&spec, ds.clone(), 12);
+            let acc = prediction_accuracy(
+                &spec,
+                PredictorKind::ActivationAware { refine: true },
+                &eamc,
+                &mut w,
+                10,
+            );
+            // serving latency with this EAMC
+            let mut engine = SimEngine::new(
+                spec.clone(),
+                tier_with(
+                    &spec,
+                    spec.total_experts() / 3,
+                    spec.total_experts(),
+                    6.0,
+                    32.0,
+                    CacheKind::Activation,
+                ),
+                build_eamc(&spec, &ds, 360, cap, 12),
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            );
+            let mut w2 = Workload::new(&spec, ds.clone(), 13);
+            let mut lat = 0.0;
+            let mut n = 0;
+            for _ in 0..8 {
+                let seq = w2.gen_sequence();
+                let r = engine.run_batch(&[seq], engine.now());
+                lat += r.token_latencies.iter().sum::<f64>();
+                n += r.token_latencies.len();
+            }
+            table.row(&[
+                cap.to_string(),
+                format!("{:.1}%", acc * 100.0),
+                format!("{:.1}ms", lat / n as f64 * 1e3),
+            ]);
+        }
+        table.print(&format!("Fig. 12 — EAMC capacity ({label})"));
+    }
+}

@@ -1,0 +1,56 @@
+//! Figure 13 — cluster scalability with expert parallelism: per-token
+//! latency (top) and throughput (bottom) over 1..6 nodes of 4 V100s.
+//! Expected shape: latency halves from 1 to 6 nodes (paper: 200ms -> 97ms
+//! for switch-large-128); throughput scales up (paper: NLLB 0.6K -> 2.4K
+//! tokens/s).
+
+use moe_infinity::benchsuite::{build_eamc, tier_with, Table};
+use moe_infinity::cache::CacheKind;
+use moe_infinity::cluster::ClusterModel;
+use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::model::ModelSpec;
+use moe_infinity::util::fmt_secs;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    for (model, dataset, per_gpu) in [
+        ("switch-large-128", "mixed", 40usize),
+        ("nllb-moe-128", "translation", 10),
+    ] {
+        let spec = ModelSpec::preset(model).unwrap();
+        let ds = DatasetPreset::by_name(dataset).unwrap();
+        let mut table = Table::new(&["nodes", "mean token latency", "throughput tokens/s"]);
+        for nodes in [1usize, 2, 3, 4, 6] {
+            let eamc = build_eamc(&spec, &ds, 240, 100, 5);
+            let mut tier = tier_with(&spec, per_gpu, spec.total_experts(), 6.0, 16.0, CacheKind::Activation);
+            tier.n_gpus = 4 * nodes;
+            let mut engine = SimEngine::new(
+                spec.clone(),
+                tier,
+                eamc,
+                ComputeModel::v100(),
+                EngineConfig::default(),
+            )
+            .with_cluster(ClusterModel::new(nodes));
+            let mut w = Workload::new(&spec, ds.clone(), 5);
+            let mut lat = 0.0;
+            let mut n = 0;
+            let mut tokens = 0u64;
+            let t0 = engine.now();
+            for _ in 0..8 {
+                let seqs: Vec<_> = (0..4).map(|_| w.gen_sequence()).collect();
+                tokens += seqs.iter().map(|s| s.total_tokens() as u64).sum::<u64>();
+                let r = engine.run_batch(&seqs, engine.now());
+                lat += r.token_latencies.iter().sum::<f64>();
+                n += r.token_latencies.len();
+            }
+            let makespan = engine.now() - t0;
+            table.row(&[
+                nodes.to_string(),
+                fmt_secs(lat / n as f64),
+                format!("{:.0}", tokens as f64 / makespan),
+            ]);
+        }
+        table.print(&format!("Fig. 13 — cluster scalability ({model})"));
+    }
+}

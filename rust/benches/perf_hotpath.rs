@@ -1,0 +1,112 @@
+//! §Perf — L3 hot-path micro-benchmarks (offline substrate: in-tree timing,
+//! no criterion in the image).
+//!
+//! Paper anchor (§8.5): searching the most-similar EAM in a 300-entry EAMC
+//! costs ~21us and <1.8MB. Our targets: EAMC lookup <= 25us at 300 entries
+//! (switch-large geometry), queue ops O(log n), cache ops O(1)-ish, and the
+//! full per-layer engine step allocation-free.
+
+use moe_infinity::benchsuite::{build_eamc, time_ns_per_op, Table};
+use moe_infinity::cache::{ActivationPolicy, CacheCtx, ExpertCache};
+use moe_infinity::model::{ExpertKey, ModelSpec};
+use moe_infinity::prefetch::{Predictor, PredictorKind, PrefetchQueue};
+use moe_infinity::trace::Eam;
+use moe_infinity::util::Rng;
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let mut table = Table::new(&["hot path", "ns/op", "note"]);
+    let spec = ModelSpec::preset("switch-large-128").unwrap();
+    let ds = DatasetPreset::by_name("mixed").unwrap();
+
+    // --- EAMC nearest lookup at 300 entries (the §8.5 21us anchor)
+    let eamc = build_eamc(&spec, &ds, 360, 300, 31);
+    let mut w = Workload::new(&spec, ds.clone(), 32);
+    let probe = w.gen_sequence().to_eam(spec.n_layers, spec.experts_per_layer);
+    let ns = time_ns_per_op(20, 200, || eamc.nearest(&probe));
+    table.row(&[
+        format!("EAMC nearest ({} EAMs, 24x128)", eamc.len()),
+        format!("{ns:.0}"),
+        format!(
+            "paper ~21us; lookup set {}KB (full EAMs {}KB)",
+            eamc.lookup_bytes() / 1024,
+            eamc.bytes() / 1024
+        ),
+    ]);
+
+    // --- predictor full prediction (nearest + priorities for all layers)
+    let predictor = Predictor::new(
+        PredictorKind::ActivationAware { refine: true },
+        spec.n_layers,
+        spec.experts_per_layer,
+    )
+    .with_min_ratio(0.05);
+    let mut buf = Vec::new();
+    let ns = time_ns_per_op(20, 200, || {
+        predictor.predict(&probe, &eamc, 0, &mut buf);
+        buf.len()
+    });
+    table.row(&[
+        "predict() all future layers".into(),
+        format!("{ns:.0}"),
+        "incl. nearest + priority calc".into(),
+    ]);
+
+    // --- priority queue churn (submit with update + pop)
+    let mut q = PrefetchQueue::new();
+    let mut rng = Rng::new(33);
+    for e in 0..512u16 {
+        q.submit(ExpertKey { layer: 0, expert: e }, rng.f64());
+    }
+    let ns = time_ns_per_op(100, 10_000, || {
+        let e = (rng.next_u64() % 512) as u16;
+        q.submit(ExpertKey { layer: 0, expert: e }, rng.f64());
+    });
+    table.row(&["queue submit-with-update (512 live)".into(), format!("{ns:.0}"), "lazy-deletion heap".into()]);
+    let ns = time_ns_per_op(100, 512, || {
+        if let Some((k, _)) = q.pop() {
+            q.complete(k);
+            q.submit(k, 0.5);
+        }
+    });
+    table.row(&["queue pop+complete+resubmit".into(), format!("{ns:.0}"), String::new()]);
+
+    // --- cache access / insert at switch-large scale
+    let mut cache = ExpertCache::new(535, Box::new(ActivationPolicy::new()));
+    let eam = probe.clone();
+    let ctx = CacheCtx {
+        cur_eam: &eam,
+        n_layers: spec.n_layers,
+    };
+    for l in 0..spec.n_layers {
+        for e in 0..(535 / spec.n_layers + 1) {
+            cache.insert(ExpertKey::new(l, e), &ctx);
+        }
+    }
+    let ns = time_ns_per_op(100, 10_000, || {
+        let l = (rng.next_u64() % 24) as usize;
+        let e = (rng.next_u64() % 128) as usize;
+        cache.access(ExpertKey::new(l, e))
+    });
+    table.row(&["cache access (535 slots)".into(), format!("{ns:.0}"), String::new()]);
+    let ns = time_ns_per_op(100, 2_000, || {
+        let l = (rng.next_u64() % 24) as usize;
+        let e = (rng.next_u64() % 128) as usize;
+        cache.insert(ExpertKey::new(l, e), &ctx)
+    });
+    table.row(&[
+        "cache insert+evict (Alg. 2 victim scan)".into(),
+        format!("{ns:.0}"),
+        "O(capacity) scan".into(),
+    ]);
+
+    // --- EAM ops
+    let mut m = Eam::new(24, 128);
+    let ns = time_ns_per_op(100, 100_000, || m.record(3, 77, 1));
+    table.row(&["EAM record".into(), format!("{ns:.1}"), String::new()]);
+    let m2 = probe.clone();
+    let ns = time_ns_per_op(100, 10_000, || probe.distance_partial(&m2));
+    table.row(&["EAM distance (24x128)".into(), format!("{ns:.0}"), String::new()]);
+
+    table.print("§Perf — L3 hot-path micro-benchmarks");
+}

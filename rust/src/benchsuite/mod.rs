@@ -1,0 +1,304 @@
+//! Shared experiment harness used by the figure benches (`rust/benches/`)
+//! and the examples: builds engines from system names, replays workloads,
+//! and measures prefetch prediction accuracy the way §8.3 defines it.
+
+use crate::cache::CacheKind;
+use crate::config::ServeConfig;
+use crate::engine::{ComputeModel, EngineConfig, SimEngine};
+use crate::memory::TierConfig;
+use crate::model::ModelSpec;
+use crate::prefetch::{Predictor, PredictorKind};
+use crate::server::{serve, Batcher, ServeReport};
+use crate::trace::{Eam, Eamc};
+use crate::util::Rng;
+use crate::workload::{ArrivalProcess, DatasetPreset, Request, Workload};
+
+/// Build an EAMC from a freshly generated offline trace (§4.2's "relevant
+/// dataset" = the validation split of the same distribution).
+pub fn build_eamc(spec: &ModelSpec, dataset: &DatasetPreset, n: usize, cap: usize, seed: u64) -> Eamc {
+    let mut w = Workload::new(spec, dataset.clone(), seed);
+    let ds = w.gen_eam_dataset(n);
+    Eamc::construct(cap, &ds, seed ^ 0x9E37)
+}
+
+/// Build a ready-to-serve engine from a [`ServeConfig`].
+pub fn build_engine(cfg: &ServeConfig) -> anyhow::Result<SimEngine> {
+    let spec = cfg.model_spec()?;
+    let dataset = DatasetPreset::by_name(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
+    let tier = cfg.tier_config()?;
+    let eamc = if cfg.predictor_kind()? == (PredictorKind::ActivationAware { refine: true }) {
+        build_eamc(
+            &spec,
+            &dataset,
+            cfg.eamc.trace_sequences,
+            cfg.eamc.capacity,
+            cfg.seed,
+        )
+    } else {
+        Eamc::new(cfg.eamc.capacity, spec.n_layers, spec.experts_per_layer)
+    };
+    Ok(SimEngine::new(
+        spec,
+        tier,
+        eamc,
+        ComputeModel::a5000(),
+        EngineConfig {
+            predictor: cfg.predictor_kind()?,
+            fetch_all_experts: crate::baselines::fetch_all_for(&cfg.system)?,
+            ..Default::default()
+        },
+    ))
+}
+
+/// Generate the request stream for a config.
+pub fn build_requests(cfg: &ServeConfig) -> anyhow::Result<Vec<Request>> {
+    let spec = cfg.model_spec()?;
+    let dataset = DatasetPreset::by_name(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
+    let mut w = Workload::new(&spec, dataset, cfg.seed ^ 0xFACE);
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let proc = if cfg.workload.cv > 1.0 {
+        ArrivalProcess::Bursty {
+            rps: cfg.workload.rps,
+            cv: cfg.workload.cv,
+        }
+    } else {
+        ArrivalProcess::Poisson {
+            rps: cfg.workload.rps,
+        }
+    };
+    let ts = proc.timestamps(cfg.workload.duration, &mut rng);
+    Ok(ts
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival)| Request {
+            id: i as u64,
+            arrival,
+            seq: w.gen_sequence(),
+        })
+        .collect())
+}
+
+/// Run a full serving replay for a config: engine + arrivals + batcher.
+pub fn run_serve(cfg: &ServeConfig) -> anyhow::Result<ServeReport> {
+    let mut engine = build_engine(cfg)?;
+    let requests = build_requests(cfg)?;
+    Ok(serve(
+        &mut engine,
+        Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait),
+        &requests,
+    ))
+}
+
+/// §8.3 prediction-accuracy probe (Figs. 9): for each sequence and each
+/// layer transition, compare the predictor's next-layer expert set (top-k =
+/// actual activated count) against the actually activated experts; returns
+/// mean recall. Pure predictor measurement — no memory simulation.
+pub fn prediction_accuracy(
+    spec: &ModelSpec,
+    kind: PredictorKind,
+    eamc: &Eamc,
+    workload: &mut Workload,
+    n_sequences: usize,
+) -> f64 {
+    let mut predictor = Predictor::new(kind, spec.n_layers, spec.experts_per_layer);
+    let mut buf = Vec::new();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..n_sequences {
+        let seq = workload.gen_sequence();
+        let mut cur = Eam::new(spec.n_layers, spec.experts_per_layer);
+        // the standing prediction: re-computed when the strategy refines,
+        // otherwise the stale one keeps being consulted (so the §8.3
+        // one-shot ablation is charged for its staleness at every layer)
+        let mut standing = crate::prefetch::Prediction::default();
+        for iter in 0..seq.iterations() {
+            for l in 0..spec.n_layers {
+                for &(e, c) in &seq.routes[iter][l] {
+                    cur.record(l, e as usize, c);
+                    predictor.observe_route(l, e as usize, c);
+                }
+                if predictor.should_predict(l, iter) {
+                    predictor.predict(&cur, eamc, l, &mut buf);
+                    standing = crate::prefetch::Prediction { items: buf.clone() };
+                }
+                if l + 1 < spec.n_layers {
+                    let actual: Vec<usize> =
+                        seq.routes[iter][l + 1].iter().map(|&(e, _)| e as usize).collect();
+                    if actual.is_empty() {
+                        continue;
+                    }
+                    let top: Vec<_> = standing
+                        .for_layer(l + 1)
+                        .into_iter()
+                        .take(actual.len())
+                        .map(|k| k.expert as usize)
+                        .collect();
+                    for e in &actual {
+                        total += 1;
+                        if top.contains(e) {
+                            correct += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Convenience: a [`TierConfig`] sized in *expert counts* for policy
+/// micro-benchmarks (cache/bandwidth sweeps).
+pub fn tier_with(
+    _spec: &ModelSpec,
+    gpu_experts: usize,
+    dram_experts: usize,
+    ssd_gb_s: f64,
+    pcie_gb_s: f64,
+    cache: CacheKind,
+) -> TierConfig {
+    TierConfig {
+        gpu_capacity: gpu_experts,
+        dram_capacity: dram_experts,
+        backing: crate::memory::Tier::Ssd,
+        ssd_to_dram: crate::memory::Link::new(ssd_gb_s, 50e-6),
+        dram_to_gpu: crate::memory::Link::new(pcie_gb_s, 10e-6),
+        n_gpus: 1,
+        demand_extra_latency: 0.0,
+        demand_bw_factor: 1.0,
+        cache_kind: cache,
+        oracle_trace: Vec::new(),
+        activation_terms: (true, true),
+        prefetch_gpu_budget: 0.5,
+    }
+}
+
+/// Minimal wall-clock micro-benchmark helper (offline substrate — the image
+/// has no criterion): warms up, then reports ns/op over `iters` calls of the
+/// hot closure. `black_box` prevents the optimizer from deleting the work.
+pub fn time_ns_per_op<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Markdown-ish table printer shared by the figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n## {title}");
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", fmt_row(&sep));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_engine_and_requests_from_default_config() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 10.0;
+        cfg.eamc.trace_sequences = 30;
+        cfg.eamc.capacity = 8;
+        let engine = build_engine(&cfg).unwrap();
+        assert_eq!(engine.spec().name, "switch-base-32");
+        let reqs = build_requests(&cfg).unwrap();
+        assert!(!reqs.is_empty());
+    }
+
+    #[test]
+    fn run_serve_end_to_end_small() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 8.0;
+        cfg.workload.rps = 1.0;
+        cfg.eamc.trace_sequences = 30;
+        cfg.eamc.capacity = 8;
+        let report = run_serve(&cfg).unwrap();
+        assert!(report.requests > 0);
+        assert!(report.token_throughput() > 0.0);
+    }
+
+    #[test]
+    fn prediction_accuracy_aware_beats_topk() {
+        let spec = ModelSpec::preset("switch-base-64").unwrap();
+        let ds = DatasetPreset::by_name("translation").unwrap();
+        let eamc = build_eamc(&spec, &ds, 60, 12, 3);
+        let mut w1 = Workload::new(&spec, ds.clone(), 3); // same distribution
+        let aware = prediction_accuracy(
+            &spec,
+            PredictorKind::ActivationAware { refine: true },
+            &eamc,
+            &mut w1,
+            10,
+        );
+        let mut w2 = Workload::new(&spec, ds, 3);
+        let topk =
+            prediction_accuracy(&spec, PredictorKind::TopK { k: 8 }, &eamc, &mut w2, 10);
+        assert!(
+            aware > topk,
+            "activation-aware accuracy {aware} must beat topk {topk}"
+        );
+        assert!(aware > 0.3, "aware accuracy {aware} too low");
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test");
+    }
+}

@@ -1,0 +1,329 @@
+//! Activation-aware expert caching (paper §6) and the baseline policies the
+//! paper compares against (§8.4).
+//!
+//! A cache tier holds up to `capacity` experts (experts are uniformly sized,
+//! so capacity is expressed in expert slots; byte budgets are converted by
+//! the caller). Replacement is pluggable:
+//!
+//! * [`ActivationPolicy`] — the paper's Algorithm 2: victim = cached expert
+//!   with minimal `(cur_ratio + ε) · (1 − layer_idx/L)`.
+//! * [`LruPolicy`] — CUDA-unified-memory-style least-recently-used.
+//! * [`LfuPolicy`] — BrainStorm-style least-frequently-used (counter resets
+//!   on eviction, the weakness §8.4 calls out).
+//! * [`NeighborPolicy`] — ZeRO-Infinity-style: keep id-neighbors together.
+//! * [`OraclePolicy`] — Belady's optimal from a known future access trace,
+//!   the §8.4 upper bound.
+
+mod policies;
+
+pub use policies::{
+    ActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy, OraclePolicy, Policy,
+};
+
+use std::collections::{HashMap, HashSet};
+
+use crate::model::ExpertKey;
+use crate::trace::Eam;
+
+/// Replacement-decision context: Algorithm 2 consults the EAM of the
+/// sequence *currently being processed*.
+pub struct CacheCtx<'a> {
+    pub cur_eam: &'a Eam,
+    pub n_layers: usize,
+}
+
+/// Which policy to instantiate (config / bench matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheKind {
+    Activation,
+    Lru,
+    Lfu,
+    Neighbor,
+    Oracle,
+}
+
+impl CacheKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheKind::Activation => "activation",
+            CacheKind::Lru => "lru",
+            CacheKind::Lfu => "lfu",
+            CacheKind::Neighbor => "neighbor",
+            CacheKind::Oracle => "oracle",
+        }
+    }
+}
+
+/// One cache tier with a pluggable replacement policy.
+///
+/// Supports *eviction protection* (paper §6.2: "give priority to prefetched
+/// experts over those already cached"): protected keys — prefetched experts
+/// that have not been used yet — are skipped during victim selection unless
+/// every resident entry is protected.
+pub struct ExpertCache {
+    capacity: usize,
+    slots: Vec<ExpertKey>,
+    index: HashMap<ExpertKey, usize>,
+    policy: Box<dyn Policy>,
+    protected: HashSet<ExpertKey>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl ExpertCache {
+    pub fn new(capacity: usize, policy: Box<dyn Policy>) -> ExpertCache {
+        ExpertCache {
+            capacity,
+            slots: Vec::with_capacity(capacity),
+            index: HashMap::with_capacity(capacity),
+            policy,
+            protected: HashSet::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Record an access; returns `true` on hit. Misses are counted but the
+    /// caller decides whether/when to insert (after the fetch completes).
+    pub fn access(&mut self, key: ExpertKey) -> bool {
+        if self.index.contains_key(&key) {
+            self.hits += 1;
+            self.policy.on_access(key);
+            true
+        } else {
+            self.misses += 1;
+            self.policy.on_miss(key);
+            false
+        }
+    }
+
+    /// Insert after a fetch (Alg. 2 `PUT`). Returns the evicted expert, if
+    /// the cache was full. Inserting a resident key refreshes its policy
+    /// state and evicts nothing.
+    pub fn insert(&mut self, key: ExpertKey, ctx: &CacheCtx) -> Option<ExpertKey> {
+        if self.capacity == 0 {
+            return None;
+        }
+        if self.index.contains_key(&key) {
+            self.policy.on_access(key);
+            return None;
+        }
+        let evicted = if self.slots.len() == self.capacity {
+            let v = self.choose_victim(ctx);
+            debug_assert!(v < self.slots.len());
+            let old = self.slots[v];
+            self.protected.remove(&old);
+            self.policy.on_evict(old);
+            self.index.remove(&old);
+            self.slots[v] = key;
+            self.index.insert(key, v);
+            self.evictions += 1;
+            Some(old)
+        } else {
+            self.slots.push(key);
+            self.index.insert(key, self.slots.len() - 1);
+            None
+        };
+        self.policy.on_insert(key);
+        evicted
+    }
+
+    /// Victim selection with protection: filter protected keys out unless
+    /// that would leave no candidates.
+    fn choose_victim(&mut self, ctx: &CacheCtx) -> usize {
+        if self.protected.is_empty() || self.protected.len() >= self.slots.len() {
+            return self.policy.victim(&self.slots, ctx);
+        }
+        let mut candidates: Vec<ExpertKey> = Vec::with_capacity(self.slots.len());
+        let mut orig_idx: Vec<usize> = Vec::with_capacity(self.slots.len());
+        for (i, k) in self.slots.iter().enumerate() {
+            if !self.protected.contains(k) {
+                candidates.push(*k);
+                orig_idx.push(i);
+            }
+        }
+        if candidates.is_empty() {
+            return self.policy.victim(&self.slots, ctx);
+        }
+        let v = self.policy.victim(&candidates, ctx);
+        orig_idx[v]
+    }
+
+    /// Mark a resident key as protected from eviction (prefetched, unused).
+    pub fn protect(&mut self, key: ExpertKey) {
+        if self.index.contains_key(&key) {
+            self.protected.insert(key);
+        }
+    }
+
+    /// Lift protection (the expert was used, or the sequence ended).
+    pub fn unprotect(&mut self, key: ExpertKey) {
+        self.protected.remove(&key);
+    }
+
+    pub fn clear_protection(&mut self) {
+        self.protected.clear();
+    }
+
+    pub fn protected_count(&self) -> usize {
+        self.protected.len()
+    }
+
+    pub fn is_protected(&self, key: ExpertKey) -> bool {
+        self.protected.contains(&key)
+    }
+
+    /// Remove a specific key (used when an upper tier steals the slot).
+    pub fn remove(&mut self, key: ExpertKey) -> bool {
+        if let Some(i) = self.index.remove(&key) {
+            self.protected.remove(&key);
+            self.policy.on_evict(key);
+            let last = self.slots.len() - 1;
+            self.slots.swap(i, last);
+            self.slots.pop();
+            if i < self.slots.len() {
+                self.index.insert(self.slots[i], i);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+    }
+
+    pub fn keys(&self) -> &[ExpertKey] {
+        &self.slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_with(eam: &Eam) -> CacheCtx<'_> {
+        CacheCtx {
+            cur_eam: eam,
+            n_layers: eam.layers(),
+        }
+    }
+
+    #[test]
+    fn fills_before_evicting() {
+        let eam = Eam::new(2, 4);
+        let mut c = ExpertCache::new(2, Box::new(LruPolicy::new()));
+        assert!(c.insert(ExpertKey::new(0, 0), &ctx_with(&eam)).is_none());
+        assert!(c.insert(ExpertKey::new(0, 1), &ctx_with(&eam)).is_none());
+        let ev = c.insert(ExpertKey::new(1, 0), &ctx_with(&eam));
+        assert!(ev.is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let eam = Eam::new(4, 16);
+        let mut c = ExpertCache::new(3, Box::new(LfuPolicy::new()));
+        for l in 0..4 {
+            for e in 0..16 {
+                c.insert(ExpertKey::new(l, e), &ctx_with(&eam));
+                assert!(c.len() <= 3);
+            }
+        }
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let eam = Eam::new(2, 2);
+        let mut c = ExpertCache::new(2, Box::new(LruPolicy::new()));
+        let k = ExpertKey::new(0, 0);
+        assert!(!c.access(k));
+        c.insert(k, &ctx_with(&eam));
+        assert!(c.access(k));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reinsert_resident_key_is_noop() {
+        let eam = Eam::new(2, 2);
+        let mut c = ExpertCache::new(1, Box::new(LruPolicy::new()));
+        let k = ExpertKey::new(0, 0);
+        c.insert(k, &ctx_with(&eam));
+        assert!(c.insert(k, &ctx_with(&eam)).is_none());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn remove_keeps_index_consistent() {
+        let eam = Eam::new(2, 4);
+        let mut c = ExpertCache::new(3, Box::new(LruPolicy::new()));
+        let (a, b, d) = (ExpertKey::new(0, 0), ExpertKey::new(0, 1), ExpertKey::new(0, 2));
+        c.insert(a, &ctx_with(&eam));
+        c.insert(b, &ctx_with(&eam));
+        c.insert(d, &ctx_with(&eam));
+        assert!(c.remove(a));
+        assert!(!c.remove(a));
+        assert!(c.contains(b) && c.contains(d));
+        assert_eq!(c.len(), 2);
+        // after swap-remove, access to the moved key still works
+        assert!(c.access(d));
+    }
+
+    #[test]
+    fn zero_capacity_cache_accepts_nothing() {
+        let eam = Eam::new(1, 1);
+        let mut c = ExpertCache::new(0, Box::new(LruPolicy::new()));
+        assert!(c.insert(ExpertKey::new(0, 0), &ctx_with(&eam)).is_none());
+        assert_eq!(c.len(), 0);
+        assert!(!c.contains(ExpertKey::new(0, 0)));
+    }
+}

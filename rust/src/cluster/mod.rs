@@ -1,0 +1,161 @@
+//! Expert-parallel cluster support (paper §7 "Supporting cluster deployment
+//! via expert parallelism", evaluated in Fig. 13).
+//!
+//! [`Placement`] implements the DeepSpeed-style static expert-parallel
+//! planner (§7: "MoE-Infinity preserves the parameter placement returned by
+//! the expert parallelism planner, the same as the one by DeepSpeed"):
+//! experts are partitioned across nodes round-robin within each layer,
+//! giving every node a balanced slice of every layer.
+//!
+//! [`ClusterModel`] layers the distributed-execution cost on top of the
+//! single-node engine: per MoE layer, each node executes its local routed
+//! experts in parallel with the others, followed by an all-to-all exchange
+//! of token activations.
+
+use crate::model::{ExpertKey, ModelSpec};
+
+/// Static expert-parallel placement: expert → node.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub n_nodes: usize,
+    experts_per_layer: usize,
+    /// `node[flat_expert_index]`
+    node: Vec<usize>,
+}
+
+impl Placement {
+    /// Round-robin within each layer (DeepSpeed EP default): expert `e` of
+    /// any layer lives on node `e % n_nodes`.
+    pub fn round_robin(spec: &ModelSpec, n_nodes: usize) -> Placement {
+        assert!(n_nodes >= 1);
+        let mut node = Vec::with_capacity(spec.total_experts());
+        for _l in 0..spec.n_layers {
+            for e in 0..spec.experts_per_layer {
+                node.push(e % n_nodes);
+            }
+        }
+        Placement {
+            n_nodes,
+            experts_per_layer: spec.experts_per_layer,
+            node,
+        }
+    }
+
+    pub fn node_of(&self, key: ExpertKey) -> usize {
+        self.node[key.flat(self.experts_per_layer)]
+    }
+
+    /// Experts per node per layer (balance check).
+    pub fn load(&self, layer: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_nodes];
+        for e in 0..self.experts_per_layer {
+            counts[self.node[layer * self.experts_per_layer + e]] += 1;
+        }
+        counts
+    }
+}
+
+/// Distributed-execution cost model for Fig. 13.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterModel {
+    pub n_nodes: usize,
+    /// Inter-node bandwidth per node, bytes/s (e.g. 100 Gbps IB = 12.5e9).
+    pub internode_bw: f64,
+    /// Per-all-to-all fixed latency (NIC + switch).
+    pub alpha: f64,
+}
+
+impl ClusterModel {
+    pub fn new(n_nodes: usize) -> ClusterModel {
+        ClusterModel {
+            n_nodes,
+            internode_bw: 12.5e9,
+            alpha: 20e-6,
+        }
+    }
+
+    /// All-to-all time for one MoE layer: every node exchanges its share of
+    /// token activations with every other node (2 exchanges per layer:
+    /// dispatch + combine).
+    pub fn all_to_all_time(&self, spec: &ModelSpec, batch_tokens: u32) -> f64 {
+        if self.n_nodes <= 1 {
+            return 0.0;
+        }
+        let bytes_per_token = (spec.d_model * spec.dtype_bytes) as u64;
+        let frac_remote = (self.n_nodes - 1) as f64 / self.n_nodes as f64;
+        let bytes = batch_tokens as f64 * bytes_per_token as f64 * frac_remote;
+        2.0 * (self.alpha + bytes / self.internode_bw)
+    }
+
+    /// Expert-execution parallelism: `k` distinct experts activated in a
+    /// layer run on up to `n_nodes` nodes concurrently; the critical path is
+    /// the most-loaded node.
+    pub fn parallel_expert_factor(&self, distinct_experts: usize) -> f64 {
+        if distinct_experts == 0 {
+            return 1.0;
+        }
+        let per_node = (distinct_experts as f64 / self.n_nodes as f64).ceil();
+        distinct_experts as f64 / per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::preset("switch-base-128").unwrap()
+    }
+
+    #[test]
+    fn round_robin_is_balanced() {
+        let s = spec();
+        for n in [1, 2, 3, 4, 6] {
+            let p = Placement::round_robin(&s, n);
+            for l in 0..s.n_layers {
+                let load = p.load(l);
+                let max = *load.iter().max().unwrap();
+                let min = *load.iter().min().unwrap();
+                assert!(max - min <= 1, "n={n} layer {l}: {load:?}");
+                assert_eq!(load.iter().sum::<usize>(), s.experts_per_layer);
+            }
+        }
+    }
+
+    #[test]
+    fn every_expert_is_placed() {
+        let s = spec();
+        let p = Placement::round_robin(&s, 6);
+        for l in 0..s.n_layers {
+            for e in 0..s.experts_per_layer {
+                assert!(p.node_of(ExpertKey::new(l, e)) < 6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_all_to_all_is_free() {
+        let s = spec();
+        let m = ClusterModel::new(1);
+        assert_eq!(m.all_to_all_time(&s, 64), 0.0);
+    }
+
+    #[test]
+    fn all_to_all_grows_with_nodes_and_tokens() {
+        let s = spec();
+        let m2 = ClusterModel::new(2);
+        let m6 = ClusterModel::new(6);
+        assert!(m6.all_to_all_time(&s, 64) > m2.all_to_all_time(&s, 64));
+        assert!(m2.all_to_all_time(&s, 128) > m2.all_to_all_time(&s, 64));
+    }
+
+    #[test]
+    fn parallel_factor_caps_at_nodes() {
+        let m = ClusterModel::new(4);
+        assert_eq!(m.parallel_expert_factor(1), 1.0);
+        assert_eq!(m.parallel_expert_factor(4), 4.0);
+        assert!((m.parallel_expert_factor(8) - 4.0).abs() < 1e-9);
+        // 5 experts over 4 nodes: critical path 2 -> factor 2.5
+        assert!((m.parallel_expert_factor(5) - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,268 @@
+//! Configuration system: TOML-serializable experiment/serving configs used
+//! by the CLI, examples and benches (parsed with the in-tree TOML subset,
+//! `util::tomlmini` — the image has no external TOML crate).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cache::CacheKind;
+use crate::memory::{Link, Tier, TierConfig};
+use crate::model::ModelSpec;
+use crate::prefetch::PredictorKind;
+use crate::util::tomlmini::TomlDoc;
+
+/// Top-level serving configuration (what `moe-infinity serve` consumes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Model preset name (see [`crate::model::PRESETS`]).
+    pub model: String,
+    /// Dataset preset (see [`crate::workload::DATASETS`]).
+    pub dataset: String,
+    /// System policy bundle: "moe-infinity", "zero-infinity", "zero-offload"
+    /// or "pytorch-um".
+    pub system: String,
+    pub workload: WorkloadConfig,
+    pub batching: BatchConfig,
+    pub memory: MemoryConfig,
+    pub eamc: EamcConfig,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Requests per second.
+    pub rps: f64,
+    /// Burstiness: 1.0 = Poisson, >1 = Azure-style bursts.
+    pub cv: f64,
+    /// Virtual duration of the replay in seconds.
+    pub duration: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchConfig {
+    /// Max sequences per batch (paper: 16, from AlpaServe).
+    pub max_batch: usize,
+    /// Max waiting time before a partial batch is dispatched (paper: 1s).
+    pub max_wait: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// GPU memory per device, GB.
+    pub gpu_gb: f64,
+    /// Host memory, GB.
+    pub dram_gb: f64,
+    /// SSD→DRAM bandwidth, GB/s.
+    pub ssd_bw: f64,
+    /// DRAM→GPU (PCIe) bandwidth, GB/s.
+    pub pcie_bw: f64,
+    pub n_gpus: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EamcConfig {
+    /// EAMC capacity (number of representative EAMs).
+    pub capacity: usize,
+    /// Offline trace size used for construction.
+    pub trace_sequences: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "switch-base-128".into(),
+            dataset: "mixed".into(),
+            system: "moe-infinity".into(),
+            workload: WorkloadConfig {
+                rps: 1.0,
+                cv: 1.0,
+                duration: 120.0,
+            },
+            batching: BatchConfig {
+                max_batch: 16,
+                max_wait: 1.0,
+            },
+            memory: MemoryConfig {
+                gpu_gb: 24.0,
+                dram_gb: 128.0,
+                ssd_bw: 6.0,
+                pcie_bw: 32.0,
+                n_gpus: 1,
+            },
+            eamc: EamcConfig {
+                capacity: 120,
+                trace_sequences: 600,
+            },
+            seed: 42,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from TOML text. Missing keys fall back to defaults, so configs
+    /// can be partial overrides.
+    pub fn from_toml(text: &str) -> Result<ServeConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let mut c = ServeConfig::default();
+        let gs = |d: &TomlDoc, k: &str, cur: &str| -> String {
+            d.get(k).and_then(|v| v.as_str().map(String::from)).unwrap_or_else(|| cur.into())
+        };
+        let gf = |d: &TomlDoc, k: &str, cur: f64| d.get(k).and_then(|v| v.as_f64()).unwrap_or(cur);
+        let gu = |d: &TomlDoc, k: &str, cur: usize| d.get(k).and_then(|v| v.as_usize()).unwrap_or(cur);
+        c.model = gs(&doc, "model", &c.model);
+        c.dataset = gs(&doc, "dataset", &c.dataset);
+        c.system = gs(&doc, "system", &c.system);
+        c.seed = doc.get("seed").and_then(|v| v.as_u64()).unwrap_or(c.seed);
+        c.workload.rps = gf(&doc, "workload.rps", c.workload.rps);
+        c.workload.cv = gf(&doc, "workload.cv", c.workload.cv);
+        c.workload.duration = gf(&doc, "workload.duration", c.workload.duration);
+        c.batching.max_batch = gu(&doc, "batching.max_batch", c.batching.max_batch);
+        c.batching.max_wait = gf(&doc, "batching.max_wait", c.batching.max_wait);
+        c.memory.gpu_gb = gf(&doc, "memory.gpu_gb", c.memory.gpu_gb);
+        c.memory.dram_gb = gf(&doc, "memory.dram_gb", c.memory.dram_gb);
+        c.memory.ssd_bw = gf(&doc, "memory.ssd_bw", c.memory.ssd_bw);
+        c.memory.pcie_bw = gf(&doc, "memory.pcie_bw", c.memory.pcie_bw);
+        c.memory.n_gpus = gu(&doc, "memory.n_gpus", c.memory.n_gpus);
+        c.eamc.capacity = gu(&doc, "eamc.capacity", c.eamc.capacity);
+        c.eamc.trace_sequences = gu(&doc, "eamc.trace_sequences", c.eamc.trace_sequences);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        ServeConfig::from_toml(&text)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut d = TomlDoc::default();
+        d.set_str("model", &self.model);
+        d.set_str("dataset", &self.dataset);
+        d.set_str("system", &self.system);
+        d.set_num("seed", self.seed as f64);
+        d.set_num("workload.rps", self.workload.rps);
+        d.set_num("workload.cv", self.workload.cv);
+        d.set_num("workload.duration", self.workload.duration);
+        d.set_num("batching.max_batch", self.batching.max_batch as f64);
+        d.set_num("batching.max_wait", self.batching.max_wait);
+        d.set_num("memory.gpu_gb", self.memory.gpu_gb);
+        d.set_num("memory.dram_gb", self.memory.dram_gb);
+        d.set_num("memory.ssd_bw", self.memory.ssd_bw);
+        d.set_num("memory.pcie_bw", self.memory.pcie_bw);
+        d.set_num("memory.n_gpus", self.memory.n_gpus as f64);
+        d.set_num("eamc.capacity", self.eamc.capacity as f64);
+        d.set_num("eamc.trace_sequences", self.eamc.trace_sequences as f64);
+        d.to_string_pretty()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.model_spec()?;
+        if crate::workload::DatasetPreset::by_name(&self.dataset).is_none() {
+            return Err(anyhow!("unknown dataset '{}'", self.dataset));
+        }
+        crate::baselines::predictor_for(&self.system)?;
+        if self.batching.max_batch == 0 {
+            return Err(anyhow!("batching.max_batch must be >= 1"));
+        }
+        if self.workload.rps <= 0.0 || self.workload.duration <= 0.0 {
+            return Err(anyhow!("workload.rps and duration must be positive"));
+        }
+        Ok(())
+    }
+
+    pub fn model_spec(&self) -> Result<ModelSpec> {
+        ModelSpec::preset(&self.model)
+            .ok_or_else(|| anyhow!("unknown model preset '{}'", self.model))
+    }
+
+    /// Build the memory-tier config for the selected system bundle.
+    pub fn tier_config(&self) -> Result<TierConfig> {
+        let spec = self.model_spec()?;
+        let eb = spec.expert_bytes();
+        // §6.2: dense part is pinned on GPU, and memory for intermediate
+        // results (KV cache at max batch/output length, activations,
+        // runtime) is reserved before the leftover becomes expert cache.
+        // 40% reservation matches the paper's Fig. 11 operating point
+        // (switch-large-128 on a 24GB A5000 -> ~15GB expert cache).
+        let gpu_bytes = (self.memory.gpu_gb * 1e9 * 0.6) as u64;
+        let dram_bytes = (self.memory.dram_gb * 1e9) as u64;
+        let gpu_capacity = (gpu_bytes.saturating_sub(spec.dense_bytes) / eb) as usize;
+        let dram_capacity = (dram_bytes / eb) as usize;
+        let base = TierConfig {
+            gpu_capacity,
+            dram_capacity,
+            backing: Tier::Ssd,
+            ssd_to_dram: Link::new(self.memory.ssd_bw, 50e-6),
+            dram_to_gpu: Link::new(self.memory.pcie_bw, 10e-6),
+            n_gpus: self.memory.n_gpus,
+            demand_extra_latency: 0.0,
+            demand_bw_factor: 1.0,
+            cache_kind: CacheKind::Activation,
+            oracle_trace: Vec::new(),
+            activation_terms: (true, true),
+            prefetch_gpu_budget: 0.5,
+        };
+        crate::baselines::apply_system(&self.system, base)
+    }
+
+    pub fn predictor_kind(&self) -> Result<PredictorKind> {
+        crate::baselines::predictor_for(&self.system)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_toml() {
+        let c = ServeConfig::default();
+        let text = c.to_toml();
+        let back = ServeConfig::from_toml(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn partial_override_keeps_defaults() {
+        let c = ServeConfig::from_toml("model = \"nllb-moe-128\"\n[workload]\nrps = 2.5\n").unwrap();
+        assert_eq!(c.model, "nllb-moe-128");
+        assert_eq!(c.workload.rps, 2.5);
+        assert_eq!(c.batching.max_batch, 16); // default preserved
+    }
+
+    #[test]
+    fn model_spec_resolution() {
+        let c = ServeConfig::default();
+        assert_eq!(c.model_spec().unwrap().name, "switch-base-128");
+        let bad = ServeConfig {
+            model: "nope".into(),
+            ..Default::default()
+        };
+        assert!(bad.model_spec().is_err());
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ServeConfig::from_toml("dataset = \"imagenet\"").is_err());
+        assert!(ServeConfig::from_toml("system = \"vllm\"").is_err());
+        assert!(ServeConfig::from_toml("[batching]\nmax_batch = 0").is_err());
+    }
+
+    #[test]
+    fn tier_config_respects_budgets() {
+        let c = ServeConfig::default();
+        let spec = c.model_spec().unwrap();
+        let t = c.tier_config().unwrap();
+        let eb = spec.expert_bytes();
+        assert!(t.gpu_capacity as u64 * eb <= (c.memory.gpu_gb * 1e9) as u64);
+        assert!(t.dram_capacity as u64 * eb <= (c.memory.dram_gb * 1e9) as u64);
+    }
+
+    #[test]
+    fn file_load_missing_errors() {
+        assert!(ServeConfig::from_toml_file(Path::new("/nonexistent.toml")).is_err());
+    }
+}

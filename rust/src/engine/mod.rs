@@ -1,0 +1,99 @@
+//! The generative-inference engine: the paper's Algorithm 1 ("Generative
+//! Inference with Expert Prefetching") generalized to batches.
+//!
+//! Two backends share this module's structure:
+//! * [`SimEngine`] — executes *routing traces* ([`crate::workload`]) against
+//!   the discrete-event memory simulator with a calibrated compute-time
+//!   model; this is what all large-model experiments (Figs. 4-13) run.
+//! * `engine::real` (see [`crate::runtime`]) — executes the **real** tiny
+//!   MoE via PJRT-compiled HLO artifacts end-to-end; routing comes from the
+//!   actual Pallas router kernel.
+
+pub mod real;
+mod sim_engine;
+
+pub use real::{GenOutput, RealMoeEngine};
+pub use sim_engine::{BatchResult, EngineConfig, SimEngine};
+
+use crate::model::ModelSpec;
+
+/// Calibrated compute-time model for the simulated backend.
+///
+/// Only *relative* magnitudes matter for reproducing the paper's figure
+/// shapes: expert execution is fast relative to expert transfer (an A5000
+/// runs a 18MB switch-base expert in ~0.2ms but fetching it over PCIe 4.0
+/// takes ~0.6ms; over NVMe ~3ms).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeModel {
+    /// Effective GPU throughput in FLOP/s (derated from peak).
+    pub gpu_flops: f64,
+    /// Fixed per-layer overhead (kernel launches, router, combine).
+    pub layer_overhead: f64,
+}
+
+impl ComputeModel {
+    /// RTX A5000 (the paper's 8-GPU server): 27.8 TFLOP/s f32 peak,
+    /// derated to 50% achievable on small decode batches.
+    pub fn a5000() -> ComputeModel {
+        ComputeModel {
+            gpu_flops: 13.9e12,
+            layer_overhead: 30e-6,
+        }
+    }
+
+    /// V100 (the paper's 6-node cluster): 15.7 TFLOP/s f32 peak, 50%.
+    pub fn v100() -> ComputeModel {
+        ComputeModel {
+            gpu_flops: 7.8e12,
+            layer_overhead: 30e-6,
+        }
+    }
+
+    /// Time to run one expert over `tokens` tokens.
+    pub fn expert_time(&self, spec: &ModelSpec, tokens: u32) -> f64 {
+        spec.expert_flops_per_token() as f64 * tokens as f64 / self.gpu_flops
+    }
+
+    /// Time for the dense (attention) part of one layer over `tokens`.
+    pub fn dense_time(&self, spec: &ModelSpec, tokens: u32) -> f64 {
+        self.layer_overhead
+            + spec.dense_flops_per_token_layer() as f64 * tokens as f64 / self.gpu_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_time_scales_with_tokens_and_size() {
+        let cm = ComputeModel::a5000();
+        let base = ModelSpec::preset("switch-base-128").unwrap();
+        let large = ModelSpec::preset("switch-large-128").unwrap();
+        assert!(cm.expert_time(&base, 2) > cm.expert_time(&base, 1));
+        assert!(cm.expert_time(&large, 1) > cm.expert_time(&base, 1));
+    }
+
+    #[test]
+    fn transfer_dominates_compute_for_offloaded_experts() {
+        // The premise of the paper: fetching an expert costs much more than
+        // executing it. Verify our calibration preserves that.
+        let cm = ComputeModel::a5000();
+        let spec = ModelSpec::preset("switch-base-128").unwrap();
+        let exec = cm.expert_time(&spec, 16);
+        let pcie4 = spec.expert_bytes() as f64 / 32e9;
+        assert!(
+            pcie4 > 3.0 * exec,
+            "PCIe fetch {pcie4} should dwarf exec {exec}"
+        );
+    }
+
+    #[test]
+    fn v100_slower_than_a5000() {
+        let spec = ModelSpec::preset("switch-base-128").unwrap();
+        assert!(
+            ComputeModel::v100().expert_time(&spec, 4)
+                > ComputeModel::a5000().expert_time(&spec, 4)
+        );
+    }
+}

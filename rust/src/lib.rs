@@ -1,0 +1,41 @@
+//! # MoE-Infinity (reproduction)
+//!
+//! A reproduction of *"MoE-Infinity: Activation-Aware Expert Offloading for
+//! Efficient MoE Serving"* (Xue et al., 2024) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: sequence-level expert
+//!   activation tracing ([`trace`]), activation-aware prefetching
+//!   ([`prefetch`]), activation-aware caching ([`cache`]), a multi-tier
+//!   memory/PCIe discrete-event simulator ([`memory`]), the generative
+//!   inference engine implementing the paper's Algorithm 1 ([`engine`]),
+//!   a request router + batcher ([`server`]), expert-parallel cluster
+//!   support ([`cluster`]) and whole-system baselines ([`baselines`]).
+//! * **L2** — a JAX decode-step MoE model (`python/compile/model.py`),
+//!   AOT-lowered to HLO-text artifacts consumed by [`runtime`]).
+//! * **L1** — Pallas kernels for the expert FFN and router
+//!   (`python/compile/kernels/`), lowered inside the L2 artifacts.
+//!
+//! Python runs once at `make artifacts`; the serving path is pure rust.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod baselines;
+pub mod benchsuite;
+pub mod cache;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod prefetch;
+pub mod runtime;
+pub mod server;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+pub use model::{ExpertKey, ModelSpec};
+pub use trace::{Eam, Eamc};

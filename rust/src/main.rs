@@ -1,0 +1,222 @@
+//! `moe-infinity` CLI: the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser — the image has no clap):
+//!   serve     — replay an Azure-style workload through the simulated
+//!               serving stack and print the latency/throughput report
+//!   generate  — run the REAL tiny MoE end-to-end via PJRT artifacts
+//!   models    — list model presets with geometry
+//!   config    — print the default serving config TOML
+//!   systems   — list system policy bundles
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use moe_infinity::baselines::SYSTEMS;
+use moe_infinity::benchsuite;
+use moe_infinity::config::ServeConfig;
+use moe_infinity::engine::RealMoeEngine;
+use moe_infinity::memory::TierConfig;
+use moe_infinity::model::{ModelSpec, PRESETS};
+use moe_infinity::prefetch::PredictorKind;
+use moe_infinity::util::{fmt_bytes, fmt_secs, Rng};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{}'", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("missing value for --{k}"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn get_f64(&self, k: &str) -> Result<Option<f64>> {
+        self.get(k)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{k}: {e}")))
+            .transpose()
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match argv.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("generate") => cmd_generate(&argv[1..]),
+        Some("models") => cmd_models(),
+        Some("systems") => {
+            for s in SYSTEMS {
+                println!("{s}");
+            }
+            Ok(())
+        }
+        Some("config") => {
+            print!("{}", ServeConfig::default().to_toml());
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: moe-infinity <serve|generate|models|systems|config> [--flag value ...]\n\
+                 \n\
+                 serve    --config <toml> | --model <preset> --system <name> --rps <f> --duration <s>\n\
+                 generate --artifacts <dir> --prompts <n> --tokens <n>\n"
+            );
+            Err(anyhow!("missing or unknown subcommand"))
+        }
+    }
+}
+
+fn cmd_models() -> Result<()> {
+    println!(
+        "{:<18} {:>7} {:>8} {:>8} {:>10} {:>12}",
+        "preset", "layers", "experts", "total", "expert", "all-experts"
+    );
+    for name in PRESETS {
+        let s = ModelSpec::preset(name).unwrap();
+        println!(
+            "{:<18} {:>7} {:>8} {:>8} {:>10} {:>12}",
+            s.name,
+            s.n_layers,
+            s.experts_per_layer,
+            s.total_experts(),
+            fmt_bytes(s.expert_bytes()),
+            fmt_bytes(s.total_expert_bytes()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let mut cfg = if let Some(path) = args.get("config") {
+        ServeConfig::from_toml_file(&PathBuf::from(path))?
+    } else {
+        ServeConfig::default()
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.into();
+    }
+    if let Some(s) = args.get("system") {
+        cfg.system = s.into();
+    }
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.into();
+    }
+    if let Some(r) = args.get_f64("rps")? {
+        cfg.workload.rps = r;
+    }
+    if let Some(d) = args.get_f64("duration")? {
+        cfg.workload.duration = d;
+    }
+    cfg.validate()?;
+
+    println!(
+        "serving {} [{}] dataset={} rps={} duration={}s ...",
+        cfg.model, cfg.system, cfg.dataset, cfg.workload.rps, cfg.workload.duration
+    );
+    let mut report = benchsuite::run_serve(&cfg)?;
+    println!("requests        : {}", report.requests);
+    println!("batches         : {}", report.batches);
+    println!("tokens          : {}", report.tokens);
+    println!("mean token lat  : {}", fmt_secs(report.token_latency.mean()));
+    println!("p50  token lat  : {}", fmt_secs(report.token_latency.p50()));
+    println!("p99  token lat  : {}", fmt_secs(report.token_latency.p99()));
+    println!("throughput      : {:.1} tokens/s", report.token_throughput());
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let n_prompts: usize = args
+        .get("prompts")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|e| anyhow!("--prompts: {e}"))?;
+    let tokens: usize = args
+        .get("tokens")
+        .unwrap_or("16")
+        .parse()
+        .map_err(|e| anyhow!("--tokens: {e}"))?;
+
+    let tier = {
+        let cfg = moe_infinity::model::weights::TinyConfig::from_manifest(&artifacts)?;
+        let spec = moe_infinity::engine::real::tiny_spec(&cfg);
+        let mut t = TierConfig::default_for(&spec, spec.total_bytes() / 3, spec.total_bytes());
+        t.gpu_capacity = (spec.total_experts() / 3).max(2);
+        t
+    };
+    let mut eng = RealMoeEngine::new(
+        &artifacts,
+        7,
+        4,
+        tier,
+        PredictorKind::ActivationAware { refine: true },
+    )?;
+    let cfg = eng.cfg().clone();
+    println!(
+        "loaded tiny MoE: {} layers x {} experts, d_model {}, vocab {}",
+        cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.vocab
+    );
+
+    // task-clustered prompts: tokens drawn from one vocab slice per prompt
+    let mut rng = Rng::new(99);
+    let per = cfg.vocab / 4;
+    let batch = cfg.batch;
+    let vocab_slices = 4;
+    let mk_prompts = |rng: &mut Rng, n: usize| -> Vec<Vec<i32>> {
+        (0..n.min(batch))
+            .map(|_| {
+                let task = rng.below(vocab_slices);
+                (0..8)
+                    .map(|_| (task * per + rng.below(per)) as i32)
+                    .collect()
+            })
+            .collect()
+    };
+
+    // offline tracing phase to build the EAMC
+    let trace_sets: Vec<Vec<Vec<i32>>> = (0..6).map(|_| mk_prompts(&mut rng, batch)).collect();
+    eng.build_eamc(&trace_sets, 8, 16)?;
+    println!("EAMC built: {} entries", eng.eamc().len());
+
+    let prompts = mk_prompts(&mut rng, n_prompts);
+    let out = eng.generate(&prompts, tokens)?;
+    for (i, row) in out.tokens.iter().enumerate() {
+        println!("seq {i}: {row:?}");
+    }
+    let lats = out.token_latencies();
+    let mean = lats.iter().sum::<f64>() / lats.len() as f64;
+    println!(
+        "tokens/seq={} mean-token-latency={} (compute {} + stall {}) recall={:.2}",
+        tokens,
+        fmt_secs(mean),
+        fmt_secs(out.compute_wall.iter().sum::<f64>() / lats.len() as f64),
+        fmt_secs(out.fetch_stall.iter().sum::<f64>() / lats.len() as f64),
+        out.recall()
+    );
+    Ok(())
+}

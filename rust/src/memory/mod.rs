@@ -1,0 +1,69 @@
+//! Multi-tier memory discrete-event simulator (paper §5.3, §7).
+//!
+//! Substitutes the paper's physical SSD/DRAM/HBM hierarchy (see DESIGN.md
+//! §Substitutions): expert parameters live on a backing tier (SSD, or DRAM
+//! for ZeRO-Offload-style deployments) and move through per-link FIFO
+//! transfer queues into the GPU tier. Each PCIe link carries **one expert at
+//! a time** (§5.3: "a dedicated I/O thread on each PCIe link ... handles one
+//! expert at a time, effectively preventing contention"), transfers are
+//! non-preemptible, and on-demand fetches only jump the *queue*, never the
+//! in-flight transfer. Two-hop SSD→DRAM→GPU prefetching pipelines across
+//! both links (§5.3 "multi-tier memory").
+//!
+//! Time is a virtual `f64` clock in seconds, advanced by the engine; all
+//! behaviour is deterministic.
+
+mod sim;
+
+pub use sim::{MemorySim, MemoryStats, TierConfig};
+
+/// Memory tiers, fastest last.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Ssd,
+    Dram,
+    Gpu,
+}
+
+/// One directional transfer link with FIFO, non-preemptible service.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Effective bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Fixed per-transfer setup latency in seconds (DMA setup, page-table
+    /// work; the §8.6 optimizations lower this).
+    pub latency: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_gb_s: f64, latency: f64) -> Link {
+        Link {
+            bandwidth: bandwidth_gb_s * 1e9,
+            latency,
+        }
+    }
+
+    /// Service time for one expert of `bytes`.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let l = Link::new(32.0, 0.0); // PCIe 4.0 x16
+        let t = l.transfer_time(32_000_000_000);
+        assert!((t - 1.0).abs() < 1e-9);
+        assert!(l.transfer_time(100) < l.transfer_time(1000));
+    }
+
+    #[test]
+    fn latency_adds_fixed_cost() {
+        let l = Link::new(1.0, 0.5);
+        assert!((l.transfer_time(0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Latency/throughput metrics: online histogram, percentiles, CDF export.
+
+/// A simple exact-sample latency recorder. Serving experiments record at
+/// most a few hundred thousand points, so exact storage beats approximate
+/// sketches for reproducibility.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Percentile in [0, 100] by nearest-rank.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((p / 100.0) * self.samples.len() as f64).ceil() as usize;
+        self.samples[rank.clamp(1, self.samples.len()) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.last().copied().unwrap_or(0.0)
+    }
+
+    /// CDF points `(value, fraction <= value)` at `n` evenly spaced ranks —
+    /// the Fig. 5 export format.
+    pub fn cdf(&mut self, n: usize) -> Vec<(f64, f64)> {
+        if self.samples.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        self.ensure_sorted();
+        let len = self.samples.len();
+        (1..=n)
+            .map(|i| {
+                let frac = i as f64 / n as f64;
+                let idx = ((frac * len as f64).ceil() as usize).clamp(1, len) - 1;
+                (self.samples[idx], frac)
+            })
+            .collect()
+    }
+}
+
+/// Throughput counter over virtual time.
+#[derive(Debug, Clone, Default)]
+pub struct Throughput {
+    pub events: u64,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Throughput {
+    pub fn new(start: f64) -> Throughput {
+        Throughput {
+            events: 0,
+            start,
+            end: start,
+        }
+    }
+
+    pub fn record(&mut self, t: f64, n: u64) {
+        self.events += n;
+        if t > self.end {
+            self.end = t;
+        }
+    }
+
+    /// Events per second over the observed window.
+    pub fn rate(&self) -> f64 {
+        let dt = self.end - self.start;
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / dt
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(r.p50(), 50.0);
+        assert_eq!(r.p99(), 99.0);
+        assert_eq!(r.percentile(100.0), 100.0);
+        assert_eq!(r.max(), 100.0);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let mut r = LatencyRecorder::new();
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.p99(), 0.0);
+        assert!(r.cdf(10).is_empty());
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut r = LatencyRecorder::new();
+        for i in 0..1000 {
+            r.record(((i * 7919) % 997) as f64);
+        }
+        let cdf = r.cdf(20);
+        assert_eq!(cdf.len(), 20);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_after_percentile_resorts() {
+        let mut r = LatencyRecorder::new();
+        r.record(5.0);
+        assert_eq!(r.p50(), 5.0);
+        r.record(1.0);
+        assert_eq!(r.percentile(1.0), 1.0);
+    }
+
+    #[test]
+    fn throughput_rate() {
+        let mut t = Throughput::new(10.0);
+        t.record(11.0, 50);
+        t.record(12.0, 50);
+        assert!((t.rate() - 50.0).abs() < 1e-9);
+        let empty = Throughput::new(0.0);
+        assert_eq!(empty.rate(), 0.0);
+    }
+}

@@ -1,0 +1,57 @@
+//! MoE model metadata: geometry specs, expert identifiers, and synthetic
+//! checkpoint generation for the real-compute path.
+
+pub mod spec;
+pub mod weights;
+
+pub use spec::{ModelSpec, PRESETS};
+pub use weights::{SyntheticCheckpoint, TinyConfig};
+
+/// Identifies one expert: `(MoE layer index, expert index within layer)`.
+///
+/// This is the unit of offloading throughout the system: transfers, cache
+/// entries, prefetch-queue items and EAM cells are all keyed by `ExpertKey`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertKey {
+    pub layer: u16,
+    pub expert: u16,
+}
+
+impl ExpertKey {
+    pub fn new(layer: usize, expert: usize) -> Self {
+        ExpertKey {
+            layer: layer as u16,
+            expert: expert as u16,
+        }
+    }
+
+    /// Dense index into per-expert arrays of an `L x E` model.
+    #[inline]
+    pub fn flat(&self, experts_per_layer: usize) -> usize {
+        self.layer as usize * experts_per_layer + self.expert as usize
+    }
+}
+
+impl std::fmt::Display for ExpertKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}E{}", self.layer, self.expert)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_index_roundtrip() {
+        let e = ExpertKey::new(3, 17);
+        assert_eq!(e.flat(128), 3 * 128 + 17);
+        assert_eq!(format!("{e}"), "L3E17");
+    }
+
+    #[test]
+    fn ordering_is_layer_major() {
+        assert!(ExpertKey::new(1, 127) < ExpertKey::new(2, 0));
+        assert!(ExpertKey::new(1, 3) < ExpertKey::new(1, 4));
+    }
+}

@@ -1,0 +1,173 @@
+//! Model geometry specs with presets matching the paper's checkpoints.
+//!
+//! Only the *geometry* matters for offloading behaviour (expert count,
+//! expert byte size, layer structure); weight values are irrelevant. Sizes
+//! below are taken from the HuggingFace configs of the checkpoints the paper
+//! evaluates (Switch Transformers and NLLB-MoE).
+
+/// Static description of an MoE model's geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Number of MoE layers (layers that contain routed experts).
+    pub n_layers: usize,
+    /// Experts per MoE layer.
+    pub experts_per_layer: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// Bytes per parameter (4 = f32, 2 = bf16).
+    pub dtype_bytes: usize,
+    /// Bytes of the dense (non-expert) part, always resident on GPU
+    /// (paper §6.2: "assigning the dense part of the MoE model to the GPU").
+    pub dense_bytes: u64,
+}
+
+impl ModelSpec {
+    /// Total experts across all layers.
+    pub fn total_experts(&self) -> usize {
+        self.n_layers * self.experts_per_layer
+    }
+
+    /// Parameters in one expert FFN: w1 `[D,F]` + b1 `[F]` + w2 `[F,D]` + b2 `[D]`.
+    pub fn expert_params(&self) -> u64 {
+        (2 * self.d_model * self.d_ff + self.d_ff + self.d_model) as u64
+    }
+
+    /// Bytes of one expert's parameters — the transfer unit of the system.
+    pub fn expert_bytes(&self) -> u64 {
+        self.expert_params() * self.dtype_bytes as u64
+    }
+
+    /// Bytes of all experts.
+    pub fn total_expert_bytes(&self) -> u64 {
+        self.expert_bytes() * self.total_experts() as u64
+    }
+
+    /// Total model bytes (dense + experts).
+    pub fn total_bytes(&self) -> u64 {
+        self.dense_bytes + self.total_expert_bytes()
+    }
+
+    /// FLOPs for one token through one expert (two GEMMs).
+    pub fn expert_flops_per_token(&self) -> u64 {
+        4 * (self.d_model as u64) * (self.d_ff as u64)
+    }
+
+    /// FLOPs for one token through the per-layer dense part (attention
+    /// projections, rough: 8 D^2 for QKVO + 4 D S_avg attention, S folded
+    /// into a constant factor — used only by the compute-time model).
+    pub fn dense_flops_per_token_layer(&self) -> u64 {
+        12 * (self.d_model as u64) * (self.d_model as u64)
+    }
+
+    /// Look up a preset by name (see [`PRESETS`]).
+    pub fn preset(name: &str) -> Option<ModelSpec> {
+        let mk = |name: &str,
+                  n_layers: usize,
+                  experts: usize,
+                  d_model: usize,
+                  d_ff: usize|
+         -> ModelSpec {
+            // dense part ~ per-layer attention + embeddings; the paper notes
+            // it is <1% of total parameters for switch-style models.
+            let dense_params =
+                (2 * n_layers) as u64 * 12 * (d_model as u64) * (d_model as u64)
+                    + 32_000 * d_model as u64;
+            ModelSpec {
+                name: name.to_string(),
+                n_layers,
+                experts_per_layer: experts,
+                d_model,
+                d_ff,
+                dtype_bytes: 4,
+                dense_bytes: dense_params * 4,
+            }
+        };
+        Some(match name {
+            // Switch-base: T5-base geometry, MoE every other layer in both
+            // stacks: 6 encoder + 6 decoder MoE layers.
+            "switch-base-8" => mk("switch-base-8", 12, 8, 768, 3072),
+            "switch-base-16" => mk("switch-base-16", 12, 16, 768, 3072),
+            "switch-base-32" => mk("switch-base-32", 12, 32, 768, 3072),
+            "switch-base-64" => mk("switch-base-64", 12, 64, 768, 3072),
+            "switch-base-128" => mk("switch-base-128", 12, 128, 768, 3072),
+            "switch-base-256" => mk("switch-base-256", 12, 256, 768, 3072),
+            // Switch-large: T5-large geometry, 12 + 12 MoE layers
+            // (3072 experts total — matches Fig. 11's "535 of 3072").
+            "switch-large-128" => mk("switch-large-128", 24, 128, 1024, 4096),
+            // NLLB-MoE-54B: d_model 2048, d_ff 8192, MoE every 4th layer in
+            // 24+24 stacks: 12 MoE layers, 1536 experts (Fig. 11's
+            // "60 of 1536"; expert ~134MB f32).
+            "nllb-moe-128" => mk("nllb-moe-128", 12, 128, 2048, 8192),
+            // Tiny real-compute model matching python/compile ModelConfig.
+            "tiny-moe" => mk("tiny-moe", 4, 8, 64, 128),
+            _ => return None,
+        })
+    }
+}
+
+/// All preset names, in rough size order.
+pub const PRESETS: &[&str] = &[
+    "tiny-moe",
+    "switch-base-8",
+    "switch-base-16",
+    "switch-base-32",
+    "switch-base-64",
+    "switch-base-128",
+    "switch-base-256",
+    "switch-large-128",
+    "nllb-moe-128",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in PRESETS {
+            let s = ModelSpec::preset(name).unwrap();
+            assert_eq!(&s.name, name);
+            assert!(s.total_experts() > 0);
+            assert!(s.expert_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(ModelSpec::preset("gpt-5").is_none());
+    }
+
+    #[test]
+    fn switch_large_geometry_matches_paper() {
+        // Fig. 11: 3072 experts; 535 experts ~ 15GB  =>  ~28MB/expert.
+        let s = ModelSpec::preset("switch-large-128").unwrap();
+        assert_eq!(s.total_experts(), 3072);
+        let mb = s.expert_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((25.0..40.0).contains(&mb), "expert size {mb} MB");
+    }
+
+    #[test]
+    fn nllb_geometry_matches_paper() {
+        // Fig. 11: 1536 experts; 60 experts ~ 8GB  =>  ~134MB/expert.
+        let s = ModelSpec::preset("nllb-moe-128").unwrap();
+        assert_eq!(s.total_experts(), 1536);
+        let mb = s.expert_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((120.0..150.0).contains(&mb), "expert size {mb} MB");
+    }
+
+    #[test]
+    fn dense_part_is_small_fraction() {
+        // Paper §2.1: dense part < 1% of params for switch-style models.
+        let s = ModelSpec::preset("switch-base-128").unwrap();
+        let frac = s.dense_bytes as f64 / s.total_bytes() as f64;
+        assert!(frac < 0.05, "dense fraction {frac}");
+    }
+
+    #[test]
+    fn expert_flops_positive_and_scales() {
+        let a = ModelSpec::preset("switch-base-128").unwrap();
+        let b = ModelSpec::preset("switch-large-128").unwrap();
+        assert!(b.expert_flops_per_token() > a.expert_flops_per_token());
+    }
+}

@@ -1,0 +1,233 @@
+//! Synthetic checkpoint for the small real-compute model.
+//!
+//! The paper loads HuggingFace checkpoints; we have none, so the end-to-end
+//! driver generates a deterministic random checkpoint with the exact
+//! geometry the AOT artifacts were compiled for (`artifacts/manifest.json`).
+//! Weight *values* don't affect offloading behaviour, but structure matters:
+//! the embedding table is laid out so tokens from the same workload task
+//! cluster map to nearby embeddings, which makes the (real, HLO-executed)
+//! router exhibit the paper's sparse activation + temporal locality
+//! *emergently* rather than by construction.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Geometry of the compiled tiny model; mirrors `python/compile/model.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TinyConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+}
+
+impl TinyConfig {
+    /// Parse from the `config` object of `manifest.json`.
+    pub fn from_json(v: &Json) -> Result<TinyConfig> {
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest config missing field '{k}'"))
+        };
+        Ok(TinyConfig {
+            vocab: field("vocab")?,
+            d_model: field("d_model")?,
+            d_ff: field("d_ff")?,
+            n_heads: field("n_heads")?,
+            n_layers: field("n_layers")?,
+            n_experts: field("n_experts")?,
+            max_seq: field("max_seq")?,
+            batch: field("batch")?,
+        })
+    }
+
+    /// Read the geometry out of the AOT manifest so rust cannot drift from
+    /// what python compiled.
+    pub fn from_manifest(dir: &Path) -> Result<TinyConfig> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&data).map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow!("manifest.json missing 'config'"))?;
+        TinyConfig::from_json(cfg)
+    }
+
+    /// Default geometry (kept in sync with ModelConfig's defaults; tests
+    /// assert the manifest agrees).
+    pub fn default_tiny() -> TinyConfig {
+        TinyConfig {
+            vocab: 512,
+            d_model: 64,
+            d_ff: 128,
+            n_heads: 4,
+            n_layers: 4,
+            n_experts: 8,
+            max_seq: 64,
+            batch: 4,
+        }
+    }
+}
+
+/// All weights of the tiny model as named f32 buffers.
+pub struct SyntheticCheckpoint {
+    pub cfg: TinyConfig,
+    tensors: HashMap<String, Vec<f32>>,
+}
+
+impl SyntheticCheckpoint {
+    /// Generate deterministically from `seed`.
+    ///
+    /// The embedding table is *clustered*: vocab is divided into
+    /// `n_task_clusters` contiguous slices, each sharing a cluster-center
+    /// direction plus small per-token noise. Sequences drawn from one task's
+    /// vocab slice therefore produce similar hidden states and route to the
+    /// same few experts — the emergent temporal locality the system exploits.
+    pub fn generate(cfg: &TinyConfig, seed: u64, n_task_clusters: usize) -> SyntheticCheckpoint {
+        let mut rng = Rng::new(seed);
+        let mut tensors = HashMap::new();
+        let (v, d, f, e) = (cfg.vocab, cfg.d_model, cfg.d_ff, cfg.n_experts);
+
+        // Clustered embeddings.
+        let clusters: Vec<Vec<f32>> = (0..n_task_clusters.max(1))
+            .map(|_| (0..d).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let per = (v + clusters.len() - 1) / clusters.len();
+        let mut emb = Vec::with_capacity(v * d);
+        for tok in 0..v {
+            let c = &clusters[(tok / per).min(clusters.len() - 1)];
+            for j in 0..d {
+                emb.push(c[j] + 0.15 * rng.gauss() as f32);
+            }
+        }
+        tensors.insert("emb".to_string(), emb);
+
+        let mat = |rng: &mut Rng, n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| scale * rng.gauss() as f32).collect()
+        };
+
+        for l in 0..cfg.n_layers {
+            let attn_scale = (1.0 / d as f32).sqrt() * 0.5;
+            for name in ["wq", "wk", "wv", "wo"] {
+                let t = mat(&mut rng, d * d, attn_scale);
+                tensors.insert(format!("l{l}.{name}"), t);
+            }
+            // Router: unit-scale so logits separate the embedding clusters.
+            let t = mat(&mut rng, d * e, 1.0 / (d as f32).sqrt() * 4.0);
+            tensors.insert(format!("l{l}.wr"), t);
+            for ex in 0..e {
+                tensors.insert(
+                    format!("l{l}.e{ex}.w1"),
+                    mat(&mut rng, d * f, (2.0 / d as f32).sqrt() * 0.5),
+                );
+                tensors.insert(format!("l{l}.e{ex}.b1"), vec![0.0; f]);
+                tensors.insert(
+                    format!("l{l}.e{ex}.w2"),
+                    mat(&mut rng, f * d, (2.0 / f as f32).sqrt() * 0.5),
+                );
+                tensors.insert(format!("l{l}.e{ex}.b2"), vec![0.0; d]);
+            }
+        }
+        tensors.insert(
+            "w_out".to_string(),
+            mat(&mut rng, d * v, (1.0 / d as f32).sqrt()),
+        );
+
+        SyntheticCheckpoint {
+            cfg: cfg.clone(),
+            tensors,
+        }
+    }
+
+    /// Borrow a tensor by name; panics on unknown names (programming error).
+    pub fn get(&self, name: &str) -> &[f32] {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown tensor {name}"))
+    }
+
+    pub fn expert_tensors(&self, layer: usize, expert: usize) -> [&[f32]; 4] {
+        [
+            self.get(&format!("l{layer}.e{expert}.w1")),
+            self.get(&format!("l{layer}.e{expert}.b1")),
+            self.get(&format!("l{layer}.e{expert}.w2")),
+            self.get(&format!("l{layer}.e{expert}.b2")),
+        ]
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TinyConfig {
+        TinyConfig::default_tiny()
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = SyntheticCheckpoint::generate(&cfg(), 42, 4);
+        let b = SyntheticCheckpoint::generate(&cfg(), 42, 4);
+        assert_eq!(a.get("emb"), b.get("emb"));
+        assert_eq!(a.get("l0.e3.w1"), b.get("l0.e3.w1"));
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = SyntheticCheckpoint::generate(&cfg(), 1, 4);
+        let b = SyntheticCheckpoint::generate(&cfg(), 2, 4);
+        assert_ne!(a.get("emb"), b.get("emb"));
+    }
+
+    #[test]
+    fn shapes_are_right() {
+        let c = cfg();
+        let ck = SyntheticCheckpoint::generate(&c, 7, 4);
+        assert_eq!(ck.get("emb").len(), c.vocab * c.d_model);
+        assert_eq!(ck.get("l0.wq").len(), c.d_model * c.d_model);
+        assert_eq!(ck.get("l0.wr").len(), c.d_model * c.n_experts);
+        let [w1, b1, w2, b2] = ck.expert_tensors(1, 2);
+        assert_eq!(w1.len(), c.d_model * c.d_ff);
+        assert_eq!(b1.len(), c.d_ff);
+        assert_eq!(w2.len(), c.d_ff * c.d_model);
+        assert_eq!(b2.len(), c.d_model);
+        // all layers x (4 attn + router + 4E expert tensors) + emb + w_out
+        assert_eq!(
+            ck.tensor_count(),
+            c.n_layers * (5 + 4 * c.n_experts) + 2
+        );
+    }
+
+    #[test]
+    fn embeddings_are_clustered() {
+        let c = cfg();
+        let ck = SyntheticCheckpoint::generate(&c, 3, 4);
+        let emb = ck.get("emb");
+        let d = c.d_model;
+        let cos = |a: &[f32], b: &[f32]| {
+            let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+            dot / (na * nb)
+        };
+        // tokens 0 and 1 share a cluster; 0 and vocab-1 don't.
+        let same = cos(&emb[0..d], &emb[d..2 * d]);
+        let diff = cos(&emb[0..d], &emb[(c.vocab - 1) * d..c.vocab * d]);
+        assert!(same > 0.8, "same-cluster cos {same}");
+        assert!(diff < 0.8, "cross-cluster cos {diff}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Activation-aware expert prefetching (paper §5).
+//!
+//! * [`PrefetchQueue`] — the priority queue an I/O thread drains one expert
+//!   at a time per PCIe link; supports re-enqueue-with-updated-priority and
+//!   an in-flight dedup set (§5.3).
+//! * [`Predictor`] — computes prefetch priorities from the current EAM and
+//!   the EAMC (Alg. 1 `PREFETCH`, §5.2), plus the baseline strategies the
+//!   paper compares against (§8.3): `TopK` (ZeRO-Infinity), `TracedTopK`
+//!   (BrainStorm) and `None` (pure on-demand).
+
+mod predictor;
+mod queue;
+
+pub use predictor::{Prediction, Predictor, PredictorKind, EPSILON};
+pub use queue::{PrefetchQueue, MAX_PRIORITY};

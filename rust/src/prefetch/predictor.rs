@@ -1,0 +1,304 @@
+//! Prefetch priority computation (paper §5.2, Alg. 1 `PREFETCH`), plus the
+//! baseline strategies evaluated in §8.3.
+
+use crate::model::ExpertKey;
+use crate::trace::{Eam, Eamc};
+
+/// Small constant distinguishing zero-activation-ratio experts by layer
+/// decay (Alg. 1 step 26).
+pub const EPSILON: f64 = 1e-4;
+
+/// Which prefetching strategy to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredictorKind {
+    /// The paper's activation-aware predictor. `refine = false` disables
+    /// continuous refinement (§8.3 ablation): a single one-shot prediction
+    /// is made after the first MoE layer's router output.
+    ActivationAware { refine: bool },
+    /// ZeRO-Infinity: prefetch the top-K experts **by expert id** in the
+    /// next layer (no activation awareness).
+    TopK { k: usize },
+    /// BrainStorm: aggregate usage frequency across all served sequences,
+    /// prefetch the top-K most popular experts of the next layer.
+    TracedTopK { k: usize },
+    /// Pure on-demand fetching (PyTorch-UM / CUDA unified memory).
+    NoPrefetch,
+}
+
+/// One prediction: experts to prefetch with their priorities.
+#[derive(Debug, Clone, Default)]
+pub struct Prediction {
+    pub items: Vec<(ExpertKey, f64)>,
+}
+
+impl Prediction {
+    /// The predicted expert set for one specific layer, best-first — used by
+    /// the Fig. 9 accuracy benchmarks.
+    pub fn for_layer(&self, layer: usize) -> Vec<ExpertKey> {
+        let mut v: Vec<(ExpertKey, f64)> = self
+            .items
+            .iter()
+            .filter(|(k, _)| k.layer as usize == layer)
+            .cloned()
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.into_iter().map(|(k, _)| k).collect()
+    }
+}
+
+/// Computes prefetch priorities. Owns the aggregated-frequency state needed
+/// by the `TracedTopK` baseline (which is exactly the aggregation the paper
+/// argues *loses* sequence-level information).
+pub struct Predictor {
+    kind: PredictorKind,
+    layers: usize,
+    experts: usize,
+    /// Aggregated activation counts across all sequences (TracedTopK only).
+    agg: Vec<u64>,
+    /// Minimum predicted activation ratio an expert needs before the
+    /// activation-aware strategy spends PCIe bandwidth on it. Algorithm 1
+    /// scores every expert; transferring the long tail of near-zero-ratio
+    /// entries is pure waste (they evict cached experts and block on-demand
+    /// fetches behind in-flight junk). 0.0 = emit everything (accuracy
+    /// probes use this).
+    min_ratio: f64,
+}
+
+impl Predictor {
+    pub fn new(kind: PredictorKind, layers: usize, experts: usize) -> Predictor {
+        Predictor {
+            kind,
+            layers,
+            experts,
+            agg: vec![0; layers * experts],
+            min_ratio: 0.0,
+        }
+    }
+
+    /// Set the transfer-worthiness threshold (see `min_ratio`).
+    pub fn with_min_ratio(mut self, r: f64) -> Predictor {
+        self.min_ratio = r;
+        self
+    }
+
+    pub fn kind(&self) -> PredictorKind {
+        self.kind
+    }
+
+    /// Record an observed routing event (all strategies may call this; only
+    /// `TracedTopK` consumes it).
+    pub fn observe_route(&mut self, layer: usize, expert: usize, tokens: u32) {
+        self.agg[layer * self.experts + expert] += tokens as u64;
+    }
+
+    /// Whether a prediction should be (re)computed after executing the
+    /// router of `cur_layer` on generation iteration `iter`.
+    pub fn should_predict(&self, cur_layer: usize, iter: usize) -> bool {
+        match self.kind {
+            PredictorKind::ActivationAware { refine } => refine || (iter == 0 && cur_layer == 0),
+            PredictorKind::NoPrefetch => false,
+            _ => true,
+        }
+    }
+
+    /// Compute priorities for experts in layers after `cur_layer`
+    /// (Alg. 1 `PREFETCH(m, cur_eam, eamc, cur_l, q)`).
+    ///
+    /// Results are appended to `out` (cleared first) to keep the serving hot
+    /// path allocation-free after warm-up.
+    pub fn predict(
+        &self,
+        cur_eam: &Eam,
+        eamc: &Eamc,
+        cur_layer: usize,
+        out: &mut Vec<(ExpertKey, f64)>,
+    ) {
+        out.clear();
+        let l_total = self.layers;
+        match self.kind {
+            PredictorKind::NoPrefetch => {}
+            PredictorKind::TopK { k } => {
+                // next layer only, by expert id (no activation awareness)
+                let fl = cur_layer + 1;
+                if fl < l_total {
+                    for e in 0..k.min(self.experts) {
+                        out.push((ExpertKey::new(fl, e), 1.0 - e as f64 / (k as f64 + 1.0)));
+                    }
+                }
+            }
+            PredictorKind::TracedTopK { k } => {
+                let fl = cur_layer + 1;
+                if fl < l_total {
+                    let row = &self.agg[fl * self.experts..(fl + 1) * self.experts];
+                    let mut idx: Vec<usize> = (0..self.experts).collect();
+                    idx.sort_by(|&a, &b| row[b].cmp(&row[a]).then(a.cmp(&b)));
+                    let total: u64 = row.iter().sum::<u64>().max(1);
+                    for (rank, &e) in idx.iter().take(k.min(self.experts)).enumerate() {
+                        let p = row[e] as f64 / total as f64 + EPSILON * (k - rank) as f64;
+                        out.push((ExpertKey::new(fl, e), p));
+                    }
+                }
+            }
+            PredictorKind::ActivationAware { .. } => {
+                // Alg. 1 steps 16-27.
+                let Some((p_eam, _)) = eamc.nearest(cur_eam) else {
+                    return;
+                };
+                for fl in (cur_layer + 1)..l_total {
+                    let n_token = p_eam.row_sum(fl);
+                    if n_token == 0 {
+                        continue;
+                    }
+                    // layer decay: linear, rate inversely proportional to L
+                    let decay = 1.0 - (fl - cur_layer) as f64 / l_total as f64;
+                    for e in 0..self.experts {
+                        let ratio = p_eam.count(fl, e) as f64 / n_token as f64;
+                        if ratio < self.min_ratio {
+                            continue;
+                        }
+                        let p = (ratio + EPSILON) * decay;
+                        out.push((ExpertKey::new(fl, e), p));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eamc_with_pattern() -> Eamc {
+        // Two patterns over 4 layers x 8 experts: "task A" uses expert 2
+        // everywhere, "task B" uses expert 5 everywhere.
+        let mut a = Eam::new(4, 8);
+        let mut b = Eam::new(4, 8);
+        for l in 0..4 {
+            a.record(l, 2, 10);
+            b.record(l, 5, 10);
+        }
+        Eamc::construct(2, &[a, b], 7)
+    }
+
+    #[test]
+    fn activation_aware_predicts_matching_pattern() {
+        let eamc = eamc_with_pattern();
+        let p = Predictor::new(PredictorKind::ActivationAware { refine: true }, 4, 8);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 2, 4); // looks like task A
+        let mut out = Vec::new();
+        p.predict(&cur, &eamc, 0, &mut out);
+        // future layers 1..4, all 8 experts each
+        assert_eq!(out.len(), 3 * 8);
+        // expert 2 in layer 1 must be the single highest priority
+        let best = out
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(best.0, ExpertKey::new(1, 2));
+    }
+
+    #[test]
+    fn layer_decay_orders_same_ratio_experts() {
+        let eamc = eamc_with_pattern();
+        let p = Predictor::new(PredictorKind::ActivationAware { refine: true }, 4, 8);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 2, 4);
+        let mut out = Vec::new();
+        p.predict(&cur, &eamc, 0, &mut out);
+        let prio = |l: usize, e: usize| {
+            out.iter()
+                .find(|(k, _)| *k == ExpertKey::new(l, e))
+                .unwrap()
+                .1
+        };
+        assert!(prio(1, 2) > prio(2, 2));
+        assert!(prio(2, 2) > prio(3, 2));
+        // zero-ratio experts still ordered by decay thanks to EPSILON
+        assert!(prio(1, 0) > prio(2, 0));
+    }
+
+    #[test]
+    fn no_prediction_when_eamc_empty() {
+        let eamc = Eamc::new(4, 4, 8);
+        let p = Predictor::new(PredictorKind::ActivationAware { refine: true }, 4, 8);
+        let cur = Eam::new(4, 8);
+        let mut out = vec![(ExpertKey::new(0, 0), 1.0)];
+        p.predict(&cur, &eamc, 0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn topk_by_id_ignores_activations() {
+        let eamc = eamc_with_pattern();
+        let p = Predictor::new(PredictorKind::TopK { k: 3 }, 4, 8);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 5, 4); // task B — TopK doesn't care
+        let mut out = Vec::new();
+        p.predict(&cur, &eamc, 0, &mut out);
+        let keys: Vec<ExpertKey> = out.iter().map(|(k, _)| *k).collect();
+        assert_eq!(
+            keys,
+            vec![ExpertKey::new(1, 0), ExpertKey::new(1, 1), ExpertKey::new(1, 2)]
+        );
+    }
+
+    #[test]
+    fn traced_topk_follows_aggregate_frequency() {
+        let eamc = eamc_with_pattern();
+        let mut p = Predictor::new(PredictorKind::TracedTopK { k: 2 }, 4, 8);
+        // history: expert 6 dominates layer 1, expert 3 second
+        for _ in 0..30 {
+            p.observe_route(1, 6, 2);
+        }
+        for _ in 0..10 {
+            p.observe_route(1, 3, 2);
+        }
+        p.observe_route(1, 0, 1);
+        let cur = Eam::new(4, 8);
+        let mut out = Vec::new();
+        p.predict(&cur, &eamc, 0, &mut out);
+        let layer1 = Prediction { items: out }.for_layer(1);
+        assert_eq!(layer1, vec![ExpertKey::new(1, 6), ExpertKey::new(1, 3)]);
+    }
+
+    #[test]
+    fn refinement_flag_gates_repredictions() {
+        let refine = Predictor::new(PredictorKind::ActivationAware { refine: true }, 4, 8);
+        let oneshot = Predictor::new(PredictorKind::ActivationAware { refine: false }, 4, 8);
+        assert!(refine.should_predict(2, 5));
+        assert!(oneshot.should_predict(0, 0));
+        assert!(!oneshot.should_predict(1, 0));
+        assert!(!oneshot.should_predict(0, 1));
+        let none = Predictor::new(PredictorKind::NoPrefetch, 4, 8);
+        assert!(!none.should_predict(0, 0));
+    }
+
+    #[test]
+    fn last_layer_predicts_nothing_for_next_layer_strategies() {
+        let eamc = eamc_with_pattern();
+        for kind in [PredictorKind::TopK { k: 4 }, PredictorKind::TracedTopK { k: 4 }] {
+            let p = Predictor::new(kind, 4, 8);
+            let cur = Eam::new(4, 8);
+            let mut out = Vec::new();
+            p.predict(&cur, &eamc, 3, &mut out);
+            assert!(out.is_empty());
+        }
+    }
+
+    #[test]
+    fn prediction_for_layer_sorted_best_first() {
+        let pred = Prediction {
+            items: vec![
+                (ExpertKey::new(1, 0), 0.1),
+                (ExpertKey::new(1, 1), 0.9),
+                (ExpertKey::new(2, 0), 0.5),
+            ],
+        };
+        assert_eq!(
+            pred.for_layer(1),
+            vec![ExpertKey::new(1, 1), ExpertKey::new(1, 0)]
+        );
+    }
+}

@@ -1,0 +1,283 @@
+//! The prefetching priority queue (paper §5.3).
+//!
+//! Semantics from the paper:
+//! * enqueueing an expert already present **replaces** its priority (remove
+//!   + re-enqueue), so the order always reflects the latest prediction;
+//! * experts currently undergoing a memory copy are tracked in an in-flight
+//!   set and skipped on enqueue to avoid duplicate transfers;
+//! * on-demand fetches enter at [`MAX_PRIORITY`] and jump everything.
+//!
+//! Implementation: binary max-heap with lazy deletion — each key carries a
+//! generation counter; stale heap entries are discarded at pop. Push and
+//! pop are O(log n); priority updates don't rebuild the heap.
+
+use std::collections::hash_map::Entry;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+use crate::model::ExpertKey;
+
+/// Priority used for on-demand (blocking) fetches — jumps all prefetches.
+pub const MAX_PRIORITY: f64 = f64::INFINITY;
+
+#[derive(Debug)]
+struct HeapItem {
+    prio: f64,
+    gen: u64,
+    key: ExpertKey,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.prio == other.prio && self.key == other.key && self.gen == other.gen
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap by priority; tie-break deterministic: earlier layer, then
+        // lower expert id, then newer generation.
+        self.prio
+            .partial_cmp(&other.prio)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.key.cmp(&self.key))
+            .then_with(|| self.gen.cmp(&other.gen))
+    }
+}
+
+/// Priority queue of expert prefetch requests.
+#[derive(Debug, Default)]
+pub struct PrefetchQueue {
+    heap: BinaryHeap<HeapItem>,
+    /// Latest (generation, priority) per enqueued key.
+    live: HashMap<ExpertKey, (u64, f64)>,
+    in_flight: HashSet<ExpertKey>,
+    gen: u64,
+    /// Lazy-deletion bookkeeping: stale entries currently in the heap.
+    stale: usize,
+}
+
+impl PrefetchQueue {
+    pub fn new() -> PrefetchQueue {
+        PrefetchQueue::default()
+    }
+
+    /// Number of live (non-stale) queued requests.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Submit or update a prefetch request (Alg. 1 `q.submit`). Skips keys
+    /// already being copied (§5.3 in-flight dedup). Returns whether the key
+    /// is now queued.
+    pub fn submit(&mut self, key: ExpertKey, prio: f64) -> bool {
+        if self.in_flight.contains(&key) {
+            return false;
+        }
+        self.gen += 1;
+        match self.live.entry(key) {
+            Entry::Occupied(mut o) => {
+                // replace = old entry becomes stale in the heap
+                self.stale += 1;
+                o.insert((self.gen, prio));
+            }
+            Entry::Vacant(v) => {
+                v.insert((self.gen, prio));
+            }
+        }
+        self.heap.push(HeapItem {
+            prio,
+            gen: self.gen,
+            key,
+        });
+        true
+    }
+
+    /// Pop the highest-priority live request and mark it in-flight.
+    pub fn pop(&mut self) -> Option<(ExpertKey, f64)> {
+        while let Some(item) = self.heap.pop() {
+            match self.live.get(&item.key) {
+                Some(&(gen, _)) if gen == item.gen => {
+                    self.live.remove(&item.key);
+                    self.in_flight.insert(item.key);
+                    self.maybe_compact();
+                    return Some((item.key, item.prio));
+                }
+                _ => {
+                    self.stale = self.stale.saturating_sub(1);
+                }
+            }
+        }
+        None
+    }
+
+    /// Remove a queued request without transferring (e.g., the expert became
+    /// resident through another tier's transfer).
+    pub fn cancel(&mut self, key: ExpertKey) {
+        if self.live.remove(&key).is_some() {
+            self.stale += 1;
+        }
+    }
+
+    /// Mark a transfer finished; the key may be enqueued again afterwards.
+    pub fn complete(&mut self, key: ExpertKey) {
+        self.in_flight.remove(&key);
+    }
+
+    pub fn is_in_flight(&self, key: ExpertKey) -> bool {
+        self.in_flight.contains(&key)
+    }
+
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.live.contains_key(&key)
+    }
+
+    pub fn priority_of(&self, key: ExpertKey) -> Option<f64> {
+        self.live.get(&key).map(|&(_, p)| p)
+    }
+
+    /// Drop everything queued (sequence boundary).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.live.clear();
+        self.stale = 0;
+    }
+
+    /// Heap housekeeping: rebuild when stale entries dominate, keeping pop
+    /// amortized O(log n) even under heavy priority churn.
+    fn maybe_compact(&mut self) {
+        if self.stale > 64 && self.stale > 4 * self.live.len() {
+            let live = &self.live;
+            let items: Vec<HeapItem> = self
+                .heap
+                .drain()
+                .filter(|it| live.get(&it.key).is_some_and(|&(g, _)| g == it.gen))
+                .collect();
+            self.heap = BinaryHeap::from(items);
+            self.stale = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(l: usize, e: usize) -> ExpertKey {
+        ExpertKey::new(l, e)
+    }
+
+    #[test]
+    fn pops_in_priority_order() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 1), 0.3);
+        q.submit(k(0, 2), 0.9);
+        q.submit(k(1, 1), 0.5);
+        assert_eq!(q.pop().unwrap().0, k(0, 2));
+        assert_eq!(q.pop().unwrap().0, k(1, 1));
+        assert_eq!(q.pop().unwrap().0, k(0, 1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn resubmit_updates_priority() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 1), 0.2);
+        q.submit(k(0, 2), 0.5);
+        q.submit(k(0, 1), 0.9); // upgrade
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap(), (k(0, 1), 0.9));
+    }
+
+    #[test]
+    fn downgrade_also_works() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 1), 0.9);
+        q.submit(k(0, 2), 0.5);
+        q.submit(k(0, 1), 0.1); // downgrade
+        assert_eq!(q.pop().unwrap().0, k(0, 2));
+        assert_eq!(q.pop().unwrap().0, k(0, 1));
+    }
+
+    #[test]
+    fn max_priority_jumps_queue() {
+        let mut q = PrefetchQueue::new();
+        for e in 0..100 {
+            q.submit(k(1, e), 0.99);
+        }
+        q.submit(k(5, 5), MAX_PRIORITY);
+        assert_eq!(q.pop().unwrap().0, k(5, 5));
+    }
+
+    #[test]
+    fn in_flight_dedup() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 1), 0.5);
+        let (key, _) = q.pop().unwrap();
+        assert!(q.is_in_flight(key));
+        assert!(!q.submit(key, 0.9), "in-flight keys are skipped (§5.3)");
+        q.complete(key);
+        assert!(q.submit(key, 0.9));
+    }
+
+    #[test]
+    fn cancel_removes() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 1), 0.5);
+        q.submit(k(0, 2), 0.4);
+        q.cancel(k(0, 1));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().0, k(0, 2));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(2, 0), 0.5);
+        q.submit(k(1, 0), 0.5);
+        q.submit(k(1, 7), 0.5);
+        // earlier layer first, then lower expert id
+        assert_eq!(q.pop().unwrap().0, k(1, 0));
+        assert_eq!(q.pop().unwrap().0, k(1, 7));
+        assert_eq!(q.pop().unwrap().0, k(2, 0));
+    }
+
+    #[test]
+    fn heavy_churn_stays_consistent() {
+        let mut q = PrefetchQueue::new();
+        for round in 0..50 {
+            for e in 0..64 {
+                q.submit(k(0, e), (e as f64 + round as f64) % 7.0);
+            }
+        }
+        assert_eq!(q.len(), 64);
+        let mut last = f64::INFINITY;
+        let mut n = 0;
+        while let Some((_, p)) = q.pop() {
+            assert!(p <= last + 1e-12);
+            last = p;
+            n += 1;
+        }
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn clear_empties_queue_but_not_in_flight() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 0), 1.0);
+        let (key, _) = q.pop().unwrap();
+        q.submit(k(0, 1), 1.0);
+        q.clear();
+        assert!(q.is_empty());
+        assert!(q.is_in_flight(key));
+    }
+}

@@ -1,0 +1,143 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`), via the in-tree
+//! JSON parser (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::weights::TinyConfig;
+use crate::util::json::Json;
+
+/// Shape/dtype of one artifact argument as recorded by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One compiled artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: usize,
+}
+
+/// The manifest: geometry + artifact table.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub src_hash: String,
+    pub config: TinyConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let j = Json::parse(&data).map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        let src_hash = j
+            .get("src_hash")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let config = TinyConfig::from_json(
+            j.get("config").ok_or_else(|| anyhow!("manifest missing 'config'"))?,
+        )?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'file'"))?
+                .to_string();
+            let outputs = spec
+                .get("outputs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'outputs'"))?;
+            let args = spec
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'args'"))?
+                .iter()
+                .map(|a| {
+                    let shape = a
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    let dtype = a
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    ArgSpec { shape, dtype }
+                })
+                .collect();
+            artifacts.insert(name.clone(), ArtifactSpec { file, args, outputs });
+        }
+        Ok(ArtifactManifest {
+            src_hash,
+            config,
+            artifacts,
+        })
+    }
+
+    /// Paths of all artifact files, for existence checks.
+    pub fn files(&self) -> Vec<String> {
+        self.artifacts.values().map(|a| a.file.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These run against the built artifacts if present; skipped in clean
+    /// checkouts (integration tests cover the full path after
+    /// `make artifacts`).
+    fn dir() -> Option<std::path::PathBuf> {
+        let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_all_pieces() {
+        let Some(d) = dir() else { return };
+        let m = ArtifactManifest::load(&d).unwrap();
+        for piece in ["embed", "attn_step", "router", "expert", "combine", "lm_head"] {
+            assert!(m.artifacts.contains_key(piece), "missing {piece}");
+        }
+        assert_eq!(m.artifacts["attn_step"].outputs, 3);
+        assert!(!m.src_hash.is_empty());
+        for f in m.files() {
+            assert!(d.join(&f).exists(), "artifact file {f} missing");
+        }
+    }
+
+    #[test]
+    fn manifest_geometry_matches_default_tiny() {
+        let Some(d) = dir() else { return };
+        let m = ArtifactManifest::load(&d).unwrap();
+        assert_eq!(m.config, TinyConfig::default_tiny());
+    }
+
+    #[test]
+    fn arg_shapes_match_geometry() {
+        let Some(d) = dir() else { return };
+        let m = ArtifactManifest::load(&d).unwrap();
+        let c = &m.config;
+        let router = &m.artifacts["router"];
+        assert_eq!(router.args[0].shape, vec![c.batch, c.d_model]);
+        assert_eq!(router.args[1].shape, vec![c.d_model, c.n_experts]);
+        let expert = &m.artifacts["expert"];
+        assert_eq!(expert.args[1].shape, vec![c.d_model, c.d_ff]);
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` crate. The interchange is
+//! HLO **text** — see `aot.py` for why (jax >= 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects in proto form).
+//!
+//! Weights are passed as runtime *arguments* on every call: that is the
+//! deliberate design that makes expert offloading possible (an expert's
+//! tensors can live anywhere; whoever owns them feeds them in), mirroring
+//! the paper's per-expert fetch granularity.
+
+mod artifacts;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::weights::TinyConfig;
+
+/// Compiled executables for every decode-step piece of the tiny MoE.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub cfg: TinyConfig,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {dims:?} does not match data len {}", data.len()));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+impl Runtime {
+    /// Load every artifact listed in `manifest.json` and compile it on the
+    /// CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for (name, art) in &manifest.artifacts {
+            let path = artifacts_dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            exes,
+            cfg: manifest.config,
+        })
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let out = exe.execute::<xla::Literal>(args)?;
+        Ok(out[0][0].to_literal_sync()?)
+    }
+
+    /// `ids [B] i32, emb [V,D] -> x [B,D]`.
+    pub fn embed(&self, ids: &[i32], emb: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let out = self.run(
+            "embed",
+            &[
+                lit_i32(ids, &[c.batch as i64])?,
+                lit_f32(emb, &[c.vocab as i64, c.d_model as i64])?,
+            ],
+        )?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// One attention step; returns `(x', k', v')` flattened.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_step(
+        &self,
+        x: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        pos: i32,
+        wq: &[f32],
+        wk: &[f32],
+        wv: &[f32],
+        wo: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        let (b, s, d) = (c.batch as i64, c.max_seq as i64, c.d_model as i64);
+        let out = self.run(
+            "attn_step",
+            &[
+                lit_f32(x, &[b, d])?,
+                lit_f32(k_cache, &[b, s, d])?,
+                lit_f32(v_cache, &[b, s, d])?,
+                xla::Literal::scalar(pos),
+                lit_f32(wq, &[d, d])?,
+                lit_f32(wk, &[d, d])?,
+                lit_f32(wv, &[d, d])?,
+                lit_f32(wo, &[d, d])?,
+            ],
+        )?;
+        let (o, nk, nv) = out.to_tuple3()?;
+        Ok((o.to_vec::<f32>()?, nk.to_vec::<f32>()?, nv.to_vec::<f32>()?))
+    }
+
+    /// Top-1 router (the L1 Pallas kernel): `-> (gates [B], idx [B])`.
+    pub fn router(&self, x: &[f32], wr: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let c = &self.cfg;
+        let out = self.run(
+            "router",
+            &[
+                lit_f32(x, &[c.batch as i64, c.d_model as i64])?,
+                lit_f32(wr, &[c.d_model as i64, c.n_experts as i64])?,
+            ],
+        )?;
+        let (g, i) = out.to_tuple2()?;
+        Ok((g.to_vec::<f32>()?, i.to_vec::<i32>()?))
+    }
+
+    /// Expert FFN (the L1 Pallas kernel) over a padded `[B,D]` row block.
+    pub fn expert(
+        &self,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+    ) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let (b, d, f) = (c.batch as i64, c.d_model as i64, c.d_ff as i64);
+        let out = self.run(
+            "expert",
+            &[
+                lit_f32(x, &[b, d])?,
+                lit_f32(w1, &[d, f])?,
+                lit_f32(b1, &[f])?,
+                lit_f32(w2, &[f, d])?,
+                lit_f32(b2, &[d])?,
+            ],
+        )?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Residual + gated combine.
+    pub fn combine(&self, x: &[f32], eo: &[f32], gates: &[f32], sel: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let (b, d) = (c.batch as i64, c.d_model as i64);
+        let out = self.run(
+            "combine",
+            &[
+                lit_f32(x, &[b, d])?,
+                lit_f32(eo, &[b, d])?,
+                lit_f32(gates, &[b])?,
+                lit_f32(sel, &[b])?,
+            ],
+        )?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Greedy next-token head.
+    pub fn lm_head(&self, x: &[f32], w_out: &[f32]) -> Result<Vec<i32>> {
+        let c = &self.cfg;
+        let out = self.run(
+            "lm_head",
+            &[
+                lit_f32(x, &[c.batch as i64, c.d_model as i64])?,
+                lit_f32(w_out, &[c.d_model as i64, c.vocab as i64])?,
+            ],
+        )?;
+        Ok(out.to_tuple1()?.to_vec::<i32>()?)
+    }
+}

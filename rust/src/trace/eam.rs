@@ -1,0 +1,273 @@
+//! Expert Activation Matrix (paper §4.2).
+
+/// An `L x E` matrix where cell `[l][e]` counts the tokens routed to expert
+/// `e` at MoE layer `l` while processing **one** sequence (prompt + all
+/// generated tokens). Maintaining counts *per sequence* — not aggregated —
+/// is the paper's key tracing insight: aggregation across sequences washes
+/// out sparse activation and temporal locality (§4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Eam {
+    layers: usize,
+    experts: usize,
+    counts: Vec<u32>,
+    /// Per-row token totals, kept incrementally so distance and ratio
+    /// computations are O(E) per row with no re-summation.
+    row_sums: Vec<u32>,
+}
+
+impl Eam {
+    /// All-zero EAM (Alg. 1 step 2: `NEWEAM(n_layers, n_experts, 0)`).
+    pub fn new(layers: usize, experts: usize) -> Eam {
+        Eam {
+            layers,
+            experts,
+            counts: vec![0; layers * experts],
+            row_sums: vec![0; layers],
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    /// Record `tokens` routed to `expert` at `layer` (Alg. 1 steps 6-7).
+    pub fn record(&mut self, layer: usize, expert: usize, tokens: u32) {
+        debug_assert!(layer < self.layers && expert < self.experts);
+        self.counts[layer * self.experts + expert] += tokens;
+        self.row_sums[layer] += tokens;
+    }
+
+    #[inline]
+    pub fn count(&self, layer: usize, expert: usize) -> u32 {
+        self.counts[layer * self.experts + expert]
+    }
+
+    #[inline]
+    pub fn row(&self, layer: usize) -> &[u32] {
+        &self.counts[layer * self.experts..(layer + 1) * self.experts]
+    }
+
+    #[inline]
+    pub fn row_sum(&self, layer: usize) -> u32 {
+        self.row_sums[layer]
+    }
+
+    /// Activation ratio of one expert within its layer: `M[l][e] / sum(M[l])`
+    /// — the prior used by both prefetch (Alg. 1 step 25) and cache (Alg. 2
+    /// step 7) priorities. Returns 0 for an untraced layer.
+    #[inline]
+    pub fn ratio(&self, layer: usize, expert: usize) -> f32 {
+        let s = self.row_sums[layer];
+        if s == 0 {
+            0.0
+        } else {
+            self.count(layer, expert) as f32 / s as f32
+        }
+    }
+
+    /// Reset all counts to zero (reused buffers in the serving hot path).
+    pub fn clear(&mut self) {
+        self.counts.fill(0);
+        self.row_sums.fill(0);
+    }
+
+    /// Total tokens recorded across one layer-row — equal for all traced
+    /// layers of a complete trace (the §4.2 invariant `sum_j M[i][j] = n`).
+    pub fn tokens(&self) -> u32 {
+        self.row_sums.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fraction of experts with nonzero activation (the paper's "sparse
+    /// activation" measurement: 3-20% for small batches).
+    pub fn activation_fraction(&self) -> f64 {
+        let active = self.counts.iter().filter(|&&c| c > 0).count();
+        active as f64 / (self.layers * self.experts) as f64
+    }
+
+    /// Fraction of *activated* experts used more than once ("temporal
+    /// locality": 30-56% in the paper's study).
+    pub fn reuse_fraction(&self) -> f64 {
+        let active = self.counts.iter().filter(|&&c| c > 0).count();
+        if active == 0 {
+            return 0.0;
+        }
+        let reused = self.counts.iter().filter(|&&c| c > 1).count();
+        reused as f64 / active as f64
+    }
+
+    /// Paper Eq. 1: `1 - (1/L) * sum_l cos(M1[l]/sum, M2[l]/sum)`.
+    ///
+    /// Row conventions for degenerate rows: two empty rows are identical
+    /// (cos = 1); one empty row is maximally dissimilar (cos = 0). The
+    /// normalization makes the distance independent of sequence length,
+    /// and the per-row cosine captures positional (per-expert) differences
+    /// — the two requirements stated in §4.2.
+    pub fn distance(&self, other: &Eam) -> f64 {
+        debug_assert_eq!(self.layers, other.layers);
+        debug_assert_eq!(self.experts, other.experts);
+        let mut sim_sum = 0.0f64;
+        for l in 0..self.layers {
+            sim_sum += row_cosine(self.row(l), other.row(l));
+        }
+        1.0 - sim_sum / self.layers as f64
+    }
+
+    /// Distance restricted to the rows this (partial) EAM has traced so far.
+    ///
+    /// Used during generation (Alg. 1 `EAMDISTANCE`): the current EAM only
+    /// has counts up to the executing layer of the first iterations, and
+    /// untraced layers must not dilute the match against complete prior
+    /// EAMs. Falls back to 0 distance against everything when nothing is
+    /// traced yet (the EAMC's first entry then wins arbitrarily).
+    pub fn distance_partial(&self, prior: &Eam) -> f64 {
+        let mut sim_sum = 0.0f64;
+        let mut rows = 0usize;
+        for l in 0..self.layers {
+            if self.row_sums[l] > 0 {
+                sim_sum += row_cosine(self.row(l), prior.row(l));
+                rows += 1;
+            }
+        }
+        if rows == 0 {
+            0.0
+        } else {
+            1.0 - sim_sum / rows as f64
+        }
+    }
+
+    /// Memory footprint of the counts (for the §8.5 overhead accounting).
+    pub fn bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Cosine similarity between two count rows. Normalization by the row sum
+/// (as in Eq. 1) cancels inside cosine, so we compute it on raw counts.
+#[inline]
+fn row_cosine(a: &[u32], b: &[u32]) -> f64 {
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for i in 0..a.len() {
+        let (x, y) = (a[i] as f64, b[i] as f64);
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    match (na > 0.0, nb > 0.0) {
+        (true, true) => dot / (na.sqrt() * nb.sqrt()),
+        (false, false) => 1.0,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eam_from(rows: &[&[u32]]) -> Eam {
+        let mut m = Eam::new(rows.len(), rows[0].len());
+        for (l, row) in rows.iter().enumerate() {
+            for (e, &c) in row.iter().enumerate() {
+                m.record(l, e, c);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn record_and_ratio() {
+        let mut m = Eam::new(2, 4);
+        m.record(0, 1, 3);
+        m.record(0, 2, 1);
+        assert_eq!(m.count(0, 1), 3);
+        assert_eq!(m.row_sum(0), 4);
+        assert!((m.ratio(0, 1) - 0.75).abs() < 1e-6);
+        assert_eq!(m.ratio(1, 0), 0.0); // untraced layer
+    }
+
+    #[test]
+    fn distance_identical_is_zero() {
+        let m = eam_from(&[&[1, 2, 0], &[0, 3, 1]]);
+        assert!(m.distance(&m) < 1e-9);
+    }
+
+    #[test]
+    fn distance_scale_invariant() {
+        // Eq. 1 requirement (ii): independent of token count.
+        let a = eam_from(&[&[1, 2, 0], &[0, 3, 1]]);
+        let b = eam_from(&[&[10, 20, 0], &[0, 30, 10]]);
+        assert!(a.distance(&b) < 1e-9);
+    }
+
+    #[test]
+    fn distance_disjoint_is_one() {
+        let a = eam_from(&[&[1, 0], &[1, 0]]);
+        let b = eam_from(&[&[0, 1], &[0, 1]]);
+        assert!((a.distance(&b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distance_symmetric() {
+        let a = eam_from(&[&[1, 2, 3], &[4, 0, 1]]);
+        let b = eam_from(&[&[2, 2, 0], &[1, 1, 1]]);
+        assert!((a.distance(&b) - b.distance(&a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_conventions() {
+        let a = eam_from(&[&[1, 0], &[0, 0]]);
+        let b = eam_from(&[&[1, 0], &[0, 0]]);
+        assert!(a.distance(&b) < 1e-9); // both empty second rows: identical
+        let c = eam_from(&[&[1, 0], &[0, 1]]);
+        // second rows: one empty vs nonempty -> sim 0 for that layer
+        assert!((a.distance(&c) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_distance_ignores_untraced_layers() {
+        let mut cur = Eam::new(3, 2);
+        cur.record(0, 0, 5); // only layer 0 traced
+        let prior_match = eam_from(&[&[3, 0], &[0, 9], &[9, 0]]);
+        let prior_miss = eam_from(&[&[0, 3], &[0, 9], &[9, 0]]);
+        assert!(cur.distance_partial(&prior_match) < 1e-9);
+        assert!((cur.distance_partial(&prior_miss) - 1.0).abs() < 1e-9);
+        // full distance would be diluted by untraced layers:
+        assert!(cur.distance(&prior_match) > 0.1);
+    }
+
+    #[test]
+    fn partial_distance_empty_cur_is_zero() {
+        let cur = Eam::new(2, 2);
+        let prior = eam_from(&[&[1, 0], &[0, 1]]);
+        assert_eq!(cur.distance_partial(&prior), 0.0);
+    }
+
+    #[test]
+    fn sparsity_and_reuse_metrics() {
+        let m = eam_from(&[&[4, 1, 0, 0], &[0, 2, 0, 0]]);
+        // active: 3 of 8 cells
+        assert!((m.activation_fraction() - 3.0 / 8.0).abs() < 1e-9);
+        // reused (count>1): 2 of 3 active
+        assert!((m.reuse_fraction() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = eam_from(&[&[1, 2], &[3, 4]]);
+        m.clear();
+        assert_eq!(m.row_sum(0), 0);
+        assert_eq!(m.tokens(), 0);
+        assert_eq!(m.activation_fraction(), 0.0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let m = Eam::new(24, 128);
+        assert_eq!(m.bytes(), 24 * 128 * 4);
+    }
+}

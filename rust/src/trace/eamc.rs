@@ -1,0 +1,355 @@
+//! Expert Activation Matrix Collection (paper §4.2-§4.3).
+
+use crate::trace::{kmeans_medoids, Eam};
+
+/// Counters exposed for the §8.5 experiments (adaptation speed, overhead).
+#[derive(Debug, Clone, Default)]
+pub struct EamcStats {
+    /// Completed-sequence EAMs observed since the last (re)construction.
+    pub observed_since_build: usize,
+    /// Number of (re)constructions performed.
+    pub builds: usize,
+    /// Sequences flagged as poorly predicted (candidates for rebuild).
+    pub poor_predictions: usize,
+}
+
+/// Fixed-capacity collection of representative EAMs.
+///
+/// Built offline from a relevant dataset by k-means (capacity = k) and
+/// queried online with `nearest()` during generation. Handles distribution
+/// shift (§4.3) by recording recently observed EAMs and re-clustering once
+/// enough poorly-predicted sequences accumulate.
+pub struct Eamc {
+    capacity: usize,
+    layers: usize,
+    experts: usize,
+    eams: Vec<Eam>,
+    /// Per-entry row-normalized unit vectors in **sparse CSR** form: one
+    /// flat (expert, weight) arena per entry plus row offsets. EAM rows are
+    /// 3-20% dense (the premise of the paper), so sparse storage shrinks a
+    /// 300-entry switch-large EAMC from 3.6MB of dense f32 (memory-bound
+    /// ~230us per lookup) to a few hundred KB of contiguous data — reaching
+    /// the paper's ~21us lookup (§8.5; EXPERIMENTS.md §Perf).
+    sparse: Vec<SparseEam>,
+    /// Sliding window of recently completed sequence EAMs, fuel for online
+    /// reconstruction.
+    recent: Vec<Eam>,
+    recent_cap: usize,
+    /// Rebuild once this many poorly-predicted sequences are seen.
+    rebuild_threshold: usize,
+    stats: EamcStats,
+    seed: u64,
+}
+
+impl Eamc {
+    /// Empty collection; `nearest()` returns `None` until populated.
+    pub fn new(capacity: usize, layers: usize, experts: usize) -> Eamc {
+        Eamc {
+            capacity,
+            layers,
+            experts,
+            eams: Vec::new(),
+            sparse: Vec::new(),
+            recent: Vec::new(),
+            recent_cap: 512,
+            rebuild_threshold: 100,
+            stats: EamcStats::default(),
+            seed: 0x5EED,
+        }
+    }
+
+    /// Offline construction (§4.2): cluster `dataset` EAMs into `capacity`
+    /// groups and keep the medoids.
+    pub fn construct(capacity: usize, dataset: &[Eam], seed: u64) -> Eamc {
+        assert!(!dataset.is_empty());
+        let layers = dataset[0].layers();
+        let experts = dataset[0].experts();
+        let mut c = Eamc::new(capacity, layers, experts);
+        c.seed = seed;
+        c.rebuild_from(dataset);
+        c
+    }
+
+    fn rebuild_from(&mut self, dataset: &[Eam]) {
+        let r = kmeans_medoids(dataset, self.capacity, 50, self.seed.wrapping_add(self.stats.builds as u64));
+        self.eams = r.medoids.iter().map(|&i| dataset[i].clone()).collect();
+        self.sparse = self.eams.iter().map(|m| sparse_unit_rows(m)).collect();
+        self.stats.builds += 1;
+        self.stats.observed_since_build = 0;
+        self.stats.poor_predictions = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.eams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.eams.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    pub fn stats(&self) -> &EamcStats {
+        &self.stats
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Eam> {
+        self.eams.iter()
+    }
+
+    /// Memory footprint of the stored EAMs (§8.5: <= 1.8 MB for 300 EAMs of
+    /// switch-large geometry... with u32 cells; the paper stores u16).
+    pub fn bytes(&self) -> usize {
+        self.eams.iter().map(|e| e.bytes()).sum()
+    }
+
+    /// Footprint of the sparse lookup structure actually touched per
+    /// `nearest()` call (§8.5 overhead accounting).
+    pub fn lookup_bytes(&self) -> usize {
+        self.sparse
+            .iter()
+            .map(|s| s.offsets.len() * 4 + s.data.len() * std::mem::size_of::<(u16, f32)>())
+            .sum()
+    }
+
+    /// Alg. 1 steps 16-21: the stored EAM with minimal partial distance to
+    /// the current (in-progress) EAM. `None` when the collection is empty.
+    ///
+    /// This is the serving-path hot call — §8.5 reports ~21us at 300 EAMs.
+    /// The query's rows are normalized **once**; each stored entry then
+    /// costs one dot product per traced row against its precomputed unit
+    /// vector (see `benches/perf_hotpath.rs`).
+    pub fn nearest(&self, cur: &Eam) -> Option<(&Eam, f64)> {
+        if self.eams.is_empty() {
+            return None;
+        }
+        let (l, e) = (self.layers, self.experts);
+        // normalize the query once
+        let q = unit_rows(cur);
+        let q_rows: Vec<usize> = (0..l).filter(|&li| cur.row_sum(li) > 0).collect();
+        if q_rows.is_empty() {
+            // nothing traced yet: Eq. 1 over zero rows is 0 for everything
+            return Some((&self.eams[0], 0.0));
+        }
+        let mut best = 0usize;
+        let mut best_sim = f32::NEG_INFINITY;
+        for (i, entry) in self.sparse.iter().enumerate() {
+            let mut sim = 0.0f32;
+            for &li in &q_rows {
+                let qrow = &q[li * e..(li + 1) * e];
+                let (s, t) = (entry.offsets[li] as usize, entry.offsets[li + 1] as usize);
+                // sparse dot: only the entry's active experts contribute
+                for &(idx, v) in &entry.data[s..t] {
+                    sim += v * qrow[idx as usize];
+                }
+            }
+            if sim > best_sim {
+                best_sim = sim;
+                best = i;
+            }
+        }
+        let best_d = 1.0 - best_sim as f64 / q_rows.len() as f64;
+        Some((&self.eams[best], best_d))
+    }
+
+    /// Online path (§4.3): feed back the completed EAM of a served sequence
+    /// together with whether its prefetch accuracy was satisfactory.
+    /// Reconstructs the collection from the recent window once
+    /// `rebuild_threshold` poorly-predicted sequences accumulate.
+    ///
+    /// Returns `true` if a reconstruction happened.
+    pub fn observe(&mut self, completed: Eam, well_predicted: bool) -> bool {
+        self.stats.observed_since_build += 1;
+        if !well_predicted {
+            self.stats.poor_predictions += 1;
+        }
+        if self.recent.len() == self.recent_cap {
+            self.recent.remove(0);
+        }
+        self.recent.push(completed);
+        if self.stats.poor_predictions >= self.rebuild_threshold && !self.recent.is_empty() {
+            let dataset: Vec<Eam> = self.recent.clone();
+            self.rebuild_from(&dataset);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Lower the rebuild threshold (tests / drift experiments).
+    pub fn set_rebuild_threshold(&mut self, t: usize) {
+        self.rebuild_threshold = t;
+    }
+}
+
+/// CSR-style sparse row-normalized EAM: flat (expert, weight) arena + row
+/// offsets (length L+1).
+struct SparseEam {
+    offsets: Vec<u32>,
+    data: Vec<(u16, f32)>,
+}
+
+/// Per-row truncation width: cosine similarity is dominated by the largest
+/// activation ratios (the expert "head"); keeping the top-8 weights per row
+/// preserves the nearest-match decision while cutting lookup work ~4x. The
+/// tail of near-zero weights is routing noise by construction.
+const SPARSE_TOP_K: usize = 8;
+
+fn sparse_unit_rows(m: &Eam) -> SparseEam {
+    let (l, e) = (m.layers(), m.experts());
+    let mut offsets = Vec::with_capacity(l + 1);
+    let mut data = Vec::new();
+    offsets.push(0);
+    for li in 0..l {
+        let row = m.row(li);
+        let norm: f32 = row.iter().map(|&c| (c as f32) * (c as f32)).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            let mut pairs: Vec<(u16, u32)> = (0..e)
+                .filter(|&k| row[k] > 0)
+                .map(|k| (k as u16, row[k]))
+                .collect();
+            if pairs.len() > SPARSE_TOP_K {
+                pairs.sort_by(|a, b| b.1.cmp(&a.1));
+                pairs.truncate(SPARSE_TOP_K);
+                pairs.sort_by_key(|p| p.0);
+            }
+            for (k, c) in pairs {
+                data.push((k, c as f32 / norm));
+            }
+        }
+        offsets.push(data.len() as u32);
+    }
+    SparseEam { offsets, data }
+}
+
+/// Row-normalized unit vectors of an EAM (zero rows stay zero).
+fn unit_rows(m: &Eam) -> Vec<f32> {
+    let (l, e) = (m.layers(), m.experts());
+    let mut out = vec![0.0f32; l * e];
+    for li in 0..l {
+        let row = m.row(li);
+        let norm: f32 = row.iter().map(|&c| (c as f32) * (c as f32)).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for k in 0..e {
+                out[li * e + k] = row[k] as f32 / norm;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_hot(layers: usize, experts: usize, hot: usize, tokens: u32) -> Eam {
+        let mut m = Eam::new(layers, experts);
+        for l in 0..layers {
+            m.record(l, hot, tokens);
+        }
+        m
+    }
+
+    fn dataset(hots: &[usize]) -> Vec<Eam> {
+        hots.iter().map(|&h| one_hot(4, 8, h, 5)).collect()
+    }
+
+    #[test]
+    fn construct_respects_capacity() {
+        let ds = dataset(&[0, 0, 0, 3, 3, 3, 7, 7, 7]);
+        let c = Eamc::construct(3, &ds, 1);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.capacity(), 3);
+    }
+
+    #[test]
+    fn nearest_finds_matching_pattern() {
+        let ds = dataset(&[0, 0, 0, 3, 3, 3, 7, 7, 7]);
+        let c = Eamc::construct(3, &ds, 1);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 3, 2); // first layer routed to expert 3
+        let (m, d) = c.nearest(&cur).unwrap();
+        assert!(d < 1e-9);
+        assert!(m.count(1, 3) > 0, "matched EAM should predict expert 3 deeper");
+    }
+
+    #[test]
+    fn nearest_empty_is_none() {
+        let c = Eamc::new(4, 2, 2);
+        let cur = Eam::new(2, 2);
+        assert!(c.nearest(&cur).is_none());
+    }
+
+    #[test]
+    fn observe_triggers_rebuild_on_drift() {
+        let ds = dataset(&[0, 0, 0, 0]);
+        let mut c = Eamc::construct(2, &ds, 2);
+        c.set_rebuild_threshold(5);
+        // a new distribution routes to expert 6
+        let mut rebuilt = false;
+        for _ in 0..5 {
+            rebuilt |= c.observe(one_hot(4, 8, 6, 5), false);
+        }
+        assert!(rebuilt, "rebuild should fire at the threshold");
+        // after rebuild, the new pattern is representable
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 6, 1);
+        let (_, d) = c.nearest(&cur).unwrap();
+        assert!(d < 1e-9, "post-rebuild distance {d}");
+        assert_eq!(c.stats().builds, 2);
+    }
+
+    #[test]
+    fn well_predicted_observations_do_not_rebuild() {
+        let ds = dataset(&[0, 0, 0]);
+        let mut c = Eamc::construct(2, &ds, 3);
+        c.set_rebuild_threshold(5);
+        for _ in 0..50 {
+            assert!(!c.observe(one_hot(4, 8, 0, 5), true));
+        }
+        assert_eq!(c.stats().builds, 1);
+    }
+
+    #[test]
+    fn nearest_matches_naive_distance_partial() {
+        // the unit-vector fast path must agree with Eam::distance_partial
+        let mut ds = Vec::new();
+        for h in [0usize, 2, 5, 7] {
+            let mut m = Eam::new(4, 8);
+            for l in 0..4 {
+                m.record(l, h, 3 + l as u32);
+                m.record(l, (h + 1) % 8, 1);
+            }
+            ds.push(m);
+        }
+        let c = Eamc::construct(4, &ds, 9);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 5, 2);
+        cur.record(1, 5, 1);
+        let (fast, fd) = c.nearest(&cur).unwrap();
+        let (naive, nd) = c
+            .iter()
+            .map(|m| (m, cur.distance_partial(m)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!((fd - nd).abs() < 1e-5, "fast {fd} vs naive {nd}");
+        assert_eq!(fast.row(0), naive.row(0));
+    }
+
+    #[test]
+    fn bytes_footprint() {
+        let ds = dataset(&[0, 1, 2, 3]);
+        let c = Eamc::construct(4, &ds, 4);
+        assert_eq!(c.bytes(), 4 * 4 * 8 * 4); // 4 EAMs x L4 x E8 x u32
+    }
+}

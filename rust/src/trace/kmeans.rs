@@ -1,0 +1,289 @@
+//! K-means clustering of EAMs under the paper's Eq. 1 distance (§4.2).
+//!
+//! Centroids live in the space of row-normalized `L x E` f32 matrices;
+//! assignments use Eq. 1 (average per-layer cosine distance); after
+//! convergence each cluster is represented by its **medoid** — the member
+//! EAM closest to the centroid — because the EAMC must store real observed
+//! activation patterns, not synthetic averages.
+
+use crate::trace::Eam;
+use crate::util::Rng;
+
+/// A centroid: per-layer normalized activation rows (f32, length L*E).
+struct Centroid {
+    layers: usize,
+    experts: usize,
+    rows: Vec<f32>,
+}
+
+impl Centroid {
+    fn from_eam(eam: &Eam) -> Centroid {
+        let (l, e) = (eam.layers(), eam.experts());
+        let mut rows = vec![0.0f32; l * e];
+        for li in 0..l {
+            let s = eam.row_sum(li);
+            if s > 0 {
+                for ei in 0..e {
+                    rows[li * e + ei] = eam.count(li, ei) as f32 / s as f32;
+                }
+            }
+        }
+        Centroid {
+            layers: l,
+            experts: e,
+            rows,
+        }
+    }
+
+    /// Eq. 1 distance from a centroid to an EAM.
+    fn distance(&self, eam: &Eam) -> f64 {
+        let e = self.experts;
+        let mut sim = 0.0f64;
+        for l in 0..self.layers {
+            let crow = &self.rows[l * e..(l + 1) * e];
+            let erow = eam.row(l);
+            let mut dot = 0.0f64;
+            let mut nc = 0.0f64;
+            let mut ne = 0.0f64;
+            for i in 0..e {
+                let (x, y) = (crow[i] as f64, erow[i] as f64);
+                dot += x * y;
+                nc += x * x;
+                ne += y * y;
+            }
+            sim += match (nc > 0.0, ne > 0.0) {
+                (true, true) => dot / (nc.sqrt() * ne.sqrt()),
+                (false, false) => 1.0,
+                _ => 0.0,
+            };
+        }
+        1.0 - sim / self.layers as f64
+    }
+
+    /// Mean of the members' normalized rows.
+    fn from_members(members: &[&Eam]) -> Centroid {
+        let (l, e) = (members[0].layers(), members[0].experts());
+        let mut rows = vec![0.0f32; l * e];
+        for m in members {
+            for li in 0..l {
+                let s = m.row_sum(li);
+                if s > 0 {
+                    for ei in 0..e {
+                        rows[li * e + ei] += m.count(li, ei) as f32 / s as f32;
+                    }
+                }
+            }
+        }
+        let n = members.len() as f32;
+        for v in rows.iter_mut() {
+            *v /= n;
+        }
+        Centroid {
+            layers: l,
+            experts: e,
+            rows,
+        }
+    }
+}
+
+/// Result of clustering: medoid indices into the input slice, plus the final
+/// cluster assignment of every input.
+pub struct KMeansResult {
+    pub medoids: Vec<usize>,
+    pub assignment: Vec<usize>,
+    pub iterations: usize,
+}
+
+/// Cluster `eams` into `k` groups, returning medoid indices (§4.2 "the EAM
+/// that is closest to the centroid is stored in the EAMC").
+///
+/// k-means++ seeding, at most `max_iters` Lloyd iterations, deterministic
+/// given `seed`. If `k >= eams.len()`, every input is its own medoid.
+pub fn kmeans_medoids(eams: &[Eam], k: usize, max_iters: usize, seed: u64) -> KMeansResult {
+    assert!(!eams.is_empty(), "kmeans over empty input");
+    let k = k.min(eams.len());
+    if k == eams.len() {
+        return KMeansResult {
+            medoids: (0..eams.len()).collect(),
+            assignment: (0..eams.len()).collect(),
+            iterations: 0,
+        };
+    }
+    let mut rng = Rng::new(seed);
+
+    // k-means++ init.
+    let mut centroids: Vec<Centroid> = Vec::with_capacity(k);
+    let first = rng.below(eams.len());
+    centroids.push(Centroid::from_eam(&eams[first]));
+    let mut d2: Vec<f64> = eams.iter().map(|m| centroids[0].distance(m).powi(2)).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let idx = if total <= 1e-18 {
+            rng.below(eams.len())
+        } else {
+            let mut u = rng.f64() * total;
+            let mut pick = eams.len() - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        let c = Centroid::from_eam(&eams[idx]);
+        for (i, m) in eams.iter().enumerate() {
+            d2[i] = d2[i].min(c.distance(m).powi(2));
+        }
+        centroids.push(c);
+    }
+
+    // Lloyd iterations.
+    let mut assignment = vec![0usize; eams.len()];
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        let mut changed = false;
+        for (i, m) in eams.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (c, cen) in centroids.iter().enumerate() {
+                let d = cen.distance(m);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        for c in 0..k {
+            let members: Vec<&Eam> = eams
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| assignment[*i] == c)
+                .map(|(_, m)| m)
+                .collect();
+            if !members.is_empty() {
+                centroids[c] = Centroid::from_members(&members);
+            } else {
+                // Re-seed an empty cluster on the farthest point.
+                let far = (0..eams.len())
+                    .max_by(|&a, &b| {
+                        let da = centroids[assignment[a]].distance(&eams[a]);
+                        let db = centroids[assignment[b]].distance(&eams[b]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c] = Centroid::from_eam(&eams[far]);
+            }
+        }
+    }
+
+    // Medoid extraction.
+    let mut medoids = Vec::with_capacity(k);
+    for c in 0..k {
+        let mut best = None;
+        let mut bd = f64::INFINITY;
+        for (i, m) in eams.iter().enumerate() {
+            if assignment[i] == c {
+                let d = centroids[c].distance(m);
+                if d < bd {
+                    bd = d;
+                    best = Some(i);
+                }
+            }
+        }
+        if let Some(i) = best {
+            medoids.push(i);
+        }
+    }
+    medoids.sort();
+    medoids.dedup();
+
+    KMeansResult {
+        medoids,
+        assignment,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an EAM activating expert `hot` on every layer.
+    fn one_hot(layers: usize, experts: usize, hot: usize, tokens: u32) -> Eam {
+        let mut m = Eam::new(layers, experts);
+        for l in 0..layers {
+            m.record(l, hot, tokens);
+        }
+        m
+    }
+
+    #[test]
+    fn separates_obvious_clusters() {
+        let mut eams = Vec::new();
+        for i in 0..10 {
+            eams.push(one_hot(4, 8, 0, 5 + i));
+        }
+        for i in 0..10 {
+            eams.push(one_hot(4, 8, 7, 3 + i));
+        }
+        let r = kmeans_medoids(&eams, 2, 50, 1);
+        assert_eq!(r.medoids.len(), 2);
+        // All of the first 10 share an assignment; all of the last 10 share
+        // the other.
+        let a0 = r.assignment[0];
+        assert!(r.assignment[..10].iter().all(|&a| a == a0));
+        let a1 = r.assignment[10];
+        assert_ne!(a0, a1);
+        assert!(r.assignment[10..].iter().all(|&a| a == a1));
+        // Medoids come from different clusters.
+        let hot = |i: usize| (0..8).find(|&e| eams[r.medoids[i]].count(0, e) > 0).unwrap();
+        let mut hots = vec![hot(0), hot(1)];
+        hots.sort();
+        assert_eq!(hots, vec![0, 7]);
+    }
+
+    #[test]
+    fn k_ge_n_is_identity() {
+        let eams = vec![one_hot(2, 4, 0, 1), one_hot(2, 4, 1, 1)];
+        let r = kmeans_medoids(&eams, 10, 10, 0);
+        assert_eq!(r.medoids, vec![0, 1]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let eams: Vec<Eam> = (0..20).map(|i| one_hot(4, 8, i % 4, 2)).collect();
+        let a = kmeans_medoids(&eams, 4, 30, 9);
+        let b = kmeans_medoids(&eams, 4, 30, 9);
+        assert_eq!(a.medoids, b.medoids);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn medoids_are_valid_indices_and_unique() {
+        let eams: Vec<Eam> = (0..30).map(|i| one_hot(4, 16, i % 5, 1 + (i as u32 % 3))).collect();
+        let r = kmeans_medoids(&eams, 5, 30, 3);
+        for &m in &r.medoids {
+            assert!(m < eams.len());
+        }
+        let mut uniq = r.medoids.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), r.medoids.len());
+    }
+
+    #[test]
+    fn identical_inputs_dont_crash() {
+        let eams: Vec<Eam> = (0..10).map(|_| one_hot(2, 4, 1, 3)).collect();
+        let r = kmeans_medoids(&eams, 3, 20, 5);
+        assert!(!r.medoids.is_empty());
+    }
+}

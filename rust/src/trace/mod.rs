@@ -1,0 +1,16 @@
+//! Sequence-level expert activation tracing (paper §4).
+//!
+//! * [`Eam`] — Expert Activation Matrix: an `L x E` count matrix recording
+//!   how many tokens each expert processed for **one** sequence.
+//! * [`Eamc`] — Expert Activation Matrix Collection: a fixed-capacity set of
+//!   representative EAMs built by k-means clustering under the paper's
+//!   per-layer normalized-cosine distance (Eq. 1), with online
+//!   reconstruction to handle distribution shift (§4.3).
+
+mod eam;
+mod eamc;
+mod kmeans;
+
+pub use eam::Eam;
+pub use eamc::{Eamc, EamcStats};
+pub use kmeans::{kmeans_medoids, KMeansResult};

@@ -1,0 +1,73 @@
+//! Tiny property-testing harness (offline substrate — no `proptest` crate).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` inputs drawn
+//! from `gen`; on failure it reports the failing case index and seed so the
+//! exact input can be regenerated deterministically. Shrinking is traded
+//! away for determinism + zero dependencies.
+
+use crate::util::Rng;
+
+/// Run `prop` on `cases` generated inputs; panic with a reproducible report
+/// on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed})\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` for richer
+/// failure messages.
+pub fn forall_res<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(1, 100, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(2, 100, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn res_variant_reports_message() {
+        forall_res(3, 50, |r| r.f64(), |&x| {
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

@@ -1,0 +1,213 @@
+//! Minimal TOML-subset parser/printer (offline substrate — no `toml` crate
+//! in the image). Supports exactly what our config files use: `[table]` /
+//! `[a.b]` headers, `key = value` with string / float / integer / bool
+//! values, and `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A flat view of a TOML document: `"table.key" -> raw value`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(table) = line.strip_prefix('[') {
+                let table = table
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", ln + 1))?;
+                prefix = table.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            let full_key = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            map.insert(full_key, parse_value(val, ln + 1)?);
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    pub fn set_str(&mut self, key: &str, v: &str) {
+        self.map.insert(key.into(), TomlValue::Str(v.into()));
+    }
+
+    pub fn set_num(&mut self, key: &str, v: f64) {
+        self.map.insert(key.into(), TomlValue::Num(v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Serialize with dotted keys grouped into tables.
+    pub fn to_string_pretty(&self) -> String {
+        let mut top: Vec<(&String, &TomlValue)> = Vec::new();
+        let mut tables: BTreeMap<&str, Vec<(&str, &TomlValue)>> = BTreeMap::new();
+        for (k, v) in &self.map {
+            match k.rsplit_once('.') {
+                None => top.push((k, v)),
+                Some((t, leaf)) => tables.entry(t).or_default().push((leaf, v)),
+            }
+        }
+        let mut out = String::new();
+        for (k, v) in top {
+            out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+        }
+        for (t, kvs) in tables {
+            out.push_str(&format!("\n[{t}]\n"));
+            for (k, v) in kvs {
+                out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, ln: usize) -> Result<TomlValue, String> {
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {ln}: unterminated string"))?;
+        return Ok(TomlValue::Str(s.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    v.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("line {ln}: cannot parse value '{v}'"))
+}
+
+fn fmt_value(v: &TomlValue) -> String {
+    match v {
+        TomlValue::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        TomlValue::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }
+        }
+        TomlValue::Bool(b) => format!("{b}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+            model = "switch-base-128"   # comment
+            seed = 42
+
+            [workload]
+            rps = 1.5
+            bursty = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("model").unwrap().as_str(), Some("switch-base-128"));
+        assert_eq!(doc.get("seed").unwrap().as_u64(), Some(42));
+        assert_eq!(doc.get("workload.rps").unwrap().as_f64(), Some(1.5));
+        assert_eq!(doc.get("workload.bursty").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc = TomlDoc::default();
+        doc.set_str("model", "nllb-moe-128");
+        doc.set_num("memory.gpu_gb", 24.0);
+        doc.set_num("memory.pcie_bw", 32.5);
+        let text = doc.to_string_pretty();
+        let back = TomlDoc::parse(&text).unwrap();
+        assert_eq!(doc, back);
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = TomlDoc::parse("a = ").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err2 = TomlDoc::parse("x = 1\n[broken\ny = 2").unwrap_err();
+        assert!(err2.contains("line 2"), "{err2}");
+    }
+}

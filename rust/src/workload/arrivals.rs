@@ -1,0 +1,104 @@
+//! Request arrival processes modelled after the Azure serverless trace
+//! characteristics (§8.2): Poisson for smooth load, Gamma-interarrival for
+//! bursty (CV > 1) load.
+
+use crate::util::Rng;
+use crate::workload::SequenceActivation;
+
+/// One inference request: an arrival instant plus the routing trace of the
+/// sequence it carries.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub arrival: f64,
+    pub seq: SequenceActivation,
+}
+
+/// Inter-arrival generator.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Poisson with `rps` requests/second.
+    Poisson { rps: f64 },
+    /// Gamma-distributed inter-arrivals: mean `1/rps`, coefficient of
+    /// variation `cv` (cv > 1 = burstier than Poisson, matching the Azure
+    /// trace's burst structure).
+    Bursty { rps: f64, cv: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn rps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rps } => rps,
+            ArrivalProcess::Bursty { rps, .. } => rps,
+        }
+    }
+
+    /// Next inter-arrival gap in seconds.
+    pub fn next_gap(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rps } => rng.exp(rps),
+            ArrivalProcess::Bursty { rps, cv } => {
+                // Gamma with mean 1/rps, CV=cv: shape k = 1/cv^2,
+                // scale = 1/(rps*k).
+                let k = 1.0 / (cv * cv);
+                rng.gamma(k, 1.0 / (rps * k))
+            }
+        }
+    }
+
+    /// Generate arrival timestamps covering `[0, duration)`.
+    pub fn timestamps(&self, duration: f64, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += self.next_gap(rng);
+            if t >= duration {
+                break;
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Rng::new(1);
+        let p = ArrivalProcess::Poisson { rps: 5.0 };
+        let ts = p.timestamps(2000.0, &mut rng);
+        let rate = ts.len() as f64 / 2000.0;
+        assert!((rate - 5.0).abs() < 0.25, "rate {rate}");
+    }
+
+    #[test]
+    fn timestamps_sorted_within_window() {
+        let mut rng = Rng::new(2);
+        let p = ArrivalProcess::Bursty { rps: 3.0, cv: 2.0 };
+        let ts = p.timestamps(100.0, &mut rng);
+        for w in ts.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(ts.iter().all(|&t| t < 100.0));
+    }
+
+    #[test]
+    fn bursty_has_higher_variance() {
+        let mut rng = Rng::new(3);
+        let gaps = |p: ArrivalProcess, rng: &mut Rng| -> (f64, f64) {
+            let xs: Vec<f64> = (0..20_000).map(|_| p.next_gap(rng)).collect();
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+            (m, v.sqrt() / m)
+        };
+        let (m_p, cv_p) = gaps(ArrivalProcess::Poisson { rps: 2.0 }, &mut rng);
+        let (m_b, cv_b) = gaps(ArrivalProcess::Bursty { rps: 2.0, cv: 3.0 }, &mut rng);
+        assert!((m_p - 0.5).abs() < 0.03);
+        assert!((m_b - 0.5).abs() < 0.06);
+        assert!((cv_p - 1.0).abs() < 0.1, "poisson cv {cv_p}");
+        assert!(cv_b > 2.0, "bursty cv {cv_b}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Dataset presets standing in for the paper's request datasets (§8.1).
+//!
+//! Parameters are chosen so the resulting activation statistics land in the
+//! bands the paper reports (§3) — see the calibration tests in
+//! `workload/mod.rs`. Presets differ in task count and concentration, which
+//! is what drives the per-dataset latency differences in Fig. 8.
+
+/// One request-dataset preset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetPreset {
+    pub name: &'static str,
+    /// Number of latent tasks (distinct activation patterns).
+    pub n_tasks: usize,
+    /// Dirichlet concentration of per-task expert preferences; lower =
+    /// sparser, stickier activations.
+    pub alpha: f64,
+    /// Probability a token ignores its task profile (routing noise).
+    pub noise: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// Mean / max generated tokens (geometric length model).
+    pub gen_mean: usize,
+    pub gen_max: usize,
+    /// Tasks are generated in *confusable pairs* sharing their expert
+    /// preferences for the first `shared_prefix_layers` MoE layers and
+    /// diverging deeper. This reflects real MoE routing, where early layers
+    /// process surface features shared across task families — and it is
+    /// precisely what makes one-shot prediction ambiguous and continuous
+    /// refinement (§5.2, §8.3) valuable.
+    pub shared_prefix_layers: usize,
+}
+
+/// All presets.
+pub const DATASETS: &[DatasetPreset] = &[
+    // FLAN: many instruction-following task families.
+    DatasetPreset {
+        name: "flan",
+        n_tasks: 60,
+        alpha: 0.055,
+        noise: 0.06,
+        prompt_min: 16,
+        prompt_max: 96,
+        gen_mean: 24,
+        gen_max: 64,
+        shared_prefix_layers: 4,
+    },
+    // BIGBench: fewer, more exotic tasks; slightly peakier routing.
+    DatasetPreset {
+        name: "bigbench",
+        n_tasks: 40,
+        alpha: 0.045,
+        noise: 0.05,
+        prompt_min: 24,
+        prompt_max: 128,
+        gen_mean: 20,
+        gen_max: 64,
+        shared_prefix_layers: 4,
+    },
+    // MMLU: 57 subjects, short multiple-choice answers.
+    DatasetPreset {
+        name: "mmlu",
+        n_tasks: 57,
+        alpha: 0.07,
+        noise: 0.08,
+        prompt_min: 32,
+        prompt_max: 160,
+        gen_mean: 8,
+        gen_max: 24,
+        shared_prefix_layers: 6,
+    },
+    // Mixed chatbot emulation (the default workload in §8.1).
+    DatasetPreset {
+        name: "mixed",
+        n_tasks: 120,
+        alpha: 0.06,
+        noise: 0.07,
+        prompt_min: 16,
+        prompt_max: 128,
+        gen_mean: 24,
+        gen_max: 64,
+        shared_prefix_layers: 5,
+    },
+    // NLLB-style translation: dominated by one language pair, activation
+    // "exhibits a high degree of similarity" (§8.3).
+    DatasetPreset {
+        name: "translation",
+        n_tasks: 8,
+        alpha: 0.04,
+        noise: 0.04,
+        prompt_min: 16,
+        prompt_max: 96,
+        gen_mean: 32,
+        gen_max: 96,
+        shared_prefix_layers: 2,
+    },
+];
+
+impl DatasetPreset {
+    pub fn by_name(name: &str) -> Option<DatasetPreset> {
+        DATASETS.iter().find(|d| d.name == name).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_unique_and_resolvable() {
+        let mut names: Vec<&str> = DATASETS.iter().map(|d| d.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), DATASETS.len());
+        for d in DATASETS {
+            assert_eq!(DatasetPreset::by_name(d.name).unwrap(), d.clone());
+        }
+        assert!(DatasetPreset::by_name("imagenet").is_none());
+    }
+
+    #[test]
+    fn parameters_sane() {
+        for d in DATASETS {
+            assert!(d.n_tasks > 0);
+            assert!(d.alpha > 0.0 && d.alpha < 1.0);
+            assert!((0.0..0.5).contains(&d.noise));
+            assert!(d.prompt_min <= d.prompt_max);
+            assert!(d.gen_mean <= d.gen_max);
+            assert!(d.shared_prefix_layers <= 8);
+        }
+    }
+}

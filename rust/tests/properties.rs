@@ -1,0 +1,320 @@
+//! Property-based tests on coordinator invariants (in-tree harness —
+//! `util::proptest` — the image has no proptest crate). Each property runs
+//! hundreds of randomized cases; failures report the case index + seed.
+
+use moe_infinity::cache::{ActivationPolicy, CacheCtx, ExpertCache, LruPolicy};
+use moe_infinity::model::{ExpertKey, ModelSpec};
+use moe_infinity::prefetch::{PrefetchQueue, MAX_PRIORITY};
+use moe_infinity::server::Batcher;
+use moe_infinity::trace::{kmeans_medoids, Eam};
+use moe_infinity::util::proptest::{forall, forall_res};
+use moe_infinity::util::Rng;
+use moe_infinity::workload::{DatasetPreset, Request, Workload};
+
+fn random_eam(rng: &mut Rng, layers: usize, experts: usize) -> Eam {
+    let mut m = Eam::new(layers, experts);
+    let entries = 1 + rng.below(layers * 3);
+    for _ in 0..entries {
+        m.record(rng.below(layers), rng.below(experts), 1 + rng.below(9) as u32);
+    }
+    m
+}
+
+#[test]
+fn prop_eam_distance_is_a_semimetric() {
+    forall_res(
+        0xD15,
+        300,
+        |rng| {
+            let (l, e) = (2 + rng.below(6), 2 + rng.below(16));
+            (random_eam(rng, l, e), random_eam(rng, l, e))
+        },
+        |(a, b)| {
+            let dab = a.distance(b);
+            let dba = b.distance(a);
+            if (dab - dba).abs() > 1e-9 {
+                return Err(format!("not symmetric: {dab} vs {dba}"));
+            }
+            if !(-1e-9..=2.0 + 1e-9).contains(&dab) {
+                return Err(format!("out of range: {dab}"));
+            }
+            if a.distance(a) > 1e-9 {
+                return Err("self-distance nonzero".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eam_distance_scale_invariant() {
+    forall_res(
+        0xD16,
+        200,
+        |rng| {
+            let (l, e) = (2 + rng.below(4), 2 + rng.below(8));
+            let a = random_eam(rng, l, e);
+            let k = 2 + rng.below(9) as u32;
+            // b = k * a
+            let mut b = Eam::new(l, e);
+            for li in 0..l {
+                for ei in 0..e {
+                    let c = a.count(li, ei);
+                    if c > 0 {
+                        b.record(li, ei, c * k);
+                    }
+                }
+            }
+            (a, b)
+        },
+        |(a, b)| {
+            let d = a.distance(b);
+            if d.abs() > 1e-6 {
+                Err(format!("scaled copy at distance {d}"))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_queue_pops_in_nonincreasing_priority() {
+    forall_res(
+        0xABC,
+        150,
+        |rng| {
+            let n = 1 + rng.below(200);
+            (0..n)
+                .map(|_| {
+                    (
+                        ExpertKey::new(rng.below(8), rng.below(64)),
+                        if rng.below(20) == 0 { MAX_PRIORITY } else { rng.f64() },
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut q = PrefetchQueue::new();
+            let mut live = std::collections::HashSet::new();
+            for &(k, p) in ops {
+                if q.submit(k, p) {
+                    live.insert(k);
+                }
+            }
+            if q.len() != live.len() {
+                return Err(format!("live count {} vs {}", q.len(), live.len()));
+            }
+            let mut last = f64::INFINITY;
+            let mut popped = std::collections::HashSet::new();
+            while let Some((k, p)) = q.pop() {
+                if p > last {
+                    return Err(format!("priority went up: {p} after {last}"));
+                }
+                last = p;
+                if !popped.insert(k) {
+                    return Err(format!("duplicate pop of {k}"));
+                }
+            }
+            if popped != live {
+                return Err("popped set != submitted set".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_capacity_and_residency_invariants() {
+    forall_res(
+        0xCAC,
+        150,
+        |rng| {
+            let cap = 1 + rng.below(40);
+            let n_ops = 50 + rng.below(300);
+            let ops: Vec<ExpertKey> = (0..n_ops)
+                .map(|_| ExpertKey::new(rng.below(6), rng.below(32)))
+                .collect();
+            (cap, ops, rng.below(2) == 0)
+        },
+        |(cap, ops, use_lru)| {
+            let policy: Box<dyn moe_infinity::cache::Policy> = if *use_lru {
+                Box::new(LruPolicy::new())
+            } else {
+                Box::new(ActivationPolicy::new())
+            };
+            let mut cache = ExpertCache::new(*cap, policy);
+            let eam = Eam::new(6, 32);
+            let ctx = CacheCtx {
+                cur_eam: &eam,
+                n_layers: 6,
+            };
+            let mut resident = std::collections::HashSet::new();
+            for &k in ops {
+                if !cache.access(k) {
+                    if let Some(ev) = cache.insert(k, &ctx) {
+                        if !resident.remove(&ev) {
+                            return Err(format!("evicted non-resident {ev}"));
+                        }
+                    }
+                    resident.insert(k);
+                }
+                if cache.len() > *cap {
+                    return Err(format!("over capacity: {} > {cap}", cache.len()));
+                }
+                if cache.len() != resident.len() {
+                    return Err("shadow set diverged".into());
+                }
+                if !cache.contains(k) {
+                    return Err(format!("just-inserted {k} missing"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kmeans_medoids_are_members_and_cover() {
+    forall_res(
+        0x63A,
+        40,
+        |rng| {
+            let n = 4 + rng.below(30);
+            let k = 1 + rng.below(6);
+            let eams: Vec<Eam> = (0..n).map(|_| random_eam(rng, 3, 8)).collect();
+            (eams, k)
+        },
+        |(eams, k)| {
+            let r = kmeans_medoids(eams, *k, 20, 7);
+            if r.medoids.is_empty() || r.medoids.len() > *k {
+                return Err(format!("bad medoid count {}", r.medoids.len()));
+            }
+            for &m in &r.medoids {
+                if m >= eams.len() {
+                    return Err(format!("medoid index {m} out of bounds"));
+                }
+            }
+            if r.assignment.len() != eams.len() {
+                return Err("assignment size mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_invariants() {
+    let spec = ModelSpec::preset("switch-base-8").unwrap();
+    forall_res(
+        0xBA7,
+        60,
+        |rng| {
+            let mut w = Workload::new(
+                &spec,
+                DatasetPreset::by_name("translation").unwrap(),
+                rng.next_u64(),
+            );
+            let n = 2 + rng.below(30);
+            let mut t = 0.0;
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    t += rng.exp(2.0);
+                    Request {
+                        id: i as u64,
+                        arrival: t,
+                        seq: w.gen_sequence(),
+                    }
+                })
+                .collect();
+            let max_batch = 1 + rng.below(8);
+            let max_wait = 0.05 + rng.f64();
+            let engine_free = rng.f64() * 5.0;
+            (reqs, max_batch, max_wait, engine_free)
+        },
+        |(reqs, max_batch, max_wait, engine_free)| {
+            let b = Batcher::new(*max_batch, *max_wait);
+            let mut idx = 0;
+            let mut last_dispatch = 0.0f64;
+            while idx < reqs.len() {
+                let (dispatch, end) = b.next_batch(reqs, idx, *engine_free);
+                if end <= idx {
+                    return Err("empty batch".into());
+                }
+                if end - idx > *max_batch {
+                    return Err(format!("batch too large: {}", end - idx));
+                }
+                if dispatch < reqs[idx].arrival {
+                    return Err("dispatched before first arrival".into());
+                }
+                if dispatch < *engine_free {
+                    return Err("dispatched while engine busy".into());
+                }
+                for r in &reqs[idx..end] {
+                    if r.arrival > dispatch {
+                        return Err("batched a request from the future".into());
+                    }
+                }
+                if dispatch + 1e-9 < last_dispatch {
+                    return Err("dispatch time went backwards".into());
+                }
+                last_dispatch = dispatch;
+                idx = end;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eamc_nearest_never_worse_than_random_member() {
+    forall_res(
+        0xEA3,
+        40,
+        |rng| {
+            let n = 6 + rng.below(20);
+            let ds: Vec<Eam> = (0..n).map(|_| random_eam(rng, 4, 8)).collect();
+            let probe = random_eam(rng, 4, 8);
+            let pick = rng.below(n);
+            (ds, probe, pick)
+        },
+        |(ds, probe, pick)| {
+            let eamc = moe_infinity::trace::Eamc::construct(ds.len(), ds, 3);
+            let (_, best_d) = eamc.nearest(probe).unwrap();
+            // the fast path's chosen distance must not exceed the naive
+            // distance to any stored member (allowing top-K truncation
+            // tolerance)
+            let d_pick = probe.distance_partial(&ds[*pick % ds.len()]);
+            if best_d > d_pick + 0.35 {
+                return Err(format!("nearest {best_d} far worse than member {d_pick}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_workload_eam_invariant() {
+    let spec = ModelSpec::preset("switch-base-16").unwrap();
+    forall_res(
+        0xF00,
+        30,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut w = Workload::new(
+                &spec,
+                DatasetPreset::by_name("flan").unwrap(),
+                seed,
+            );
+            let seq = w.gen_sequence();
+            let eam = seq.to_eam(spec.n_layers, spec.experts_per_layer);
+            let n = seq.total_tokens() as u32;
+            for l in 0..spec.n_layers {
+                if eam.row_sum(l) != n {
+                    return Err(format!("layer {l}: {} != {n}", eam.row_sum(l)));
+                }
+            }
+            Ok(())
+        },
+    );
+}
