@@ -30,7 +30,7 @@ fn seq_accuracy(
                 cur.record(l, e as usize, c);
             }
             if l + 1 < spec.n_layers {
-                predictor.predict(&cur, eamc, l, &mut buf);
+                predictor.predict(&cur, eamc, None, l, &mut buf);
                 let actual: Vec<usize> =
                     seq.routes[iter][l + 1].iter().map(|&(e, _)| e as usize).collect();
                 let pred = Prediction { items: buf.clone() };
@@ -75,7 +75,7 @@ fn main() {
         let seq = w.gen_sequence();
         let acc = seq_accuracy(&spec, &eamc, &seq);
         let eam = seq.to_eam(spec.n_layers, spec.experts_per_layer);
-        let rebuilt = eamc.observe(eam, acc >= 0.5);
+        let rebuilt = eamc.observe(&eam, acc >= 0.5);
         if i % 4 == 0 || rebuilt {
             table.row(&[
                 (i + 1).to_string(),

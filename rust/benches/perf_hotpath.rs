@@ -2,20 +2,35 @@
 //! no criterion in the image).
 //!
 //! Paper anchor (§8.5): searching the most-similar EAM in a 300-entry EAMC
-//! costs ~21us and <1.8MB. Our targets: EAMC lookup <= 25us at 300 entries
-//! (switch-large geometry), queue ops O(log n), cache ops O(1)-ish, and the
-//! full per-layer engine step allocation-free.
+//! costs ~21us and <1.8MB. Our targets: the steady-state incremental EAMC
+//! lookup well under 1us at 300 entries (switch-large geometry), queue ops
+//! O(log n), cache insert+evict O(log n), and the full per-layer engine
+//! step allocation-free (see `tests/alloc_guard.rs`).
+//!
+//! Alongside the printed table, results are written to `BENCH_hotpath.json`
+//! (`name → ns/op`) for CI diffing; see EXPERIMENTS.md §Perf. Set
+//! `MOE_BENCH_SMOKE=1` to run a fast smoke pass (scripts/tier1.sh does).
 
-use moe_infinity::benchsuite::{build_eamc, time_ns_per_op, Table};
-use moe_infinity::cache::{ActivationPolicy, CacheCtx, ExpertCache};
+use moe_infinity::benchsuite::{build_eamc, time_ns_per_op, BenchJson, Table};
+use moe_infinity::cache::{ActivationPolicy, CacheCtx, ExpertCache, IndexedActivationPolicy};
 use moe_infinity::model::{ExpertKey, ModelSpec};
 use moe_infinity::prefetch::{Predictor, PredictorKind, PrefetchQueue};
-use moe_infinity::trace::Eam;
+use moe_infinity::trace::{Eam, EamcMatcher};
 use moe_infinity::util::Rng;
 use moe_infinity::workload::{DatasetPreset, Workload};
 
 fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    // smoke mode shrinks iteration counts ~20x for CI/tier1 sanity runs
+    let scale = |n: usize| if smoke { (n / 20).max(10) } else { n };
+
     let mut table = Table::new(&["hot path", "ns/op", "note"]);
+    let mut json = BenchJson::new();
+    let mut emit = |table: &mut Table, json: &mut BenchJson, name: &str, ns: f64, note: String| {
+        table.row(&[name.into(), format!("{ns:.0}"), note]);
+        json.add(name, ns);
+    };
+
     let spec = ModelSpec::preset("switch-large-128").unwrap();
     let ds = DatasetPreset::by_name("mixed").unwrap();
 
@@ -23,16 +38,55 @@ fn main() {
     let eamc = build_eamc(&spec, &ds, 360, 300, 31);
     let mut w = Workload::new(&spec, ds.clone(), 32);
     let probe = w.gen_sequence().to_eam(spec.n_layers, spec.experts_per_layer);
-    let ns = time_ns_per_op(20, 200, || eamc.nearest(&probe));
-    table.row(&[
-        format!("EAMC nearest ({} EAMs, 24x128)", eamc.len()),
-        format!("{ns:.0}"),
+
+    // serving path: per-sequence incremental matcher — per op, one routing
+    // delta folded into the accumulators plus the argmax lookup
+    let probe_cells: Vec<(usize, usize)> = (0..spec.n_layers)
+        .flat_map(|l| {
+            let probe = &probe;
+            (0..spec.experts_per_layer)
+                .filter(move |&e| probe.count(l, e) > 0)
+                .map(move |e| (l, e))
+        })
+        .collect();
+    let mut matcher = EamcMatcher::new();
+    matcher.attach(&eamc);
+    // warm the accumulators with the probe trace (the steady state)
+    for &(l, e) in &probe_cells {
+        matcher.record(eamc.index(), l, e, probe.count(l, e));
+    }
+    let mut cell = 0usize;
+    let ns = time_ns_per_op(scale(100), scale(10_000), || {
+        let (l, e) = probe_cells[cell % probe_cells.len()];
+        cell += 1;
+        matcher.record(eamc.index(), l, e, 1);
+        matcher.nearest()
+    });
+    emit(
+        &mut table,
+        &mut json,
+        "EAMC nearest",
+        ns,
         format!(
-            "paper ~21us; lookup set {}KB (full EAMs {}KB)",
+            "incremental: record+argmax over {} entries (paper ~21us)",
+            eamc.len()
+        ),
+    );
+
+    // reference: the full-scan lookup the incremental path replaced
+    let ns = time_ns_per_op(scale(20), scale(200), || eamc.nearest(&probe));
+    emit(
+        &mut table,
+        &mut json,
+        "EAMC nearest (full scan)",
+        ns,
+        format!(
+            "lookup set {}KB + index {}KB (full EAMs {}KB)",
             eamc.lookup_bytes() / 1024,
+            eamc.index().bytes() / 1024,
             eamc.bytes() / 1024
         ),
-    ]);
+    );
 
     // --- predictor full prediction (nearest + priorities for all layers)
     let predictor = Predictor::new(
@@ -42,15 +96,17 @@ fn main() {
     )
     .with_min_ratio(0.05);
     let mut buf = Vec::new();
-    let ns = time_ns_per_op(20, 200, || {
-        predictor.predict(&probe, &eamc, 0, &mut buf);
+    let ns = time_ns_per_op(scale(20), scale(2_000), || {
+        predictor.predict(&probe, &eamc, Some(&matcher), 0, &mut buf);
         buf.len()
     });
-    table.row(&[
-        "predict() all future layers".into(),
-        format!("{ns:.0}"),
-        "incl. nearest + priority calc".into(),
-    ]);
+    emit(
+        &mut table,
+        &mut json,
+        "predict() all future layers",
+        ns,
+        "matched nearest + priority calc".into(),
+    );
 
     // --- priority queue churn (submit with update + pop)
     let mut q = PrefetchQueue::new();
@@ -58,21 +114,34 @@ fn main() {
     for e in 0..512u16 {
         q.submit(ExpertKey { layer: 0, expert: e }, rng.f64());
     }
-    let ns = time_ns_per_op(100, 10_000, || {
+    let ns = time_ns_per_op(scale(100), scale(10_000), || {
         let e = (rng.next_u64() % 512) as u16;
         q.submit(ExpertKey { layer: 0, expert: e }, rng.f64());
     });
-    table.row(&["queue submit-with-update (512 live)".into(), format!("{ns:.0}"), "lazy-deletion heap".into()]);
-    let ns = time_ns_per_op(100, 512, || {
+    emit(
+        &mut table,
+        &mut json,
+        "queue submit-with-update (512 live)",
+        ns,
+        "lazy-deletion heap".into(),
+    );
+    let ns = time_ns_per_op(scale(100), scale(512), || {
         if let Some((k, _)) = q.pop() {
             q.complete(k);
             q.submit(k, 0.5);
         }
     });
-    table.row(&["queue pop+complete+resubmit".into(), format!("{ns:.0}"), String::new()]);
+    emit(
+        &mut table,
+        &mut json,
+        "queue pop+complete+resubmit",
+        ns,
+        String::new(),
+    );
 
-    // --- cache access / insert at switch-large scale
-    let mut cache = ExpertCache::new(535, Box::new(ActivationPolicy::new()));
+    // --- cache access / insert at switch-large scale (serving path:
+    // heap-indexed Alg. 2 victim selection)
+    let mut cache = ExpertCache::new(535, Box::new(IndexedActivationPolicy::new()));
     let eam = probe.clone();
     let ctx = CacheCtx {
         cur_eam: &eam,
@@ -83,30 +152,71 @@ fn main() {
             cache.insert(ExpertKey::new(l, e), &ctx);
         }
     }
-    let ns = time_ns_per_op(100, 10_000, || {
+    let ns = time_ns_per_op(scale(100), scale(10_000), || {
         let l = (rng.next_u64() % 24) as usize;
         let e = (rng.next_u64() % 128) as usize;
         cache.access(ExpertKey::new(l, e))
     });
-    table.row(&["cache access (535 slots)".into(), format!("{ns:.0}"), String::new()]);
-    let ns = time_ns_per_op(100, 2_000, || {
+    emit(
+        &mut table,
+        &mut json,
+        "cache access (535 slots)",
+        ns,
+        String::new(),
+    );
+    let ns = time_ns_per_op(scale(100), scale(2_000), || {
         let l = (rng.next_u64() % 24) as usize;
         let e = (rng.next_u64() % 128) as usize;
         cache.insert(ExpertKey::new(l, e), &ctx)
     });
-    table.row(&[
-        "cache insert+evict (Alg. 2 victim scan)".into(),
-        format!("{ns:.0}"),
-        "O(capacity) scan".into(),
-    ]);
+    emit(
+        &mut table,
+        &mut json,
+        "cache insert+evict",
+        ns,
+        "O(log n) lazy-deletion heap victim".into(),
+    );
+
+    // reference: the O(capacity) scan the indexed policy replaced
+    let mut scan_cache = ExpertCache::new(535, Box::new(ActivationPolicy::new()));
+    for l in 0..spec.n_layers {
+        for e in 0..(535 / spec.n_layers + 1) {
+            scan_cache.insert(ExpertKey::new(l, e), &ctx);
+        }
+    }
+    let ns = time_ns_per_op(scale(100), scale(2_000), || {
+        let l = (rng.next_u64() % 24) as usize;
+        let e = (rng.next_u64() % 128) as usize;
+        scan_cache.insert(ExpertKey::new(l, e), &ctx)
+    });
+    emit(
+        &mut table,
+        &mut json,
+        "cache insert+evict (scan reference)",
+        ns,
+        "O(capacity) Alg. 2 scan".into(),
+    );
 
     // --- EAM ops
     let mut m = Eam::new(24, 128);
-    let ns = time_ns_per_op(100, 100_000, || m.record(3, 77, 1));
+    let ns = time_ns_per_op(scale(100), scale(100_000), || m.record(3, 77, 1));
     table.row(&["EAM record".into(), format!("{ns:.1}"), String::new()]);
+    json.add("EAM record", ns);
     let m2 = probe.clone();
-    let ns = time_ns_per_op(100, 10_000, || probe.distance_partial(&m2));
-    table.row(&["EAM distance (24x128)".into(), format!("{ns:.0}"), String::new()]);
+    let ns = time_ns_per_op(scale(100), scale(10_000), || probe.distance_partial(&m2));
+    emit(
+        &mut table,
+        &mut json,
+        "EAM distance (24x128)",
+        ns,
+        String::new(),
+    );
 
     table.print("§Perf — L3 hot-path micro-benchmarks");
+
+    let path = "BENCH_hotpath.json";
+    match json.write(path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

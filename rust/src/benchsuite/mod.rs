@@ -120,7 +120,7 @@ pub fn prediction_accuracy(
                     predictor.observe_route(l, e as usize, c);
                 }
                 if predictor.should_predict(l, iter) {
-                    predictor.predict(&cur, eamc, l, &mut buf);
+                    predictor.predict(&cur, eamc, None, l, &mut buf);
                     standing = crate::prefetch::Prediction { items: buf.clone() };
                 }
                 if l + 1 < spec.n_layers {
@@ -190,6 +190,40 @@ pub fn time_ns_per_op<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) 
         std::hint::black_box(f());
     }
     t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Machine-readable bench emitter: collects `name → ns/op` pairs and
+/// writes them as a flat JSON object (e.g. `BENCH_hotpath.json`), so CI and
+/// EXPERIMENTS.md tooling can diff hot-path numbers across commits without
+/// scraping the printed tables.
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new() -> BenchJson {
+        BenchJson::default()
+    }
+
+    pub fn add(&mut self, name: &str, ns_per_op: f64) {
+        self.entries.push((name.to_string(), ns_per_op));
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let map: std::collections::BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::Obj(map)
+    }
+
+    /// Write the collected entries to `path` (overwrites).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
 }
 
 /// Markdown-ish table printer shared by the figure benches.
@@ -300,5 +334,23 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         t.print("test");
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        use crate::util::json::Json;
+        let mut b = BenchJson::new();
+        b.add("EAMC nearest", 1234.5);
+        b.add("cache insert+evict", 88.0);
+        let text = b.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("EAMC nearest").and_then(|j| j.as_f64()),
+            Some(1234.5)
+        );
+        assert_eq!(
+            parsed.get("cache insert+evict").and_then(|j| j.as_f64()),
+            Some(88.0)
+        );
     }
 }

@@ -6,7 +6,10 @@
 //! the caller). Replacement is pluggable:
 //!
 //! * [`ActivationPolicy`] — the paper's Algorithm 2: victim = cached expert
-//!   with minimal `(cur_ratio + ε) · (1 − layer_idx/L)`.
+//!   with minimal `(cur_ratio + ε) · (1 − layer_idx/L)` (reference scan).
+//! * [`IndexedActivationPolicy`] — the same decisions from an incrementally
+//!   maintained lazy-deletion heap: O(log n) steady-state victim picks
+//!   (what the serving stack instantiates).
 //! * [`LruPolicy`] — CUDA-unified-memory-style least-recently-used.
 //! * [`LfuPolicy`] — BrainStorm-style least-frequently-used (counter resets
 //!   on eviction, the weakness §8.4 calls out).
@@ -17,7 +20,8 @@
 mod policies;
 
 pub use policies::{
-    ActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy, OraclePolicy, Policy,
+    ActivationPolicy, IndexedActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy,
+    OraclePolicy, Policy,
 };
 
 use std::collections::{HashMap, HashSet};
@@ -131,9 +135,8 @@ impl ExpertCache {
             return None;
         }
         let evicted = if self.slots.len() == self.capacity {
-            let v = self.choose_victim(ctx);
-            debug_assert!(v < self.slots.len());
-            let old = self.slots[v];
+            let old = self.choose_victim(ctx);
+            let v = *self.index.get(&old).expect("victim must be resident");
             self.protected.remove(&old);
             self.policy.on_evict(old);
             self.index.remove(&old);
@@ -150,25 +153,16 @@ impl ExpertCache {
         evicted
     }
 
-    /// Victim selection with protection: filter protected keys out unless
-    /// that would leave no candidates.
-    fn choose_victim(&mut self, ctx: &CacheCtx) -> usize {
+    /// Victim selection with protection: the protected set is passed to the
+    /// policy as an exclusion filter (no candidate materialization — this
+    /// used to allocate two Vecs per eviction under protection). Protection
+    /// is void when it would leave no candidates.
+    fn choose_victim(&mut self, ctx: &CacheCtx) -> ExpertKey {
         if self.protected.is_empty() || self.protected.len() >= self.slots.len() {
-            return self.policy.victim(&self.slots, ctx);
+            self.policy.victim(&self.slots, None, ctx)
+        } else {
+            self.policy.victim(&self.slots, Some(&self.protected), ctx)
         }
-        let mut candidates: Vec<ExpertKey> = Vec::with_capacity(self.slots.len());
-        let mut orig_idx: Vec<usize> = Vec::with_capacity(self.slots.len());
-        for (i, k) in self.slots.iter().enumerate() {
-            if !self.protected.contains(k) {
-                candidates.push(*k);
-                orig_idx.push(i);
-            }
-        }
-        if candidates.is_empty() {
-            return self.policy.victim(&self.slots, ctx);
-        }
-        let v = self.policy.victim(&candidates, ctx);
-        orig_idx[v]
     }
 
     /// Mark a resident key as protected from eviction (prefetched, unused).

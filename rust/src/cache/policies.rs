@@ -1,6 +1,19 @@
 //! Cache replacement policies (paper Alg. 2 + §8.4 baselines).
+//!
+//! Two implementations of the paper's activation-aware priority exist:
+//!
+//! * [`ActivationPolicy`] — the straightforward O(capacity) scan, kept as
+//!   the differential-testing reference and for the §8.4 ablations.
+//! * [`IndexedActivationPolicy`] — an incrementally maintained lazy-deletion
+//!   min-heap keyed on `(ratio + ε)·(1 − l/L)`. Heap entries are invalidated
+//!   only for rows whose activation ratios actually changed (tracked via
+//!   [`crate::trace::Eam::row_version`]), so the steady-state victim pick is
+//!   O(log n) instead of a full scan. Decisions are identical to the scan
+//!   (same priority expression, same `(priority, key)` tie-break) — pinned
+//!   by differential proptests in `tests/properties.rs`.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::cache::CacheCtx;
 use crate::model::ExpertKey;
@@ -9,22 +22,87 @@ use crate::prefetch::EPSILON;
 /// Replacement policy plugged into [`crate::cache::ExpertCache`].
 pub trait Policy {
     fn name(&self) -> &'static str;
-    /// Pick the victim's index in `entries` (must be `< entries.len()`).
-    fn victim(&mut self, entries: &[ExpertKey], ctx: &CacheCtx) -> usize;
+    /// Pick the victim among `entries` (must return one of them). Keys in
+    /// `excluded` are skipped (eviction protection, §6.2) unless every
+    /// entry is excluded, in which case the exclusion is ignored.
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        ctx: &CacheCtx,
+    ) -> ExpertKey;
     fn on_access(&mut self, _key: ExpertKey) {}
     fn on_miss(&mut self, _key: ExpertKey) {}
     fn on_insert(&mut self, _key: ExpertKey) {}
     fn on_evict(&mut self, _key: ExpertKey) {}
 }
 
+/// First-strictly-smaller scan over `entries` with exclusion handling:
+/// pass 0 skips excluded keys; if that leaves no candidate, pass 1 ignores
+/// the exclusion (the caller guaranteed eviction must happen).
+fn pick_min<K: PartialOrd>(
+    entries: &[ExpertKey],
+    excluded: Option<&HashSet<ExpertKey>>,
+    mut score: impl FnMut(&ExpertKey) -> K,
+) -> ExpertKey {
+    debug_assert!(!entries.is_empty());
+    let mut best: Option<(K, ExpertKey)> = None;
+    for pass in 0..2 {
+        for e in entries {
+            if pass == 0 {
+                if let Some(x) = excluded {
+                    if x.contains(e) {
+                        continue;
+                    }
+                }
+            }
+            let s = score(e);
+            match &best {
+                None => best = Some((s, *e)),
+                Some((bs, _)) => {
+                    if s < *bs {
+                        best = Some((s, *e));
+                    }
+                }
+            }
+        }
+        if best.is_some() {
+            break;
+        }
+    }
+    best.expect("non-empty entries always yield a victim").1
+}
+
 // ---------------------------------------------------------------- Algorithm 2
 
+/// The Alg. 2 priority of one cached expert under the current EAM:
+/// `(ratio_in_cur_eam + ε) · (1 − layer/L)`. Shared by the scan and the
+/// indexed policy so both compute bit-identical values.
+#[inline]
+fn activation_priority(use_ratio: bool, use_layer_decay: bool, e: ExpertKey, ctx: &CacheCtx) -> f64 {
+    let ratio = if use_ratio {
+        ctx.cur_eam.ratio(e.layer as usize, e.expert as usize) as f64
+    } else {
+        0.0
+    };
+    let decay = if use_layer_decay {
+        1.0 - e.layer as f64 / ctx.n_layers as f64
+    } else {
+        1.0
+    };
+    (ratio + EPSILON) * decay
+}
+
 /// The paper's activation-aware replacement (Alg. 2): evict the cached
-/// expert with minimal `(ratio_in_cur_eam + ε) · (1 − layer/L)`.
+/// expert with minimal `(ratio_in_cur_eam + ε) · (1 − layer/L)`; ties break
+/// toward the smaller [`ExpertKey`].
 ///
 /// Two awareness terms (§6.1): experts frequently activated by the sequence
 /// being processed are kept (temporal locality across iterations); experts
 /// in early layers are kept (prefetching cannot cover them, §6.1 reason 2).
+///
+/// This is the O(capacity) reference scan; the serving stack uses
+/// [`IndexedActivationPolicy`], which makes identical decisions.
 #[derive(Debug, Default)]
 pub struct ActivationPolicy {
     /// Optionally disable one of the two terms (§8.4 priority breakdown).
@@ -54,27 +132,237 @@ impl Policy for ActivationPolicy {
         "activation"
     }
 
-    fn victim(&mut self, entries: &[ExpertKey], ctx: &CacheCtx) -> usize {
-        let mut min_p = f64::INFINITY;
-        let mut idx = 0;
-        for (i, e) in entries.iter().enumerate() {
-            let ratio = if self.use_ratio {
-                ctx.cur_eam.ratio(e.layer as usize, e.expert as usize) as f64
-            } else {
-                0.0
-            };
-            let decay = if self.use_layer_decay {
-                1.0 - e.layer as f64 / ctx.n_layers as f64
-            } else {
-                1.0
-            };
-            let p = (ratio + EPSILON) * decay;
-            if p < min_p {
-                min_p = p;
-                idx = i;
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        ctx: &CacheCtx,
+    ) -> ExpertKey {
+        let (r, d) = (self.use_ratio, self.use_layer_decay);
+        pick_min(entries, excluded, |e| (activation_priority(r, d, *e, ctx), *e))
+    }
+}
+
+// ------------------------------------------------- Algorithm 2, O(log n) form
+
+/// Sentinel priority for freshly inserted keys whose real priority has not
+/// been computed yet (no [`CacheCtx`] is available inside `on_insert`); it
+/// sorts first and is resolved lazily at the next victim pick.
+const NEEDS_PRIORITY: f64 = f64::NEG_INFINITY;
+
+#[derive(Debug, Clone, Copy)]
+struct VictimEntry {
+    p: f64,
+    key: ExpertKey,
+    /// Generation stamp; an entry is live iff it matches the key's current
+    /// generation (lazy deletion).
+    gen: u64,
+}
+
+impl PartialEq for VictimEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.p == other.p && self.key == other.key
+    }
+}
+impl Eq for VictimEntry {}
+impl PartialOrd for VictimEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for VictimEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // ascending (priority, key) — wrapped in `Reverse` for a min-heap;
+        // priorities are finite or the NEG_INFINITY sentinel, never NaN
+        self.p
+            .partial_cmp(&other.p)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| self.key.cmp(&other.key))
+    }
+}
+
+/// Heap-indexed Alg. 2 replacement: a lazy-deletion min-heap over
+/// `(priority, key)` plus per-layer resident lists.
+///
+/// The priority of a cached expert depends on the current EAM only through
+/// its own row (`ratio = count/row_sum`), so heap entries stay valid until
+/// that row mutates. Each victim pick first re-keys the residents of rows
+/// whose `(eam id, row version)` moved since the last pick, then pops the
+/// minimum, skipping stale and excluded entries. Steady-state cost (rows
+/// unchanged, e.g. an insert burst within one layer's execution):
+/// O(log n) per eviction vs the scan's O(capacity).
+#[derive(Debug, Default)]
+pub struct IndexedActivationPolicy {
+    pub use_ratio: bool,
+    pub use_layer_decay: bool,
+    heap: BinaryHeap<Reverse<VictimEntry>>,
+    /// Resident keys → current generation.
+    gen: HashMap<ExpertKey, u64>,
+    next_gen: u64,
+    /// Resident keys grouped by layer (for row-scoped invalidation).
+    by_layer: Vec<Vec<ExpertKey>>,
+    /// Key → position in its `by_layer` bucket (O(1) swap-remove).
+    pos: HashMap<ExpertKey, usize>,
+    /// Per-layer `(eam id, row version)` the live priorities were computed
+    /// under; a mismatch means that row's ratios may have changed.
+    snap: Vec<(u64, u64)>,
+    /// Stale heap entries awaiting lazy deletion.
+    stale: usize,
+    /// Reusable stash for excluded-but-live entries popped mid-search.
+    scratch: Vec<Reverse<VictimEntry>>,
+}
+
+impl IndexedActivationPolicy {
+    pub fn new() -> IndexedActivationPolicy {
+        IndexedActivationPolicy::with_terms(true, true)
+    }
+
+    /// Ablated variant (§8.4 breakdown), mirroring
+    /// [`ActivationPolicy::with_terms`].
+    pub fn with_terms(use_ratio: bool, use_layer_decay: bool) -> IndexedActivationPolicy {
+        IndexedActivationPolicy {
+            use_ratio,
+            use_layer_decay,
+            ..Default::default()
+        }
+    }
+
+    /// Re-key the residents of every layer whose EAM row moved since the
+    /// last victim pick. Touches only changed rows — the "invalidated only
+    /// for rows whose ratios changed" contract.
+    fn refresh_changed_rows(&mut self, ctx: &CacheCtx) {
+        let eam = ctx.cur_eam;
+        let id = eam.id();
+        if self.snap.len() < self.by_layer.len() {
+            // (0, _) can never match a live EAM id (ids start at 1)
+            self.snap.resize(self.by_layer.len(), (0, 0));
+        }
+        for l in 0..self.by_layer.len() {
+            let ver = if l < eam.layers() { eam.row_version(l) } else { 0 };
+            if self.snap[l] == (id, ver) {
+                continue;
+            }
+            self.snap[l] = (id, ver);
+            for i in 0..self.by_layer[l].len() {
+                let key = self.by_layer[l][i];
+                let g = self.next_gen;
+                self.next_gen += 1;
+                if self.gen.insert(key, g).is_some() {
+                    self.stale += 1;
+                }
+                let p = activation_priority(self.use_ratio, self.use_layer_decay, key, ctx);
+                self.heap.push(Reverse(VictimEntry { p, key, gen: g }));
             }
         }
-        idx
+    }
+
+    /// Drop stale entries in place once they dominate, keeping pops
+    /// amortized O(log n) under heavy churn (no allocation: `retain`
+    /// filters the heap's own buffer).
+    fn maybe_compact(&mut self) {
+        if self.stale > 64 && self.stale > 4 * self.gen.len() {
+            let gen = &self.gen;
+            self.heap
+                .retain(|Reverse(v)| gen.get(&v.key).is_some_and(|&g| g == v.gen));
+            self.stale = 0;
+        }
+    }
+}
+
+impl Policy for IndexedActivationPolicy {
+    fn name(&self) -> &'static str {
+        "activation"
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        ctx: &CacheCtx,
+    ) -> ExpertKey {
+        debug_assert!(!entries.is_empty());
+        if self.gen.len() != entries.len() {
+            // the caller is not driving the insert/evict callbacks (direct
+            // Policy use on an ad-hoc slice) — fall back to the scan
+            let (r, d) = (self.use_ratio, self.use_layer_decay);
+            return pick_min(entries, excluded, |e| (activation_priority(r, d, *e, ctx), *e));
+        }
+        self.refresh_changed_rows(ctx);
+        self.scratch.clear();
+        let winner = loop {
+            let Some(Reverse(top)) = self.heap.pop() else {
+                break None;
+            };
+            match self.gen.get(&top.key) {
+                Some(&g) if g == top.gen => {}
+                _ => {
+                    self.stale = self.stale.saturating_sub(1);
+                    continue;
+                }
+            }
+            if top.p == NEEDS_PRIORITY {
+                // freshly inserted key: resolve its real priority now
+                let p = activation_priority(self.use_ratio, self.use_layer_decay, top.key, ctx);
+                self.heap.push(Reverse(VictimEntry { p, ..top }));
+                continue;
+            }
+            if excluded.is_some_and(|x| x.contains(&top.key)) {
+                self.scratch.push(Reverse(top));
+                continue;
+            }
+            break Some(top);
+        };
+        // protected entries popped along the way stay resident — restore
+        while let Some(e) = self.scratch.pop() {
+            self.heap.push(e);
+        }
+        match winner {
+            Some(top) => {
+                debug_assert!(entries.contains(&top.key));
+                // the key remains resident until the cache calls on_evict
+                self.heap.push(Reverse(top));
+                self.maybe_compact();
+                top.key
+            }
+            None => {
+                // every resident entry was excluded: exclusion is void
+                let (r, d) = (self.use_ratio, self.use_layer_decay);
+                pick_min(entries, None, |e| (activation_priority(r, d, *e, ctx), *e))
+            }
+        }
+    }
+
+    fn on_insert(&mut self, key: ExpertKey) {
+        let l = key.layer as usize;
+        if self.by_layer.len() <= l {
+            self.by_layer.resize_with(l + 1, Vec::new);
+        }
+        let g = self.next_gen;
+        self.next_gen += 1;
+        if self.gen.insert(key, g).is_some() {
+            self.stale += 1;
+        } else {
+            self.pos.insert(key, self.by_layer[l].len());
+            self.by_layer[l].push(key);
+        }
+        self.heap.push(Reverse(VictimEntry {
+            p: NEEDS_PRIORITY,
+            key,
+            gen: g,
+        }));
+    }
+
+    fn on_evict(&mut self, key: ExpertKey) {
+        if self.gen.remove(&key).is_some() {
+            self.stale += 1;
+        }
+        if let Some(i) = self.pos.remove(&key) {
+            let bucket = &mut self.by_layer[key.layer as usize];
+            bucket.swap_remove(i);
+            if i < bucket.len() {
+                self.pos.insert(bucket[i], i);
+            }
+        }
     }
 }
 
@@ -101,13 +389,13 @@ impl Policy for LruPolicy {
     fn name(&self) -> &'static str {
         "lru"
     }
-    fn victim(&mut self, entries: &[ExpertKey], _ctx: &CacheCtx) -> usize {
-        entries
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, e)| self.last.get(e).copied().unwrap_or(0))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        _ctx: &CacheCtx,
+    ) -> ExpertKey {
+        pick_min(entries, excluded, |e| self.last.get(e).copied().unwrap_or(0))
     }
     fn on_access(&mut self, key: ExpertKey) {
         self.tick(key);
@@ -140,13 +428,13 @@ impl Policy for LfuPolicy {
     fn name(&self) -> &'static str {
         "lfu"
     }
-    fn victim(&mut self, entries: &[ExpertKey], _ctx: &CacheCtx) -> usize {
-        entries
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, e)| self.counts.get(e).copied().unwrap_or(0))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        _ctx: &CacheCtx,
+    ) -> ExpertKey {
+        pick_min(entries, excluded, |e| self.counts.get(e).copied().unwrap_or(0))
     }
     fn on_access(&mut self, key: ExpertKey) {
         *self.counts.entry(key).or_insert(0) += 1;
@@ -168,6 +456,8 @@ impl Policy for LfuPolicy {
 #[derive(Debug, Default)]
 pub struct NeighborPolicy {
     lru: LruPolicy,
+    /// Reusable residency set for the victim scan.
+    resident: HashSet<ExpertKey>,
 }
 
 impl NeighborPolicy {
@@ -180,14 +470,24 @@ impl Policy for NeighborPolicy {
     fn name(&self) -> &'static str {
         "neighbor"
     }
-    fn victim(&mut self, entries: &[ExpertKey], _ctx: &CacheCtx) -> usize {
-        let resident: std::collections::HashSet<ExpertKey> = entries.iter().copied().collect();
-        let score = |e: &ExpertKey| -> u32 {
-            let mut s = 0;
-            if e.expert > 0 && resident.contains(&ExpertKey {
-                layer: e.layer,
-                expert: e.expert - 1,
-            }) {
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        _ctx: &CacheCtx,
+    ) -> ExpertKey {
+        self.resident.clear();
+        self.resident.extend(entries.iter().copied());
+        let resident = &self.resident;
+        let last = &self.lru.last;
+        pick_min(entries, excluded, |e| {
+            let mut s = 0u32;
+            if e.expert > 0
+                && resident.contains(&ExpertKey {
+                    layer: e.layer,
+                    expert: e.expert - 1,
+                })
+            {
                 s += 1;
             }
             if resident.contains(&ExpertKey {
@@ -196,14 +496,8 @@ impl Policy for NeighborPolicy {
             }) {
                 s += 1;
             }
-            s
-        };
-        entries
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, e)| (score(e), self.lru.last.get(e).copied().unwrap_or(0)))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+            (s, last.get(e).copied().unwrap_or(0))
+        })
     }
     fn on_access(&mut self, key: ExpertKey) {
         self.lru.on_access(key);
@@ -274,13 +568,15 @@ impl Policy for OraclePolicy {
     fn name(&self) -> &'static str {
         "oracle"
     }
-    fn victim(&mut self, entries: &[ExpertKey], _ctx: &CacheCtx) -> usize {
-        entries
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, e)| self.next_use(e))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&HashSet<ExpertKey>>,
+        _ctx: &CacheCtx,
+    ) -> ExpertKey {
+        // Belady evicts the entry used farthest in the future = min of the
+        // reversed next-use time
+        pick_min(entries, excluded, |e| Reverse(self.next_use(e)))
     }
     fn on_access(&mut self, key: ExpertKey) {
         self.advance(key);
@@ -314,7 +610,7 @@ mod tests {
         let entries = vec![k(0, 0), k(3, 1), k(1, 2)];
         // L3E1: ratio 1.0 but decay 0.25; L0E0: ratio 1.0 decay 1.0;
         // L1E2: ratio 1.0 decay 0.75 — victim is the late-layer one.
-        assert_eq!(p.victim(&entries, &ctx), 1);
+        assert_eq!(p.victim(&entries, None, &ctx), k(3, 1));
     }
 
     #[test]
@@ -326,7 +622,7 @@ mod tests {
         };
         let mut p = ActivationPolicy::new();
         let entries = vec![k(0, 0), k(2, 0), k(3, 0)];
-        assert_eq!(p.victim(&entries, &ctx), 2, "latest layer evicted first");
+        assert_eq!(p.victim(&entries, None, &ctx), k(3, 0), "latest layer evicted first");
     }
 
     #[test]
@@ -340,12 +636,80 @@ mod tests {
             n_layers: 4,
         };
         let entries = vec![k(3, 0), k(0, 1)];
-        // ratio-only: evicts the cold one (index 1)
+        // ratio-only: evicts the cold one
         let mut ratio_only = ActivationPolicy::with_terms(true, false);
-        assert_eq!(ratio_only.victim(&entries, &ctx), 1);
-        // decay-only: evicts the late one (index 0)
+        assert_eq!(ratio_only.victim(&entries, None, &ctx), k(0, 1));
+        // decay-only: evicts the late one
         let mut decay_only = ActivationPolicy::with_terms(false, true);
-        assert_eq!(decay_only.victim(&entries, &ctx), 0);
+        assert_eq!(decay_only.victim(&entries, None, &ctx), k(3, 0));
+    }
+
+    #[test]
+    fn activation_victim_respects_exclusion() {
+        let eam = Eam::new(4, 4);
+        let ctx = CacheCtx {
+            cur_eam: &eam,
+            n_layers: 4,
+        };
+        let mut p = ActivationPolicy::new();
+        let entries = vec![k(0, 0), k(3, 0)];
+        let protected: HashSet<ExpertKey> = [k(3, 0)].into_iter().collect();
+        assert_eq!(p.victim(&entries, Some(&protected), &ctx), k(0, 0));
+        // all-excluded: exclusion is void
+        let all: HashSet<ExpertKey> = entries.iter().copied().collect();
+        assert_eq!(p.victim(&entries, Some(&all), &ctx), k(3, 0));
+    }
+
+    /// Drive scan and indexed policies through identical callback streams
+    /// and assert identical victims at every pick.
+    #[test]
+    fn indexed_matches_scan_under_mutation_and_protection() {
+        let mut eam = Eam::new(4, 8);
+        let mut scan = ActivationPolicy::new();
+        let mut heap = IndexedActivationPolicy::new();
+        let entries: Vec<ExpertKey> = (0..4).flat_map(|l| (0..3).map(move |e| k(l, e))).collect();
+        for &e in &entries {
+            scan.on_insert(e);
+            heap.on_insert(e);
+        }
+        let mut protected: HashSet<ExpertKey> = HashSet::new();
+        for step in 0..40u32 {
+            // mutate a row between picks
+            eam.record((step % 4) as usize, ((step * 3) % 8) as usize, 1 + step % 5);
+            if step % 7 == 0 {
+                protected.insert(entries[(step % entries.len() as u32) as usize]);
+            }
+            if step % 11 == 0 {
+                protected.clear();
+            }
+            let ctx = CacheCtx {
+                cur_eam: &eam,
+                n_layers: 4,
+            };
+            let excl = if protected.is_empty() { None } else { Some(&protected) };
+            let a = scan.victim(&entries, excl, &ctx);
+            let b = heap.victim(&entries, excl, &ctx);
+            assert_eq!(a, b, "diverged at step {step}");
+        }
+    }
+
+    #[test]
+    fn indexed_tracks_evictions_and_inserts() {
+        let mut eam = Eam::new(2, 8);
+        eam.record(0, 0, 10);
+        let ctx = CacheCtx {
+            cur_eam: &eam,
+            n_layers: 2,
+        };
+        let mut c = ExpertCache::new(2, Box::new(IndexedActivationPolicy::new()));
+        c.insert(k(0, 0), &ctx); // hot (ratio 1.0)
+        c.insert(k(0, 1), &ctx); // cold
+        let ev = c.insert(k(1, 0), &ctx).unwrap();
+        assert_eq!(ev, k(0, 1), "cold expert evicted first");
+        assert!(c.contains(k(0, 0)) && c.contains(k(1, 0)));
+        // evicted key re-enters cleanly
+        let ev2 = c.insert(k(0, 1), &ctx).unwrap();
+        assert_eq!(ev2, k(1, 0), "late-layer zero-ratio expert goes next");
     }
 
     #[test]
@@ -396,14 +760,13 @@ mod tests {
         let mut p = NeighborPolicy::new();
         // 0,1,2 contiguous; 5 isolated
         let entries = vec![k(0, 0), k(0, 1), k(0, 2), k(0, 5)];
-        assert_eq!(p.victim(&entries, &ctx), 3, "isolated expert evicted");
+        assert_eq!(p.victim(&entries, None, &ctx), k(0, 5), "isolated expert evicted");
     }
 
     #[test]
     fn oracle_is_belady() {
-        // trace: A B C A B  with capacity 2: at inserting C, evict the one
-        // used farthest in future = C? no — cached {A,B}; A next at 3, B at
-        // 4 -> evict B.
+        // trace: A B C A B  with capacity 2: at inserting C, cached {A,B};
+        // A next at 3, B at 4 -> evict B.
         let trace = vec![k(0, 0), k(0, 1), k(0, 2), k(0, 0), k(0, 1)];
         let eam = Eam::new(1, 8);
         let ctx = CacheCtx {

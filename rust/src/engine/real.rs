@@ -204,7 +204,7 @@ impl RealMoeEngine {
 
         for eam in cur_eams {
             let recall = out.recall();
-            self.eamc.observe(eam.clone(), recall >= 0.5);
+            self.eamc.observe(&eam, recall >= 0.5);
             out.eams.push(eam);
         }
         Ok(out)
@@ -259,7 +259,9 @@ impl RealMoeEngine {
             for row in 0..cur_eams.len() {
                 if self.predictor.should_predict(l, iter_idx) {
                     let mut buf = std::mem::take(&mut self.pred_buf);
-                    self.predictor.predict(&cur_eams[row], &self.eamc, l, &mut buf);
+                    // the tiny real model re-predicts rarely; the naive
+                    // nearest scan is fine here (no matcher handle threaded)
+                    self.predictor.predict(&cur_eams[row], &self.eamc, None, l, &mut buf);
                     let ctx = CacheCtx {
                         cur_eam: batch_eam,
                         n_layers: c.n_layers,

@@ -6,7 +6,7 @@ use crate::engine::ComputeModel;
 use crate::memory::{MemorySim, TierConfig};
 use crate::model::{ExpertKey, ModelSpec};
 use crate::prefetch::{Predictor, PredictorKind};
-use crate::trace::{Eam, Eamc};
+use crate::trace::{Eam, Eamc, EamcMatcher};
 use crate::workload::SequenceActivation;
 
 /// Engine policy knobs (the ablation surface of §8.3/§8.4).
@@ -64,9 +64,11 @@ impl BatchResult {
         }
     }
 
+    /// Batch prefetch recall. Nothing demanded ⇒ nothing missed ⇒ 1.0
+    /// (the same convention the per-sequence recall path uses).
     pub fn recall(&self) -> f64 {
         if self.demands == 0 {
-            0.0
+            1.0
         } else {
             self.gpu_hits as f64 / self.demands as f64
         }
@@ -74,6 +76,12 @@ impl BatchResult {
 }
 
 /// The simulated-backend engine (one model replica).
+///
+/// All per-batch working state (per-sequence EAMs, matcher handles, the
+/// per-layer routing union, demand/hit tallies) lives in engine-owned
+/// buffers that are cleared — not reallocated — at batch boundaries, so a
+/// steady-state decode iteration performs no heap allocation (pinned by
+/// `tests/alloc_guard.rs`).
 pub struct SimEngine {
     spec: ModelSpec,
     sim: MemorySim,
@@ -86,6 +94,23 @@ pub struct SimEngine {
     cluster: Option<ClusterModel>,
     /// Reusable prediction buffer (hot path, no per-layer allocation).
     pred_buf: Vec<(ExpertKey, f64)>,
+    /// Per-sequence incremental matcher handles (re-attached per batch).
+    matchers: Vec<EamcMatcher>,
+    /// Pooled per-sequence EAMs (Alg. 1 step 2 clears these).
+    cur_eams: Vec<Eam>,
+    /// Batch-combined EAM driving cache decisions.
+    batch_eam: Eam,
+    /// All-zero EAM for idle-time cache contexts.
+    idle_eam: Eam,
+    /// Per-layer routing union scratch (replaces a per-layer BTreeMap):
+    /// token totals and touching sequences per expert id, plus the sorted
+    /// list of experts active in the current layer.
+    union_tokens: Vec<u32>,
+    union_seqs: Vec<Vec<u32>>,
+    union_active: Vec<u16>,
+    /// Per-sequence demand/GPU-hit tallies for the recall feedback loop.
+    seq_demands: Vec<u64>,
+    seq_hits: Vec<u64>,
 }
 
 impl SimEngine {
@@ -99,6 +124,7 @@ impl SimEngine {
         let sim = MemorySim::new(&spec, tier);
         let predictor = Predictor::new(cfg.predictor, spec.n_layers, spec.experts_per_layer)
             .with_min_ratio(cfg.min_prefetch_ratio);
+        let (n_layers, n_experts) = (spec.n_layers, spec.experts_per_layer);
         SimEngine {
             spec,
             sim,
@@ -109,6 +135,15 @@ impl SimEngine {
             clock: 0.0,
             cluster: None,
             pred_buf: Vec::new(),
+            matchers: Vec::new(),
+            cur_eams: Vec::new(),
+            batch_eam: Eam::new(n_layers, n_experts),
+            idle_eam: Eam::new(n_layers, n_experts),
+            union_tokens: vec![0; n_experts],
+            union_seqs: vec![Vec::new(); n_experts],
+            union_active: Vec::with_capacity(n_experts),
+            seq_demands: Vec::new(),
+            seq_hits: Vec::new(),
         }
     }
 
@@ -143,9 +178,8 @@ impl SimEngine {
     /// Idle the engine until `t` (arrivals later than the current clock).
     pub fn idle_until(&mut self, t: f64) {
         if t > self.clock {
-            let dummy = Eam::new(self.spec.n_layers, self.spec.experts_per_layer);
             let ctx = CacheCtx {
-                cur_eam: &dummy,
+                cur_eam: &self.idle_eam,
                 n_layers: self.spec.n_layers,
             };
             self.sim.advance_to(t, &ctx);
@@ -159,25 +193,61 @@ impl SimEngine {
     /// sequences are merged into the shared priority queue; the cache
     /// context uses the batch-combined EAM.
     pub fn run_batch(&mut self, seqs: &[SequenceActivation], start: f64) -> BatchResult {
+        let mut result = BatchResult::default();
+        self.run_batch_into(seqs, start, &mut result);
+        result
+    }
+
+    /// [`SimEngine::run_batch`] writing into a caller-owned result whose
+    /// buffers are reused. Together with the engine-owned scratch this makes
+    /// a warmed steady-state batch fully allocation-free (see
+    /// `tests/alloc_guard.rs`).
+    pub fn run_batch_into(
+        &mut self,
+        seqs: &[SequenceActivation],
+        start: f64,
+        result: &mut BatchResult,
+    ) {
         assert!(!seqs.is_empty());
         self.idle_until(start);
         let mut t = self.clock.max(start);
         let (n_layers, n_experts) = (self.spec.n_layers, self.spec.experts_per_layer);
 
-        // Alg. 1 step 2: fresh EAM per sequence.
-        let mut cur_eams: Vec<Eam> = seqs.iter().map(|_| Eam::new(n_layers, n_experts)).collect();
-        let mut batch_eam = Eam::new(n_layers, n_experts);
+        // Alg. 1 step 2: fresh EAM per sequence (pooled buffers) and a
+        // matcher handle synced to the current EAMC build.
+        if self.cur_eams.len() < seqs.len() {
+            self.cur_eams
+                .resize_with(seqs.len(), || Eam::new(n_layers, n_experts));
+        }
+        for m in self.cur_eams.iter_mut().take(seqs.len()) {
+            m.clear();
+        }
+        // matcher accumulators only pay off when the activation-aware
+        // predictor consumes them; the §8.3/§8.4 baselines skip the upkeep
+        let use_matcher = matches!(self.cfg.predictor, PredictorKind::ActivationAware { .. });
+        if use_matcher {
+            if self.matchers.len() < seqs.len() {
+                self.matchers.resize_with(seqs.len(), EamcMatcher::new);
+            }
+            for m in self.matchers.iter_mut().take(seqs.len()) {
+                m.attach(&self.eamc);
+            }
+        }
+        self.batch_eam.clear();
         // stale predictions from the previous batch are dropped
         self.sim.clear_queues();
 
-        let mut result = BatchResult::default();
-        let mut seq_demands = vec![0u64; seqs.len()];
-        let mut seq_hits = vec![0u64; seqs.len()];
+        result.token_latencies.clear();
+        result.seq_recalls.clear();
+        result.stalls.clear();
+        result.demands = 0;
+        result.gpu_hits = 0;
+        self.seq_demands.clear();
+        self.seq_demands.resize(seqs.len(), 0);
+        self.seq_hits.clear();
+        self.seq_hits.resize(seqs.len(), 0);
 
         let max_iters = seqs.iter().map(|s| s.iterations()).max().unwrap();
-        // union routing per layer: expert -> (tokens, sequences touching it)
-        let mut layer_union: std::collections::BTreeMap<u16, (u32, Vec<usize>)> =
-            std::collections::BTreeMap::new();
 
         for iter in 0..max_iters {
             let iter_start = t;
@@ -191,21 +261,35 @@ impl SimEngine {
                 // ---- dense part of the layer (attention etc.)
                 t += self.compute.dense_time(&self.spec, batch_tokens);
 
-                // ---- Alg. 1 step 5: route, steps 6-7: update cur_eam
-                layer_union.clear();
+                // ---- Alg. 1 step 5: route, steps 6-7: update cur_eam.
+                // The per-layer union goes into flat reusable scratch
+                // (expert-indexed token totals + touching-sequence lists);
+                // only the previous layer's active entries are cleared.
+                for &e in &self.union_active {
+                    self.union_tokens[e as usize] = 0;
+                    self.union_seqs[e as usize].clear();
+                }
+                self.union_active.clear();
                 for (si, s) in seqs.iter().enumerate() {
                     if iter >= s.iterations() {
                         continue;
                     }
                     for &(e, c) in &s.routes[iter][l] {
-                        cur_eams[si].record(l, e as usize, c);
-                        batch_eam.record(l, e as usize, c);
+                        self.cur_eams[si].record(l, e as usize, c);
+                        self.batch_eam.record(l, e as usize, c);
                         self.predictor.observe_route(l, e as usize, c);
-                        let entry = layer_union.entry(e).or_insert((0, Vec::new()));
-                        entry.0 += c;
-                        entry.1.push(si);
+                        if use_matcher {
+                            self.matchers[si].record(self.eamc.index(), l, e as usize, c);
+                        }
+                        if self.union_seqs[e as usize].is_empty() {
+                            self.union_active.push(e);
+                        }
+                        self.union_tokens[e as usize] += c;
+                        self.union_seqs[e as usize].push(si as u32);
                     }
                 }
+                // keep the former BTreeMap's deterministic expert order
+                self.union_active.sort_unstable();
 
                 // ---- Alg. 1 step 8: resubmit prefetch priorities
                 for (si, s) in seqs.iter().enumerate() {
@@ -214,9 +298,14 @@ impl SimEngine {
                     }
                     if self.predictor.should_predict(l, iter) {
                         let mut buf = std::mem::take(&mut self.pred_buf);
-                        self.predictor.predict(&cur_eams[si], &self.eamc, l, &mut buf);
+                        let matcher = if use_matcher {
+                            Some(&self.matchers[si])
+                        } else {
+                            None
+                        };
+                        self.predictor.predict(&self.cur_eams[si], &self.eamc, matcher, l, &mut buf);
                         let ctx = CacheCtx {
-                            cur_eam: &batch_eam,
+                            cur_eam: &self.batch_eam,
                             n_layers,
                         };
                         for &(key, prio) in buf.iter() {
@@ -240,12 +329,12 @@ impl SimEngine {
                 // resident before execution, activated or not.
                 if self.cfg.fetch_all_experts {
                     for e in 0..n_experts {
-                        if layer_union.contains_key(&(e as u16)) {
+                        if !self.union_seqs[e].is_empty() {
                             continue; // demanded (and counted) below
                         }
                         let key = ExpertKey::new(l, e);
                         let ctx = CacheCtx {
-                            cur_eam: &batch_eam,
+                            cur_eam: &self.batch_eam,
                             n_layers,
                         };
                         let ready = self.sim.demand(key, t, &ctx);
@@ -255,20 +344,22 @@ impl SimEngine {
 
                 // ---- Alg. 1 steps 9-13: execute experts (on-demand jumps)
                 let mut exec_total = 0.0f64;
-                for (&e, &(tokens, ref touching)) in layer_union.iter() {
+                for idx in 0..self.union_active.len() {
+                    let e = self.union_active[idx];
+                    let tokens = self.union_tokens[e as usize];
                     let key = ExpertKey::new(l, e as usize);
                     let ctx = CacheCtx {
-                        cur_eam: &batch_eam,
+                        cur_eam: &self.batch_eam,
                         n_layers,
                     };
                     let on_gpu_before = self.sim.is_on_gpu(key);
                     let ready = self.sim.demand(key, t, &ctx);
                     result.demands += 1;
                     result.stalls.push(ready - t);
-                    for &si in touching {
-                        seq_demands[si] += 1;
+                    for &si in &self.union_seqs[e as usize] {
+                        self.seq_demands[si as usize] += 1;
                         if on_gpu_before {
-                            seq_hits[si] += 1;
+                            self.seq_hits[si as usize] += 1;
                         }
                     }
                     if on_gpu_before {
@@ -281,7 +372,7 @@ impl SimEngine {
                 // nodes (Fig. 13); single node executes them serially.
                 match &self.cluster {
                     Some(cm) => {
-                        t += exec_total / cm.parallel_expert_factor(layer_union.len());
+                        t += exec_total / cm.parallel_expert_factor(self.union_active.len());
                         t += cm.all_to_all_time(&self.spec, batch_tokens);
                     }
                     None => t += exec_total,
@@ -291,20 +382,19 @@ impl SimEngine {
         }
 
         // §4.3: feed completed EAMs back for drift handling.
-        for (si, eam) in cur_eams.into_iter().enumerate() {
-            let recall = if seq_demands[si] == 0 {
+        for si in 0..seqs.len() {
+            let recall = if self.seq_demands[si] == 0 {
                 1.0
             } else {
-                seq_hits[si] as f64 / seq_demands[si] as f64
+                self.seq_hits[si] as f64 / self.seq_demands[si] as f64
             };
             result.seq_recalls.push(recall);
             self.eamc
-                .observe(eam, recall >= self.cfg.well_predicted_recall);
+                .observe(&self.cur_eams[si], recall >= self.cfg.well_predicted_recall);
         }
 
         self.clock = t;
         result.finish = t;
-        result
     }
 
     /// The exact order of expert demands `run_batch` will issue — used to
@@ -510,6 +600,66 @@ mod tests {
         uniq.dedup();
         assert_eq!(uniq.len(), distinct);
         assert!(trace.len() >= distinct, "reuse appears as repeats");
+    }
+
+    #[test]
+    fn empty_result_recall_conventions_agree() {
+        // nothing demanded ⇒ nothing missed: both the batch-level and the
+        // per-sequence accounting must say 1.0 (they used to disagree).
+        let r = BatchResult::default();
+        assert_eq!(r.recall(), 1.0);
+        // a sequence with zero demands (everything warm) reports recall 1.0
+        let s = spec();
+        let mut w = workload(&s, 9);
+        let eamc = eamc_for(&s, &mut w, 20, 6);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, s.total_experts(), CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let seq = w.gen_sequence();
+        let out = eng.run_batch(&[seq], 0.0);
+        for &r in &out.seq_recalls {
+            assert!((0.0..=1.0).contains(&r));
+        }
+        assert!((0.0..=1.0).contains(&out.recall()));
+    }
+
+    #[test]
+    fn run_batch_into_reuses_buffers_and_matches_run_batch() {
+        let s = spec();
+        let mut w = workload(&s, 10);
+        let eamc = eamc_for(&s, &mut w, 30, 8);
+        let make = |eamc: Eamc| {
+            SimEngine::new(
+                s.clone(),
+                tier(&s, 64, CacheKind::Activation),
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            )
+        };
+        let seqs: Vec<_> = (0..3).map(|_| w.gen_sequence()).collect();
+        // identical engines, identical batches: both entry points agree
+        let mut w2 = workload(&s, 10);
+        let eamc2 = eamc_for(&s, &mut w2, 30, 8);
+        let mut a = make(eamc2);
+        let mut b = {
+            let mut w3 = workload(&s, 10);
+            make(eamc_for(&s, &mut w3, 30, 8))
+        };
+        let ra = a.run_batch(&seqs, 0.0);
+        let mut rb = BatchResult::default();
+        b.run_batch_into(&seqs, 0.0, &mut rb);
+        assert_eq!(ra.demands, rb.demands);
+        assert_eq!(ra.gpu_hits, rb.gpu_hits);
+        assert_eq!(ra.token_latencies, rb.token_latencies);
+        // the same result struct can be reused across batches
+        let more: Vec<_> = (0..2).map(|_| w.gen_sequence()).collect();
+        b.run_batch_into(&more, b.now(), &mut rb);
+        assert_eq!(rb.seq_recalls.len(), 2);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! transfers, queue drain, demand stalls.
 
 use crate::cache::{CacheCtx, CacheKind, ExpertCache, Policy};
-use crate::cache::{ActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy, OraclePolicy};
+use crate::cache::{IndexedActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy, OraclePolicy};
 use crate::memory::{Link, Tier};
 use crate::model::{ExpertKey, ModelSpec};
 use crate::prefetch::{PrefetchQueue, MAX_PRIORITY};
@@ -164,7 +164,9 @@ pub struct MemorySim {
 
 fn make_policy(cfg: &TierConfig) -> Box<dyn Policy> {
     match cfg.cache_kind {
-        CacheKind::Activation => Box::new(ActivationPolicy::with_terms(
+        // serving uses the O(log n) heap-indexed form of Alg. 2; it makes
+        // the same decisions as the reference `ActivationPolicy` scan
+        CacheKind::Activation => Box::new(IndexedActivationPolicy::with_terms(
             cfg.activation_terms.0,
             cfg.activation_terms.1,
         )),

@@ -2,7 +2,7 @@
 //! baseline strategies evaluated in §8.3.
 
 use crate::model::ExpertKey;
-use crate::trace::{Eam, Eamc};
+use crate::trace::{Eam, Eamc, EamcMatcher};
 
 /// Small constant distinguishing zero-activation-ratio experts by layer
 /// decay (Alg. 1 step 26).
@@ -106,10 +106,18 @@ impl Predictor {
     ///
     /// Results are appended to `out` (cleared first) to keep the serving hot
     /// path allocation-free after warm-up.
+    ///
+    /// `matcher` is the sequence's incremental matcher handle: when given
+    /// (the serving hot path), the nearest-EAM lookup is an O(entries)
+    /// argmax over maintained accumulators instead of [`Eamc::nearest`]'s
+    /// allocating full scan. The caller is responsible for keeping the
+    /// handle synced (attached to `eamc`'s current build and fed every
+    /// routing event of `cur_eam`).
     pub fn predict(
         &self,
         cur_eam: &Eam,
         eamc: &Eamc,
+        matcher: Option<&EamcMatcher>,
         cur_layer: usize,
         out: &mut Vec<(ExpertKey, f64)>,
     ) {
@@ -140,8 +148,20 @@ impl Predictor {
                 }
             }
             PredictorKind::ActivationAware { .. } => {
-                // Alg. 1 steps 16-27.
-                let Some((p_eam, _)) = eamc.nearest(cur_eam) else {
+                // Alg. 1 steps 16-21: most-similar stored EAM — via the
+                // incremental matcher when a handle is threaded through,
+                // via the full scan otherwise (offline probes, baselines).
+                let best = match matcher {
+                    Some(m) => {
+                        debug_assert!(
+                            m.is_synced(eamc.index()),
+                            "matcher handle out of sync with EAMC build"
+                        );
+                        m.nearest().map(|(i, _)| eamc.entry(i))
+                    }
+                    None => eamc.nearest(cur_eam).map(|(e, _)| e),
+                };
+                let Some(p_eam) = best else {
                     return;
                 };
                 for fl in (cur_layer + 1)..l_total {
@@ -188,7 +208,7 @@ mod tests {
         let mut cur = Eam::new(4, 8);
         cur.record(0, 2, 4); // looks like task A
         let mut out = Vec::new();
-        p.predict(&cur, &eamc, 0, &mut out);
+        p.predict(&cur, &eamc, None, 0, &mut out);
         // future layers 1..4, all 8 experts each
         assert_eq!(out.len(), 3 * 8);
         // expert 2 in layer 1 must be the single highest priority
@@ -206,7 +226,7 @@ mod tests {
         let mut cur = Eam::new(4, 8);
         cur.record(0, 2, 4);
         let mut out = Vec::new();
-        p.predict(&cur, &eamc, 0, &mut out);
+        p.predict(&cur, &eamc, None, 0, &mut out);
         let prio = |l: usize, e: usize| {
             out.iter()
                 .find(|(k, _)| *k == ExpertKey::new(l, e))
@@ -225,7 +245,7 @@ mod tests {
         let p = Predictor::new(PredictorKind::ActivationAware { refine: true }, 4, 8);
         let cur = Eam::new(4, 8);
         let mut out = vec![(ExpertKey::new(0, 0), 1.0)];
-        p.predict(&cur, &eamc, 0, &mut out);
+        p.predict(&cur, &eamc, None, 0, &mut out);
         assert!(out.is_empty());
     }
 
@@ -236,7 +256,7 @@ mod tests {
         let mut cur = Eam::new(4, 8);
         cur.record(0, 5, 4); // task B — TopK doesn't care
         let mut out = Vec::new();
-        p.predict(&cur, &eamc, 0, &mut out);
+        p.predict(&cur, &eamc, None, 0, &mut out);
         let keys: Vec<ExpertKey> = out.iter().map(|(k, _)| *k).collect();
         assert_eq!(
             keys,
@@ -258,7 +278,7 @@ mod tests {
         p.observe_route(1, 0, 1);
         let cur = Eam::new(4, 8);
         let mut out = Vec::new();
-        p.predict(&cur, &eamc, 0, &mut out);
+        p.predict(&cur, &eamc, None, 0, &mut out);
         let layer1 = Prediction { items: out }.for_layer(1);
         assert_eq!(layer1, vec![ExpertKey::new(1, 6), ExpertKey::new(1, 3)]);
     }
@@ -282,7 +302,7 @@ mod tests {
             let p = Predictor::new(kind, 4, 8);
             let cur = Eam::new(4, 8);
             let mut out = Vec::new();
-            p.predict(&cur, &eamc, 3, &mut out);
+            p.predict(&cur, &eamc, None, 3, &mut out);
             assert!(out.is_empty());
         }
     }

@@ -151,17 +151,15 @@ impl PrefetchQueue {
         self.stale = 0;
     }
 
-    /// Heap housekeeping: rebuild when stale entries dominate, keeping pop
-    /// amortized O(log n) even under heavy priority churn.
+    /// Heap housekeeping: drop stale entries in place when they dominate,
+    /// keeping pop amortized O(log n) even under heavy priority churn.
+    /// `retain` filters the heap's own buffer — no allocation, so the
+    /// serving hot path stays allocation-free through compactions too.
     fn maybe_compact(&mut self) {
         if self.stale > 64 && self.stale > 4 * self.live.len() {
             let live = &self.live;
-            let items: Vec<HeapItem> = self
-                .heap
-                .drain()
-                .filter(|it| live.get(&it.key).is_some_and(|&(g, _)| g == it.gen))
-                .collect();
-            self.heap = BinaryHeap::from(items);
+            self.heap
+                .retain(|it| live.get(&it.key).is_some_and(|&(g, _)| g == it.gen));
             self.stale = 0;
         }
     }

@@ -1,11 +1,20 @@
 //! Expert Activation Matrix (paper §4.2).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Source of process-unique EAM identities (see [`Eam::id`]).
+static EAM_IDS: AtomicU64 = AtomicU64::new(1);
+
+fn next_eam_id() -> u64 {
+    EAM_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
 /// An `L x E` matrix where cell `[l][e]` counts the tokens routed to expert
 /// `e` at MoE layer `l` while processing **one** sequence (prompt + all
 /// generated tokens). Maintaining counts *per sequence* — not aggregated —
 /// is the paper's key tracing insight: aggregation across sequences washes
 /// out sparse activation and temporal locality (§4.1).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct Eam {
     layers: usize,
     experts: usize,
@@ -13,6 +22,37 @@ pub struct Eam {
     /// Per-row token totals, kept incrementally so distance and ratio
     /// computations are O(E) per row with no re-summation.
     row_sums: Vec<u32>,
+    /// Process-unique identity; a fresh id is assigned on construction and
+    /// on clone, so `(id, row_version)` pairs never collide across objects.
+    id: u64,
+    /// Monotonic per-row mutation counters. Consumers that cache values
+    /// derived from a row (e.g. the indexed eviction policy's priorities)
+    /// invalidate exactly the rows whose version moved.
+    row_versions: Vec<u64>,
+}
+
+impl Clone for Eam {
+    fn clone(&self) -> Eam {
+        Eam {
+            layers: self.layers,
+            experts: self.experts,
+            counts: self.counts.clone(),
+            row_sums: self.row_sums.clone(),
+            // a clone is a distinct object that mutates independently, so it
+            // must not share the original's (id, version) identity
+            id: next_eam_id(),
+            row_versions: self.row_versions.clone(),
+        }
+    }
+}
+
+/// Logical equality: same geometry and counts (identity fields excluded).
+impl PartialEq for Eam {
+    fn eq(&self, other: &Eam) -> bool {
+        self.layers == other.layers
+            && self.experts == other.experts
+            && self.counts == other.counts
+    }
 }
 
 impl Eam {
@@ -23,6 +63,8 @@ impl Eam {
             experts,
             counts: vec![0; layers * experts],
             row_sums: vec![0; layers],
+            id: next_eam_id(),
+            row_versions: vec![0; layers],
         }
     }
 
@@ -39,6 +81,20 @@ impl Eam {
         debug_assert!(layer < self.layers && expert < self.experts);
         self.counts[layer * self.experts + expert] += tokens;
         self.row_sums[layer] += tokens;
+        self.row_versions[layer] += 1;
+    }
+
+    /// Process-unique identity of this matrix object (changes on clone).
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Monotonic mutation counter for one row; unchanged version on the
+    /// same [`Eam::id`] guarantees the row's counts are unchanged.
+    #[inline]
+    pub fn row_version(&self, layer: usize) -> u64 {
+        self.row_versions[layer]
     }
 
     #[inline]
@@ -73,6 +129,31 @@ impl Eam {
     pub fn clear(&mut self) {
         self.counts.fill(0);
         self.row_sums.fill(0);
+        for v in self.row_versions.iter_mut() {
+            *v += 1;
+        }
+    }
+
+    /// Copy `other`'s counts into this matrix, reusing the existing buffers
+    /// when geometries match (the EAMC recent-window ring recycles slots
+    /// this way to keep `observe` allocation-free at capacity).
+    pub fn copy_from(&mut self, other: &Eam) {
+        if self.layers == other.layers && self.experts == other.experts {
+            self.counts.copy_from_slice(&other.counts);
+            self.row_sums.copy_from_slice(&other.row_sums);
+            for v in self.row_versions.iter_mut() {
+                *v += 1;
+            }
+        } else {
+            self.layers = other.layers;
+            self.experts = other.experts;
+            self.counts = other.counts.clone();
+            self.row_sums = other.row_sums.clone();
+            self.row_versions = vec![0; other.layers];
+            // versions restarted at 0: a fresh id keeps the documented
+            // "(id, row_version) pins the row contents" invariant
+            self.id = next_eam_id();
+        }
     }
 
     /// Total tokens recorded across one layer-row — equal for all traced
@@ -269,5 +350,41 @@ mod tests {
     fn bytes_accounting() {
         let m = Eam::new(24, 128);
         assert_eq!(m.bytes(), 24 * 128 * 4);
+    }
+
+    #[test]
+    fn row_versions_track_mutations_per_row() {
+        let mut m = Eam::new(3, 4);
+        let v0 = m.row_version(0);
+        let v1 = m.row_version(1);
+        m.record(0, 2, 5);
+        assert!(m.row_version(0) > v0, "mutated row bumps");
+        assert_eq!(m.row_version(1), v1, "untouched row stays");
+        let before = m.row_version(1);
+        m.clear();
+        assert!(m.row_version(1) > before, "clear bumps every row");
+    }
+
+    #[test]
+    fn identity_is_unique_across_clones() {
+        let a = eam_from(&[&[1, 2], &[3, 4]]);
+        let b = a.clone();
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a, b, "logical equality ignores identity");
+    }
+
+    #[test]
+    fn copy_from_matches_and_bumps_versions() {
+        let src = eam_from(&[&[1, 2], &[0, 7]]);
+        let mut dst = Eam::new(2, 2);
+        let v = dst.row_version(0);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.row_sum(1), 7);
+        assert!(dst.row_version(0) > v);
+        // geometry mismatch falls back to reallocation
+        let mut other = Eam::new(1, 3);
+        other.copy_from(&src);
+        assert_eq!(other, src);
     }
 }

@@ -1,5 +1,8 @@
 //! Expert Activation Matrix Collection (paper §4.2-§4.3).
 
+use std::collections::VecDeque;
+
+use crate::trace::matcher::MatcherIndex;
 use crate::trace::{kmeans_medoids, Eam};
 
 /// Counters exposed for the §8.5 experiments (adaptation speed, overhead).
@@ -31,9 +34,13 @@ pub struct Eamc {
     /// ~230us per lookup) to a few hundred KB of contiguous data — reaching
     /// the paper's ~21us lookup (§8.5; EXPERIMENTS.md §Perf).
     sparse: Vec<SparseEam>,
-    /// Sliding window of recently completed sequence EAMs, fuel for online
-    /// reconstruction.
-    recent: Vec<Eam>,
+    /// Inverted index over `sparse` for the incremental serving-path
+    /// matcher (`trace::matcher`): `(layer, expert) → [(entry, weight)]`.
+    index: MatcherIndex,
+    /// Sliding window (ring) of recently completed sequence EAMs, fuel for
+    /// online reconstruction. At capacity the oldest slot is recycled via
+    /// `Eam::copy_from`, keeping `observe` allocation-free.
+    recent: VecDeque<Eam>,
     recent_cap: usize,
     /// Rebuild once this many poorly-predicted sequences are seen.
     rebuild_threshold: usize,
@@ -50,7 +57,8 @@ impl Eamc {
             experts,
             eams: Vec::new(),
             sparse: Vec::new(),
-            recent: Vec::new(),
+            index: MatcherIndex::empty(layers, experts),
+            recent: VecDeque::new(),
             recent_cap: 512,
             rebuild_threshold: 100,
             stats: EamcStats::default(),
@@ -77,6 +85,40 @@ impl Eamc {
         self.stats.builds += 1;
         self.stats.observed_since_build = 0;
         self.stats.poor_predictions = 0;
+        self.rebuild_index();
+    }
+
+    /// Rebuild the inverted posting lists from `sparse` (called once per
+    /// (re)construction — never on the serving path).
+    fn rebuild_index(&mut self) {
+        let (l, e) = (self.layers, self.experts);
+        let mut cells: Vec<Vec<(u32, f32)>> = vec![Vec::new(); l * e];
+        for (i, s) in self.sparse.iter().enumerate() {
+            for li in 0..l {
+                let (a, b) = (s.offsets[li] as usize, s.offsets[li + 1] as usize);
+                for &(idx, v) in &s.data[a..b] {
+                    cells[li * e + idx as usize].push((i as u32, v));
+                }
+            }
+        }
+        self.index =
+            MatcherIndex::from_cells(l, e, self.sparse.len(), self.stats.builds as u64, &cells);
+    }
+
+    /// The inverted index of the current build (for matcher handles).
+    pub fn index(&self) -> &MatcherIndex {
+        &self.index
+    }
+
+    /// Monotonic (re)construction counter; matcher handles attached to an
+    /// older build must re-sync.
+    pub fn build_id(&self) -> u64 {
+        self.stats.builds as u64
+    }
+
+    /// Stored entry by index (pairs with `nearest_entry` / matcher output).
+    pub fn entry(&self, i: usize) -> &Eam {
+        &self.eams[i]
     }
 
     pub fn len(&self) -> usize {
@@ -130,6 +172,12 @@ impl Eamc {
     /// costs one dot product per traced row against its precomputed unit
     /// vector (see `benches/perf_hotpath.rs`).
     pub fn nearest(&self, cur: &Eam) -> Option<(&Eam, f64)> {
+        self.nearest_entry(cur).map(|(i, d)| (&self.eams[i], d))
+    }
+
+    /// [`Eamc::nearest`] returning the entry *index* (the form the
+    /// incremental matcher mirrors and the differential tests compare).
+    pub fn nearest_entry(&self, cur: &Eam) -> Option<(usize, f64)> {
         if self.eams.is_empty() {
             return None;
         }
@@ -139,7 +187,7 @@ impl Eamc {
         let q_rows: Vec<usize> = (0..l).filter(|&li| cur.row_sum(li) > 0).collect();
         if q_rows.is_empty() {
             // nothing traced yet: Eq. 1 over zero rows is 0 for everything
-            return Some((&self.eams[0], 0.0));
+            return Some((0, 0.0));
         }
         let mut best = 0usize;
         let mut best_sim = f32::NEG_INFINITY;
@@ -159,7 +207,35 @@ impl Eamc {
             }
         }
         let best_d = 1.0 - best_sim as f64 / q_rows.len() as f64;
-        Some((&self.eams[best], best_d))
+        Some((best, best_d))
+    }
+
+    /// Reference (f64, no incremental state) truncated-cosine partial
+    /// distance from `cur` to stored entry `i` — the arbiter both the full
+    /// scan and the incremental matcher are tested against.
+    pub fn distance_to_entry(&self, cur: &Eam, i: usize) -> f64 {
+        let mut rows = 0usize;
+        let mut sim = 0.0f64;
+        let entry = &self.sparse[i];
+        for li in 0..self.layers {
+            if cur.row_sum(li) == 0 {
+                continue;
+            }
+            rows += 1;
+            let row = cur.row(li);
+            let norm2: u64 = row.iter().map(|&c| c as u64 * c as u64).sum();
+            let (s, t) = (entry.offsets[li] as usize, entry.offsets[li + 1] as usize);
+            let mut dot = 0.0f64;
+            for &(idx, v) in &entry.data[s..t] {
+                dot += v as f64 * row[idx as usize] as f64;
+            }
+            sim += dot / (norm2 as f64).sqrt();
+        }
+        if rows == 0 {
+            0.0
+        } else {
+            1.0 - sim / rows as f64
+        }
     }
 
     /// Online path (§4.3): feed back the completed EAM of a served sequence
@@ -168,18 +244,29 @@ impl Eamc {
     /// `rebuild_threshold` poorly-predicted sequences accumulate.
     ///
     /// Returns `true` if a reconstruction happened.
-    pub fn observe(&mut self, completed: Eam, well_predicted: bool) -> bool {
+    ///
+    /// O(1) amortized: the recent window is a ring (`VecDeque`) whose
+    /// oldest slot is recycled in place once full, and a reconstruction
+    /// clusters the window in place instead of cloning it first.
+    pub fn observe(&mut self, completed: &Eam, well_predicted: bool) -> bool {
         self.stats.observed_since_build += 1;
         if !well_predicted {
             self.stats.poor_predictions += 1;
         }
         if self.recent.len() == self.recent_cap {
-            self.recent.remove(0);
+            // recycle the oldest slot's buffers instead of shifting O(n)
+            let mut slot = self.recent.pop_front().expect("ring at capacity");
+            slot.copy_from(completed);
+            self.recent.push_back(slot);
+        } else {
+            self.recent.push_back(completed.clone());
         }
-        self.recent.push(completed);
         if self.stats.poor_predictions >= self.rebuild_threshold && !self.recent.is_empty() {
-            let dataset: Vec<Eam> = self.recent.clone();
-            self.rebuild_from(&dataset);
+            // take the window out so the re-clustering can borrow it as a
+            // slice while `self` is mutated (no clone of the dataset)
+            let mut recent = std::mem::take(&mut self.recent);
+            self.rebuild_from(recent.make_contiguous());
+            self.recent = recent;
             true
         } else {
             false
@@ -189,6 +276,15 @@ impl Eamc {
     /// Lower the rebuild threshold (tests / drift experiments).
     pub fn set_rebuild_threshold(&mut self, t: usize) {
         self.rebuild_threshold = t;
+    }
+
+    /// Shrink/grow the recent-window ring (tests / drift experiments).
+    /// Oldest entries are dropped if the window is over the new capacity.
+    pub fn set_recent_capacity(&mut self, cap: usize) {
+        self.recent_cap = cap.max(1);
+        while self.recent.len() > self.recent_cap {
+            self.recent.pop_front();
+        }
     }
 }
 
@@ -298,7 +394,7 @@ mod tests {
         // a new distribution routes to expert 6
         let mut rebuilt = false;
         for _ in 0..5 {
-            rebuilt |= c.observe(one_hot(4, 8, 6, 5), false);
+            rebuilt |= c.observe(&one_hot(4, 8, 6, 5), false);
         }
         assert!(rebuilt, "rebuild should fire at the threshold");
         // after rebuild, the new pattern is representable
@@ -315,7 +411,7 @@ mod tests {
         let mut c = Eamc::construct(2, &ds, 3);
         c.set_rebuild_threshold(5);
         for _ in 0..50 {
-            assert!(!c.observe(one_hot(4, 8, 0, 5), true));
+            assert!(!c.observe(&one_hot(4, 8, 0, 5), true));
         }
         assert_eq!(c.stats().builds, 1);
     }

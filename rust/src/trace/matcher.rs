@@ -1,0 +1,400 @@
+//! Incremental EAMC matching (the serving-path replacement for
+//! [`Eamc::nearest`]'s full scan).
+//!
+//! [`Eamc::nearest`] recomputes, on every call, the truncated-cosine
+//! similarity between the in-progress EAM and **all** stored entries —
+//! allocating a fresh `L×E` unit-row buffer each time. But between two
+//! lookups of the same sequence, only the cells that routing just touched
+//! changed. This module exploits that:
+//!
+//! * [`MatcherIndex`] — an inverted index built from the EAMC's sparse
+//!   rows: `(layer, expert) → [(entry_id, unit_weight)]` posting lists in
+//!   CSR form. Rebuilt only when the EAMC itself is (re)constructed.
+//! * [`EamcMatcher`] — a per-sequence handle holding cosine accumulators.
+//!   [`EamcMatcher::record`] folds one routing event into the accumulators
+//!   of exactly the entries whose posting lists mention the touched cell;
+//!   [`EamcMatcher::nearest`] is then a scan-free argmax over `n` floats —
+//!   no dot products, no normalization work, no allocation.
+//!
+//! ## The math
+//!
+//! For entry `i` and traced query row `l`, the similarity term is
+//! `dot(q_l, s_il) / ‖q_l‖` where `s_il` is the entry's precomputed unit
+//! row. The numerator `raw[i][l] = Σ_e q_l[e]·s_il[e]` is a sum of
+//! products over the entry's stored experts, so adding `c` tokens to cell
+//! `(l, e)` adds `c·s_il[e]` — a walk over one posting list. The
+//! denominator changes for **every** entry touched in row `l` when the row
+//! norm moves, so `record` retracts the row's old `raw/‖q‖` contributions,
+//! applies the posting-list deltas, and re-adds at the new norm — touching
+//! only entries with nonzero overlap in that row. Row norms are kept as
+//! exact integer sums of squares (`Σ count²` in u64), so the incremental
+//! norm is bit-identical to a from-scratch computation.
+//!
+//! Decisions match [`Eamc::nearest`] up to f32-vs-f64 summation order;
+//! differential proptests in `tests/properties.rs` pin the agreement.
+
+use crate::trace::Eamc;
+
+/// Inverted index over an EAMC build: posting lists from `(layer, expert)`
+/// cells to the entries whose (truncated, row-normalized) rows contain
+/// them. Owned by [`Eamc`], shared read-only by all matcher handles.
+#[derive(Debug, Clone)]
+pub struct MatcherIndex {
+    layers: usize,
+    experts: usize,
+    entries: usize,
+    /// Identifies the EAMC (re)construction this index describes; matcher
+    /// handles re-sync when it moves.
+    build_id: u64,
+    /// CSR offsets, length `layers * experts + 1`.
+    off: Vec<u32>,
+    /// Flat `(entry_id, unit_weight)` arena.
+    post: Vec<(u32, f32)>,
+}
+
+impl MatcherIndex {
+    /// Index of an empty collection (no entries; all posting lists empty).
+    pub fn empty(layers: usize, experts: usize) -> MatcherIndex {
+        MatcherIndex {
+            layers,
+            experts,
+            entries: 0,
+            build_id: 0,
+            off: vec![0; layers * experts + 1],
+            post: Vec::new(),
+        }
+    }
+
+    /// Build from per-cell posting lists (`cells[layer * experts + expert]`).
+    pub(crate) fn from_cells(
+        layers: usize,
+        experts: usize,
+        entries: usize,
+        build_id: u64,
+        cells: &[Vec<(u32, f32)>],
+    ) -> MatcherIndex {
+        debug_assert_eq!(cells.len(), layers * experts);
+        let total: usize = cells.iter().map(|c| c.len()).sum();
+        let mut off = Vec::with_capacity(layers * experts + 1);
+        let mut post = Vec::with_capacity(total);
+        off.push(0u32);
+        for cell in cells {
+            post.extend_from_slice(cell);
+            off.push(post.len() as u32);
+        }
+        MatcherIndex {
+            layers,
+            experts,
+            entries,
+            build_id,
+            off,
+            post,
+        }
+    }
+
+    #[inline]
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    #[inline]
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    #[inline]
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    #[inline]
+    pub fn build_id(&self) -> u64 {
+        self.build_id
+    }
+
+    /// Posting list of one `(layer, expert)` cell.
+    #[inline]
+    pub fn posting(&self, layer: usize, expert: usize) -> &[(u32, f32)] {
+        let c = layer * self.experts + expert;
+        &self.post[self.off[c] as usize..self.off[c + 1] as usize]
+    }
+
+    /// Bytes held by the index (overhead accounting, §8.5).
+    pub fn bytes(&self) -> usize {
+        self.off.len() * std::mem::size_of::<u32>()
+            + self.post.len() * std::mem::size_of::<(u32, f32)>()
+    }
+}
+
+/// Per-sequence incremental matcher handle. One lives per active sequence
+/// slot in the engine and is recycled across batches ([`EamcMatcher::attach`]
+/// re-syncs to the current EAMC build and clears the query state without
+/// reallocating when geometry is unchanged).
+#[derive(Debug, Default)]
+pub struct EamcMatcher {
+    layers: usize,
+    experts: usize,
+    /// Number of EAMC entries the accumulators cover.
+    n: usize,
+    build_id: u64,
+    attached: bool,
+    /// Query counts, `layers * experts` (mirror of the sequence's cur_eam).
+    q_counts: Vec<u32>,
+    /// Exact per-row `Σ count²` (u64 ⇒ no incremental drift).
+    q_norm2: Vec<u64>,
+    /// Rows with nonzero counts so far.
+    traced_rows: usize,
+    /// Un-normalized per-row dot products, `raw[layer * n + entry]`.
+    raw: Vec<f64>,
+    /// Normalized similarity per entry: `Σ_rows raw / ‖q_row‖`.
+    sim: Vec<f64>,
+    /// Per-row arena of entry ids with nonzero `raw` (capacity `n` each).
+    touched: Vec<u32>,
+    touched_len: Vec<u32>,
+}
+
+impl EamcMatcher {
+    /// Detached handle; call [`EamcMatcher::attach`] before use.
+    pub fn new() -> EamcMatcher {
+        EamcMatcher::default()
+    }
+
+    /// Sync to `eamc`'s current build and start a fresh (empty) query.
+    /// Reuses all buffers when the geometry is unchanged.
+    pub fn attach(&mut self, eamc: &Eamc) {
+        self.attach_index(eamc.index());
+    }
+
+    /// [`EamcMatcher::attach`] against a standalone index.
+    pub fn attach_index(&mut self, index: &MatcherIndex) {
+        let (l, e, n) = (index.layers(), index.experts(), index.entries());
+        if self.layers != l || self.experts != e || self.n != n {
+            self.layers = l;
+            self.experts = e;
+            self.n = n;
+            self.q_counts = vec![0; l * e];
+            self.q_norm2 = vec![0; l];
+            self.raw = vec![0.0; l * n];
+            self.sim = vec![0.0; n];
+            self.touched = vec![0; l * n];
+            self.touched_len = vec![0; l];
+            self.traced_rows = 0;
+        } else {
+            self.reset();
+        }
+        self.build_id = index.build_id();
+        self.attached = true;
+    }
+
+    /// Whether the handle is synced to `index`'s build.
+    pub fn is_synced(&self, index: &MatcherIndex) -> bool {
+        self.attached
+            && self.build_id == index.build_id()
+            && self.n == index.entries()
+            && self.layers == index.layers()
+            && self.experts == index.experts()
+    }
+
+    /// Clear the query state (sequence boundary) without touching the
+    /// attachment. O(touched entries), allocation-free.
+    pub fn reset(&mut self) {
+        for li in 0..self.layers {
+            let base = li * self.n;
+            let tl = self.touched_len[li] as usize;
+            for j in 0..tl {
+                let i = self.touched[base + j] as usize;
+                self.raw[base + i] = 0.0;
+            }
+            self.touched_len[li] = 0;
+            self.q_norm2[li] = 0;
+        }
+        self.q_counts.fill(0);
+        self.sim.fill(0.0);
+        self.traced_rows = 0;
+    }
+
+    /// Fold one routing event (Alg. 1 steps 6-7) into the accumulators.
+    /// Cost: O(|posting list| + |entries overlapping row `layer`|); no
+    /// allocation, no full scans.
+    pub fn record(&mut self, index: &MatcherIndex, layer: usize, expert: usize, tokens: u32) {
+        debug_assert!(
+            self.is_synced(index),
+            "matcher not attached to this EAMC build"
+        );
+        debug_assert!(layer < self.layers && expert < self.experts);
+        if tokens == 0 {
+            return;
+        }
+        let n = self.n;
+        let cell = layer * self.experts + expert;
+        let old_c = self.q_counts[cell] as u64;
+        let c = tokens as u64;
+        let old_n2 = self.q_norm2[layer];
+        let new_n2 = old_n2 + 2 * c * old_c + c * c;
+        let base = layer * n;
+        let mut tl = self.touched_len[layer] as usize;
+        // retract this row's contributions at the old norm
+        if old_n2 == 0 {
+            self.traced_rows += 1;
+        } else {
+            let inv = 1.0 / (old_n2 as f64).sqrt();
+            for j in 0..tl {
+                let i = self.touched[base + j] as usize;
+                self.sim[i] -= self.raw[base + i] * inv;
+            }
+        }
+        // fold the delta into the overlapped entries' raw dot products
+        for &(i, w) in index.posting(layer, expert) {
+            let r = &mut self.raw[base + i as usize];
+            if *r == 0.0 {
+                self.touched[base + tl] = i;
+                tl += 1;
+            }
+            *r += tokens as f64 * w as f64;
+        }
+        self.touched_len[layer] = tl as u32;
+        // re-apply at the new norm
+        let inv = 1.0 / (new_n2 as f64).sqrt();
+        for j in 0..tl {
+            let i = self.touched[base + j] as usize;
+            self.sim[i] += self.raw[base + i] * inv;
+        }
+        self.q_counts[cell] += tokens;
+        self.q_norm2[layer] = new_n2;
+    }
+
+    /// Argmax over the maintained similarities: `(entry index, partial
+    /// distance)`, mirroring [`Eamc::nearest`]'s conventions (`None` for an
+    /// empty collection; entry 0 at distance 0 when nothing is traced yet).
+    pub fn nearest(&self) -> Option<(usize, f64)> {
+        if self.n == 0 {
+            return None;
+        }
+        if self.traced_rows == 0 {
+            return Some((0, 0.0));
+        }
+        let mut best = 0usize;
+        let mut best_sim = f64::NEG_INFINITY;
+        for (i, &s) in self.sim.iter().enumerate() {
+            if s > best_sim {
+                best_sim = s;
+                best = i;
+            }
+        }
+        Some((best, 1.0 - best_sim / self.traced_rows as f64))
+    }
+
+    /// Number of rows the query has traced so far.
+    pub fn traced_rows(&self) -> usize {
+        self.traced_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Eam;
+
+    fn one_hot(layers: usize, experts: usize, hot: usize, tokens: u32) -> Eam {
+        let mut m = Eam::new(layers, experts);
+        for l in 0..layers {
+            m.record(l, hot, tokens);
+        }
+        m
+    }
+
+    fn eamc3() -> Eamc {
+        let ds: Vec<Eam> = [0usize, 3, 7]
+            .iter()
+            .flat_map(|&h| (0..3).map(move |_| one_hot(4, 8, h, 5)))
+            .collect();
+        Eamc::construct(3, &ds, 1)
+    }
+
+    #[test]
+    fn empty_and_untraced_conventions_match_nearest() {
+        let empty = Eamc::new(4, 2, 2);
+        let mut m = EamcMatcher::new();
+        m.attach(&empty);
+        assert!(m.nearest().is_none());
+
+        let c = eamc3();
+        m.attach(&c);
+        let (i, d) = m.nearest().unwrap();
+        assert_eq!(i, 0);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn incremental_tracks_full_scan_decision() {
+        let c = eamc3();
+        let mut m = EamcMatcher::new();
+        m.attach(&c);
+        let mut cur = Eam::new(4, 8);
+        for (l, e, t) in [(0, 3, 2u32), (1, 3, 1), (1, 4, 1), (2, 3, 5)] {
+            m.record(c.index(), l, e, t);
+            cur.record(l, e, t);
+            let (fi, fd) = m.nearest().unwrap();
+            let (si, sd) = c.nearest_entry(&cur).unwrap();
+            assert_eq!(fi, si, "decision diverged after record ({l},{e},{t})");
+            assert!((fd - sd).abs() < 1e-5, "distance {fd} vs {sd}");
+        }
+    }
+
+    #[test]
+    fn reset_restores_fresh_query() {
+        let c = eamc3();
+        let mut m = EamcMatcher::new();
+        m.attach(&c);
+        m.record(c.index(), 0, 7, 9);
+        assert_eq!(m.nearest().unwrap().0, c.nearest_entry(&one_hot(4, 8, 7, 9)).unwrap().0);
+        m.reset();
+        assert_eq!(m.traced_rows(), 0);
+        let (i, d) = m.nearest().unwrap();
+        assert_eq!((i, d), (0, 0.0));
+        // and the accumulators really are clean: a different pattern wins
+        m.record(c.index(), 0, 0, 4);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 0, 4);
+        assert_eq!(m.nearest().unwrap().0, c.nearest_entry(&cur).unwrap().0);
+    }
+
+    #[test]
+    fn attach_resyncs_after_rebuild() {
+        let ds = vec![one_hot(4, 8, 0, 5); 4];
+        let mut c = Eamc::construct(2, &ds, 2);
+        c.set_rebuild_threshold(3);
+        let mut m = EamcMatcher::new();
+        m.attach(&c);
+        assert!(m.is_synced(c.index()));
+        for _ in 0..3 {
+            c.observe(&one_hot(4, 8, 6, 5), false);
+        }
+        assert!(!m.is_synced(c.index()), "rebuild must invalidate handles");
+        m.attach(&c);
+        assert!(m.is_synced(c.index()));
+        m.record(c.index(), 0, 6, 2);
+        let mut cur = Eam::new(4, 8);
+        cur.record(0, 6, 2);
+        assert_eq!(m.nearest().unwrap().0, c.nearest_entry(&cur).unwrap().0);
+    }
+
+    #[test]
+    fn index_bytes_and_postings_cover_entries() {
+        let c = eamc3();
+        let idx = c.index();
+        assert_eq!(idx.entries(), 3);
+        assert!(idx.bytes() > 0);
+        // every entry appears in at least one posting list
+        let mut seen = vec![false; idx.entries()];
+        for l in 0..idx.layers() {
+            for e in 0..idx.experts() {
+                for &(i, w) in idx.posting(l, e) {
+                    assert!(w > 0.0);
+                    seen[i as usize] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -6,11 +6,16 @@
 //!   representative EAMs built by k-means clustering under the paper's
 //!   per-layer normalized-cosine distance (Eq. 1), with online
 //!   reconstruction to handle distribution shift (§4.3).
+//! * [`EamcMatcher`] — per-sequence incremental matcher over an inverted
+//!   [`MatcherIndex`], turning the serving-path `nearest()` lookup into a
+//!   delta update + allocation-free argmax (EXPERIMENTS.md §Perf).
 
 mod eam;
 mod eamc;
 mod kmeans;
+mod matcher;
 
 pub use eam::Eam;
 pub use eamc::{Eamc, EamcStats};
 pub use kmeans::{kmeans_medoids, KMeansResult};
+pub use matcher::{EamcMatcher, MatcherIndex};

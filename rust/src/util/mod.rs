@@ -5,6 +5,7 @@
 //! generator, so every experiment is reproducible from a single `u64` seed —
 //! no external randomness, no global state.
 
+pub mod alloc;
 pub mod json;
 pub mod proptest;
 pub mod tomlmini;

@@ -2,11 +2,15 @@
 //! `util::proptest` — the image has no proptest crate). Each property runs
 //! hundreds of randomized cases; failures report the case index + seed.
 
-use moe_infinity::cache::{ActivationPolicy, CacheCtx, ExpertCache, LruPolicy};
+use std::collections::HashSet;
+
+use moe_infinity::cache::{
+    ActivationPolicy, CacheCtx, ExpertCache, IndexedActivationPolicy, LruPolicy, Policy,
+};
 use moe_infinity::model::{ExpertKey, ModelSpec};
 use moe_infinity::prefetch::{PrefetchQueue, MAX_PRIORITY};
 use moe_infinity::server::Batcher;
-use moe_infinity::trace::{kmeans_medoids, Eam};
+use moe_infinity::trace::{kmeans_medoids, Eam, Eamc, EamcMatcher};
 use moe_infinity::util::proptest::{forall, forall_res};
 use moe_infinity::util::Rng;
 use moe_infinity::workload::{DatasetPreset, Request, Workload};
@@ -287,6 +291,224 @@ fn prop_eamc_nearest_never_worse_than_random_member() {
             let d_pick = probe.distance_partial(&ds[*pick % ds.len()]);
             if best_d > d_pick + 0.35 {
                 return Err(format!("nearest {best_d} far worse than member {d_pick}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Differential: the incremental matcher must make the same nearest-entry
+/// decision as `Eamc::nearest`'s full scan, which in turn must agree with
+/// the naive `Eam::distance_partial` argmin (expert counts are kept ≤ the
+/// sparse top-K so row truncation never perturbs the metric). Ties are
+/// resolved by comparing the reference distances of the chosen entries.
+#[test]
+fn prop_incremental_matcher_agrees_with_full_scan_and_naive_argmin() {
+    forall_res(
+        0x3A7C,
+        120,
+        |rng| {
+            let l = 2 + rng.below(4);
+            let e = 2 + rng.below(7); // ≤ 8 = SPARSE_TOP_K: no truncation
+            let n = 3 + rng.below(8);
+            let ds: Vec<Eam> = (0..n).map(|_| random_eam(rng, l, e)).collect();
+            let cap = 1 + rng.below(n);
+            let trace: Vec<(usize, usize, u32)> = (0..10 + rng.below(30))
+                .map(|_| (rng.below(l), rng.below(e), 1 + rng.below(9) as u32))
+                .collect();
+            (ds, cap, trace)
+        },
+        |(ds, cap, trace)| {
+            let eamc = Eamc::construct(*cap, ds, 3);
+            let mut matcher = EamcMatcher::new();
+            matcher.attach(&eamc);
+            let mut cur = Eam::new(ds[0].layers(), ds[0].experts());
+            for &(l, e, c) in trace {
+                matcher.record(eamc.index(), l, e, c);
+                cur.record(l, e, c);
+                let (fi, fd) = matcher.nearest().expect("non-empty");
+                let (si, sd) = eamc.nearest_entry(&cur).expect("non-empty");
+                // decision equality modulo exact ties, judged by the f64
+                // reference metric
+                let rf = eamc.distance_to_entry(&cur, fi);
+                let rs = eamc.distance_to_entry(&cur, si);
+                // the scan accumulates in f32, the matcher in f64 — on
+                // near-ties they may legitimately pick different entries,
+                // but only within f32 rounding of each other
+                if (rf - rs).abs() > 1e-4 {
+                    return Err(format!(
+                        "matcher chose entry {fi} (ref d {rf}), scan chose {si} (ref d {rs})"
+                    ));
+                }
+                if (fd - rf).abs() > 1e-4 {
+                    return Err(format!("incremental distance drifted: {fd} vs ref {rf}"));
+                }
+                if (sd - rs).abs() > 1e-4 {
+                    return Err(format!("scan distance drifted: {sd} vs ref {rs}"));
+                }
+                // agreement with the naive argmin over full-precision
+                // partial distances (no truncation at these widths)
+                let naive = eamc
+                    .iter()
+                    .map(|m| cur.distance_partial(m))
+                    .fold(f64::INFINITY, f64::min);
+                if (rf - naive).abs() > 1e-4 {
+                    return Err(format!(
+                        "chosen entry ref d {rf} vs naive argmin {naive}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Differential: the heap-indexed Alg. 2 policy must pick exactly the same
+/// victim as the reference scan under arbitrary interleavings of EAM row
+/// mutations, inserts, evictions and protection changes.
+#[test]
+fn prop_indexed_victim_matches_scan_policy() {
+    forall_res(
+        0x1DEA,
+        120,
+        |rng| {
+            let l = 2 + rng.below(5);
+            let e = 2 + rng.below(12);
+            let ops: Vec<(u8, usize, usize, u32)> = (0..40 + rng.below(80))
+                .map(|_| {
+                    (
+                        rng.below(4) as u8,
+                        rng.below(64),
+                        rng.below(64),
+                        rng.below(16) as u32,
+                    )
+                })
+                .collect();
+            (l, e, ops)
+        },
+        |(l, e, ops)| {
+            let (l, e) = (*l, *e);
+            let mut eam = Eam::new(l, e);
+            let mut scan = ActivationPolicy::new();
+            let mut heap = IndexedActivationPolicy::new();
+            let mut entries: Vec<ExpertKey> = Vec::new();
+            let mut protected: HashSet<ExpertKey> = HashSet::new();
+            for &(op, a, b, c) in ops {
+                match op {
+                    0 => eam.record(a % l, b % e, 1 + c % 7),
+                    1 => {
+                        let k = ExpertKey::new(a % l, b % e);
+                        if !entries.contains(&k) {
+                            entries.push(k);
+                            scan.on_insert(k);
+                            heap.on_insert(k);
+                        }
+                    }
+                    2 => {
+                        if entries.is_empty() {
+                            continue;
+                        }
+                        let ctx = CacheCtx {
+                            cur_eam: &eam,
+                            n_layers: l,
+                        };
+                        let excl = if !protected.is_empty() && protected.len() < entries.len()
+                        {
+                            Some(&protected)
+                        } else {
+                            None
+                        };
+                        let va = scan.victim(&entries, excl, &ctx);
+                        let vb = heap.victim(&entries, excl, &ctx);
+                        if va != vb {
+                            return Err(format!(
+                                "victims diverged: scan {va} vs heap {vb} \
+                                 ({} entries, {} protected)",
+                                entries.len(),
+                                protected.len()
+                            ));
+                        }
+                        scan.on_evict(va);
+                        heap.on_evict(va);
+                        protected.remove(&va);
+                        entries.retain(|&k| k != va);
+                    }
+                    _ => {
+                        if entries.is_empty() {
+                            continue;
+                        }
+                        let k = entries[a % entries.len()];
+                        if !protected.remove(&k) {
+                            protected.insert(k);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Differential at the cache level: two `ExpertCache`s — one on the scan
+/// policy, one on the heap-indexed policy — replaying the same access /
+/// insert / protect stream must evict identical keys at every step
+/// (including through `choose_victim`'s protected-entry path).
+#[test]
+fn prop_cache_with_indexed_policy_matches_scan_cache() {
+    forall_res(
+        0xCAFE,
+        100,
+        |rng| {
+            let cap = 2 + rng.below(12);
+            let l = 2 + rng.below(4);
+            let e = 4 + rng.below(12);
+            let ops: Vec<(usize, usize, u32, bool, bool)> = (0..60 + rng.below(120))
+                .map(|_| {
+                    (
+                        rng.below(64),
+                        rng.below(64),
+                        rng.below(5) as u32,
+                        rng.below(4) == 0, // protect the touched key
+                        rng.below(3) == 0, // mutate the EAM first
+                    )
+                })
+                .collect();
+            (cap, l, e, ops)
+        },
+        |(cap, l, e, ops)| {
+            let (l, e) = (*l, *e);
+            let mut eam = Eam::new(l, e);
+            let mut a = ExpertCache::new(*cap, Box::new(ActivationPolicy::new()));
+            let mut b = ExpertCache::new(*cap, Box::new(IndexedActivationPolicy::new()));
+            for &(ka, kb, tokens, protect, mutate) in ops {
+                if mutate {
+                    eam.record(ka % l, kb % e, 1 + tokens);
+                }
+                let key = ExpertKey::new(ka % l, kb % e);
+                let ctx = CacheCtx {
+                    cur_eam: &eam,
+                    n_layers: l,
+                };
+                let hit_a = a.access(key);
+                let hit_b = b.access(key);
+                if hit_a != hit_b {
+                    return Err(format!("hit/miss diverged on {key}"));
+                }
+                if !hit_a {
+                    let ev_a = a.insert(key, &ctx);
+                    let ev_b = b.insert(key, &ctx);
+                    if ev_a != ev_b {
+                        return Err(format!(
+                            "evictions diverged on {key}: scan {ev_a:?} vs heap {ev_b:?}"
+                        ));
+                    }
+                } else if protect {
+                    a.protect(key);
+                    b.protect(key);
+                }
+            }
+            if a.evictions() != b.evictions() || a.hits() != b.hits() {
+                return Err("stats diverged".into());
             }
             Ok(())
         },

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification + hot-path smoke bench.
+#
+#   scripts/tier1.sh
+#
+# Runs the repo's tier-1 gate (release build + full test suite) and then the
+# §Perf hot-path micro-benchmarks in smoke mode, which also emits the
+# machine-readable BENCH_hotpath.json (name → ns/op) used by
+# EXPERIMENTS.md §Perf. Drop MOE_BENCH_SMOKE for full-length measurements.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+echo "== perf_hotpath (smoke mode -> BENCH_hotpath.json)"
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_hotpath
+
+echo "== done; hot-path numbers:"
+cat BENCH_hotpath.json
