@@ -2,10 +2,14 @@
 //! the four models and four systems. Expected shape (paper §8.2):
 //! MoE-Infinity ≪ PyTorch-UM ≪ ZeRO-Offload ≈ ZeRO-Infinity, with
 //! MoE-Infinity sustaining the 1s constraint at several-fold higher RPS.
+//!
+//! Every (system, rps) point is an independent engine, so the grid replays
+//! across cores via `benchsuite::run_grid`; rows come back in submission
+//! order and are identical to a serial replay at any `MOE_POOL_THREADS`.
 
-use moe_infinity::benchsuite::{run_serve, Table};
+use moe_infinity::benchsuite::{run_grid, Table};
 use moe_infinity::config::ServeConfig;
-use moe_infinity::util::fmt_secs;
+use moe_infinity::util::{fmt_secs, Pool};
 
 fn main() {
     let models = [
@@ -17,9 +21,10 @@ fn main() {
     let fast_systems = ["moe-infinity", "pytorch-um"];
     let slow_systems = ["zero-offload", "zero-infinity"];
     let rps_grid = [0.5, 1.0, 2.0, 4.0, 8.0];
+    let pool = Pool::from_env();
 
     for (model, dataset) in models {
-        let mut table = Table::new(&["system", "rps", "mean token lat", "p99", "1s SLO?"]);
+        let mut grid = Vec::new();
         for system in fast_systems {
             for &rps in &rps_grid {
                 let mut cfg = ServeConfig::default();
@@ -30,15 +35,7 @@ fn main() {
                 cfg.workload.duration = 12.0;
                 cfg.eamc.trace_sequences = 300;
                 cfg.eamc.capacity = 100;
-                let mut r = run_serve(&cfg).expect("serve");
-                let mean = r.token_latency.mean();
-                table.row(&[
-                    system.into(),
-                    format!("{rps}"),
-                    fmt_secs(mean),
-                    fmt_secs(r.token_latency.p99()),
-                    if mean <= 1.0 { "yes".into() } else { "NO".into() },
-                ]);
+                grid.push(cfg);
             }
         }
         // ZeRO systems fetch every expert of every layer; a couple of
@@ -53,16 +50,21 @@ fn main() {
                 cfg.workload.duration = 4.0;
                 cfg.eamc.trace_sequences = 50;
                 cfg.eamc.capacity = 20;
-                let mut r = run_serve(&cfg).expect("serve");
-                let mean = r.token_latency.mean();
-                table.row(&[
-                    system.into(),
-                    format!("{rps}"),
-                    fmt_secs(mean),
-                    fmt_secs(r.token_latency.p99()),
-                    if mean <= 1.0 { "yes".into() } else { "NO".into() },
-                ]);
+                grid.push(cfg);
             }
+        }
+
+        let mut table = Table::new(&["system", "rps", "mean token lat", "p99", "1s SLO?"]);
+        for (cfg, r) in grid.iter().zip(run_grid(&grid, &pool)) {
+            let mut r = r.expect("serve");
+            let mean = r.token_latency.mean();
+            table.row(&[
+                cfg.system.clone(),
+                format!("{}", cfg.workload.rps),
+                fmt_secs(mean),
+                fmt_secs(r.token_latency.p99()),
+                if mean <= 1.0 { "yes".into() } else { "NO".into() },
+            ]);
         }
         table.print(&format!("Fig. 4 — latency vs RPS ({model})"));
     }

@@ -2,17 +2,22 @@
 //! nllb-moe-128, MoE-Infinity vs the best baseline (PyTorch-UM). Expected
 //! shape: MoE-Infinity's CDF is steep (stable low latency); PyTorch-UM has a
 //! long tail at low load and shifts wholesale to the right at high load.
+//!
+//! All (model, load, system) points replay as one `run_grid` across cores.
 
-use moe_infinity::benchsuite::{run_serve, Table};
+use moe_infinity::benchsuite::{run_grid, Table};
 use moe_infinity::config::ServeConfig;
-use moe_infinity::util::fmt_secs;
+use moe_infinity::util::{fmt_secs, Pool};
 
 fn main() {
-    for (model, dataset) in [("switch-large-128", "mixed"), ("nllb-moe-128", "translation")] {
-        for (load, rps) in [("low", 0.3), ("high", 2.0)] {
-            let mut table = Table::new(&["percentile", "moe-infinity", "pytorch-um"]);
-            let mut cdfs = Vec::new();
-            for system in ["moe-infinity", "pytorch-um"] {
+    let cells = [("switch-large-128", "mixed"), ("nllb-moe-128", "translation")];
+    let loads = [("low", 0.3), ("high", 2.0)];
+    let systems = ["moe-infinity", "pytorch-um"];
+
+    let mut grid = Vec::new();
+    for (model, dataset) in cells {
+        for (_, rps) in loads {
+            for system in systems {
                 let mut cfg = ServeConfig::default();
                 cfg.model = model.into();
                 cfg.dataset = dataset.into();
@@ -21,7 +26,18 @@ fn main() {
                 cfg.workload.duration = 20.0;
                 cfg.eamc.trace_sequences = 300;
                 cfg.eamc.capacity = 100;
-                let mut r = run_serve(&cfg).expect("serve");
+                grid.push(cfg);
+            }
+        }
+    }
+    let mut reports = run_grid(&grid, &Pool::from_env()).into_iter();
+
+    for (model, _) in cells {
+        for (load, rps) in loads {
+            let mut table = Table::new(&["percentile", "moe-infinity", "pytorch-um"]);
+            let mut cdfs = Vec::new();
+            for _ in systems {
+                let mut r = reports.next().expect("grid row").expect("serve");
                 let pcts: Vec<f64> = [10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9]
                     .iter()
                     .map(|&p| r.request_latency.percentile(p))

@@ -3,17 +3,20 @@
 //! needs >=4x the GPUs of MoE-Infinity on switch-large-128, and cannot meet
 //! the SLO on nllb-moe-128 even at 8 GPUs, while MoE-Infinity meets it with
 //! one GPU (paper: 122ms on a single GPU).
+//!
+//! The (system × gpus) grid of each model replays across cores.
 
-use moe_infinity::benchsuite::{run_serve, Table};
+use moe_infinity::benchsuite::{run_grid, Table};
 use moe_infinity::config::ServeConfig;
-use moe_infinity::util::fmt_secs;
+use moe_infinity::util::{fmt_secs, Pool};
 
 fn main() {
+    let pool = Pool::from_env();
     for (model, dataset, rps) in [
         ("switch-large-128", "mixed", 0.5),
         ("nllb-moe-128", "translation", 0.4),
     ] {
-        let mut table = Table::new(&["system", "gpus", "mean token lat", "meets 1s SLO"]);
+        let mut grid = Vec::new();
         for system in ["moe-infinity", "zero-offload"] {
             for gpus in [1usize, 2, 4, 8] {
                 let mut cfg = ServeConfig::default();
@@ -25,15 +28,19 @@ fn main() {
                 cfg.workload.duration = if system == "moe-infinity" { 12.0 } else { 4.0 };
                 cfg.eamc.trace_sequences = if system == "moe-infinity" { 300 } else { 40 };
                 cfg.eamc.capacity = 100;
-                let r = run_serve(&cfg).expect("serve");
-                let mean = r.token_latency.mean();
-                table.row(&[
-                    system.into(),
-                    gpus.to_string(),
-                    fmt_secs(mean),
-                    if mean <= 1.0 { "yes".into() } else { "NO".into() },
-                ]);
+                grid.push(cfg);
             }
+        }
+        let mut table = Table::new(&["system", "gpus", "mean token lat", "meets 1s SLO"]);
+        for (cfg, r) in grid.iter().zip(run_grid(&grid, &pool)) {
+            let r = r.expect("serve");
+            let mean = r.token_latency.mean();
+            table.row(&[
+                cfg.system.clone(),
+                cfg.memory.n_gpus.to_string(),
+                fmt_secs(mean),
+                if mean <= 1.0 { "yes".into() } else { "NO".into() },
+            ]);
         }
         table.print(&format!("Fig. 7 — cost efficiency ({model}, rps {rps})"));
     }

@@ -1,18 +1,21 @@
 //! Figure 8 — "Impacts of datasets": latency per dataset (FLAN, BIGBench,
 //! MMLU) for each system. Expected shape: MoE-Infinity consistently lowest
 //! with small cross-dataset variance (EAMC adapts); ZeRO varies by seconds.
+//!
+//! The (system × dataset) grid of each model replays across cores.
 
-use moe_infinity::benchsuite::{run_serve, Table};
+use moe_infinity::benchsuite::{run_grid, Table};
 use moe_infinity::config::ServeConfig;
-use moe_infinity::util::fmt_secs;
+use moe_infinity::util::{fmt_secs, Pool};
 
 fn main() {
+    let pool = Pool::from_env();
+    let systems = ["moe-infinity", "pytorch-um", "zero-offload"];
+    let datasets = ["flan", "bigbench", "mmlu"];
     for model in ["switch-large-128", "nllb-moe-128"] {
-        let mut table = Table::new(&["system", "flan", "bigbench", "mmlu", "max-min spread"]);
-        for system in ["moe-infinity", "pytorch-um", "zero-offload"] {
-            let mut cells = vec![system.to_string()];
-            let mut lats = Vec::new();
-            for dataset in ["flan", "bigbench", "mmlu"] {
+        let mut grid = Vec::new();
+        for system in systems {
+            for dataset in datasets {
                 let mut cfg = ServeConfig::default();
                 cfg.model = model.into();
                 cfg.dataset = dataset.into();
@@ -21,7 +24,17 @@ fn main() {
                 cfg.workload.duration = if system == "zero-offload" { 4.0 } else { 10.0 };
                 cfg.eamc.trace_sequences = 240;
                 cfg.eamc.capacity = 80;
-                let r = run_serve(&cfg).expect("serve");
+                grid.push(cfg);
+            }
+        }
+        let mut reports = run_grid(&grid, &pool).into_iter();
+
+        let mut table = Table::new(&["system", "flan", "bigbench", "mmlu", "max-min spread"]);
+        for system in systems {
+            let mut cells = vec![system.to_string()];
+            let mut lats = Vec::new();
+            for _ in datasets {
+                let r = reports.next().expect("grid row").expect("serve");
                 let mean = r.token_latency.mean();
                 lats.push(mean);
                 cells.push(fmt_secs(mean));

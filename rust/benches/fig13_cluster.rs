@@ -3,26 +3,35 @@
 //! Expected shape: latency halves from 1 to 6 nodes (paper: 200ms -> 97ms
 //! for switch-large-128); throughput scales up (paper: NLLB 0.6K -> 2.4K
 //! tokens/s).
+//!
+//! Each node count is an independent cluster replica (own EAMC, engine and
+//! workload), so the five replicas replay across cores via `Pool::map`;
+//! rows come back in node order and match a serial run bitwise.
 
-use moe_infinity::benchsuite::{build_eamc, tier_with, Table};
+use moe_infinity::benchsuite::{build_eamc_with, tier_with, Table};
 use moe_infinity::cache::CacheKind;
 use moe_infinity::cluster::ClusterModel;
 use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
 use moe_infinity::model::ModelSpec;
-use moe_infinity::util::fmt_secs;
+use moe_infinity::util::{fmt_secs, Pool};
 use moe_infinity::workload::{DatasetPreset, Workload};
 
 fn main() {
+    let pool = Pool::from_env();
     for (model, dataset, per_gpu) in [
         ("switch-large-128", "mixed", 40usize),
         ("nllb-moe-128", "translation", 10),
     ] {
         let spec = ModelSpec::preset(model).unwrap();
         let ds = DatasetPreset::by_name(dataset).unwrap();
-        let mut table = Table::new(&["nodes", "mean token latency", "throughput tokens/s"]);
-        for nodes in [1usize, 2, 3, 4, 6] {
-            let eamc = build_eamc(&spec, &ds, 240, 100, 5);
-            let mut tier = tier_with(&spec, per_gpu, spec.total_experts(), 6.0, 16.0, CacheKind::Activation);
+        let node_grid = [1usize, 2, 3, 4, 6];
+        let rows = pool.map(&node_grid, |_, &nodes| {
+            // replicas are the parallelism axis; construction inside each
+            // replica runs serially to avoid nested oversubscription
+            let serial = Pool::serial();
+            let eamc = build_eamc_with(&spec, &ds, 240, 100, 5, &serial);
+            let mut tier =
+                tier_with(&spec, per_gpu, spec.total_experts(), 6.0, 16.0, CacheKind::Activation);
             tier.n_gpus = 4 * nodes;
             let mut engine = SimEngine::new(
                 spec.clone(),
@@ -45,11 +54,15 @@ fn main() {
                 n += r.token_latencies.len();
             }
             let makespan = engine.now() - t0;
-            table.row(&[
+            [
                 nodes.to_string(),
                 fmt_secs(lat / n as f64),
                 format!("{:.0}", tokens as f64 / makespan),
-            ]);
+            ]
+        });
+        let mut table = Table::new(&["nodes", "mean token latency", "throughput tokens/s"]);
+        for row in &rows {
+            table.row(row);
         }
         table.print(&format!("Fig. 13 — cluster scalability ({model})"));
     }

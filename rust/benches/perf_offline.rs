@@ -1,0 +1,159 @@
+//! §Perf — offline-path benchmarks: EAMC construction (Eq. 1 k-means over
+//! the trace dataset, §4.2) and experiment-grid replay, serial vs pooled.
+//!
+//! The serving hot path went allocation-free in the previous change; the
+//! remaining wall-clock sinks are offline: `Eamc::construct` and the
+//! figure benches' (system × config) grids. Both now run on
+//! `util::pool::Pool` with deterministic ordered reduction — this bench
+//! measures the speedup and asserts (cheaply) that the pooled results
+//! match the serial ones before timing them.
+//!
+//! Results print as a table and land in `BENCH_offline.json`
+//! (`name → ns/op`; `*_speedup_*` rows are ratios). Set `MOE_BENCH_SMOKE=1`
+//! for a fast CI pass (scripts/tier1.sh does). Acceptance target
+//! (EXPERIMENTS.md §Perf, offline path): `eamc_construct` ≥2× at 4 threads
+//! on a ≥4-core machine.
+
+use moe_infinity::benchsuite::{run_grid, time_ns_per_op, BenchJson, Table};
+use moe_infinity::config::ServeConfig;
+use moe_infinity::model::ModelSpec;
+use moe_infinity::trace::Eamc;
+use moe_infinity::util::{fmt_secs, Pool};
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let pool1 = Pool::new(1);
+    let pool4 = Pool::new(4);
+    println!(
+        "offline bench: {} mode, machine has {} cores (4-thread rows are pinned to 4)",
+        if smoke { "smoke" } else { "full" },
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
+    let mut table = Table::new(&["offline path", "ns/op", "note"]);
+    let mut json = BenchJson::new();
+    let mut emit = |table: &mut Table, json: &mut BenchJson, name: &str, ns: f64, note: String| {
+        table.row(&[name.into(), format!("{ns:.0}"), note]);
+        json.add(name, ns);
+    };
+
+    // --- EAMC construction (trace k-means, the §4.2 offline step)
+    let (model, n_seqs, cap) = if smoke {
+        ("switch-base-32", 60, 12)
+    } else {
+        ("switch-large-128", 240, 80)
+    };
+    let spec = ModelSpec::preset(model).unwrap();
+    let ds_preset = DatasetPreset::by_name("mixed").unwrap();
+    let w = Workload::new(&spec, ds_preset.clone(), 41);
+    let ds = w.gen_eam_dataset_par(&pool4, n_seqs, 0x0FF1);
+
+    // determinism guard: pooled construction must equal serial before we
+    // bother timing either
+    {
+        let a = Eamc::construct_with(cap, &ds, 7, &pool1);
+        let b = Eamc::construct_with(cap, &ds, 7, &pool4);
+        assert_eq!(a.len(), b.len(), "pooled construct diverged from serial");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x, y, "pooled construct diverged from serial");
+        }
+    }
+
+    let iters = if smoke { 1 } else { 3 };
+    let t1 = time_ns_per_op(1, iters, || Eamc::construct_with(cap, &ds, 7, &pool1).len());
+    emit(
+        &mut table,
+        &mut json,
+        "eamc_construct_t1",
+        t1,
+        format!("{model}: {n_seqs} EAMs -> {cap} medoids, serial ({})", fmt_secs(t1 / 1e9)),
+    );
+    let t4 = time_ns_per_op(1, iters, || Eamc::construct_with(cap, &ds, 7, &pool4).len());
+    emit(
+        &mut table,
+        &mut json,
+        "eamc_construct_t4",
+        t4,
+        format!("same construction, 4 pool threads ({})", fmt_secs(t4 / 1e9)),
+    );
+    // speedup rows only at full length: the smoke construct is too small
+    // to amortize per-call thread spawns, so a smoke ratio would read as a
+    // parallelism regression when it is only fixed overhead
+    if !smoke {
+        emit(
+            &mut table,
+            &mut json,
+            "eamc_construct_speedup_t4",
+            t1 / t4,
+            "ratio (target >=2x on >=4 cores)".into(),
+        );
+    }
+
+    // --- offline dataset generation (per-stream Rngs)
+    let g1 = time_ns_per_op(1, iters, || w.gen_eam_dataset_par(&pool1, n_seqs, 0x0FF1).len());
+    emit(
+        &mut table,
+        &mut json,
+        "dataset_gen_t1",
+        g1,
+        format!("{n_seqs} traced sequences, serial"),
+    );
+    let g4 = time_ns_per_op(1, iters, || w.gen_eam_dataset_par(&pool4, n_seqs, 0x0FF1).len());
+    emit(&mut table, &mut json, "dataset_gen_t4", g4, "4 pool threads".into());
+
+    // --- experiment-grid replay (independent ServeConfig points)
+    let mut grid = Vec::new();
+    for (system, rps) in [
+        ("moe-infinity", 1.0),
+        ("moe-infinity", 2.0),
+        ("pytorch-um", 1.0),
+        ("pytorch-um", 2.0),
+    ] {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.system = system.into();
+        cfg.workload.rps = rps;
+        cfg.workload.duration = if smoke { 4.0 } else { 10.0 };
+        cfg.eamc.trace_sequences = if smoke { 20 } else { 60 };
+        cfg.eamc.capacity = 8;
+        grid.push(cfg);
+    }
+    let r1 = time_ns_per_op(0, iters, || {
+        run_grid(&grid, &pool1).into_iter().filter(|r| r.is_ok()).count()
+    });
+    emit(
+        &mut table,
+        &mut json,
+        "grid_replay_t1",
+        r1,
+        format!("{} points, serial ({})", grid.len(), fmt_secs(r1 / 1e9)),
+    );
+    let r4 = time_ns_per_op(0, iters, || {
+        run_grid(&grid, &pool4).into_iter().filter(|r| r.is_ok()).count()
+    });
+    emit(
+        &mut table,
+        &mut json,
+        "grid_replay_t4",
+        r4,
+        format!("same grid, 4 pool threads ({})", fmt_secs(r4 / 1e9)),
+    );
+    if !smoke {
+        emit(
+            &mut table,
+            &mut json,
+            "grid_replay_speedup_t4",
+            r1 / r4,
+            "ratio".into(),
+        );
+    }
+
+    table.print("§Perf — offline-path benchmarks (construct + grid replay)");
+
+    let path = "BENCH_offline.json";
+    match json.write(path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

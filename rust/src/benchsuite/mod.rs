@@ -10,30 +10,53 @@ use crate::model::ModelSpec;
 use crate::prefetch::{Predictor, PredictorKind};
 use crate::server::{serve, Batcher, ServeReport};
 use crate::trace::{Eam, Eamc};
-use crate::util::Rng;
+use crate::util::{Pool, Rng};
 use crate::workload::{ArrivalProcess, DatasetPreset, Request, Workload};
 
 /// Build an EAMC from a freshly generated offline trace (§4.2's "relevant
-/// dataset" = the validation split of the same distribution).
+/// dataset" = the validation split of the same distribution). Dataset
+/// generation and clustering run on [`Pool::from_env`]; the result is
+/// bitwise identical at any thread count.
 pub fn build_eamc(spec: &ModelSpec, dataset: &DatasetPreset, n: usize, cap: usize, seed: u64) -> Eamc {
-    let mut w = Workload::new(spec, dataset.clone(), seed);
-    let ds = w.gen_eam_dataset(n);
-    Eamc::construct(cap, &ds, seed ^ 0x9E37)
+    build_eamc_with(spec, dataset, n, cap, seed, &Pool::from_env())
+}
+
+/// [`build_eamc`] on an explicit pool. The offline trace uses per-sequence
+/// `Rng::for_stream` streams (seeded from `seed`), so the generated
+/// dataset — and therefore the constructed EAMC — is a pure function of
+/// the arguments, independent of scheduling.
+pub fn build_eamc_with(
+    spec: &ModelSpec,
+    dataset: &DatasetPreset,
+    n: usize,
+    cap: usize,
+    seed: u64,
+    pool: &Pool,
+) -> Eamc {
+    let w = Workload::new(spec, dataset.clone(), seed);
+    let ds = w.gen_eam_dataset_par(pool, n, seed ^ 0xDA7A);
+    Eamc::construct_with(cap, &ds, seed ^ 0x9E37, pool)
 }
 
 /// Build a ready-to-serve engine from a [`ServeConfig`].
 pub fn build_engine(cfg: &ServeConfig) -> anyhow::Result<SimEngine> {
+    build_engine_with(cfg, &Pool::from_env())
+}
+
+/// [`build_engine`] with the offline EAMC construction on an explicit pool.
+pub fn build_engine_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<SimEngine> {
     let spec = cfg.model_spec()?;
     let dataset = DatasetPreset::by_name(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
     let tier = cfg.tier_config()?;
     let eamc = if cfg.predictor_kind()? == (PredictorKind::ActivationAware { refine: true }) {
-        build_eamc(
+        build_eamc_with(
             &spec,
             &dataset,
             cfg.eamc.trace_sequences,
             cfg.eamc.capacity,
             cfg.seed,
+            pool,
         )
     } else {
         Eamc::new(cfg.eamc.capacity, spec.n_layers, spec.experts_per_layer)
@@ -82,13 +105,30 @@ pub fn build_requests(cfg: &ServeConfig) -> anyhow::Result<Vec<Request>> {
 
 /// Run a full serving replay for a config: engine + arrivals + batcher.
 pub fn run_serve(cfg: &ServeConfig) -> anyhow::Result<ServeReport> {
-    let mut engine = build_engine(cfg)?;
+    run_serve_with(cfg, &Pool::from_env())
+}
+
+/// [`run_serve`] with offline construction on an explicit pool (the replay
+/// itself is single-threaded — it is one engine's virtual timeline).
+pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeReport> {
+    let mut engine = build_engine_with(cfg, pool)?;
     let requests = build_requests(cfg)?;
     Ok(serve(
         &mut engine,
         Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait),
         &requests,
     ))
+}
+
+/// Replay an experiment grid: every [`ServeConfig`] point is an independent
+/// engine + workload, so points run across the pool's workers; results come
+/// back **in submission order** and are bitwise identical to running each
+/// point serially (differential tests in `rust/tests/parallel.rs`). Each
+/// point's own offline construction runs serially — the grid is the
+/// parallelism axis, and nesting pools would only oversubscribe cores.
+pub fn run_grid(configs: &[ServeConfig], pool: &Pool) -> Vec<anyhow::Result<ServeReport>> {
+    let inner = Pool::serial();
+    pool.map(configs, |_, cfg| run_serve_with(cfg, &inner))
 }
 
 /// §8.3 prediction-accuracy probe (Figs. 9): for each sequence and each
@@ -304,6 +344,34 @@ mod tests {
         let report = run_serve(&cfg).unwrap();
         assert!(report.requests > 0);
         assert!(report.token_throughput() > 0.0);
+    }
+
+    #[test]
+    fn run_grid_matches_serial_run_serve_in_order() {
+        let mut base = ServeConfig::default();
+        base.model = "switch-base-32".into();
+        base.workload.duration = 6.0;
+        base.eamc.trace_sequences = 20;
+        base.eamc.capacity = 6;
+        let grid: Vec<ServeConfig> = [0.5, 2.0]
+            .iter()
+            .map(|&rps| {
+                let mut c = base.clone();
+                c.workload.rps = rps;
+                c
+            })
+            .collect();
+        let par = run_grid(&grid, &Pool::new(4));
+        assert_eq!(par.len(), grid.len());
+        for (cfg, got) in grid.iter().zip(par) {
+            let want = run_serve_with(cfg, &Pool::serial()).unwrap();
+            let got = got.unwrap();
+            assert_eq!(got.requests, want.requests);
+            assert_eq!(got.tokens, want.tokens);
+            assert_eq!(got.batches, want.batches);
+            assert_eq!(got.makespan.to_bits(), want.makespan.to_bits());
+            assert_eq!(got.token_latency.samples(), want.token_latency.samples());
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use moe_infinity::engine::RealMoeEngine;
 use moe_infinity::memory::TierConfig;
 use moe_infinity::model::{ModelSpec, PRESETS};
 use moe_infinity::prefetch::PredictorKind;
-use moe_infinity::util::{fmt_bytes, fmt_secs, Rng};
+use moe_infinity::util::{fmt_bytes, fmt_secs, Pool, Rng};
 
 fn main() {
     if let Err(e) = run() {
@@ -82,6 +82,8 @@ fn run() -> Result<()> {
                 "usage: moe-infinity <serve|generate|models|systems|config> [--flag value ...]\n\
                  \n\
                  serve    --config <toml> | --model <preset> --system <name> --rps <f> --duration <s>\n\
+                 \x20        [--threads <n>]  offline-construction workers (default:\n\
+                 \x20        MOE_POOL_THREADS or all cores; results identical at any count)\n\
                  generate --artifacts <dir> --prompts <n> --tokens <n>\n"
             );
             Err(anyhow!("missing or unknown subcommand"))
@@ -132,12 +134,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         cfg.workload.duration = d;
     }
     cfg.validate()?;
+    // worker count for the offline side (EAMC construction); the replay
+    // itself is one engine's virtual timeline and the results are bitwise
+    // identical at any thread count
+    let pool = match args.get("threads") {
+        Some(t) => Pool::new(t.parse::<usize>().map_err(|e| anyhow!("--threads: {e}"))?),
+        None => Pool::from_env(),
+    };
 
     println!(
-        "serving {} [{}] dataset={} rps={} duration={}s ...",
-        cfg.model, cfg.system, cfg.dataset, cfg.workload.rps, cfg.workload.duration
+        "serving {} [{}] dataset={} rps={} duration={}s (offline pool: {} threads) ...",
+        cfg.model,
+        cfg.system,
+        cfg.dataset,
+        cfg.workload.rps,
+        cfg.workload.duration,
+        pool.threads()
     );
-    let mut report = benchsuite::run_serve(&cfg)?;
+    let mut report = benchsuite::run_serve_with(&cfg, &pool)?;
     println!("requests        : {}", report.requests);
     println!("batches         : {}", report.batches);
     println!("tokens          : {}", report.tokens);

@@ -100,23 +100,28 @@ impl MemoryStats {
 
     /// Fig. 10 metric: of the demands that *needed* covering (not already
     /// warm in cache), the fraction a prefetch landed in time.
+    ///
+    /// Zero-demand convention: with nothing to cover, coverage is vacuously
+    /// perfect — 1.0, matching `BatchResult::recall()` (a ratio whose
+    /// denominator is empty reports "no misses", not "all misses").
     pub fn prefetch_coverage(&self) -> f64 {
         let needed = self.demand_prefetch_hits
             + self.demand_dram_hits
             + self.demand_ssd_misses
             + self.demand_in_flight;
         if needed == 0 {
-            0.0
+            1.0
         } else {
             self.demand_prefetch_hits as f64 / needed as f64
         }
     }
 
     /// Fraction of expert demands served without any blocking transfer.
+    /// Zero-demand convention: 1.0 (see [`MemoryStats::prefetch_coverage`]).
     pub fn gpu_hit_ratio(&self) -> f64 {
         let t = self.demand_total();
         if t == 0 {
-            0.0
+            1.0
         } else {
             self.demand_gpu_hits as f64 / t as f64
         }
@@ -178,7 +183,15 @@ fn make_policy(cfg: &TierConfig) -> Box<dyn Policy> {
 }
 
 impl MemorySim {
-    pub fn new(spec: &ModelSpec, cfg: TierConfig) -> MemorySim {
+    pub fn new(spec: &ModelSpec, mut cfg: TierConfig) -> MemorySim {
+        debug_assert!(
+            cfg.demand_extra_latency >= 0.0,
+            "demand_extra_latency must be non-negative, got {}",
+            cfg.demand_extra_latency
+        );
+        // release builds sanitize once here (the seed code clamped per
+        // demand); `demand` can then add the value unconditionally
+        cfg.demand_extra_latency = cfg.demand_extra_latency.max(0.0);
         let total = spec.total_experts();
         let gpu_cap = cfg.gpu_capacity * cfg.n_gpus;
         let mut sim = MemorySim {
@@ -351,12 +364,9 @@ impl MemorySim {
         }
         // the blocking fetch IS this expert's use — lift arrival protection
         self.gpu_cache.unprotect(key);
-        let extra = if self.cfg.demand_extra_latency > 0.0 {
-            self.cfg.demand_extra_latency
-        } else {
-            0.0
-        };
-        let ready = self.now + extra;
+        // non-negativity is asserted at construction, so the extra latency
+        // adds directly (the UM page-fault model; 0 for everything else)
+        let ready = self.now + self.cfg.demand_extra_latency;
         self.stats.stall_time += ready - t;
         ready
     }
@@ -805,6 +815,20 @@ mod tests {
         let ready = sim.demand(key, 0.0, &ctx);
         let expect = s.expert_bytes() as f64 / 10e9 + 0.01;
         assert!((ready - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_demand_ratios_are_unity() {
+        // the no-demands convention matches BatchResult::recall(): an empty
+        // denominator means "nothing missed", not "everything missed"
+        let st = MemoryStats::default();
+        assert_eq!(st.demand_total(), 0);
+        assert_eq!(st.gpu_hit_ratio(), 1.0);
+        assert_eq!(st.prefetch_coverage(), 1.0);
+        // and a fresh simulator that has served nothing reports the same
+        let sim = MemorySim::new(&spec(), cfg(4, 4, Tier::Ssd));
+        assert_eq!(sim.stats().gpu_hit_ratio(), 1.0);
+        assert_eq!(sim.stats().prefetch_coverage(), 1.0);
     }
 
     #[test]

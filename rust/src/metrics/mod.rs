@@ -27,6 +27,12 @@ impl LatencyRecorder {
         self.samples.is_empty()
     }
 
+    /// Raw samples (insertion order until a percentile/CDF call sorts them
+    /// in place). The grid-replay differential tests compare these bitwise.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     fn ensure_sorted(&mut self) {
         if !self.sorted {
             self.samples

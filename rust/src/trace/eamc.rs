@@ -3,7 +3,8 @@
 use std::collections::VecDeque;
 
 use crate::trace::matcher::MatcherIndex;
-use crate::trace::{kmeans_medoids, Eam};
+use crate::trace::{kmeans_medoids_with, Eam};
+use crate::util::Pool;
 
 /// Counters exposed for the §8.5 experiments (adaptation speed, overhead).
 #[derive(Debug, Clone, Default)]
@@ -67,21 +68,43 @@ impl Eamc {
     }
 
     /// Offline construction (§4.2): cluster `dataset` EAMs into `capacity`
-    /// groups and keep the medoids.
+    /// groups and keep the medoids. Runs the clustering on
+    /// [`Pool::from_env`] (`MOE_POOL_THREADS` overrides); the result is
+    /// bitwise identical at any thread count (see `trace::kmeans`).
     pub fn construct(capacity: usize, dataset: &[Eam], seed: u64) -> Eamc {
+        Eamc::construct_with(capacity, dataset, seed, &Pool::from_env())
+    }
+
+    /// [`Eamc::construct`] on an explicit worker pool (the offline-path
+    /// benches and differential tests pin thread counts this way).
+    pub fn construct_with(capacity: usize, dataset: &[Eam], seed: u64, pool: &Pool) -> Eamc {
         assert!(!dataset.is_empty());
         let layers = dataset[0].layers();
         let experts = dataset[0].experts();
         let mut c = Eamc::new(capacity, layers, experts);
         c.seed = seed;
-        c.rebuild_from(dataset);
+        c.rebuild_from_with(dataset, pool);
         c
     }
 
+    /// Serving-path reconstruction (triggered from [`Eamc::observe`]): runs
+    /// serially — spawning workers mid-serving would trade tail latency for
+    /// a rebuild that is off the per-token critical path anyway, and the
+    /// serial pool produces the identical collection by construction.
     fn rebuild_from(&mut self, dataset: &[Eam]) {
-        let r = kmeans_medoids(dataset, self.capacity, 50, self.seed.wrapping_add(self.stats.builds as u64));
+        self.rebuild_from_with(dataset, &Pool::serial());
+    }
+
+    fn rebuild_from_with(&mut self, dataset: &[Eam], pool: &Pool) {
+        let r = kmeans_medoids_with(
+            dataset,
+            self.capacity,
+            50,
+            self.seed.wrapping_add(self.stats.builds as u64),
+            pool,
+        );
         self.eams = r.medoids.iter().map(|&i| dataset[i].clone()).collect();
-        self.sparse = self.eams.iter().map(|m| sparse_unit_rows(m)).collect();
+        self.sparse = pool.map(&self.eams, |_, m| sparse_unit_rows(m));
         self.stats.builds += 1;
         self.stats.observed_since_build = 0;
         self.stats.poor_predictions = 0;

@@ -5,18 +5,76 @@
 //! convergence each cluster is represented by its **medoid** — the member
 //! EAM closest to the centroid — because the EAMC must store real observed
 //! activation patterns, not synthetic averages.
+//!
+//! Performance structure (EXPERIMENTS.md §Perf, offline path):
+//! * Row norms are hoisted out of the inner distance: each point's
+//!   per-layer count norms are computed **once per construction** and each
+//!   centroid's per-layer norms **once per update**, instead of re-summing
+//!   `E` squares inside every `distance` call — `distance` is then one dot
+//!   product per layer (skipped entirely when either row is empty).
+//! * The per-point passes (k-means++ distance refresh, Lloyd assignment,
+//!   medoid scoring) and the per-cluster centroid updates run on a
+//!   [`Pool`], and every reduction (weighted pick, argmin/argmax,
+//!   convergence check) happens on the caller in index order — so the
+//!   result is **bitwise identical at any thread count** (differential
+//!   tests in `rust/tests/parallel.rs`). The RNG is only ever advanced on
+//!   the calling thread.
+//! * Assignment/scratch buffers are allocated once and reused across all
+//!   Lloyd iterations.
 
 use crate::trace::Eam;
-use crate::util::Rng;
+use crate::util::{Pool, Rng};
 
-/// A centroid: per-layer normalized activation rows (f32, length L*E).
+/// A centroid: per-layer normalized activation rows (f32, length L*E) plus
+/// the hoisted per-layer Euclidean norms of those rows.
 struct Centroid {
     layers: usize,
     experts: usize,
     rows: Vec<f32>,
+    /// `norms[l] = sqrt(sum_e rows[l][e]^2)`, precomputed so Eq. 1 needs
+    /// only a dot product per traced layer.
+    norms: Vec<f64>,
+}
+
+/// Per-layer Euclidean norms of an EAM's count rows — the point-side half
+/// of the hoisted Eq. 1 denominators, computed once per construction.
+fn eam_row_norms(m: &Eam) -> Vec<f64> {
+    (0..m.layers())
+        .map(|l| {
+            m.row(l)
+                .iter()
+                .map(|&c| {
+                    let y = c as f64;
+                    y * y
+                })
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect()
 }
 
 impl Centroid {
+    fn finish(layers: usize, experts: usize, rows: Vec<f32>) -> Centroid {
+        let norms = (0..layers)
+            .map(|l| {
+                rows[l * experts..(l + 1) * experts]
+                    .iter()
+                    .map(|&x| {
+                        let x = x as f64;
+                        x * x
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        Centroid {
+            layers,
+            experts,
+            rows,
+            norms,
+        }
+    }
+
     fn from_eam(eam: &Eam) -> Centroid {
         let (l, e) = (eam.layers(), eam.experts());
         let mut rows = vec![0.0f32; l * e];
@@ -28,31 +86,27 @@ impl Centroid {
                 }
             }
         }
-        Centroid {
-            layers: l,
-            experts: e,
-            rows,
-        }
+        Centroid::finish(l, e, rows)
     }
 
-    /// Eq. 1 distance from a centroid to an EAM.
-    fn distance(&self, eam: &Eam) -> f64 {
+    /// Eq. 1 distance from a centroid to an EAM whose per-layer row norms
+    /// were precomputed by [`eam_row_norms`].
+    fn distance(&self, eam: &Eam, eam_norms: &[f64]) -> f64 {
         let e = self.experts;
         let mut sim = 0.0f64;
         for l in 0..self.layers {
-            let crow = &self.rows[l * e..(l + 1) * e];
-            let erow = eam.row(l);
-            let mut dot = 0.0f64;
-            let mut nc = 0.0f64;
-            let mut ne = 0.0f64;
-            for i in 0..e {
-                let (x, y) = (crow[i] as f64, erow[i] as f64);
-                dot += x * y;
-                nc += x * x;
-                ne += y * y;
-            }
+            let nc = self.norms[l];
+            let ne = eam_norms[l];
             sim += match (nc > 0.0, ne > 0.0) {
-                (true, true) => dot / (nc.sqrt() * ne.sqrt()),
+                (true, true) => {
+                    let crow = &self.rows[l * e..(l + 1) * e];
+                    let erow = eam.row(l);
+                    let mut dot = 0.0f64;
+                    for i in 0..e {
+                        dot += crow[i] as f64 * erow[i] as f64;
+                    }
+                    dot / (nc * ne)
+                }
                 (false, false) => 1.0,
                 _ => 0.0,
             };
@@ -60,11 +114,13 @@ impl Centroid {
         1.0 - sim / self.layers as f64
     }
 
-    /// Mean of the members' normalized rows.
-    fn from_members(members: &[&Eam]) -> Centroid {
-        let (l, e) = (members[0].layers(), members[0].experts());
+    /// Mean of the normalized rows of the members at `idxs` (in index
+    /// order, so the summation order is schedule-independent).
+    fn from_member_indices(eams: &[Eam], idxs: &[usize]) -> Centroid {
+        let (l, e) = (eams[idxs[0]].layers(), eams[idxs[0]].experts());
         let mut rows = vec![0.0f32; l * e];
-        for m in members {
+        for &i in idxs {
+            let m = &eams[i];
             for li in 0..l {
                 let s = m.row_sum(li);
                 if s > 0 {
@@ -74,16 +130,27 @@ impl Centroid {
                 }
             }
         }
-        let n = members.len() as f32;
+        let n = idxs.len() as f32;
         for v in rows.iter_mut() {
             *v /= n;
         }
-        Centroid {
-            layers: l,
-            experts: e,
-            rows,
+        Centroid::finish(l, e, rows)
+    }
+}
+
+/// Nearest centroid by Eq. 1: strict-`<` first-wins argmin, so ties break
+/// to the lowest centroid index on every path.
+fn nearest_centroid(centroids: &[Centroid], eam: &Eam, eam_norms: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut bd = f64::INFINITY;
+    for (c, cen) in centroids.iter().enumerate() {
+        let d = cen.distance(eam, eam_norms);
+        if d < bd {
+            bd = d;
+            best = c;
         }
     }
+    best
 }
 
 /// Result of clustering: medoid indices into the input slice, plus the final
@@ -94,14 +161,36 @@ pub struct KMeansResult {
     pub iterations: usize,
 }
 
+/// Serial convenience wrapper around [`kmeans_medoids_with`].
+pub fn kmeans_medoids(eams: &[Eam], k: usize, max_iters: usize, seed: u64) -> KMeansResult {
+    kmeans_medoids_with(eams, k, max_iters, seed, &Pool::serial())
+}
+
 /// Cluster `eams` into `k` groups, returning medoid indices (§4.2 "the EAM
 /// that is closest to the centroid is stored in the EAMC").
 ///
 /// k-means++ seeding, at most `max_iters` Lloyd iterations, deterministic
-/// given `seed`. If `k >= eams.len()`, every input is its own medoid.
-pub fn kmeans_medoids(eams: &[Eam], k: usize, max_iters: usize, seed: u64) -> KMeansResult {
+/// given `seed` **and independent of `pool.threads()`** — all randomness
+/// and all floating-point reductions run on the calling thread in index
+/// order. If `k >= eams.len()`, every input is its own medoid.
+pub fn kmeans_medoids_with(
+    eams: &[Eam],
+    k: usize,
+    max_iters: usize,
+    seed: u64,
+    pool: &Pool,
+) -> KMeansResult {
     assert!(!eams.is_empty(), "kmeans over empty input");
     let k = k.min(eams.len());
+    if k == 0 {
+        // capacity-0 collection: no medoids to pick (Eamc then serves with
+        // nearest() == None, matching the pre-pool behavior)
+        return KMeansResult {
+            medoids: Vec::new(),
+            assignment: vec![0; eams.len()],
+            iterations: 0,
+        };
+    }
     if k == eams.len() {
         return KMeansResult {
             medoids: (0..eams.len()).collect(),
@@ -109,20 +198,30 @@ pub fn kmeans_medoids(eams: &[Eam], k: usize, max_iters: usize, seed: u64) -> KM
             iterations: 0,
         };
     }
+    let n = eams.len();
     let mut rng = Rng::new(seed);
 
-    // k-means++ init.
+    // point-side Eq. 1 denominators, hoisted once for the whole run
+    let eam_norms: Vec<Vec<f64>> = pool.map(eams, |_, m| eam_row_norms(m));
+
+    // k-means++ init: picks on the main thread, distance refreshes on the
+    // pool; `scratch` is reused for every per-point pass below.
+    let mut scratch = vec![0.0f64; n];
     let mut centroids: Vec<Centroid> = Vec::with_capacity(k);
-    let first = rng.below(eams.len());
+    let first = rng.below(n);
     centroids.push(Centroid::from_eam(&eams[first]));
-    let mut d2: Vec<f64> = eams.iter().map(|m| centroids[0].distance(m).powi(2)).collect();
+    let mut d2 = vec![0.0f64; n];
+    {
+        let c0 = &centroids[0];
+        pool.fill(&mut d2, |i| c0.distance(&eams[i], &eam_norms[i]).powi(2));
+    }
     while centroids.len() < k {
         let total: f64 = d2.iter().sum();
         let idx = if total <= 1e-18 {
-            rng.below(eams.len())
+            rng.below(n)
         } else {
             let mut u = rng.f64() * total;
-            let mut pick = eams.len() - 1;
+            let mut pick = n - 1;
             for (i, &w) in d2.iter().enumerate() {
                 u -= w;
                 if u <= 0.0 {
@@ -133,71 +232,110 @@ pub fn kmeans_medoids(eams: &[Eam], k: usize, max_iters: usize, seed: u64) -> KM
             pick
         };
         let c = Centroid::from_eam(&eams[idx]);
-        for (i, m) in eams.iter().enumerate() {
-            d2[i] = d2[i].min(c.distance(m).powi(2));
+        {
+            let c = &c;
+            pool.fill(&mut scratch, |i| c.distance(&eams[i], &eam_norms[i]).powi(2));
+        }
+        for i in 0..n {
+            if scratch[i] < d2[i] {
+                d2[i] = scratch[i];
+            }
         }
         centroids.push(c);
     }
 
-    // Lloyd iterations.
-    let mut assignment = vec![0usize; eams.len()];
+    // Lloyd iterations. `assignment`/`proposed`/`members` are allocated
+    // once and reused across iterations.
+    let mut assignment = vec![0usize; n];
+    let mut proposed = vec![0usize; n];
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
     let mut iterations = 0;
     for it in 0..max_iters {
         iterations = it + 1;
-        let mut changed = false;
-        for (i, m) in eams.iter().enumerate() {
-            let mut best = 0usize;
-            let mut bd = f64::INFINITY;
-            for (c, cen) in centroids.iter().enumerate() {
-                let d = cen.distance(m);
-                if d < bd {
-                    bd = d;
-                    best = c;
-                }
-            }
-            if assignment[i] != best {
-                assignment[i] = best;
-                changed = true;
-            }
+        {
+            let centroids = &centroids;
+            pool.fill(&mut proposed, |i| {
+                nearest_centroid(centroids, &eams[i], &eam_norms[i])
+            });
         }
+        let changed = proposed != assignment;
+        assignment.copy_from_slice(&proposed);
         if !changed && it > 0 {
             break;
         }
-        for c in 0..k {
-            let members: Vec<&Eam> = eams
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| assignment[*i] == c)
-                .map(|(_, m)| m)
-                .collect();
-            if !members.is_empty() {
-                centroids[c] = Centroid::from_members(&members);
+        // centroid update: gather members in index order (serial), then one
+        // pool task per non-empty cluster
+        for m in members.iter_mut() {
+            m.clear();
+        }
+        for (i, &a) in assignment.iter().enumerate() {
+            members[a].push(i);
+        }
+        let updated: Vec<Option<Centroid>> = pool.map_range(k, |c| {
+            if members[c].is_empty() {
+                None
             } else {
-                // Re-seed an empty cluster on the farthest point.
-                let far = (0..eams.len())
-                    .max_by(|&a, &b| {
-                        let da = centroids[assignment[a]].distance(&eams[a]);
-                        let db = centroids[assignment[b]].distance(&eams[b]);
-                        da.partial_cmp(&db).unwrap()
-                    })
-                    .unwrap();
+                Some(Centroid::from_member_indices(eams, &members[c]))
+            }
+        });
+        let mut empties = Vec::new();
+        for (c, u) in updated.into_iter().enumerate() {
+            match u {
+                Some(cen) => centroids[c] = cen,
+                None => empties.push(c),
+            }
+        }
+        if !empties.is_empty() {
+            // Re-seed empty clusters on the farthest point from its own
+            // (updated) centroid. The scored centroids are all non-empty,
+            // so one pooled scoring pass serves every empty cluster;
+            // argmax is a serial first-wins scan (ties -> lowest index).
+            //
+            // NOTE: this is the one place whose *serial* results differ
+            // from the pre-pool implementation, which interleaved reseeds
+            // with centroid updates (stale centroids for higher cluster
+            // indices) and broke distance ties toward the highest point
+            // index. The new rule is order-free, which is what lets the
+            // update phase parallelize; it changes which degenerate-tie
+            // medoid is kept on some datasets (documented in CHANGES.md).
+            {
+                let centroids = &centroids;
+                let assignment = &assignment;
+                pool.fill(&mut scratch, |i| {
+                    centroids[assignment[i]].distance(&eams[i], &eam_norms[i])
+                });
+            }
+            let mut far = 0usize;
+            let mut fd = f64::NEG_INFINITY;
+            for (i, &d) in scratch.iter().enumerate() {
+                if d > fd {
+                    fd = d;
+                    far = i;
+                }
+            }
+            for c in empties {
                 centroids[c] = Centroid::from_eam(&eams[far]);
             }
         }
     }
 
-    // Medoid extraction.
+    // Medoid extraction: pooled scoring pass, serial per-cluster argmin
+    // (strict `<` first-wins, identical on every path).
+    {
+        let centroids = &centroids;
+        let assignment = &assignment;
+        pool.fill(&mut scratch, |i| {
+            centroids[assignment[i]].distance(&eams[i], &eam_norms[i])
+        });
+    }
     let mut medoids = Vec::with_capacity(k);
     for c in 0..k {
         let mut best = None;
         let mut bd = f64::INFINITY;
-        for (i, m) in eams.iter().enumerate() {
-            if assignment[i] == c {
-                let d = centroids[c].distance(m);
-                if d < bd {
-                    bd = d;
-                    best = Some(i);
-                }
+        for i in 0..n {
+            if assignment[i] == c && scratch[i] < bd {
+                bd = scratch[i];
+                best = Some(i);
             }
         }
         if let Some(i) = best {
@@ -269,6 +407,18 @@ mod tests {
     }
 
     #[test]
+    fn thread_count_invisible_in_results() {
+        let eams: Vec<Eam> = (0..30).map(|i| one_hot(6, 16, i % 5, 1 + (i as u32 % 4))).collect();
+        let base = kmeans_medoids_with(&eams, 5, 40, 13, &Pool::serial());
+        for threads in [2, 4, 8] {
+            let r = kmeans_medoids_with(&eams, 5, 40, 13, &Pool::new(threads));
+            assert_eq!(r.medoids, base.medoids, "threads={threads}");
+            assert_eq!(r.assignment, base.assignment, "threads={threads}");
+            assert_eq!(r.iterations, base.iterations, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn medoids_are_valid_indices_and_unique() {
         let eams: Vec<Eam> = (0..30).map(|i| one_hot(4, 16, i % 5, 1 + (i as u32 % 3))).collect();
         let r = kmeans_medoids(&eams, 5, 30, 3);
@@ -281,9 +431,36 @@ mod tests {
     }
 
     #[test]
+    fn k_zero_returns_no_medoids() {
+        let eams = vec![one_hot(2, 4, 0, 1), one_hot(2, 4, 1, 1)];
+        let r = kmeans_medoids(&eams, 0, 10, 0);
+        assert!(r.medoids.is_empty());
+        assert_eq!(r.assignment.len(), eams.len());
+    }
+
+    #[test]
     fn identical_inputs_dont_crash() {
         let eams: Vec<Eam> = (0..10).map(|_| one_hot(2, 4, 1, 3)).collect();
         let r = kmeans_medoids(&eams, 3, 20, 5);
         assert!(!r.medoids.is_empty());
+    }
+
+    #[test]
+    fn hoisted_norms_match_naive_distance() {
+        // the precomputed-norm distance must agree with Eam::distance on
+        // complete matrices (Eq. 1 is the same formula)
+        let mut a = Eam::new(3, 6);
+        let mut b = Eam::new(3, 6);
+        for l in 0..3 {
+            a.record(l, l % 6, 4);
+            a.record(l, (l + 2) % 6, 1);
+            b.record(l, (l + 1) % 6, 3);
+            b.record(l, (l + 2) % 6, 2);
+        }
+        let c = Centroid::from_eam(&a);
+        let got = c.distance(&b, &eam_row_norms(&b));
+        let want = a.distance(&b);
+        // 1e-5: centroid rows are f32-normalized, naive cosine is on raw counts
+        assert!((got - want).abs() < 1e-5, "hoisted {got} vs naive {want}");
     }
 }

@@ -17,5 +17,5 @@ mod matcher;
 
 pub use eam::Eam;
 pub use eamc::{Eamc, EamcStats};
-pub use kmeans::{kmeans_medoids, KMeansResult};
+pub use kmeans::{kmeans_medoids, kmeans_medoids_with, KMeansResult};
 pub use matcher::{EamcMatcher, MatcherIndex};

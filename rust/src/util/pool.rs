@@ -1,0 +1,261 @@
+//! Dependency-free scoped worker pool with **deterministic ordered
+//! reduction** (vendored-deps policy: no rayon).
+//!
+//! The offline side of the system — `Eamc::construct`'s Eq. 1 k-means and
+//! the figure benches' (system × config) experiment grids — is
+//! embarrassingly parallel: every work item is a pure function of its
+//! index. [`Pool`] exploits that while keeping the repo's determinism
+//! contract: results are always collected **in submission order**, workers
+//! never touch shared mutable state, and no RNG ever runs off the main
+//! thread (parallel stochastic work derives per-task streams with
+//! [`crate::util::Rng::for_stream`]). Consequently every `Pool` computation
+//! is bitwise identical at any thread count — enforced end-to-end by
+//! `rust/tests/parallel.rs`.
+//!
+//! Design notes:
+//! * A `Pool` is just a thread-count policy; each `map`/`fill` call spawns
+//!   short-lived `std::thread::scope` workers, so there is no persistent
+//!   state, nested calls simply spawn their own scope, and a panicking
+//!   task propagates to the caller like a serial panic would.
+//! * `threads == 1` (or trivially small inputs) runs inline on the caller
+//!   with zero spawns — that *is* the serial reference path the
+//!   differential tests compare against.
+//! * Dynamic scheduling (atomic chunk counter) keeps wildly uneven items
+//!   (grid points) balanced; the ordered reduction on the caller makes the
+//!   schedule invisible in the output.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-count policy for scoped parallel maps. Cheap to construct; holds
+/// no threads or queues of its own.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool running `threads` workers per call (clamped to >= 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// The serial reference pool: every call runs inline on the caller.
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    /// Thread count from the `MOE_POOL_THREADS` env var, defaulting to the
+    /// machine's available parallelism. `MOE_POOL_THREADS=1` forces every
+    /// offline path serial (scripts/tier1.sh uses this for the determinism
+    /// re-check).
+    pub fn from_env() -> Pool {
+        let n = std::env::var("MOE_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        Pool::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// `(0..n).map(f)` with dynamic scheduling across the pool; the result
+    /// vector is indexed by task, so the output is independent of both the
+    /// schedule and the thread count. A panic in any task propagates.
+    pub fn map_range<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.threads.min(n);
+        // chunked grabbing amortizes the atomic; any chunking is
+        // result-invariant because the reduction below is by index
+        let chunk = (n / (workers * 8)).max(1);
+        let next = AtomicUsize::new(0);
+        let f = &f;
+        let next_ref = &next;
+        let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut local: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let start = next_ref.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            for i in start..(start + chunk).min(n) {
+                                local.push((i, f(i)));
+                            }
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(part) => parts.push(part),
+                    // re-raise the worker's panic payload on the caller
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        // deterministic ordered reduction: place by task index
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for part in parts {
+            for (i, r) in part {
+                debug_assert!(slots[i].is_none(), "task {i} produced twice");
+                slots[i] = Some(r);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool: task never ran"))
+            .collect()
+    }
+
+    /// Ordered map over a slice: `out[i] = f(i, &items[i])`.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.map_range(items.len(), |i| f(i, &items[i]))
+    }
+
+    /// In-place variant reusing a caller-owned buffer: `out[i] = f(i)`.
+    /// Statically partitioned into contiguous blocks (each worker writes a
+    /// disjoint sub-slice), so no allocation beyond thread spawn — the
+    /// k-means assignment pass reuses one buffer across all iterations.
+    pub fn fill<R, F>(&self, out: &mut [R], f: F)
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let n = out.len();
+        if self.threads == 1 || n <= 1 {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = f(i);
+            }
+            return;
+        }
+        let workers = self.threads.min(n);
+        let chunk = (n + workers - 1) / workers; // div_ceil (MSRV 1.70)
+        let f = &f;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for (w, block) in out.chunks_mut(chunk).enumerate() {
+                let base = w * chunk;
+                handles.push(s.spawn(move || {
+                    for (j, slot) in block.iter_mut().enumerate() {
+                        *slot = f(base + j);
+                    }
+                }));
+            }
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_range_matches_serial_at_any_thread_count() {
+        let serial: Vec<u64> = (0..257).map(|i| (i as u64).wrapping_mul(0x9E37) ^ 7).collect();
+        for threads in [1, 2, 3, 8] {
+            let got = Pool::new(threads).map_range(257, |i| (i as u64).wrapping_mul(0x9E37) ^ 7);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_over_slice_is_ordered() {
+        let items: Vec<i64> = (0..100).map(|i| i * 3).collect();
+        let got = Pool::new(4).map(&items, |i, &x| x + i as i64);
+        let want: Vec<i64> = (0..100).map(|i| i * 4).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn zero_and_single_task_edges() {
+        let p = Pool::new(8);
+        assert!(p.map_range(0, |i| i).is_empty());
+        assert_eq!(p.map_range(1, |i| i + 41), vec![41]);
+        let mut empty: [usize; 0] = [];
+        p.fill(&mut empty, |i| i); // must not spawn or panic
+    }
+
+    #[test]
+    fn fill_matches_map_range() {
+        for threads in [1, 2, 8] {
+            let p = Pool::new(threads);
+            let mut buf = vec![0usize; 73];
+            p.fill(&mut buf, |i| i * i + 1);
+            assert_eq!(buf, p.map_range(73, |i| i * i + 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fill_reuses_buffer_across_calls() {
+        let p = Pool::new(2);
+        let mut buf = vec![0usize; 50];
+        p.fill(&mut buf, |i| i);
+        p.fill(&mut buf, |i| i + 1);
+        assert_eq!(buf[49], 50);
+    }
+
+    #[test]
+    fn panics_propagate_from_workers() {
+        for threads in [1, 4] {
+            let p = Pool::new(threads);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                p.map_range(64, |i| {
+                    if i == 37 {
+                        panic!("task 37 exploded");
+                    }
+                    i
+                })
+            }));
+            assert!(r.is_err(), "threads={threads}: worker panic must surface");
+        }
+    }
+
+    #[test]
+    fn nested_pools_work() {
+        let outer = Pool::new(2);
+        let got = outer.map_range(4, |i| {
+            let inner = Pool::new(2);
+            inner.map_range(8, |j| i * 8 + j).iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..4).map(|i| (0..8).map(|j| i * 8 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn from_env_clamps_and_parses() {
+        // do not mutate the process env here (tests run threaded);
+        // just check the constructor clamps
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert!(Pool::from_env().threads() >= 1);
+    }
+}

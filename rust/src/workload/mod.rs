@@ -21,7 +21,7 @@ pub use dataset::{DatasetPreset, DATASETS};
 
 use crate::model::ModelSpec;
 use crate::trace::Eam;
-use crate::util::Rng;
+use crate::util::{Pool, Rng};
 
 /// Latent task: per-layer expert preference distributions.
 #[derive(Debug, Clone)]
@@ -112,16 +112,35 @@ impl Workload {
     /// Generate one sequence: sample a task, then route every token of every
     /// iteration through the task's per-layer categorical (with noise).
     pub fn gen_sequence(&mut self) -> SequenceActivation {
-        let task = self.rng.below(self.tasks.len());
-        self.gen_sequence_for_task(task)
+        // advance the generator's own sequential stream (cheap clone-out
+        // keeps the shared `gen_sequence_with` core borrowable on `&self`)
+        let mut rng = self.rng.clone();
+        let s = self.gen_sequence_with(&mut rng);
+        self.rng = rng;
+        s
     }
 
     pub fn gen_sequence_for_task(&mut self, task: usize) -> SequenceActivation {
+        let mut rng = self.rng.clone();
+        let s = self.gen_sequence_for_task_with(task, &mut rng);
+        self.rng = rng;
+        s
+    }
+
+    /// Core generator drawing from an explicit stream — the task profiles
+    /// are immutable, so any number of pool workers can generate sequences
+    /// concurrently from their own [`Rng::for_stream`] generators.
+    pub fn gen_sequence_with(&self, rng: &mut Rng) -> SequenceActivation {
+        let task = rng.below(self.tasks.len());
+        self.gen_sequence_for_task_with(task, rng)
+    }
+
+    pub fn gen_sequence_for_task_with(&self, task: usize, rng: &mut Rng) -> SequenceActivation {
         let prompt_len = self.preset.prompt_min
-            + self.rng.below(self.preset.prompt_max - self.preset.prompt_min + 1);
+            + rng.below(self.preset.prompt_max - self.preset.prompt_min + 1);
         // geometric-ish generation length
         let mut gen_len = 1;
-        while gen_len < self.preset.gen_max && self.rng.f64() > 1.0 / self.preset.gen_mean as f64 {
+        while gen_len < self.preset.gen_max && rng.f64() > 1.0 / self.preset.gen_mean as f64 {
             gen_len += 1;
         }
         let profile = &self.tasks[task];
@@ -132,7 +151,7 @@ impl Workload {
             prompt_len as u32,
             self.preset.noise,
             self.spec_experts,
-            &mut self.rng,
+            rng,
         ));
         for _ in 0..gen_len {
             routes.push(route_tokens(
@@ -140,7 +159,7 @@ impl Workload {
                 1,
                 self.preset.noise,
                 self.spec_experts,
-                &mut self.rng,
+                rng,
             ));
         }
         SequenceActivation {
@@ -160,6 +179,21 @@ impl Workload {
                 s.to_eam(self.spec_layers, self.spec_experts)
             })
             .collect()
+    }
+
+    /// Pool-parallel offline dataset generation. Sequence `i` draws from
+    /// the SplitMix64-derived stream `Rng::for_stream(stream_seed, i)`, so
+    /// the dataset is a pure function of `(workload, stream_seed, n)` —
+    /// bitwise identical at any thread count, and `par(n)` is a prefix of
+    /// `par(m)` for `n < m`. (This is a *different* dataset than the
+    /// sequential [`Workload::gen_eam_dataset`], whose single stream cannot
+    /// be split without serializing.)
+    pub fn gen_eam_dataset_par(&self, pool: &Pool, n: usize, stream_seed: u64) -> Vec<Eam> {
+        pool.map_range(n, |i| {
+            let mut rng = Rng::for_stream(stream_seed, i as u64);
+            self.gen_sequence_with(&mut rng)
+                .to_eam(self.spec_layers, self.spec_experts)
+        })
     }
 }
 
@@ -304,6 +338,21 @@ mod tests {
         assert_ne!(w.tasks[0].per_layer[shared], w.tasks[1].per_layer[shared]);
         // unpaired tasks stay independent
         assert_ne!(w.tasks[0].per_layer[0], w.tasks[2].per_layer[0]);
+    }
+
+    #[test]
+    fn par_dataset_is_thread_invariant_and_prefix_stable() {
+        let s = spec();
+        let p = DatasetPreset::by_name("mixed").unwrap();
+        let w = Workload::new(&s, p, 11);
+        let base = w.gen_eam_dataset_par(&Pool::serial(), 12, 0xDA7A);
+        for threads in [2, 8] {
+            let got = w.gen_eam_dataset_par(&Pool::new(threads), 12, 0xDA7A);
+            assert_eq!(got, base, "threads={threads}");
+        }
+        // per-index streams make shorter runs prefixes of longer ones
+        let longer = w.gen_eam_dataset_par(&Pool::new(4), 20, 0xDA7A);
+        assert_eq!(&longer[..12], &base[..]);
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Determinism contract of the parallel offline layer (tentpole of the
+//! "deterministic parallel execution" change): everything that runs on a
+//! `util::pool::Pool` — Eq. 1 k-means, `Eamc::construct`, offline dataset
+//! generation, and benchsuite `run_grid` — must produce **bitwise
+//! identical** results at any thread count. These tests pin that contract
+//! with pool sizes 1 / 2 / 8; `scripts/tier1.sh` additionally re-runs them
+//! with `MOE_POOL_THREADS=1` so the env-derived default path is covered in
+//! both serial and parallel modes.
+
+use moe_infinity::benchsuite::{build_eamc_with, run_grid, run_serve_with};
+use moe_infinity::config::ServeConfig;
+use moe_infinity::model::ModelSpec;
+use moe_infinity::server::ServeReport;
+use moe_infinity::trace::{kmeans_medoids_with, Eam, Eamc};
+use moe_infinity::util::{Pool, Rng};
+use moe_infinity::workload::{DatasetPreset, Workload};
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+
+fn trace_dataset(n: usize, seed: u64) -> Vec<Eam> {
+    let spec = ModelSpec::preset("switch-base-32").unwrap();
+    let ds = DatasetPreset::by_name("mixed").unwrap();
+    let mut w = Workload::new(&spec, ds, seed);
+    w.gen_eam_dataset(n)
+}
+
+#[test]
+fn kmeans_is_bitwise_identical_across_pool_sizes() {
+    let ds = trace_dataset(60, 17);
+    let base = kmeans_medoids_with(&ds, 10, 50, 99, &Pool::serial());
+    assert!(!base.medoids.is_empty());
+    for threads in POOL_SIZES {
+        let r = kmeans_medoids_with(&ds, 10, 50, 99, &Pool::new(threads));
+        assert_eq!(r.medoids, base.medoids, "medoids differ at {threads} threads");
+        assert_eq!(
+            r.assignment, base.assignment,
+            "assignment differs at {threads} threads"
+        );
+        assert_eq!(
+            r.iterations, base.iterations,
+            "iteration count differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn eamc_construct_is_bitwise_identical_across_pool_sizes() {
+    let ds = trace_dataset(50, 23);
+    let base = Eamc::construct_with(8, &ds, 7, &Pool::serial());
+    for threads in POOL_SIZES {
+        let c = Eamc::construct_with(8, &ds, 7, &Pool::new(threads));
+        assert_eq!(c.len(), base.len(), "entry count differs at {threads} threads");
+        assert_eq!(c.build_id(), base.build_id());
+        for (i, (a, b)) in c.iter().zip(base.iter()).enumerate() {
+            assert_eq!(a, b, "entry {i} differs at {threads} threads");
+        }
+        // the derived lookup structures must agree too
+        assert_eq!(c.bytes(), base.bytes());
+        assert_eq!(c.lookup_bytes(), base.lookup_bytes());
+    }
+}
+
+#[test]
+fn parallel_dataset_generation_is_thread_invariant() {
+    let spec = ModelSpec::preset("switch-base-64").unwrap();
+    let ds = DatasetPreset::by_name("translation").unwrap();
+    let w = Workload::new(&spec, ds, 31);
+    let base = w.gen_eam_dataset_par(&Pool::serial(), 24, 0xFEED);
+    for threads in POOL_SIZES {
+        let got = w.gen_eam_dataset_par(&Pool::new(threads), 24, 0xFEED);
+        assert_eq!(got, base, "dataset differs at {threads} threads");
+    }
+}
+
+#[test]
+fn build_eamc_is_thread_invariant_end_to_end() {
+    let spec = ModelSpec::preset("switch-base-32").unwrap();
+    let ds = DatasetPreset::by_name("mixed").unwrap();
+    let base = build_eamc_with(&spec, &ds, 40, 10, 3, &Pool::serial());
+    for threads in [2, 8] {
+        let c = build_eamc_with(&spec, &ds, 40, 10, 3, &Pool::new(threads));
+        assert_eq!(c.len(), base.len());
+        for (a, b) in c.iter().zip(base.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+}
+
+fn small_grid() -> Vec<ServeConfig> {
+    let mut grid = Vec::new();
+    for (system, rps) in [("moe-infinity", 1.0), ("moe-infinity", 3.0), ("pytorch-um", 1.0)] {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.system = system.into();
+        cfg.workload.rps = rps;
+        cfg.workload.duration = 6.0;
+        cfg.eamc.trace_sequences = 25;
+        cfg.eamc.capacity = 6;
+        grid.push(cfg);
+    }
+    grid
+}
+
+/// Bitwise report comparison: counters exactly, floats by bit pattern.
+fn assert_reports_identical(a: &ServeReport, b: &ServeReport, ctx: &str) {
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.batches, b.batches, "{ctx}: batches");
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{ctx}: makespan {} vs {}",
+        a.makespan,
+        b.makespan
+    );
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(a.token_latency.samples()),
+        bits(b.token_latency.samples()),
+        "{ctx}: token latencies"
+    );
+    assert_eq!(
+        bits(a.request_latency.samples()),
+        bits(b.request_latency.samples()),
+        "{ctx}: request latencies"
+    );
+}
+
+#[test]
+fn run_grid_is_bitwise_identical_across_pool_sizes() {
+    let grid = small_grid();
+    // serial reference: each point through run_serve_with on a serial pool
+    let serial = Pool::serial();
+    let base: Vec<ServeReport> = grid
+        .iter()
+        .map(|cfg| run_serve_with(cfg, &serial).expect("serial serve"))
+        .collect();
+    for threads in POOL_SIZES {
+        let got = run_grid(&grid, &Pool::new(threads));
+        assert_eq!(got.len(), grid.len());
+        for (i, (g, b)) in got.into_iter().zip(base.iter()).enumerate() {
+            let g = g.expect("grid serve");
+            assert_reports_identical(&g, b, &format!("point {i} at {threads} threads"));
+        }
+    }
+}
+
+#[test]
+fn run_grid_reports_per_point_errors_in_order() {
+    let mut grid = small_grid();
+    grid[1].model = "no-such-model".into();
+    let out = run_grid(&grid, &Pool::new(4));
+    assert!(out[0].is_ok());
+    assert!(out[1].is_err(), "bad point must fail in place, not poison the grid");
+    assert!(out[2].is_ok());
+}
+
+#[test]
+fn stream_rngs_do_not_depend_on_draw_order() {
+    // the property parallel generation rests on: stream i is the same
+    // whether streams are created in order, in reverse, or interleaved
+    let forward: Vec<u64> = (0u64..16).map(|i| Rng::for_stream(5, i).next_u64()).collect();
+    let mut reverse: Vec<u64> = (0u64..16)
+        .rev()
+        .map(|i| Rng::for_stream(5, i).next_u64())
+        .collect();
+    reverse.reverse();
+    assert_eq!(forward, reverse);
+}

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Diff two BENCH_*.json files (flat {"name": ns_per_op} objects as written
+# by benchsuite::BenchJson) and print per-row speedup, old/new:
+#
+#   scripts/bench_compare.sh BENCH_offline.before.json BENCH_offline.json
+#
+# speedup > 1 means the new run is faster. Rows present in only one file
+# print with a '-' placeholder. `*_speedup_*` rows are already ratios; the
+# old/new columns still show them, the speedup column then compares the
+# ratios themselves.
+set -euo pipefail
+if [ $# -ne 2 ]; then
+    echo "usage: $0 OLD.json NEW.json" >&2
+    exit 2
+fi
+python3 - "$1" "$2" <<'EOF'
+import json, sys
+
+with open(sys.argv[1]) as f:
+    old = json.load(f)
+with open(sys.argv[2]) as f:
+    new = json.load(f)
+
+names = sorted(set(old) | set(new))
+w = max(len(n) for n in names) if names else 3
+print(f"{'row'.ljust(w)}  {'old':>14}  {'new':>14}  {'speedup':>8}")
+print(f"{'-' * w}  {'-' * 14}  {'-' * 14}  {'-' * 8}")
+for n in names:
+    o, v = old.get(n), new.get(n)
+    so = f"{o:14.1f}" if o is not None else f"{'-':>14}"
+    sv = f"{v:14.1f}" if v is not None else f"{'-':>14}"
+    if o is None or v is None or v == 0:
+        sp = f"{'-':>8}"
+    else:
+        sp = f"{o / v:7.2f}x"
+    print(f"{n.ljust(w)}  {so}  {sv}  {sp}")
+EOF

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 verification + hot-path smoke bench.
+# Tier-1 verification + smoke benches.
 #
 #   scripts/tier1.sh
 #
-# Runs the repo's tier-1 gate (release build + full test suite) and then the
-# §Perf hot-path micro-benchmarks in smoke mode, which also emits the
-# machine-readable BENCH_hotpath.json (name → ns/op) used by
-# EXPERIMENTS.md §Perf. Drop MOE_BENCH_SMOKE for full-length measurements.
+# Runs the repo's tier-1 gate (release build + full test suite), the §Perf
+# hot-path micro-benchmarks and the offline-path benchmarks in smoke mode
+# (emitting BENCH_hotpath.json and BENCH_offline.json, name → ns/op, used
+# by EXPERIMENTS.md §Perf — diff runs with scripts/bench_compare.sh), and a
+# determinism re-check that pins the parallel offline layer to its serial
+# results with MOE_POOL_THREADS=1. Drop MOE_BENCH_SMOKE for full-length
+# measurements.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,5 +22,14 @@ cargo test -q
 echo "== perf_hotpath (smoke mode -> BENCH_hotpath.json)"
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_hotpath
 
-echo "== done; hot-path numbers:"
+echo "== perf_offline (smoke mode -> BENCH_offline.json)"
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_offline
+
+echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
+# the suite pins explicit pool sizes internally; forcing the env-derived
+# default pool serial covers the remaining (from_env) code path
+MOE_POOL_THREADS=1 cargo test -q --test parallel
+
+echo "== done; bench numbers:"
 cat BENCH_hotpath.json
+cat BENCH_offline.json
