@@ -1,0 +1,107 @@
+//! §Scheduler — static run-to-completion batches vs continuous batching.
+//!
+//! The paper's §8.2 serving comparison (vLLM/Ollama competitors) runs
+//! under multi-request load, where iteration-level scheduling is the
+//! difference between a request joining at the next token boundary and a
+//! request waiting for a whole batch to drain. This bench replays the
+//! **same Poisson trace** (identical seed → identical arrivals and
+//! routing traces) under both schedulers across an rps sweep and records
+//! p50/p99 request latency and token throughput per point.
+//!
+//! Results print as a table and land in `BENCH_scheduler.json`. Unlike the
+//! perf_* ns/op files, rows here are *seconds* (`*_p50_s` / `*_p99_s`) and
+//! *tokens per second* (`*_tput`); `scripts/bench_compare.sh` still diffs
+//! them row-by-row. Set `MOE_BENCH_SMOKE=1` for a fast CI pass
+//! (scripts/tier1.sh does).
+//!
+//! Acceptance target (EXPERIMENTS.md §Scheduler): at the overload point
+//! (the highest rps in the sweep) continuous batching must strictly
+//! improve p99 request latency — head-of-line blocking is exactly what it
+//! removes. The bench asserts this before writing the JSON.
+
+use moe_infinity::benchsuite::{run_grid, BenchJson, Table};
+use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::util::{fmt_secs, Pool};
+
+fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let rps_points: &[f64] = if smoke {
+        &[2.0, 16.0]
+    } else {
+        &[0.5, 2.0, 8.0, 16.0]
+    };
+    let duration = if smoke { 6.0 } else { 30.0 };
+    let pool = Pool::from_env();
+    println!(
+        "scheduler bench: {} mode, rps sweep {:?}, duration {duration}s",
+        if smoke { "smoke" } else { "full" },
+        rps_points
+    );
+
+    // same trace per rps point: every field except `scheduler` is shared,
+    // and the request stream is a pure function of (seed, workload)
+    let mut grid = Vec::new();
+    for &rps in rps_points {
+        for sched in [SchedulerKind::Static, SchedulerKind::Continuous] {
+            let mut cfg = ServeConfig::default();
+            cfg.model = "switch-base-32".into();
+            cfg.scheduler = sched;
+            cfg.workload.rps = rps;
+            cfg.workload.duration = duration;
+            cfg.batching.max_batch = 8;
+            cfg.batching.max_wait = 0.5;
+            cfg.eamc.trace_sequences = if smoke { 25 } else { 120 };
+            cfg.eamc.capacity = if smoke { 8 } else { 24 };
+            grid.push(cfg);
+        }
+    }
+
+    let mut table = Table::new(&["scheduler", "rps", "p50 req", "p99 req", "tokens/s"]);
+    let mut json = BenchJson::new();
+    let mut overload = None; // (static p99, continuous p99) at the top rps
+    for (cfg, r) in grid.iter().zip(run_grid(&grid, &pool)) {
+        let mut r = r.expect("serve");
+        let (p50, p99) = (r.request_latency.p50(), r.request_latency.p99());
+        let tput = r.token_throughput();
+        let name = cfg.scheduler.name();
+        let rps = cfg.workload.rps;
+        table.row(&[
+            name.into(),
+            format!("{rps}"),
+            fmt_secs(p50),
+            fmt_secs(p99),
+            format!("{tput:.1}"),
+        ]);
+        json.add(&format!("{name}_p50_s_rps{rps}"), p50);
+        json.add(&format!("{name}_p99_s_rps{rps}"), p99);
+        json.add(&format!("{name}_tput_rps{rps}"), tput);
+        if rps == *rps_points.last().unwrap() {
+            overload = Some(match (overload, cfg.scheduler) {
+                (_, SchedulerKind::Static) => (p99, f64::NAN),
+                (Some((s, _)), SchedulerKind::Continuous) => (s, p99),
+                (None, SchedulerKind::Continuous) => (f64::NAN, p99),
+            });
+        }
+    }
+    table.print("§Scheduler — static vs continuous batching (same Poisson trace)");
+
+    let (static_p99, cont_p99) = overload.expect("overload point ran");
+    println!(
+        "\noverload (rps {}): static p99 {} vs continuous p99 {} ({:.2}x)",
+        rps_points.last().unwrap(),
+        fmt_secs(static_p99),
+        fmt_secs(cont_p99),
+        static_p99 / cont_p99
+    );
+    assert!(
+        cont_p99 < static_p99,
+        "continuous batching must improve p99 request latency under overload \
+         (static {static_p99}, continuous {cont_p99})"
+    );
+
+    let path = "BENCH_scheduler.json";
+    match json.write(path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

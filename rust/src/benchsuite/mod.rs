@@ -3,12 +3,12 @@
 //! and measures prefetch prediction accuracy the way §8.3 defines it.
 
 use crate::cache::CacheKind;
-use crate::config::ServeConfig;
+use crate::config::{SchedulerKind, ServeConfig};
 use crate::engine::{ComputeModel, EngineConfig, SimEngine};
 use crate::memory::TierConfig;
 use crate::model::ModelSpec;
 use crate::prefetch::{Predictor, PredictorKind};
-use crate::server::{serve, Batcher, ServeReport};
+use crate::server::{serve, serve_continuous, Batcher, ServeReport};
 use crate::trace::{Eam, Eamc};
 use crate::util::{Pool, Rng};
 use crate::workload::{ArrivalProcess, DatasetPreset, Request, Workload};
@@ -110,14 +110,19 @@ pub fn run_serve(cfg: &ServeConfig) -> anyhow::Result<ServeReport> {
 
 /// [`run_serve`] with offline construction on an explicit pool (the replay
 /// itself is single-threaded — it is one engine's virtual timeline).
+/// `cfg.scheduler` selects between the static run-to-completion loop and
+/// continuous batching; both replay the identical request trace.
 pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeReport> {
+    // surface invalid fields (e.g. a NaN batching.max_wait) as a per-point
+    // Err — `Batcher::new` would otherwise assert and abort a whole grid
+    cfg.validate()?;
     let mut engine = build_engine_with(cfg, pool)?;
     let requests = build_requests(cfg)?;
-    Ok(serve(
-        &mut engine,
-        Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait),
-        &requests,
-    ))
+    let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    Ok(match cfg.scheduler {
+        SchedulerKind::Static => serve(&mut engine, batcher, &requests),
+        SchedulerKind::Continuous => serve_continuous(&mut engine, batcher, &requests),
+    })
 }
 
 /// Replay an experiment grid: every [`ServeConfig`] point is an independent
@@ -344,6 +349,21 @@ mod tests {
         let report = run_serve(&cfg).unwrap();
         assert!(report.requests > 0);
         assert!(report.token_throughput() > 0.0);
+    }
+
+    #[test]
+    fn run_serve_continuous_end_to_end_small() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 8.0;
+        cfg.workload.rps = 1.0;
+        cfg.eamc.trace_sequences = 30;
+        cfg.eamc.capacity = 8;
+        cfg.scheduler = SchedulerKind::Continuous;
+        let report = run_serve(&cfg).unwrap();
+        assert!(report.requests > 0);
+        assert!(report.token_throughput() > 0.0);
+        assert_eq!(report.request_latency.len() as u64, report.requests);
     }
 
     #[test]

@@ -12,6 +12,37 @@ use crate::model::ModelSpec;
 use crate::prefetch::PredictorKind;
 use crate::util::tomlmini::TomlDoc;
 
+/// Iteration-level scheduling policy of the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// AlpaServe-style run-to-completion batches (the paper's §8.2
+    /// methodology): a batch is formed, dispatched, and holds the engine
+    /// until its longest sequence completes.
+    #[default]
+    Static,
+    /// Continuous batching on the resumable stepping engine: arrivals join
+    /// free slots at every iteration boundary, sequences retire the
+    /// iteration they finish.
+    Continuous,
+}
+
+impl SchedulerKind {
+    pub fn by_name(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "static" => Some(SchedulerKind::Static),
+            "continuous" => Some(SchedulerKind::Continuous),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Static => "static",
+            SchedulerKind::Continuous => "continuous",
+        }
+    }
+}
+
 /// Top-level serving configuration (what `moe-infinity serve` consumes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -22,6 +53,8 @@ pub struct ServeConfig {
     /// System policy bundle: "moe-infinity", "zero-infinity", "zero-offload"
     /// or "pytorch-um".
     pub system: String,
+    /// Serving-loop scheduler: "static" or "continuous".
+    pub scheduler: SchedulerKind,
     pub workload: WorkloadConfig,
     pub batching: BatchConfig,
     pub memory: MemoryConfig,
@@ -74,6 +107,7 @@ impl Default for ServeConfig {
             model: "switch-base-128".into(),
             dataset: "mixed".into(),
             system: "moe-infinity".into(),
+            scheduler: SchedulerKind::Static,
             workload: WorkloadConfig {
                 rps: 1.0,
                 cv: 1.0,
@@ -113,6 +147,12 @@ impl ServeConfig {
         c.model = gs(&doc, "model", &c.model);
         c.dataset = gs(&doc, "dataset", &c.dataset);
         c.system = gs(&doc, "system", &c.system);
+        if let Some(v) = doc.get("scheduler") {
+            let s = v.as_str().ok_or_else(|| anyhow!("scheduler must be a string"))?;
+            c.scheduler = SchedulerKind::by_name(s).ok_or_else(|| {
+                anyhow!("unknown scheduler '{s}' (expected 'static' or 'continuous')")
+            })?;
+        }
         c.seed = doc.get("seed").and_then(|v| v.as_u64()).unwrap_or(c.seed);
         c.workload.rps = gf(&doc, "workload.rps", c.workload.rps);
         c.workload.cv = gf(&doc, "workload.cv", c.workload.cv);
@@ -141,6 +181,7 @@ impl ServeConfig {
         d.set_str("model", &self.model);
         d.set_str("dataset", &self.dataset);
         d.set_str("system", &self.system);
+        d.set_str("scheduler", self.scheduler.name());
         d.set_num("seed", self.seed as f64);
         d.set_num("workload.rps", self.workload.rps);
         d.set_num("workload.cv", self.workload.cv);
@@ -165,6 +206,14 @@ impl ServeConfig {
         crate::baselines::predictor_for(&self.system)?;
         if self.batching.max_batch == 0 {
             return Err(anyhow!("batching.max_batch must be >= 1"));
+        }
+        // a NaN/negative window would silently poison the static batcher's
+        // dispatch arithmetic (mirrors the hard assert in `Batcher::new`)
+        if !self.batching.max_wait.is_finite() || self.batching.max_wait < 0.0 {
+            return Err(anyhow!(
+                "batching.max_wait must be finite and >= 0, got {}",
+                self.batching.max_wait
+            ));
         }
         if self.workload.rps <= 0.0 || self.workload.duration <= 0.0 {
             return Err(anyhow!("workload.rps and duration must be positive"));
@@ -249,6 +298,33 @@ mod tests {
         assert!(ServeConfig::from_toml("dataset = \"imagenet\"").is_err());
         assert!(ServeConfig::from_toml("system = \"vllm\"").is_err());
         assert!(ServeConfig::from_toml("[batching]\nmax_batch = 0").is_err());
+        assert!(ServeConfig::from_toml("scheduler = \"orca\"").is_err());
+    }
+
+    #[test]
+    fn scheduler_parses_and_roundtrips() {
+        let c = ServeConfig::from_toml("scheduler = \"continuous\"").unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Continuous);
+        let back = ServeConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.scheduler, SchedulerKind::Continuous);
+        // default stays the paper's static methodology
+        assert_eq!(ServeConfig::default().scheduler, SchedulerKind::Static);
+        assert_eq!(SchedulerKind::by_name("static"), Some(SchedulerKind::Static));
+        assert_eq!(SchedulerKind::by_name("orca"), None);
+    }
+
+    #[test]
+    fn invalid_max_wait_rejected() {
+        let mut c = ServeConfig::default();
+        c.model = "switch-base-32".into();
+        c.batching.max_wait = f64::NAN;
+        assert!(c.validate().is_err(), "NaN max_wait must not validate");
+        c.batching.max_wait = -1.0;
+        assert!(c.validate().is_err(), "negative max_wait must not validate");
+        c.batching.max_wait = f64::INFINITY;
+        assert!(c.validate().is_err(), "infinite max_wait must not validate");
+        c.batching.max_wait = 0.0;
+        assert!(c.validate().is_ok(), "zero window is a valid policy");
     }
 
     #[test]

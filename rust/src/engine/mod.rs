@@ -13,7 +13,9 @@ pub mod real;
 mod sim_engine;
 
 pub use real::{GenOutput, RealMoeEngine};
-pub use sim_engine::{BatchResult, EngineConfig, SimEngine};
+pub use sim_engine::{
+    BatchResult, BatchSession, EngineConfig, FeedbackMode, SimEngine, StepResult,
+};
 
 use crate::model::ModelSpec;
 

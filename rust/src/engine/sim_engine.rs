@@ -111,6 +111,74 @@ pub struct SimEngine {
     /// Per-sequence demand/GPU-hit tallies for the recall feedback loop.
     seq_demands: Vec<u64>,
     seq_hits: Vec<u64>,
+    // --- resumable stepping-session state (continuous batching) ---
+    // All per-slot arrays grow together; a slot id stays valid for the
+    // occupant's whole lifetime, so EAM/matcher/tally state survives other
+    // sequences joining and leaving around it.
+    /// External id of each slot's occupant (`FREE_SLOT` when vacant).
+    slot_occupant: Vec<u64>,
+    /// Next local iteration each occupied slot will execute.
+    slot_iter: Vec<u32>,
+    /// Total iterations of each slot's sequence.
+    slot_total: Vec<u32>,
+    /// Prompt length of each slot's sequence (iteration-0 token count).
+    slot_prompt: Vec<u32>,
+    /// Occupied slot ids, ascending — the deterministic step order.
+    slot_active: Vec<u32>,
+    /// Pooled step-event buffers for `run_batch_into`.
+    step_scratch: StepResult,
+}
+
+/// Sentinel occupant id of a vacant slot.
+const FREE_SLOT: u64 = u64::MAX;
+
+/// When a [`BatchSession`] reports sequence recall back to the EAMC (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedbackMode {
+    /// Observe every admitted sequence when the session finishes, in slot
+    /// order — the static `run_batch` contract (bitwise-preserved). Slots
+    /// are not recycled; the batch membership is fixed.
+    Deferred,
+    /// Observe each sequence the iteration it retires and free its slot for
+    /// the next admission — the continuous serving loop.
+    Immediate,
+}
+
+/// Events of one [`BatchSession::step`]; buffers are reused across steps so
+/// a warmed steady-state iteration records without allocating.
+#[derive(Debug, Clone, Default)]
+pub struct StepResult {
+    /// Virtual time at the iteration's start and end.
+    pub t_start: f64,
+    pub t_end: f64,
+    /// External ids of the sequences that executed this iteration, in slot
+    /// order.
+    pub executed: Vec<u64>,
+    /// External ids of the sequences that finished (retired) at this
+    /// iteration's end.
+    pub finished: Vec<u64>,
+    /// Expert demands issued / GPU hits observed during the iteration.
+    pub demands: u64,
+    pub gpu_hits: u64,
+    /// Per-demand stall time (`ready - t`), in demand order.
+    pub stalls: Vec<f64>,
+}
+
+impl StepResult {
+    /// Wall-clock (virtual) latency of the iteration.
+    pub fn latency(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+
+    fn clear(&mut self) {
+        self.t_start = 0.0;
+        self.t_end = 0.0;
+        self.executed.clear();
+        self.finished.clear();
+        self.demands = 0;
+        self.gpu_hits = 0;
+        self.stalls.clear();
+    }
 }
 
 impl SimEngine {
@@ -144,6 +212,12 @@ impl SimEngine {
             union_active: Vec::with_capacity(n_experts),
             seq_demands: Vec::new(),
             seq_hits: Vec::new(),
+            slot_occupant: Vec::new(),
+            slot_iter: Vec::new(),
+            slot_total: Vec::new(),
+            slot_prompt: Vec::new(),
+            slot_active: Vec::new(),
+            step_scratch: StepResult::default(),
         }
     }
 
@@ -202,6 +276,13 @@ impl SimEngine {
     /// buffers are reused. Together with the engine-owned scratch this makes
     /// a warmed steady-state batch fully allocation-free (see
     /// `tests/alloc_guard.rs`).
+    ///
+    /// Implemented on the stepping session: all sequences are admitted up
+    /// front, every iteration is one [`BatchSession::step`], and recall
+    /// feedback is deferred to the end in slot order — which makes the
+    /// output bitwise identical to the historical run-to-completion loop
+    /// (slots are admitted in sequence order, so slot ids equal the old
+    /// batch-local indices and every float op replays in the same order).
     pub fn run_batch_into(
         &mut self,
         seqs: &[SequenceActivation],
@@ -209,179 +290,30 @@ impl SimEngine {
         result: &mut BatchResult,
     ) {
         assert!(!seqs.is_empty());
-        self.idle_until(start);
-        let mut t = self.clock.max(start);
-        let (n_layers, n_experts) = (self.spec.n_layers, self.spec.experts_per_layer);
-
-        // Alg. 1 step 2: fresh EAM per sequence (pooled buffers) and a
-        // matcher handle synced to the current EAMC build.
-        if self.cur_eams.len() < seqs.len() {
-            self.cur_eams
-                .resize_with(seqs.len(), || Eam::new(n_layers, n_experts));
-        }
-        for m in self.cur_eams.iter_mut().take(seqs.len()) {
-            m.clear();
-        }
-        // matcher accumulators only pay off when the activation-aware
-        // predictor consumes them; the §8.3/§8.4 baselines skip the upkeep
-        let use_matcher = matches!(self.cfg.predictor, PredictorKind::ActivationAware { .. });
-        if use_matcher {
-            if self.matchers.len() < seqs.len() {
-                self.matchers.resize_with(seqs.len(), EamcMatcher::new);
-            }
-            for m in self.matchers.iter_mut().take(seqs.len()) {
-                m.attach(&self.eamc);
-            }
-        }
-        self.batch_eam.clear();
-        // stale predictions from the previous batch are dropped
-        self.sim.clear_queues();
-
         result.token_latencies.clear();
         result.seq_recalls.clear();
         result.stalls.clear();
         result.demands = 0;
         result.gpu_hits = 0;
-        self.seq_demands.clear();
-        self.seq_demands.resize(seqs.len(), 0);
-        self.seq_hits.clear();
-        self.seq_hits.resize(seqs.len(), 0);
 
-        let max_iters = seqs.iter().map(|s| s.iterations()).max().unwrap();
-
-        for iter in 0..max_iters {
-            let iter_start = t;
-            let mut batch_tokens = 0u32;
-            for s in seqs {
-                if iter < s.iterations() {
-                    batch_tokens += if iter == 0 { s.prompt_len as u32 } else { 1 };
-                }
-            }
-            for l in 0..n_layers {
-                // ---- dense part of the layer (attention etc.)
-                t += self.compute.dense_time(&self.spec, batch_tokens);
-
-                // ---- Alg. 1 step 5: route, steps 6-7: update cur_eam.
-                // The per-layer union goes into flat reusable scratch
-                // (expert-indexed token totals + touching-sequence lists);
-                // only the previous layer's active entries are cleared.
-                for &e in &self.union_active {
-                    self.union_tokens[e as usize] = 0;
-                    self.union_seqs[e as usize].clear();
-                }
-                self.union_active.clear();
-                for (si, s) in seqs.iter().enumerate() {
-                    if iter >= s.iterations() {
-                        continue;
-                    }
-                    for &(e, c) in &s.routes[iter][l] {
-                        self.cur_eams[si].record(l, e as usize, c);
-                        self.batch_eam.record(l, e as usize, c);
-                        self.predictor.observe_route(l, e as usize, c);
-                        if use_matcher {
-                            self.matchers[si].record(self.eamc.index(), l, e as usize, c);
-                        }
-                        if self.union_seqs[e as usize].is_empty() {
-                            self.union_active.push(e);
-                        }
-                        self.union_tokens[e as usize] += c;
-                        self.union_seqs[e as usize].push(si as u32);
-                    }
-                }
-                // keep the former BTreeMap's deterministic expert order
-                self.union_active.sort_unstable();
-
-                // ---- Alg. 1 step 8: resubmit prefetch priorities
-                for (si, s) in seqs.iter().enumerate() {
-                    if iter >= s.iterations() {
-                        continue;
-                    }
-                    if self.predictor.should_predict(l, iter) {
-                        let mut buf = std::mem::take(&mut self.pred_buf);
-                        let matcher = if use_matcher {
-                            Some(&self.matchers[si])
-                        } else {
-                            None
-                        };
-                        self.predictor.predict(&self.cur_eams[si], &self.eamc, matcher, l, &mut buf);
-                        let ctx = CacheCtx {
-                            cur_eam: &self.batch_eam,
-                            n_layers,
-                        };
-                        for &(key, prio) in buf.iter() {
-                            // Only experts with a positive predicted
-                            // activation ratio are worth PCIe bandwidth;
-                            // zero-ratio entries carry only the EPSILON
-                            // term and would be pure thrash traffic
-                            // (this is how the paper's system "reduces
-                            // prefetching traffic by over 7GB of 13GB").
-                            if prio <= crate::prefetch::EPSILON {
-                                continue;
-                            }
-                            let p = if self.cfg.priority_enabled { prio } else { 0.5 };
-                            self.sim.submit_prefetch(key, p, t, &ctx);
-                        }
-                        self.pred_buf = buf;
-                    }
-                }
-
-                // ---- ZeRO semantics: the whole layer's parameters must be
-                // resident before execution, activated or not.
-                if self.cfg.fetch_all_experts {
-                    for e in 0..n_experts {
-                        if !self.union_seqs[e].is_empty() {
-                            continue; // demanded (and counted) below
-                        }
-                        let key = ExpertKey::new(l, e);
-                        let ctx = CacheCtx {
-                            cur_eam: &self.batch_eam,
-                            n_layers,
-                        };
-                        let ready = self.sim.demand(key, t, &ctx);
-                        t = ready;
-                    }
-                }
-
-                // ---- Alg. 1 steps 9-13: execute experts (on-demand jumps)
-                let mut exec_total = 0.0f64;
-                for idx in 0..self.union_active.len() {
-                    let e = self.union_active[idx];
-                    let tokens = self.union_tokens[e as usize];
-                    let key = ExpertKey::new(l, e as usize);
-                    let ctx = CacheCtx {
-                        cur_eam: &self.batch_eam,
-                        n_layers,
-                    };
-                    let on_gpu_before = self.sim.is_on_gpu(key);
-                    let ready = self.sim.demand(key, t, &ctx);
-                    result.demands += 1;
-                    result.stalls.push(ready - t);
-                    for &si in &self.union_seqs[e as usize] {
-                        self.seq_demands[si as usize] += 1;
-                        if on_gpu_before {
-                            self.seq_hits[si as usize] += 1;
-                        }
-                    }
-                    if on_gpu_before {
-                        result.gpu_hits += 1;
-                    }
-                    t = ready;
-                    exec_total += self.compute.expert_time(&self.spec, tokens);
-                }
-                // Distinct experts run in parallel across expert-parallel
-                // nodes (Fig. 13); single node executes them serially.
-                match &self.cluster {
-                    Some(cm) => {
-                        t += exec_total / cm.parallel_expert_factor(self.union_active.len());
-                        t += cm.all_to_all_time(&self.spec, batch_tokens);
-                    }
-                    None => t += exec_total,
-                }
-            }
-            result.token_latencies.push(t - iter_start);
+        let mut step = std::mem::take(&mut self.step_scratch);
+        let mut session = self.begin_session(start, FeedbackMode::Deferred);
+        for (i, s) in seqs.iter().enumerate() {
+            session.admit(i as u64, s);
         }
-
-        // §4.3: feed completed EAMs back for drift handling.
+        while session.step(|id| &seqs[id as usize], &mut step) {
+            result.token_latencies.push(step.latency());
+            result.demands += step.demands;
+            result.gpu_hits += step.gpu_hits;
+            for &s in &step.stalls {
+                result.stalls.push(s);
+            }
+        }
+        result.finish = session.finish();
+        self.step_scratch = step;
+        // §4.3 recall values (the observes themselves ran inside `finish`,
+        // interleaved exactly as the historical loop did — observe does not
+        // touch the tallies, so reading them afterwards is equivalent).
         for si in 0..seqs.len() {
             let recall = if self.seq_demands[si] == 0 {
                 1.0
@@ -389,12 +321,53 @@ impl SimEngine {
                 self.seq_hits[si] as f64 / self.seq_demands[si] as f64
             };
             result.seq_recalls.push(recall);
-            self.eamc
-                .observe(&self.cur_eams[si], recall >= self.cfg.well_predicted_recall);
         }
+    }
 
-        self.clock = t;
-        result.finish = t;
+    /// Open a resumable stepping session (the continuous-batching
+    /// substrate). Sequences are [`BatchSession::admit`]ted into stable
+    /// slots and executed one iteration at a time by
+    /// [`BatchSession::step`]; they may join and leave at any iteration
+    /// boundary. All per-slot working state (current EAM, incremental
+    /// matcher handle, demand/hit tallies) lives in engine-owned pooled
+    /// buffers keyed by slot id, so a warmed session step allocates
+    /// nothing (`tests/alloc_guard.rs`).
+    pub fn begin_session(&mut self, start: f64, feedback: FeedbackMode) -> BatchSession<'_> {
+        self.idle_until(start);
+        let t = self.clock.max(start);
+        // matcher accumulators only pay off when the activation-aware
+        // predictor consumes them; the §8.3/§8.4 baselines skip the upkeep
+        let use_matcher = matches!(self.cfg.predictor, PredictorKind::ActivationAware { .. });
+        self.slot_active.clear();
+        self.slot_occupant.fill(FREE_SLOT);
+        BatchSession {
+            eng: self,
+            feedback,
+            use_matcher,
+            t,
+            admitted: 0,
+        }
+    }
+
+    /// Re-sync every active slot's matcher handle after an EAMC
+    /// reconstruction mid-session: attach to the new build and replay the
+    /// slot's traced EAM into the fresh accumulators.
+    fn resync_active_matchers(&mut self) {
+        for i in 0..self.slot_active.len() {
+            let slot = self.slot_active[i] as usize;
+            self.matchers[slot].attach(&self.eamc);
+            for l in 0..self.spec.n_layers {
+                if self.cur_eams[slot].row_sum(l) == 0 {
+                    continue;
+                }
+                for e in 0..self.spec.experts_per_layer {
+                    let c = self.cur_eams[slot].count(l, e);
+                    if c > 0 {
+                        self.matchers[slot].record(self.eamc.index(), l, e, c);
+                    }
+                }
+            }
+        }
     }
 
     /// The exact order of expert demands `run_batch` will issue — used to
@@ -420,6 +393,321 @@ impl SimEngine {
             }
         }
         out
+    }
+}
+
+/// A resumable batch over the engine: Alg. 1 generalized to
+/// iteration-level scheduling. One session owns the engine for its
+/// lifetime; the serving loop admits arrivals between steps and retires
+/// sequences the iteration they finish (continuous batching), while
+/// [`SimEngine::run_batch_into`] drives the same machinery with a fixed
+/// membership and deferred feedback to keep the static path bitwise
+/// identical.
+///
+/// Sequences are identified by a caller-chosen external id; the routing
+/// trace is looked up through the closure passed to each
+/// [`BatchSession::step`], so the session retains no references and the
+/// per-slot state can live in the engine's pooled buffers.
+pub struct BatchSession<'e> {
+    eng: &'e mut SimEngine,
+    feedback: FeedbackMode,
+    use_matcher: bool,
+    /// Virtual time of the next iteration boundary.
+    t: f64,
+    /// High-water slot count (deferred feedback walks these at finish).
+    admitted: usize,
+}
+
+impl<'e> BatchSession<'e> {
+    /// Virtual time of the current iteration boundary.
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Number of sequences currently in flight.
+    pub fn active(&self) -> usize {
+        self.eng.slot_active.len()
+    }
+
+    /// Read-only view of the underlying engine (stats, EAMC, memory sim).
+    pub fn engine(&self) -> &SimEngine {
+        self.eng
+    }
+
+    /// Advance virtual time across an idle gap (no arrivals, no active
+    /// slots). Queued and in-flight transfers keep draining, exactly as
+    /// they do between static batches.
+    pub fn idle_until(&mut self, t: f64) {
+        self.eng.idle_until(t);
+        if t > self.t {
+            self.t = t;
+        }
+    }
+
+    /// Admit a sequence into the lowest free slot at the current iteration
+    /// boundary; returns the slot id. `ext_id` is the caller's handle
+    /// (e.g. the request index) and is echoed back in
+    /// [`StepResult::executed`] / [`StepResult::finished`]. Only geometry
+    /// scalars are taken from `seq`; the routing trace itself is fetched
+    /// per step.
+    ///
+    /// Admission into an **empty** session is a batch boundary: stale
+    /// queued prefetches and the combined batch EAM are dropped — the same
+    /// reset `run_batch` performs after idling to its start time, which is
+    /// what keeps the single-slot continuous replay bitwise identical to
+    /// the static path.
+    pub fn admit(&mut self, ext_id: u64, seq: &SequenceActivation) -> usize {
+        assert_ne!(ext_id, FREE_SLOT, "external id {FREE_SLOT} is reserved");
+        assert!(seq.iterations() > 0, "cannot admit an empty sequence");
+        let eng = &mut *self.eng;
+        if eng.slot_active.is_empty() {
+            // stale predictions from the previous busy period are dropped
+            eng.sim.clear_queues();
+            eng.batch_eam.clear();
+        }
+        let slot = match eng.slot_occupant.iter().position(|&o| o == FREE_SLOT) {
+            Some(s) => s,
+            None => {
+                // grow every per-slot array together (one-time, pooled)
+                let s = eng.slot_occupant.len();
+                let (l, e) = (eng.spec.n_layers, eng.spec.experts_per_layer);
+                eng.slot_occupant.push(FREE_SLOT);
+                eng.slot_iter.push(0);
+                eng.slot_total.push(0);
+                eng.slot_prompt.push(0);
+                eng.cur_eams.push(Eam::new(l, e));
+                eng.matchers.push(EamcMatcher::new());
+                eng.seq_demands.push(0);
+                eng.seq_hits.push(0);
+                s
+            }
+        };
+        eng.slot_occupant[slot] = ext_id;
+        eng.slot_iter[slot] = 0;
+        eng.slot_total[slot] = seq.iterations() as u32;
+        eng.slot_prompt[slot] = seq.prompt_len as u32;
+        // Alg. 1 step 2: fresh EAM, matcher synced to the current build
+        eng.cur_eams[slot].clear();
+        if self.use_matcher {
+            eng.matchers[slot].attach(&eng.eamc);
+        }
+        eng.seq_demands[slot] = 0;
+        eng.seq_hits[slot] = 0;
+        let pos = eng.slot_active.partition_point(|&s| (s as usize) < slot);
+        eng.slot_active.insert(pos, slot as u32);
+        self.admitted = self.admitted.max(slot + 1);
+        slot
+    }
+
+    /// Execute one forward iteration for every active slot (the loop body
+    /// of Alg. 1, batch-generalized). `seq_of` maps an external id back to
+    /// its routing trace. Returns `false` (touching nothing) when no slot
+    /// is active. Finished sequences retire at the iteration's end; with
+    /// [`FeedbackMode::Immediate`] their recall feeds the EAMC right away,
+    /// their counts leave the batch EAM and their slot frees up.
+    pub fn step<'s, F>(&mut self, seq_of: F, out: &mut StepResult) -> bool
+    where
+        F: Fn(u64) -> &'s SequenceActivation,
+    {
+        let eng = &mut *self.eng;
+        if eng.slot_active.is_empty() {
+            return false;
+        }
+        out.clear();
+        out.t_start = self.t;
+        let mut t = self.t;
+        let (n_layers, n_experts) = (eng.spec.n_layers, eng.spec.experts_per_layer);
+        let use_matcher = self.use_matcher;
+
+        let mut batch_tokens = 0u32;
+        for i in 0..eng.slot_active.len() {
+            let slot = eng.slot_active[i] as usize;
+            out.executed.push(eng.slot_occupant[slot]);
+            batch_tokens += if eng.slot_iter[slot] == 0 {
+                eng.slot_prompt[slot]
+            } else {
+                1
+            };
+        }
+
+        for l in 0..n_layers {
+            // ---- dense part of the layer (attention etc.)
+            t += eng.compute.dense_time(&eng.spec, batch_tokens);
+
+            // ---- Alg. 1 step 5: route, steps 6-7: update cur_eam.
+            // The per-layer union goes into flat reusable scratch
+            // (expert-indexed token totals + touching-slot lists);
+            // only the previous layer's active entries are cleared.
+            for &e in &eng.union_active {
+                eng.union_tokens[e as usize] = 0;
+                eng.union_seqs[e as usize].clear();
+            }
+            eng.union_active.clear();
+            for i in 0..eng.slot_active.len() {
+                let slot = eng.slot_active[i] as usize;
+                let s = seq_of(eng.slot_occupant[slot]);
+                let iter = eng.slot_iter[slot] as usize;
+                for &(e, c) in &s.routes[iter][l] {
+                    eng.cur_eams[slot].record(l, e as usize, c);
+                    eng.batch_eam.record(l, e as usize, c);
+                    eng.predictor.observe_route(l, e as usize, c);
+                    if use_matcher {
+                        eng.matchers[slot].record(eng.eamc.index(), l, e as usize, c);
+                    }
+                    if eng.union_seqs[e as usize].is_empty() {
+                        eng.union_active.push(e);
+                    }
+                    eng.union_tokens[e as usize] += c;
+                    eng.union_seqs[e as usize].push(slot as u32);
+                }
+            }
+            // keep the former BTreeMap's deterministic expert order
+            eng.union_active.sort_unstable();
+
+            // ---- Alg. 1 step 8: resubmit prefetch priorities
+            for i in 0..eng.slot_active.len() {
+                let slot = eng.slot_active[i] as usize;
+                let iter = eng.slot_iter[slot] as usize;
+                if eng.predictor.should_predict(l, iter) {
+                    let mut buf = std::mem::take(&mut eng.pred_buf);
+                    let matcher = if use_matcher {
+                        Some(&eng.matchers[slot])
+                    } else {
+                        None
+                    };
+                    eng.predictor
+                        .predict(&eng.cur_eams[slot], &eng.eamc, matcher, l, &mut buf);
+                    let ctx = CacheCtx {
+                        cur_eam: &eng.batch_eam,
+                        n_layers,
+                    };
+                    for &(key, prio) in buf.iter() {
+                        // Only experts with a positive predicted
+                        // activation ratio are worth PCIe bandwidth;
+                        // zero-ratio entries carry only the EPSILON
+                        // term and would be pure thrash traffic
+                        // (this is how the paper's system "reduces
+                        // prefetching traffic by over 7GB of 13GB").
+                        if prio <= crate::prefetch::EPSILON {
+                            continue;
+                        }
+                        let p = if eng.cfg.priority_enabled { prio } else { 0.5 };
+                        eng.sim.submit_prefetch(key, p, t, &ctx);
+                    }
+                    eng.pred_buf = buf;
+                }
+            }
+
+            // ---- ZeRO semantics: the whole layer's parameters must be
+            // resident before execution, activated or not.
+            if eng.cfg.fetch_all_experts {
+                for e in 0..n_experts {
+                    if !eng.union_seqs[e].is_empty() {
+                        continue; // demanded (and counted) below
+                    }
+                    let key = ExpertKey::new(l, e);
+                    let ctx = CacheCtx {
+                        cur_eam: &eng.batch_eam,
+                        n_layers,
+                    };
+                    let ready = eng.sim.demand(key, t, &ctx);
+                    t = ready;
+                }
+            }
+
+            // ---- Alg. 1 steps 9-13: execute experts (on-demand jumps)
+            let mut exec_total = 0.0f64;
+            for idx in 0..eng.union_active.len() {
+                let e = eng.union_active[idx];
+                let tokens = eng.union_tokens[e as usize];
+                let key = ExpertKey::new(l, e as usize);
+                let ctx = CacheCtx {
+                    cur_eam: &eng.batch_eam,
+                    n_layers,
+                };
+                let on_gpu_before = eng.sim.is_on_gpu(key);
+                let ready = eng.sim.demand(key, t, &ctx);
+                out.demands += 1;
+                out.stalls.push(ready - t);
+                for &slot in &eng.union_seqs[e as usize] {
+                    eng.seq_demands[slot as usize] += 1;
+                    if on_gpu_before {
+                        eng.seq_hits[slot as usize] += 1;
+                    }
+                }
+                if on_gpu_before {
+                    out.gpu_hits += 1;
+                }
+                t = ready;
+                exec_total += eng.compute.expert_time(&eng.spec, tokens);
+            }
+            // Distinct experts run in parallel across expert-parallel
+            // nodes (Fig. 13); single node executes them serially.
+            match &eng.cluster {
+                Some(cm) => {
+                    t += exec_total / cm.parallel_expert_factor(eng.union_active.len());
+                    t += cm.all_to_all_time(&eng.spec, batch_tokens);
+                }
+                None => t += exec_total,
+            }
+        }
+
+        out.t_end = t;
+        self.t = t;
+        eng.clock = t;
+
+        // ---- iteration boundary: advance local iterations, retire
+        // finished sequences at their true finish iteration.
+        let mut i = 0;
+        while i < eng.slot_active.len() {
+            let slot = eng.slot_active[i] as usize;
+            eng.slot_iter[slot] += 1;
+            if eng.slot_iter[slot] >= eng.slot_total[slot] {
+                out.finished.push(eng.slot_occupant[slot]);
+                eng.slot_active.remove(i);
+                if self.feedback == FeedbackMode::Immediate {
+                    // §4.3 drift feedback at retirement; the slot's counts
+                    // leave the batch EAM so cache decisions track only
+                    // the live working set, and the slot frees up.
+                    let recall = if eng.seq_demands[slot] == 0 {
+                        1.0
+                    } else {
+                        eng.seq_hits[slot] as f64 / eng.seq_demands[slot] as f64
+                    };
+                    let rebuilt = eng
+                        .eamc
+                        .observe(&eng.cur_eams[slot], recall >= eng.cfg.well_predicted_recall);
+                    eng.batch_eam.subtract(&eng.cur_eams[slot]);
+                    eng.slot_occupant[slot] = FREE_SLOT;
+                    if rebuilt && use_matcher {
+                        eng.resync_active_matchers();
+                    }
+                }
+                continue; // removal shifted the next slot into position i
+            }
+            i += 1;
+        }
+        true
+    }
+
+    /// Close the session: deferred-mode recall feedback (every admitted
+    /// slot, in slot order — the static `run_batch` observe order) and the
+    /// engine-clock handoff. Returns the session's finish time.
+    pub fn finish(self) -> f64 {
+        let eng = self.eng;
+        if self.feedback == FeedbackMode::Deferred {
+            for slot in 0..self.admitted {
+                let recall = if eng.seq_demands[slot] == 0 {
+                    1.0
+                } else {
+                    eng.seq_hits[slot] as f64 / eng.seq_demands[slot] as f64
+                };
+                eng.eamc
+                    .observe(&eng.cur_eams[slot], recall >= eng.cfg.well_predicted_recall);
+            }
+        }
+        eng.clock = self.t;
+        self.t
     }
 }
 
@@ -660,6 +948,80 @@ mod tests {
         let more: Vec<_> = (0..2).map(|_| w.gen_sequence()).collect();
         b.run_batch_into(&more, b.now(), &mut rb);
         assert_eq!(rb.seq_recalls.len(), 2);
+    }
+
+    #[test]
+    fn session_admits_and_retires_at_iteration_boundaries() {
+        let s = spec();
+        let mut w = workload(&s, 12);
+        let eamc = eamc_for(&s, &mut w, 30, 8);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, 64, CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let seqs: Vec<_> = (0..3).map(|_| w.gen_sequence()).collect();
+        let lookup = |id: u64| &seqs[id as usize];
+        let mut step = StepResult::default();
+        let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+        assert_eq!(session.admit(0, &seqs[0]), 0);
+        assert_eq!(session.admit(1, &seqs[1]), 1);
+        assert!(session.step(&lookup, &mut step));
+        assert_eq!(step.executed, vec![0, 1]);
+        assert!(step.t_end > step.t_start);
+        // run to completion; the third sequence joins mid-flight in a
+        // recycled slot the moment one of the first two retires
+        let mut finished: Vec<u64> = step.finished.clone();
+        let mut late_slot = None;
+        loop {
+            if !session.step(&lookup, &mut step) {
+                break;
+            }
+            finished.extend_from_slice(&step.finished);
+            if late_slot.is_none() && !finished.is_empty() {
+                late_slot = Some(session.admit(2, &seqs[2]));
+            }
+        }
+        assert!(late_slot.expect("third sequence admitted") < 2, "retired slot recycled");
+        finished.sort_unstable();
+        assert_eq!(finished, vec![0, 1, 2], "every sequence retires exactly once");
+        let t = session.finish();
+        assert_eq!(eng.now(), t);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn immediate_feedback_observes_at_retirement() {
+        let s = spec();
+        let mut w = workload(&s, 13);
+        let eamc = eamc_for(&s, &mut w, 20, 6);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, 64, CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let seq = w.gen_sequence();
+        let iters = seq.iterations();
+        let lookup = |_id: u64| &seq;
+        let mut step = StepResult::default();
+        let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+        let before = session.engine().eamc().stats().observed_since_build;
+        session.admit(7, &seq);
+        let mut n = 0;
+        while session.step(&lookup, &mut step) {
+            n += 1;
+        }
+        assert_eq!(n, iters, "one step per iteration");
+        assert_eq!(
+            session.engine().eamc().stats().observed_since_build,
+            before + 1,
+            "retirement must feed the EAMC before the session finishes"
+        );
+        session.finish();
     }
 
     #[test]

@@ -82,6 +82,8 @@ fn run() -> Result<()> {
                 "usage: moe-infinity <serve|generate|models|systems|config> [--flag value ...]\n\
                  \n\
                  serve    --config <toml> | --model <preset> --system <name> --rps <f> --duration <s>\n\
+                 \x20        [--scheduler static|continuous]  batching discipline (default: static\n\
+                 \x20        run-to-completion; continuous admits/retires at iteration boundaries)\n\
                  \x20        [--threads <n>]  offline-construction workers (default:\n\
                  \x20        MOE_POOL_THREADS or all cores; results identical at any count)\n\
                  generate --artifacts <dir> --prompts <n> --tokens <n>\n"
@@ -127,6 +129,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(d) = args.get("dataset") {
         cfg.dataset = d.into();
     }
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = moe_infinity::config::SchedulerKind::by_name(s)
+            .ok_or_else(|| anyhow!("--scheduler: unknown '{s}' (static|continuous)"))?;
+    }
     if let Some(r) = args.get_f64("rps")? {
         cfg.workload.rps = r;
     }
@@ -143,21 +149,32 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
 
     println!(
-        "serving {} [{}] dataset={} rps={} duration={}s (offline pool: {} threads) ...",
+        "serving {} [{}] dataset={} scheduler={} rps={} duration={}s (offline pool: {} threads) ...",
         cfg.model,
         cfg.system,
         cfg.dataset,
+        cfg.scheduler.name(),
         cfg.workload.rps,
         cfg.workload.duration,
         pool.threads()
     );
     let mut report = benchsuite::run_serve_with(&cfg, &pool)?;
     println!("requests        : {}", report.requests);
-    println!("batches         : {}", report.batches);
+    println!(
+        "{}: {}",
+        if cfg.scheduler == moe_infinity::config::SchedulerKind::Continuous {
+            "iterations      "
+        } else {
+            "batches         "
+        },
+        report.batches
+    );
     println!("tokens          : {}", report.tokens);
     println!("mean token lat  : {}", fmt_secs(report.token_latency.mean()));
     println!("p50  token lat  : {}", fmt_secs(report.token_latency.p50()));
     println!("p99  token lat  : {}", fmt_secs(report.token_latency.p99()));
+    println!("p50  request lat: {}", fmt_secs(report.request_latency.p50()));
+    println!("p99  request lat: {}", fmt_secs(report.request_latency.p99()));
     println!("throughput      : {:.1} tokens/s", report.token_throughput());
     Ok(())
 }

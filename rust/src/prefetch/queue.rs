@@ -40,10 +40,15 @@ impl PartialOrd for HeapItem {
 impl Ord for HeapItem {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // max-heap by priority; tie-break deterministic: earlier layer, then
-        // lower expert id, then newer generation.
-        self.prio
-            .partial_cmp(&other.prio)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        // lower expert id, then newer generation. The order must be TOTAL:
+        // the old `partial_cmp(..).unwrap_or(Equal)` made a NaN priority
+        // compare Equal to everything, which violates transitivity and
+        // silently corrupts the binary heap's pop order. A NaN now sorts
+        // below every other priority (it is never worth a transfer) and the
+        // key/gen tie-breaks keep the order total and antisymmetric.
+        let a = if self.prio.is_nan() { f64::NEG_INFINITY } else { self.prio };
+        let b = if other.prio.is_nan() { f64::NEG_INFINITY } else { other.prio };
+        a.total_cmp(&b)
             .then_with(|| other.key.cmp(&self.key))
             .then_with(|| self.gen.cmp(&other.gen))
     }
@@ -79,6 +84,7 @@ impl PrefetchQueue {
     /// already being copied (§5.3 in-flight dedup). Returns whether the key
     /// is now queued.
     pub fn submit(&mut self, key: ExpertKey, prio: f64) -> bool {
+        debug_assert!(!prio.is_nan(), "NaN prefetch priority for {key}");
         if self.in_flight.contains(&key) {
             return false;
         }
@@ -98,6 +104,10 @@ impl PrefetchQueue {
             gen: self.gen,
             key,
         });
+        // per-iteration re-prioritization resubmits whole prediction sets
+        // without ever popping; compacting here too keeps the heap within a
+        // constant factor of the live set under pure submit/cancel churn
+        self.maybe_compact();
         true
     }
 
@@ -124,6 +134,7 @@ impl PrefetchQueue {
     pub fn cancel(&mut self, key: ExpertKey) {
         if self.live.remove(&key).is_some() {
             self.stale += 1;
+            self.maybe_compact();
         }
     }
 
@@ -151,8 +162,11 @@ impl PrefetchQueue {
         self.stale = 0;
     }
 
-    /// Heap housekeeping: drop stale entries in place when they dominate,
-    /// keeping pop amortized O(log n) even under heavy priority churn.
+    /// Heap housekeeping: drop stale entries in place when they dominate.
+    /// Runs from `pop` *and* from `submit`/`cancel` — a workload that only
+    /// re-prioritizes (submit/cancel churn with no pops, exactly what
+    /// per-iteration re-prediction does) would otherwise grow the heap
+    /// without bound. Keeps every operation amortized O(log n).
     /// `retain` filters the heap's own buffer — no allocation, so the
     /// serving hot path stays allocation-free through compactions too.
     fn maybe_compact(&mut self) {
@@ -266,6 +280,91 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn submit_churn_without_pop_keeps_heap_bounded() {
+        // regression: compaction used to run only from `pop`, so pure
+        // re-prioritization churn accumulated stale heap entries forever
+        let mut q = PrefetchQueue::new();
+        for round in 0..1_000 {
+            for e in 0..8 {
+                q.submit(k(0, e), ((e + round) % 7) as f64 * 0.1);
+            }
+        }
+        assert_eq!(q.len(), 8);
+        assert!(
+            q.heap.len() <= 4 * q.live.len() + 65,
+            "heap {} entries for {} live keys",
+            q.heap.len(),
+            q.live.len()
+        );
+        // the queue still pops correctly after all that churn
+        let mut last = f64::INFINITY;
+        let mut n = 0;
+        while let Some((_, p)) = q.pop() {
+            assert!(p <= last + 1e-12);
+            last = p;
+            n += 1;
+        }
+        assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn cancel_churn_keeps_heap_bounded() {
+        let mut q = PrefetchQueue::new();
+        for _ in 0..1_000 {
+            q.submit(k(1, 0), 0.5);
+            q.submit(k(1, 1), 0.4);
+            q.cancel(k(1, 0));
+            q.cancel(k(1, 1));
+        }
+        assert!(q.is_empty());
+        assert!(
+            q.heap.len() <= 65,
+            "cancel churn left {} heap entries with nothing live",
+            q.heap.len()
+        );
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn heap_order_is_total_under_nan() {
+        use std::cmp::Ordering;
+        let item = |prio: f64, gen: u64, key| HeapItem { prio, gen, key };
+        let nan = item(f64::NAN, 1, k(0, 0));
+        let fin = item(0.1, 2, k(0, 1));
+        // NaN sorts below every finite priority, both directions agree
+        assert_eq!(nan.cmp(&fin), Ordering::Less);
+        assert_eq!(fin.cmp(&nan), Ordering::Greater);
+        // two NaNs fall through to the deterministic key/gen tie-break
+        let nan2 = item(f64::NAN, 3, k(0, 2));
+        assert_eq!(nan.cmp(&nan2), nan2.cmp(&nan).reverse());
+        assert_eq!(nan.cmp(&item(f64::NAN, 1, k(0, 0))), Ordering::Equal);
+        // and a max-heap with a NaN member still pops sanely
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 1), 0.9);
+        q.submit(k(0, 2), 0.5);
+        // inject the NaN below the public (debug-asserted) API
+        q.gen += 1;
+        q.live.insert(k(0, 3), (q.gen, f64::NAN));
+        q.heap.push(HeapItem {
+            prio: f64::NAN,
+            gen: q.gen,
+            key: k(0, 3),
+        });
+        assert_eq!(q.pop().unwrap().0, k(0, 1));
+        assert_eq!(q.pop().unwrap().0, k(0, 2));
+        assert_eq!(q.pop().unwrap().0, k(0, 3), "NaN pops last, not lost");
+        assert!(q.pop().is_none());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN prefetch priority")]
+    fn nan_submit_asserts_in_debug() {
+        let mut q = PrefetchQueue::new();
+        q.submit(k(0, 0), f64::NAN);
     }
 
     #[test]

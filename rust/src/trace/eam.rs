@@ -220,6 +220,34 @@ impl Eam {
         }
     }
 
+    /// Remove `other`'s counts from this matrix — the continuous-batching
+    /// retire path subtracts a finished sequence's EAM from the combined
+    /// batch EAM so cache decisions reflect only the *currently active*
+    /// sequences. Precondition: `other` is cell-wise ≤ `self` (it was
+    /// previously accumulated in). Rows that actually change bump their
+    /// version so derived caches (the indexed eviction policy) invalidate.
+    pub fn subtract(&mut self, other: &Eam) {
+        debug_assert_eq!(self.layers, other.layers);
+        debug_assert_eq!(self.experts, other.experts);
+        for l in 0..self.layers {
+            if other.row_sums[l] == 0 {
+                continue;
+            }
+            let base = l * self.experts;
+            for e in 0..self.experts {
+                let c = other.counts[base + e];
+                debug_assert!(
+                    self.counts[base + e] >= c,
+                    "subtract underflow at ({l},{e}): {} < {c}",
+                    self.counts[base + e]
+                );
+                self.counts[base + e] -= c;
+            }
+            self.row_sums[l] -= other.row_sums[l];
+            self.row_versions[l] += 1;
+        }
+    }
+
     /// Memory footprint of the counts (for the §8.5 overhead accounting).
     pub fn bytes(&self) -> usize {
         self.counts.len() * std::mem::size_of::<u32>()
@@ -371,6 +399,37 @@ mod tests {
         let b = a.clone();
         assert_ne!(a.id(), b.id());
         assert_eq!(a, b, "logical equality ignores identity");
+    }
+
+    #[test]
+    fn subtract_reverses_accumulation_and_bumps_changed_rows() {
+        let a = eam_from(&[&[1, 2], &[0, 7]]);
+        let b = eam_from(&[&[0, 4], &[1, 1]]);
+        let mut sum = Eam::new(2, 2);
+        // accumulate both, then retire `a`
+        for m in [&a, &b] {
+            for l in 0..2 {
+                for e in 0..2 {
+                    let c = m.count(l, e);
+                    if c > 0 {
+                        sum.record(l, e, c);
+                    }
+                }
+            }
+        }
+        sum.subtract(&a);
+        assert_eq!(sum, b);
+        assert_eq!(sum.row_sum(1), 2);
+        // a row the subtrahend never touched keeps its version
+        let mut big = eam_from(&[&[3, 0], &[5, 5]]);
+        let mut sub = Eam::new(2, 2);
+        sub.record(1, 0, 2);
+        let v0 = big.row_version(0);
+        let v1 = big.row_version(1);
+        big.subtract(&sub);
+        assert_eq!(big.row_version(0), v0, "untouched row stays");
+        assert!(big.row_version(1) > v1, "changed row bumps");
+        assert_eq!(big.count(1, 0), 3);
     }
 
     #[test]

@@ -1,20 +1,24 @@
 //! Allocation-regression guard for the serving hot path.
 //!
-//! The tentpole contract: after warm-up, a steady-state `run_batch` decode
-//! pass performs **zero** heap allocations — the per-layer union, the
-//! per-sequence EAMs and matcher handles, the prediction buffer, the
-//! prefetch queues, the eviction heap and the EAMC recent-window ring all
-//! recycle engine-owned buffers. This test installs the counting global
-//! allocator from `util::alloc` (only this test binary owns the global
-//! allocator) and asserts the count is exactly zero for a warmed batch.
+//! Two contracts: after warm-up, (1) a steady-state `run_batch` decode
+//! pass and (2) a continuous-batching admit → step… → retire window on a
+//! live `BatchSession` each perform **zero** heap allocations — the
+//! per-layer union, the per-slot EAMs and matcher handles, the prediction
+//! buffer, the prefetch queues, the eviction heap, the step-event buffers
+//! and the EAMC recent-window ring all recycle engine-owned storage. This
+//! test installs the counting global allocator from `util::alloc` (only
+//! this test binary owns the global allocator) and asserts the count is
+//! exactly zero for both warmed paths.
 
 use moe_infinity::cache::CacheKind;
-use moe_infinity::engine::{BatchResult, ComputeModel, EngineConfig, SimEngine};
+use moe_infinity::engine::{
+    BatchResult, ComputeModel, EngineConfig, FeedbackMode, SimEngine, StepResult,
+};
 use moe_infinity::memory::{Link, Tier, TierConfig};
 use moe_infinity::model::ModelSpec;
 use moe_infinity::trace::Eamc;
 use moe_infinity::util::alloc::{measure, CountingAlloc};
-use moe_infinity::workload::{DatasetPreset, Workload};
+use moe_infinity::workload::{DatasetPreset, SequenceActivation, Workload};
 
 #[global_allocator]
 static COUNTER: CountingAlloc = CountingAlloc::new();
@@ -76,6 +80,74 @@ fn steady_state_decode_batch_is_allocation_free() {
     // sanity: the measured batch really did work
     assert!(!result.token_latencies.is_empty());
     assert!(result.demands > 0);
+}
+
+#[test]
+fn steady_state_continuous_batching_is_allocation_free() {
+    // The continuous-batching contract: once every pooled buffer (slot
+    // state, matcher handles, union scratch, prefetch queues, step-event
+    // buffers, the EAMC recent ring) has reached its high-water mark, a
+    // full admit → step… → retire window on a live session performs zero
+    // heap allocations — admission recycles freed slots, retirement feeds
+    // the EAMC through the in-place ring and subtracts the finished EAM
+    // from the batch EAM without allocating.
+    let spec = ModelSpec::preset("switch-base-32").unwrap();
+    let ds = DatasetPreset::by_name("translation").unwrap();
+    let mut w = Workload::new(&spec, ds, 7);
+    let eam_ds = w.gen_eam_dataset(30);
+    let mut eamc = Eamc::construct(8, &eam_ds, 11);
+    // steady state = no online reconstruction; small recent ring so warm-up
+    // fills it and later observes recycle slots in place
+    eamc.set_rebuild_threshold(usize::MAX);
+    eamc.set_recent_capacity(2);
+
+    let mut eng = SimEngine::new(
+        spec.clone(),
+        tier(&spec, 64),
+        eamc,
+        ComputeModel::a5000(),
+        EngineConfig::default(),
+    );
+    let a = w.gen_sequence();
+    let b = w.gen_sequence();
+    let mut step = StepResult::default();
+    let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+
+    // one admission/retirement cycle over the fixed sequence pair
+    fn cycle<'s>(
+        session: &mut moe_infinity::engine::BatchSession<'_>,
+        step: &mut StepResult,
+        a: &'s SequenceActivation,
+        b: &'s SequenceActivation,
+        base: u64,
+    ) {
+        session.admit(base, a);
+        session.admit(base + 1, b);
+        let mut active = 2usize;
+        while active > 0 {
+            assert!(session.step(|id: u64| if id % 2 == 0 { a } else { b }, step));
+            active -= step.finished.len();
+        }
+    }
+
+    // warm every pool, queue, ring and slot buffer to its high-water mark
+    for i in 0..5u64 {
+        cycle(&mut session, &mut step, &a, &b, 2 * i);
+    }
+
+    let (_, stats) = measure(|| {
+        cycle(&mut session, &mut step, &a, &b, 10);
+    });
+    assert_eq!(
+        stats.total(),
+        0,
+        "a warmed continuous-batching window (admit + steps + retire) must \
+         not allocate, but did: {stats:?}"
+    );
+    // sanity: the measured window really did work
+    assert!(step.t_end > 0.0);
+    let t = session.finish();
+    assert_eq!(eng.now(), t);
 }
 
 #[test]

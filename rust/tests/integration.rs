@@ -40,6 +40,31 @@ fn full_serving_pipeline_all_systems() {
 }
 
 #[test]
+fn continuous_scheduler_serves_all_fast_systems() {
+    // iteration-level scheduling must compose with every policy bundle the
+    // engine supports (incl. the fetch-all ZeRO semantics); keep the slow
+    // fetch-all systems on a short replay like the static test does
+    use moe_infinity::config::SchedulerKind;
+    for system in ["moe-infinity", "pytorch-um"] {
+        let mut cfg = small_cfg(system);
+        cfg.scheduler = SchedulerKind::Continuous;
+        let report = run_serve(&cfg).unwrap_or_else(|e| panic!("{system}: {e}"));
+        assert!(report.requests > 0, "{system} served nothing");
+        assert_eq!(
+            report.request_latency.len() as u64,
+            report.requests,
+            "{system}: every request must record a completion latency"
+        );
+        assert!(report.token_throughput() > 0.0);
+    }
+    let mut cfg = small_cfg("zero-offload");
+    cfg.scheduler = SchedulerKind::Continuous;
+    cfg.workload.duration = 3.0;
+    let report = run_serve(&cfg).unwrap();
+    assert!(report.requests > 0, "fetch-all semantics work under continuous");
+}
+
+#[test]
 fn moe_infinity_beats_baselines_end_to_end() {
     // The paper's headline ordering at matched workloads (Fig. 4).
     let mut means = std::collections::HashMap::new();

@@ -8,7 +8,7 @@
 //! both serial and parallel modes.
 
 use moe_infinity::benchsuite::{build_eamc_with, run_grid, run_serve_with};
-use moe_infinity::config::ServeConfig;
+use moe_infinity::config::{SchedulerKind, ServeConfig};
 use moe_infinity::model::ModelSpec;
 use moe_infinity::server::ServeReport;
 use moe_infinity::trace::{kmeans_medoids_with, Eam, Eamc};
@@ -88,10 +88,16 @@ fn build_eamc_is_thread_invariant_end_to_end() {
 
 fn small_grid() -> Vec<ServeConfig> {
     let mut grid = Vec::new();
-    for (system, rps) in [("moe-infinity", 1.0), ("moe-infinity", 3.0), ("pytorch-um", 1.0)] {
+    for (system, rps, sched) in [
+        ("moe-infinity", 1.0, SchedulerKind::Static),
+        ("moe-infinity", 3.0, SchedulerKind::Continuous),
+        ("pytorch-um", 1.0, SchedulerKind::Static),
+        ("pytorch-um", 3.0, SchedulerKind::Continuous),
+    ] {
         let mut cfg = ServeConfig::default();
         cfg.model = "switch-base-32".into();
         cfg.system = system.into();
+        cfg.scheduler = sched;
         cfg.workload.rps = rps;
         cfg.workload.duration = 6.0;
         cfg.eamc.trace_sequences = 25;
@@ -142,6 +148,57 @@ fn run_grid_is_bitwise_identical_across_pool_sizes() {
             let g = g.expect("grid serve");
             assert_reports_identical(&g, b, &format!("point {i} at {threads} threads"));
         }
+    }
+}
+
+/// The scheduler differential contract: with `max_batch = 1` continuous
+/// batching degenerates to run-to-completion — admission instants equal the
+/// static batcher's dispatch instants (`max(arrival, engine-free)`), every
+/// step replays `run_batch`'s iteration body, and admission into an empty
+/// session performs the same queue/batch-EAM reset `run_batch` does. The
+/// two replays must therefore agree **bitwise**, both when requests are
+/// sparse (engine idles between them) and when they queue behind each
+/// other. This also pins the static path itself: `run_batch_into` is now
+/// implemented on `BatchSession::step`, and any drift from the historical
+/// loop would show up here and in the pooled-grid determinism checks.
+#[test]
+fn continuous_single_slot_matches_static_bitwise() {
+    for rps in [0.3, 3.0] {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        // 4GB GPU: offloading (and therefore the whole prefetch/cache/queue
+        // machinery) actually engages instead of everything staying warm
+        cfg.memory.gpu_gb = 4.0;
+        cfg.workload.rps = rps;
+        cfg.workload.duration = 8.0;
+        cfg.batching.max_batch = 1;
+        cfg.eamc.trace_sequences = 25;
+        cfg.eamc.capacity = 6;
+        let pool = Pool::serial();
+        let stat = run_serve_with(&cfg, &pool).expect("static serve");
+        let mut c2 = cfg.clone();
+        c2.scheduler = SchedulerKind::Continuous;
+        let cont = run_serve_with(&c2, &pool).expect("continuous serve");
+        assert_eq!(stat.requests, cont.requests, "rps={rps}: requests");
+        assert_eq!(stat.tokens, cont.tokens, "rps={rps}: tokens");
+        assert_eq!(
+            stat.makespan.to_bits(),
+            cont.makespan.to_bits(),
+            "rps={rps}: makespan {} vs {}",
+            stat.makespan,
+            cont.makespan
+        );
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(stat.token_latency.samples()),
+            bits(cont.token_latency.samples()),
+            "rps={rps}: per-token latencies must be bitwise identical"
+        );
+        assert_eq!(
+            bits(stat.request_latency.samples()),
+            bits(cont.request_latency.samples()),
+            "rps={rps}: per-request latencies must be bitwise identical"
+        );
     }
 }
 

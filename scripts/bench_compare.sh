@@ -1,13 +1,17 @@
 #!/usr/bin/env bash
-# Diff two BENCH_*.json files (flat {"name": ns_per_op} objects as written
-# by benchsuite::BenchJson) and print per-row speedup, old/new:
+# Diff two BENCH_*.json files (flat {"name": value} objects as written by
+# benchsuite::BenchJson) and print per-row speedup, old/new:
 #
 #   scripts/bench_compare.sh BENCH_offline.before.json BENCH_offline.json
+#   scripts/bench_compare.sh BENCH_scheduler.before.json BENCH_scheduler.json
 #
-# speedup > 1 means the new run is faster. Rows present in only one file
-# print with a '-' placeholder. `*_speedup_*` rows are already ratios; the
-# old/new columns still show them, the speedup column then compares the
-# ratios themselves.
+# Values are ns/op for the perf_* benches and seconds / tokens-per-second
+# for BENCH_scheduler.json (`*_p50_s`/`*_p99_s`/`*_tput` rows — for
+# latency rows speedup > 1 still means the new run is faster; for `_tput`
+# rows the ratio is old/new throughput, so < 1 means the new run moves
+# MORE tokens). Rows present in only one file print with a '-'
+# placeholder. `*_speedup_*` rows are already ratios; the old/new columns
+# still show them, the speedup column then compares the ratios themselves.
 set -euo pipefail
 if [ $# -ne 2 ]; then
     echo "usage: $0 OLD.json NEW.json" >&2

@@ -4,12 +4,12 @@
 #   scripts/tier1.sh
 #
 # Runs the repo's tier-1 gate (release build + full test suite), the §Perf
-# hot-path micro-benchmarks and the offline-path benchmarks in smoke mode
-# (emitting BENCH_hotpath.json and BENCH_offline.json, name → ns/op, used
-# by EXPERIMENTS.md §Perf — diff runs with scripts/bench_compare.sh), and a
-# determinism re-check that pins the parallel offline layer to its serial
-# results with MOE_POOL_THREADS=1. Drop MOE_BENCH_SMOKE for full-length
-# measurements.
+# hot-path micro-benchmarks, the offline-path benchmarks and the
+# scheduler comparison in smoke mode (emitting BENCH_hotpath.json,
+# BENCH_offline.json and BENCH_scheduler.json — diff runs with
+# scripts/bench_compare.sh), and a determinism re-check that pins the
+# parallel offline layer to its serial results with MOE_POOL_THREADS=1.
+# Drop MOE_BENCH_SMOKE for full-length measurements.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,11 +25,19 @@ MOE_BENCH_SMOKE=1 cargo bench --bench perf_hotpath
 echo "== perf_offline (smoke mode -> BENCH_offline.json)"
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_offline
 
+echo "== perf_scheduler (smoke mode -> BENCH_scheduler.json)"
+# static vs continuous batching on the same Poisson trace; asserts the
+# overload-point p99 improvement before writing the JSON
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_scheduler
+
 echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
-# the suite pins explicit pool sizes internally; forcing the env-derived
-# default pool serial covers the remaining (from_env) code path
+# the suite pins explicit pool sizes internally (and now also the
+# scheduler differential: continuous at max_batch=1 == static, bitwise);
+# forcing the env-derived default pool serial covers the remaining
+# (from_env) code path
 MOE_POOL_THREADS=1 cargo test -q --test parallel
 
 echo "== done; bench numbers:"
 cat BENCH_hotpath.json
 cat BENCH_offline.json
+cat BENCH_scheduler.json
