@@ -1,0 +1,144 @@
+//! §Router — task-affinity vs round-robin multi-replica serving.
+//!
+//! eMoE's observation (arXiv 2503.06823), transplanted onto MoE-Infinity's
+//! cache: which replica a sequence lands on decides whether the replica's
+//! EAMC/expert cache already matches its task — i.e. whether activation
+//! prediction works at all (MoE-Beyond, arXiv 2508.17137). This bench
+//! replays the **same mixed-task Poisson overload trace** through the
+//! `Router` at N∈{1,2,4} replicas under round-robin and task-affinity
+//! dispatch (least-loaded rides along in full mode) and records p99
+//! request latency, p99 TTFT, aggregate GPU hit ratio and token
+//! throughput per point.
+//!
+//! Results print as a table and land in `BENCH_router.json` (latency rows
+//! in seconds, `*_hit_*` rows as ratios in [0,1], `*_tput_*` rows in
+//! tokens/s); diff runs with `scripts/bench_compare.sh`. Set
+//! `MOE_BENCH_SMOKE=1` for the fast CI pass (scripts/tier1.sh does).
+//!
+//! Acceptance target (EXPERIMENTS.md §Router): at N=2 on the overload
+//! trace, task-affinity must beat round-robin on BOTH the GPU hit ratio
+//! and p99 request latency — asserted before the JSON is written.
+
+use moe_infinity::benchsuite::{run_grid, BenchJson, Table};
+use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::server::RoutingPolicy;
+use moe_infinity::util::{fmt_secs, Pool};
+
+fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let replica_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let policies: &[RoutingPolicy] = if smoke {
+        &[RoutingPolicy::RoundRobin, RoutingPolicy::TaskAffinity]
+    } else {
+        &[
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::TaskAffinity,
+        ]
+    };
+    let duration = if smoke { 8.0 } else { 30.0 };
+    let pool = Pool::from_env();
+    println!(
+        "router bench: {} mode, replicas {:?}, duration {duration}s",
+        if smoke { "smoke" } else { "full" },
+        replica_counts
+    );
+
+    // the same trace at every point: the request stream is a pure function
+    // of (seed, workload) and ignores replicas/routing. At N=1 every
+    // policy is bitwise the bare continuous scheduler (routing is never
+    // consulted), so a single round-robin baseline point stands for all.
+    let mut grid = Vec::new();
+    for &n in replica_counts {
+        let n_policies: &[RoutingPolicy] = if n == 1 {
+            &[RoutingPolicy::RoundRobin]
+        } else {
+            policies
+        };
+        for &policy in n_policies {
+            let mut cfg = ServeConfig::default();
+            cfg.model = "switch-base-32".into();
+            cfg.dataset = "mixed".into();
+            // 4GB GPU: the expert cache is a fraction of the model, so hit
+            // ratio is decided by locality — exactly what routing controls
+            cfg.memory.gpu_gb = 4.0;
+            cfg.scheduler = SchedulerKind::Continuous;
+            cfg.replicas = n;
+            cfg.routing = policy;
+            cfg.workload.rps = if smoke { 8.0 } else { 10.0 };
+            cfg.workload.duration = duration;
+            cfg.batching.max_batch = 8;
+            cfg.batching.max_wait = 0.5;
+            cfg.eamc.trace_sequences = if smoke { 80 } else { 240 };
+            cfg.eamc.capacity = if smoke { 24 } else { 60 };
+            grid.push(cfg);
+        }
+    }
+
+    let mut table = Table::new(&[
+        "routing", "N", "p99 req", "p99 TTFT", "GPU hit", "tokens/s",
+    ]);
+    let mut json = BenchJson::new();
+    // (hit ratio, p99) per policy at N=2 — the acceptance comparison
+    let mut rr2 = None;
+    let mut aff2 = None;
+    for (cfg, r) in grid.iter().zip(run_grid(&grid, &pool)) {
+        let mut r = r.expect("router serve");
+        let p99 = r.request_latency.p99();
+        let ttft99 = r.ttft.p99();
+        let hit = r.gpu_hit_ratio();
+        let tput = r.token_throughput();
+        let name = cfg.routing.name();
+        let n = cfg.replicas;
+        table.row(&[
+            name.into(),
+            format!("{n}"),
+            fmt_secs(p99),
+            fmt_secs(ttft99),
+            format!("{hit:.3}"),
+            format!("{tput:.1}"),
+        ]);
+        let tag = name.replace('-', "_");
+        json.add(&format!("{tag}_p99_s_n{n}"), p99);
+        json.add(&format!("{tag}_ttft_p99_s_n{n}"), ttft99);
+        json.add(&format!("{tag}_hit_n{n}"), hit);
+        json.add(&format!("{tag}_tput_n{n}"), tput);
+        if n == 2 {
+            match cfg.routing {
+                RoutingPolicy::RoundRobin => rr2 = Some((hit, p99)),
+                RoutingPolicy::TaskAffinity => aff2 = Some((hit, p99)),
+                RoutingPolicy::LeastLoaded => {}
+            }
+        }
+    }
+    table.print("§Router — routing policies on the same mixed-task overload trace");
+
+    // write the rows BEFORE the acceptance asserts: if affinity misses the
+    // target on a CI machine, the full per-policy table survives for
+    // diagnosis instead of just the two scalars in the panic message
+    let path = "BENCH_router.json";
+    match json.write(path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+
+    let (rr_hit, rr_p99) = rr2.expect("round-robin N=2 ran");
+    let (aff_hit, aff_p99) = aff2.expect("task-affinity N=2 ran");
+    println!(
+        "\nN=2: affinity hit {aff_hit:.3} vs round-robin {rr_hit:.3}; \
+         affinity p99 {} vs round-robin {} ({:.2}x)",
+        fmt_secs(aff_p99),
+        fmt_secs(rr_p99),
+        rr_p99 / aff_p99
+    );
+    assert!(
+        aff_hit > rr_hit,
+        "task-affinity must beat round-robin on GPU hit ratio at N=2 \
+         (affinity {aff_hit}, round-robin {rr_hit})"
+    );
+    assert!(
+        aff_p99 < rr_p99,
+        "task-affinity must beat round-robin on p99 request latency at N=2 \
+         (affinity {aff_p99}, round-robin {rr_p99})"
+    );
+}

@@ -75,6 +75,8 @@ fn main() {
         json.add(&format!("{name}_p50_s_rps{rps}"), p50);
         json.add(&format!("{name}_p99_s_rps{rps}"), p99);
         json.add(&format!("{name}_tput_rps{rps}"), tput);
+        json.add(&format!("{name}_ttft_p99_s_rps{rps}"), r.ttft.p99());
+        json.add(&format!("{name}_tpot_p50_s_rps{rps}"), r.tpot.p50());
         if rps == *rps_points.last().unwrap() {
             overload = Some(match (overload, cfg.scheduler) {
                 (_, SchedulerKind::Static) => (p99, f64::NAN),
@@ -97,6 +99,38 @@ fn main() {
         cont_p99 < static_p99,
         "continuous batching must improve p99 request latency under overload \
          (static {static_p99}, continuous {cont_p99})"
+    );
+
+    // --- retired-slot prefetch cancellation: dead-PCIe-traffic delta ---
+    // Same continuous overload replay with and without
+    // `cancel_retired_prefetch`: the `cancel_*` rows quantify how much
+    // prefetch traffic retirement-time cancellation saves (the ROADMAP
+    // "measure with BENCH_scheduler.json first" item). Off stays the
+    // default — the bitwise differential suite pins the uncancelled replay.
+    let overload_rps = *rps_points.last().unwrap();
+    let mut cancel_cfg = grid.last().unwrap().clone();
+    cancel_cfg.scheduler = SchedulerKind::Continuous;
+    cancel_cfg.workload.rps = overload_rps;
+    // small cache => real offloading churn, where dead prefetches cost
+    cancel_cfg.memory.gpu_gb = 4.0;
+    let mut cancel_grid = vec![cancel_cfg.clone(), cancel_cfg];
+    cancel_grid[1].cancel_retired_prefetch = true;
+    let results = run_grid(&cancel_grid, &pool);
+    let mut cancel_mb = [0.0f64; 2];
+    for (i, r) in results.into_iter().enumerate() {
+        let mut r = r.expect("cancellation serve");
+        let label = if i == 0 { "cancel_off" } else { "cancel_on" };
+        let mb = r.prefetch_bytes as f64 / 1e6;
+        cancel_mb[i] = mb;
+        json.add(&format!("{label}_prefetch_mb"), mb);
+        json.add(&format!("{label}_p99_s"), r.request_latency.p99());
+    }
+    println!(
+        "\nretired-prefetch cancellation at rps {overload_rps}: \
+         {:.1} MB prefetched without, {:.1} MB with ({:+.1} MB delta)",
+        cancel_mb[0],
+        cancel_mb[1],
+        cancel_mb[1] - cancel_mb[0]
     );
 
     let path = "BENCH_scheduler.json";

@@ -8,10 +8,12 @@ use crate::engine::{ComputeModel, EngineConfig, SimEngine};
 use crate::memory::TierConfig;
 use crate::model::ModelSpec;
 use crate::prefetch::{Predictor, PredictorKind};
-use crate::server::{serve, serve_continuous, Batcher, ServeReport};
+use crate::server::{
+    Batcher, ContinuousScheduler, Router, Scheduler, ServeReport, StaticScheduler,
+};
 use crate::trace::{Eam, Eamc};
 use crate::util::{Pool, Rng};
-use crate::workload::{ArrivalProcess, DatasetPreset, Request, Workload};
+use crate::workload::{ArrivalProcess, DatasetPreset, Priority, Request, Workload};
 
 /// Build an EAMC from a freshly generated offline trace (§4.2's "relevant
 /// dataset" = the validation split of the same distribution). Dataset
@@ -69,9 +71,26 @@ pub fn build_engine_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<SimEn
         EngineConfig {
             predictor: cfg.predictor_kind()?,
             fetch_all_experts: crate::baselines::fetch_all_for(&cfg.system)?,
+            cancel_retired_prefetch: cfg.cancel_retired_prefetch,
             ..Default::default()
         },
     ))
+}
+
+/// Build the `cfg.replicas` engines served behind the router. Replica 0
+/// uses `cfg.seed` verbatim (a 1-replica router is therefore bitwise
+/// identical to the bare scheduler); later replicas offset the seed, so
+/// their offline EAMCs sample the same workload distribution differently —
+/// which is what gives task-affinity routing a signal to separate tasks on
+/// from the very first request.
+pub fn build_replica_engines_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<Vec<SimEngine>> {
+    (0..cfg.replicas)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed.wrapping_add(i as u64 * 0x9E37);
+            build_engine_with(&c, pool)
+        })
+        .collect()
 }
 
 /// Generate the request stream for a config.
@@ -92,15 +111,22 @@ pub fn build_requests(cfg: &ServeConfig) -> anyhow::Result<Vec<Request>> {
         }
     };
     let ts = proc.timestamps(cfg.workload.duration, &mut rng);
-    Ok(ts
+    let mut reqs: Vec<Request> = ts
         .into_iter()
         .enumerate()
-        .map(|(i, arrival)| Request {
-            id: i as u64,
-            arrival,
-            seq: w.gen_sequence(),
-        })
-        .collect())
+        .map(|(i, arrival)| Request::new(i as u64, arrival, w.gen_sequence()))
+        .collect();
+    // class tagging draws from its own stream, and only when requested —
+    // the default (0.0) stream is byte-identical to the class-unaware one
+    if cfg.workload.interactive_frac > 0.0 {
+        let mut crng = Rng::new(cfg.seed ^ 0xC1A55);
+        for r in reqs.iter_mut() {
+            if crng.f64() < cfg.workload.interactive_frac {
+                r.class.priority = Priority::Interactive;
+            }
+        }
+    }
+    Ok(reqs)
 }
 
 /// Run a full serving replay for a config: engine + arrivals + batcher.
@@ -109,19 +135,35 @@ pub fn run_serve(cfg: &ServeConfig) -> anyhow::Result<ServeReport> {
 }
 
 /// [`run_serve`] with offline construction on an explicit pool (the replay
-/// itself is single-threaded — it is one engine's virtual timeline).
-/// `cfg.scheduler` selects between the static run-to-completion loop and
-/// continuous batching; both replay the identical request trace.
+/// itself is single-threaded — it is one or more engines' virtual
+/// timelines). `cfg.scheduler` selects the serving discipline,
+/// `cfg.priority` the continuous admission policy, and `cfg.replicas` /
+/// `cfg.routing` put a multi-replica [`Router`] in front; every
+/// combination replays the identical request trace.
 pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeReport> {
     // surface invalid fields (e.g. a NaN batching.max_wait) as a per-point
     // Err — `Batcher::new` would otherwise assert and abort a whole grid
     cfg.validate()?;
-    let mut engine = build_engine_with(cfg, pool)?;
     let requests = build_requests(cfg)?;
     let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    if cfg.replicas > 1 {
+        let engines = build_replica_engines_with(cfg, pool)?;
+        let mut router = Router::new(engines, batcher, cfg.routing, cfg.priority);
+        router.submit_all(&requests);
+        return Ok(router.drain());
+    }
+    let engine = build_engine_with(cfg, pool)?;
     Ok(match cfg.scheduler {
-        SchedulerKind::Static => serve(&mut engine, batcher, &requests),
-        SchedulerKind::Continuous => serve_continuous(&mut engine, batcher, &requests),
+        SchedulerKind::Static => {
+            let mut s = StaticScheduler::new(engine, batcher);
+            s.submit_all(&requests);
+            s.drain()
+        }
+        SchedulerKind::Continuous => {
+            let mut s = ContinuousScheduler::new(engine, batcher, cfg.priority);
+            s.submit_all(&requests);
+            s.drain()
+        }
     })
 }
 
@@ -364,6 +406,55 @@ mod tests {
         assert!(report.requests > 0);
         assert!(report.token_throughput() > 0.0);
         assert_eq!(report.request_latency.len() as u64, report.requests);
+    }
+
+    #[test]
+    fn run_serve_router_end_to_end_small() {
+        use crate::server::RoutingPolicy;
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 8.0;
+        cfg.workload.rps = 2.0;
+        cfg.eamc.trace_sequences = 30;
+        cfg.eamc.capacity = 8;
+        cfg.scheduler = SchedulerKind::Continuous;
+        cfg.replicas = 2;
+        for routing in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::TaskAffinity,
+        ] {
+            cfg.routing = routing;
+            let report = run_serve(&cfg).unwrap();
+            assert!(report.requests > 0, "{routing:?}");
+            assert_eq!(report.request_latency.len() as u64, report.requests);
+            assert_eq!(report.ttft.len() as u64, report.requests);
+            assert!(report.token_throughput() > 0.0);
+        }
+    }
+
+    #[test]
+    fn interactive_frac_tags_classes_without_touching_the_trace() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 20.0;
+        cfg.workload.rps = 2.0;
+        let plain = build_requests(&cfg).unwrap();
+        cfg.workload.interactive_frac = 0.5;
+        let tagged = build_requests(&cfg).unwrap();
+        assert_eq!(plain.len(), tagged.len());
+        let n_hi = tagged
+            .iter()
+            .filter(|r| r.class.priority == Priority::Interactive)
+            .count();
+        assert!(n_hi > 0 && n_hi < tagged.len(), "got {n_hi} interactive");
+        for (a, b) in plain.iter().zip(&tagged) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.seq.routes, b.seq.routes, "tagging must not perturb traces");
+        }
+        assert!(plain
+            .iter()
+            .all(|r| r.class.priority == Priority::Normal && r.class.slo.is_none()));
     }
 
     #[test]

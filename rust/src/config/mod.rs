@@ -10,6 +10,7 @@ use crate::cache::CacheKind;
 use crate::memory::{Link, Tier, TierConfig};
 use crate::model::ModelSpec;
 use crate::prefetch::PredictorKind;
+use crate::server::{check_max_wait, AdmissionPolicy, RoutingPolicy};
 use crate::util::tomlmini::TomlDoc;
 
 /// Iteration-level scheduling policy of the serving loop.
@@ -55,6 +56,19 @@ pub struct ServeConfig {
     pub system: String,
     /// Serving-loop scheduler: "static" or "continuous".
     pub scheduler: SchedulerKind,
+    /// Continuous-scheduler admission: "fifo" (strict arrival order) or
+    /// "classes" (priority tiers + SLO slack + voluntary preemption).
+    pub priority: AdmissionPolicy,
+    /// Engine replicas behind the request router (1 = bare scheduler, no
+    /// router). Replicas >1 require the continuous scheduler.
+    pub replicas: usize,
+    /// Multi-replica routing policy: "round-robin", "least-loaded" or
+    /// "task-affinity" (only used when `replicas > 1`).
+    pub routing: RoutingPolicy,
+    /// Cancel a retired/preempted sequence's still-queued prefetches (see
+    /// `EngineConfig::cancel_retired_prefetch`; off preserves the pinned
+    /// bitwise replays).
+    pub cancel_retired_prefetch: bool,
     pub workload: WorkloadConfig,
     pub batching: BatchConfig,
     pub memory: MemoryConfig,
@@ -70,6 +84,10 @@ pub struct WorkloadConfig {
     pub cv: f64,
     /// Virtual duration of the replay in seconds.
     pub duration: f64,
+    /// Fraction of requests tagged `Priority::Interactive` (the rest stay
+    /// on the default class). 0.0 — the default — generates exactly the
+    /// pre-priority request stream.
+    pub interactive_frac: f64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -108,10 +126,15 @@ impl Default for ServeConfig {
             dataset: "mixed".into(),
             system: "moe-infinity".into(),
             scheduler: SchedulerKind::Static,
+            priority: AdmissionPolicy::Fifo,
+            replicas: 1,
+            routing: RoutingPolicy::RoundRobin,
+            cancel_retired_prefetch: false,
             workload: WorkloadConfig {
                 rps: 1.0,
                 cv: 1.0,
                 duration: 120.0,
+                interactive_frac: 0.0,
             },
             batching: BatchConfig {
                 max_batch: 16,
@@ -153,10 +176,33 @@ impl ServeConfig {
                 anyhow!("unknown scheduler '{s}' (expected 'static' or 'continuous')")
             })?;
         }
+        if let Some(v) = doc.get("priority") {
+            let s = v.as_str().ok_or_else(|| anyhow!("priority must be a string"))?;
+            c.priority = AdmissionPolicy::by_name(s).ok_or_else(|| {
+                anyhow!("unknown priority policy '{s}' (expected 'fifo' or 'classes')")
+            })?;
+        }
+        if let Some(v) = doc.get("routing") {
+            let s = v.as_str().ok_or_else(|| anyhow!("routing must be a string"))?;
+            c.routing = RoutingPolicy::by_name(s).ok_or_else(|| {
+                anyhow!(
+                    "unknown routing policy '{s}' (expected 'round-robin', \
+                     'least-loaded' or 'task-affinity')"
+                )
+            })?;
+        }
+        c.replicas = gu(&doc, "replicas", c.replicas);
+        if let Some(v) = doc.get("cancel_retired_prefetch") {
+            c.cancel_retired_prefetch = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("cancel_retired_prefetch must be a bool"))?;
+        }
         c.seed = doc.get("seed").and_then(|v| v.as_u64()).unwrap_or(c.seed);
         c.workload.rps = gf(&doc, "workload.rps", c.workload.rps);
         c.workload.cv = gf(&doc, "workload.cv", c.workload.cv);
         c.workload.duration = gf(&doc, "workload.duration", c.workload.duration);
+        c.workload.interactive_frac =
+            gf(&doc, "workload.interactive_frac", c.workload.interactive_frac);
         c.batching.max_batch = gu(&doc, "batching.max_batch", c.batching.max_batch);
         c.batching.max_wait = gf(&doc, "batching.max_wait", c.batching.max_wait);
         c.memory.gpu_gb = gf(&doc, "memory.gpu_gb", c.memory.gpu_gb);
@@ -182,10 +228,15 @@ impl ServeConfig {
         d.set_str("dataset", &self.dataset);
         d.set_str("system", &self.system);
         d.set_str("scheduler", self.scheduler.name());
+        d.set_str("priority", self.priority.name());
+        d.set_num("replicas", self.replicas as f64);
+        d.set_str("routing", self.routing.name());
+        d.set_bool("cancel_retired_prefetch", self.cancel_retired_prefetch);
         d.set_num("seed", self.seed as f64);
         d.set_num("workload.rps", self.workload.rps);
         d.set_num("workload.cv", self.workload.cv);
         d.set_num("workload.duration", self.workload.duration);
+        d.set_num("workload.interactive_frac", self.workload.interactive_frac);
         d.set_num("batching.max_batch", self.batching.max_batch as f64);
         d.set_num("batching.max_wait", self.batching.max_wait);
         d.set_num("memory.gpu_gb", self.memory.gpu_gb);
@@ -207,16 +258,34 @@ impl ServeConfig {
         if self.batching.max_batch == 0 {
             return Err(anyhow!("batching.max_batch must be >= 1"));
         }
-        // a NaN/negative window would silently poison the static batcher's
-        // dispatch arithmetic (mirrors the hard assert in `Batcher::new`)
-        if !self.batching.max_wait.is_finite() || self.batching.max_wait < 0.0 {
-            return Err(anyhow!(
-                "batching.max_wait must be finite and >= 0, got {}",
-                self.batching.max_wait
-            ));
-        }
+        // the one shared batching-window check (Batcher::new asserts the
+        // same contract; this is the soft, per-grid-point form)
+        check_max_wait(self.batching.max_wait).map_err(|e| anyhow!("batching.{e}"))?;
         if self.workload.rps <= 0.0 || self.workload.duration <= 0.0 {
             return Err(anyhow!("workload.rps and duration must be positive"));
+        }
+        if !(0.0..=1.0).contains(&self.workload.interactive_frac) {
+            return Err(anyhow!(
+                "workload.interactive_frac must be in [0, 1], got {}",
+                self.workload.interactive_frac
+            ));
+        }
+        if self.replicas == 0 {
+            return Err(anyhow!("replicas must be >= 1"));
+        }
+        if self.replicas > 1 && self.scheduler != SchedulerKind::Continuous {
+            return Err(anyhow!(
+                "multi-replica routing requires scheduler = \"continuous\" \
+                 (the router drives per-replica continuous schedulers)"
+            ));
+        }
+        if self.priority == AdmissionPolicy::Classes && self.scheduler != SchedulerKind::Continuous
+        {
+            return Err(anyhow!(
+                "priority = \"classes\" requires scheduler = \"continuous\" \
+                 (the static batcher never consults request classes — a \
+                 priority experiment on it would silently bench plain FIFO)"
+            ));
         }
         Ok(())
     }
@@ -311,6 +380,45 @@ mod tests {
         assert_eq!(ServeConfig::default().scheduler, SchedulerKind::Static);
         assert_eq!(SchedulerKind::by_name("static"), Some(SchedulerKind::Static));
         assert_eq!(SchedulerKind::by_name("orca"), None);
+    }
+
+    #[test]
+    fn routing_and_priority_parse_and_roundtrip() {
+        let c = ServeConfig::from_toml(
+            "scheduler = \"continuous\"\npriority = \"classes\"\nreplicas = 4\nrouting = \"task-affinity\"\ncancel_retired_prefetch = true\n[workload]\ninteractive_frac = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(c.priority, AdmissionPolicy::Classes);
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.routing, RoutingPolicy::TaskAffinity);
+        assert!(c.cancel_retired_prefetch);
+        assert_eq!(c.workload.interactive_frac, 0.25);
+        let back = ServeConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, back);
+        // defaults preserve the pre-router serving surface
+        let d = ServeConfig::default();
+        assert_eq!(d.priority, AdmissionPolicy::Fifo);
+        assert_eq!(d.replicas, 1);
+        assert_eq!(d.routing, RoutingPolicy::RoundRobin);
+        assert!(!d.cancel_retired_prefetch);
+        assert_eq!(d.workload.interactive_frac, 0.0);
+    }
+
+    #[test]
+    fn invalid_router_configs_rejected() {
+        assert!(ServeConfig::from_toml("priority = \"vip\"").is_err());
+        assert!(ServeConfig::from_toml("routing = \"random\"").is_err());
+        assert!(ServeConfig::from_toml("replicas = 0").is_err());
+        // replicas > 1 without the continuous scheduler is a config error
+        assert!(ServeConfig::from_toml("replicas = 2").is_err());
+        assert!(ServeConfig::from_toml("scheduler = \"continuous\"\nreplicas = 2").is_ok());
+        assert!(ServeConfig::from_toml("[workload]\ninteractive_frac = 1.5").is_err());
+        assert!(ServeConfig::from_toml("cancel_retired_prefetch = 3").is_err());
+        // classes admission on the static batcher would be a silent no-op
+        assert!(ServeConfig::from_toml("priority = \"classes\"").is_err());
+        assert!(
+            ServeConfig::from_toml("scheduler = \"continuous\"\npriority = \"classes\"").is_ok()
+        );
     }
 
     #[test]

@@ -14,7 +14,8 @@ mod sim_engine;
 
 pub use real::{GenOutput, RealMoeEngine};
 pub use sim_engine::{
-    BatchResult, BatchSession, EngineConfig, FeedbackMode, SimEngine, StepResult,
+    BatchResult, BatchSession, EngineConfig, FeedbackMode, PreemptedSeq, SessionState, SimEngine,
+    StepResult,
 };
 
 use crate::model::ModelSpec;

@@ -25,6 +25,16 @@ pub struct EngineConfig {
     /// ZeRO semantics: fetch every expert of a layer before executing it
     /// (no router visibility — see `baselines::fetch_all_for`).
     pub fetch_all_experts: bool,
+    /// Cancel a sequence's still-queued prefetches the moment it retires or
+    /// is preempted, instead of leaving them until the next
+    /// re-prioritization pass drains them. Ownership is "last predictor
+    /// wins": a key predicted later by a still-live sequence is not
+    /// cancelled, and an over-eager cancel is healed by the next
+    /// iteration's re-prediction. Off by default — cancellation changes
+    /// transfer timing, and the bitwise scheduler differentials pin the
+    /// uncancelled behavior (`BENCH_scheduler.json` quantifies the
+    /// dead-PCIe-traffic delta).
+    pub cancel_retired_prefetch: bool,
 }
 
 impl Default for EngineConfig {
@@ -35,6 +45,7 @@ impl Default for EngineConfig {
             well_predicted_recall: 0.5,
             min_prefetch_ratio: 0.05,
             fetch_all_experts: false,
+            cancel_retired_prefetch: false,
         }
     }
 }
@@ -127,6 +138,12 @@ pub struct SimEngine {
     slot_active: Vec<u32>,
     /// Pooled step-event buffers for `run_batch_into`.
     step_scratch: StepResult,
+    /// Last predictor of each expert's queued prefetch (`slot + 1`, 0 =
+    /// none), flat-indexed by expert. Only maintained when
+    /// [`EngineConfig::cancel_retired_prefetch`] is on; retirement and
+    /// preemption then cancel the still-queued predictions the departing
+    /// sequence owned.
+    prefetch_owner: Vec<u32>,
 }
 
 /// Sentinel occupant id of a vacant slot.
@@ -142,6 +159,75 @@ pub enum FeedbackMode {
     /// Observe each sequence the iteration it retires and free its slot for
     /// the next admission — the continuous serving loop.
     Immediate,
+}
+
+/// Detached continuation of a [`BatchSession`] (see
+/// [`BatchSession::suspend`] / [`SimEngine::resume_session`]). All real
+/// session state lives in engine-owned pooled buffers; this token carries
+/// only the scalars the session wrapper holds, which is what lets a
+/// scheduler own both its engine and a long-lived logical session without
+/// a self-referential borrow.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionState {
+    feedback: FeedbackMode,
+    use_matcher: bool,
+    t: f64,
+    admitted: usize,
+}
+
+impl SessionState {
+    /// Virtual time of the suspended session's next iteration boundary.
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+}
+
+/// Saved mid-flight state of a voluntarily preempted sequence (see
+/// [`BatchSession::evict`] / [`BatchSession::admit_resumed`]): the traced
+/// `cur_eam`, the next iteration to execute, and the recall tallies. The
+/// buffers are caller-owned and reusable — `evict` writes into them via
+/// [`Eam::copy_from`], so a warmed preempt/resume cycle allocates nothing.
+#[derive(Debug, Clone)]
+pub struct PreemptedSeq {
+    ext_id: u64,
+    iter: u32,
+    total: u32,
+    prompt: u32,
+    demands: u64,
+    hits: u64,
+    eam: Eam,
+}
+
+impl PreemptedSeq {
+    /// Empty holder for `layers × experts` geometry (the first `evict` into
+    /// a mismatched holder re-allocates the EAM buffer; after that it is
+    /// recycled in place).
+    pub fn new(layers: usize, experts: usize) -> PreemptedSeq {
+        PreemptedSeq {
+            ext_id: FREE_SLOT,
+            iter: 0,
+            total: 0,
+            prompt: 0,
+            demands: 0,
+            hits: 0,
+            eam: Eam::new(layers, experts),
+        }
+    }
+
+    /// External id of the sequence this state belongs to.
+    pub fn ext_id(&self) -> u64 {
+        self.ext_id
+    }
+
+    /// Iterations already executed (the resume point).
+    pub fn iterations_done(&self) -> u32 {
+        self.iter
+    }
+
+    /// The sequence's traced EAM at eviction time.
+    pub fn eam(&self) -> &Eam {
+        &self.eam
+    }
 }
 
 /// Events of one [`BatchSession::step`]; buffers are reused across steps so
@@ -218,6 +304,7 @@ impl SimEngine {
             slot_prompt: Vec::new(),
             slot_active: Vec::new(),
             step_scratch: StepResult::default(),
+            prefetch_owner: vec![0; n_layers * n_experts],
         }
     }
 
@@ -349,23 +436,60 @@ impl SimEngine {
         }
     }
 
+    /// Re-open a session previously detached with [`BatchSession::suspend`].
+    /// All per-slot working state lives in engine-owned buffers, so the
+    /// state token plus the engine reconstruct the session exactly; unlike
+    /// [`SimEngine::begin_session`] nothing is reset.
+    pub fn resume_session(&mut self, state: SessionState) -> BatchSession<'_> {
+        BatchSession {
+            eng: self,
+            feedback: state.feedback,
+            use_matcher: state.use_matcher,
+            t: state.t,
+            admitted: state.admitted,
+        }
+    }
+
     /// Re-sync every active slot's matcher handle after an EAMC
     /// reconstruction mid-session: attach to the new build and replay the
     /// slot's traced EAM into the fresh accumulators.
     fn resync_active_matchers(&mut self) {
         for i in 0..self.slot_active.len() {
             let slot = self.slot_active[i] as usize;
-            self.matchers[slot].attach(&self.eamc);
-            for l in 0..self.spec.n_layers {
-                if self.cur_eams[slot].row_sum(l) == 0 {
-                    continue;
+            self.replay_matcher(slot);
+        }
+    }
+
+    /// Attach `slot`'s matcher to the current EAMC build and replay the
+    /// slot's traced EAM into the fresh accumulators (mid-session rebuild
+    /// re-sync, and restoring a preempted sequence's matcher on resume).
+    fn replay_matcher(&mut self, slot: usize) {
+        self.matchers[slot].attach(&self.eamc);
+        for l in 0..self.spec.n_layers {
+            if self.cur_eams[slot].row_sum(l) == 0 {
+                continue;
+            }
+            for e in 0..self.spec.experts_per_layer {
+                let c = self.cur_eams[slot].count(l, e);
+                if c > 0 {
+                    self.matchers[slot].record(self.eamc.index(), l, e, c);
                 }
-                for e in 0..self.spec.experts_per_layer {
-                    let c = self.cur_eams[slot].count(l, e);
-                    if c > 0 {
-                        self.matchers[slot].record(self.eamc.index(), l, e, c);
-                    }
-                }
+            }
+        }
+    }
+
+    /// Cancel every still-queued prefetch whose latest predictor was `slot`
+    /// (no-op unless [`EngineConfig::cancel_retired_prefetch`] is set).
+    fn cancel_owned_prefetches(&mut self, slot: usize) {
+        if !self.cfg.cancel_retired_prefetch {
+            return;
+        }
+        let owner = slot as u32 + 1;
+        let experts = self.spec.experts_per_layer;
+        for idx in 0..self.prefetch_owner.len() {
+            if self.prefetch_owner[idx] == owner {
+                self.prefetch_owner[idx] = 0;
+                self.sim.cancel_prefetch(ExpertKey::new(idx / experts, idx % experts));
             }
         }
     }
@@ -393,6 +517,42 @@ impl SimEngine {
             }
         }
         out
+    }
+}
+
+/// Admission into an **empty** session is a batch boundary: stale queued
+/// prefetches (with their ownership marks) and the combined batch EAM are
+/// dropped — the same reset `run_batch` performs after idling to its start
+/// time, which is what keeps the single-slot continuous replay bitwise
+/// identical to the static path.
+fn reset_if_empty(eng: &mut SimEngine) {
+    if eng.slot_active.is_empty() {
+        eng.sim.clear_queues();
+        eng.batch_eam.clear();
+        if eng.cfg.cancel_retired_prefetch {
+            eng.prefetch_owner.fill(0);
+        }
+    }
+}
+
+/// Lowest free slot id, growing every per-slot array together (one-time,
+/// pooled) when none is free.
+fn alloc_slot(eng: &mut SimEngine) -> usize {
+    match eng.slot_occupant.iter().position(|&o| o == FREE_SLOT) {
+        Some(s) => s,
+        None => {
+            let s = eng.slot_occupant.len();
+            let (l, e) = (eng.spec.n_layers, eng.spec.experts_per_layer);
+            eng.slot_occupant.push(FREE_SLOT);
+            eng.slot_iter.push(0);
+            eng.slot_total.push(0);
+            eng.slot_prompt.push(0);
+            eng.cur_eams.push(Eam::new(l, e));
+            eng.matchers.push(EamcMatcher::new());
+            eng.seq_demands.push(0);
+            eng.seq_hits.push(0);
+            s
+        }
     }
 }
 
@@ -460,28 +620,8 @@ impl<'e> BatchSession<'e> {
         assert_ne!(ext_id, FREE_SLOT, "external id {FREE_SLOT} is reserved");
         assert!(seq.iterations() > 0, "cannot admit an empty sequence");
         let eng = &mut *self.eng;
-        if eng.slot_active.is_empty() {
-            // stale predictions from the previous busy period are dropped
-            eng.sim.clear_queues();
-            eng.batch_eam.clear();
-        }
-        let slot = match eng.slot_occupant.iter().position(|&o| o == FREE_SLOT) {
-            Some(s) => s,
-            None => {
-                // grow every per-slot array together (one-time, pooled)
-                let s = eng.slot_occupant.len();
-                let (l, e) = (eng.spec.n_layers, eng.spec.experts_per_layer);
-                eng.slot_occupant.push(FREE_SLOT);
-                eng.slot_iter.push(0);
-                eng.slot_total.push(0);
-                eng.slot_prompt.push(0);
-                eng.cur_eams.push(Eam::new(l, e));
-                eng.matchers.push(EamcMatcher::new());
-                eng.seq_demands.push(0);
-                eng.seq_hits.push(0);
-                s
-            }
-        };
+        reset_if_empty(eng);
+        let slot = alloc_slot(eng);
         eng.slot_occupant[slot] = ext_id;
         eng.slot_iter[slot] = 0;
         eng.slot_total[slot] = seq.iterations() as u32;
@@ -497,6 +637,97 @@ impl<'e> BatchSession<'e> {
         eng.slot_active.insert(pos, slot as u32);
         self.admitted = self.admitted.max(slot + 1);
         slot
+    }
+
+    /// Voluntarily preempt the sequence occupying `slot` at the current
+    /// iteration boundary, saving its position, traced EAM and recall
+    /// tallies into `out` (buffers recycled via [`Eam::copy_from`]). The
+    /// sequence is *suspended*, not finished: no EAMC feedback is given,
+    /// its counts leave the combined batch EAM so cache decisions track
+    /// only live work, and its slot frees up for the next admission.
+    /// Continue it later with [`BatchSession::admit_resumed`].
+    ///
+    /// Only meaningful under [`FeedbackMode::Immediate`] (the deferred
+    /// static path has fixed membership by contract).
+    pub fn evict(&mut self, slot: usize, out: &mut PreemptedSeq) {
+        assert_eq!(
+            self.feedback,
+            FeedbackMode::Immediate,
+            "evict requires FeedbackMode::Immediate"
+        );
+        let eng = &mut *self.eng;
+        let pos = eng
+            .slot_active
+            .iter()
+            .position(|&s| s as usize == slot)
+            .expect("evict: slot not active");
+        eng.slot_active.remove(pos);
+        out.ext_id = eng.slot_occupant[slot];
+        out.iter = eng.slot_iter[slot];
+        out.total = eng.slot_total[slot];
+        out.prompt = eng.slot_prompt[slot];
+        out.demands = eng.seq_demands[slot];
+        out.hits = eng.seq_hits[slot];
+        out.eam.copy_from(&eng.cur_eams[slot]);
+        eng.batch_eam.subtract(&eng.cur_eams[slot]);
+        eng.slot_occupant[slot] = FREE_SLOT;
+        eng.cancel_owned_prefetches(slot);
+    }
+
+    /// Continue a previously [`BatchSession::evict`]ed sequence: admits it
+    /// into the lowest free slot, restores its traced EAM, iteration
+    /// position and recall tallies, replays the matcher accumulators
+    /// against the current EAMC build, and re-adds its counts to the
+    /// combined batch EAM. Returns the slot id. The next
+    /// [`BatchSession::step`] executes the iteration it was suspended at —
+    /// the per-token expert demands are identical to an uninterrupted run
+    /// (pinned by the preempt/resume differential test).
+    pub fn admit_resumed(&mut self, saved: &PreemptedSeq) -> usize {
+        assert_eq!(
+            self.feedback,
+            FeedbackMode::Immediate,
+            "admit_resumed requires FeedbackMode::Immediate"
+        );
+        assert_ne!(saved.ext_id, FREE_SLOT, "resume of a vacant holder");
+        assert!(
+            saved.iter < saved.total,
+            "resume of a finished sequence ({} >= {})",
+            saved.iter,
+            saved.total
+        );
+        let eng = &mut *self.eng;
+        reset_if_empty(eng);
+        let slot = alloc_slot(eng);
+        eng.slot_occupant[slot] = saved.ext_id;
+        eng.slot_iter[slot] = saved.iter;
+        eng.slot_total[slot] = saved.total;
+        eng.slot_prompt[slot] = saved.prompt;
+        eng.cur_eams[slot].copy_from(&saved.eam);
+        eng.seq_demands[slot] = saved.demands;
+        eng.seq_hits[slot] = saved.hits;
+        eng.batch_eam.add(&eng.cur_eams[slot]);
+        if self.use_matcher {
+            eng.replay_matcher(slot);
+        }
+        let pos = eng.slot_active.partition_point(|&s| (s as usize) < slot);
+        eng.slot_active.insert(pos, slot as u32);
+        self.admitted = self.admitted.max(slot + 1);
+        slot
+    }
+
+    /// Detach the session from the engine, returning a token that
+    /// [`SimEngine::resume_session`] re-opens later. No feedback runs and
+    /// nothing is reset — the suspended session is still logically open;
+    /// the engine clock stays at the session's boundary (it already is
+    /// after every step).
+    pub fn suspend(self) -> SessionState {
+        self.eng.clock = self.t;
+        SessionState {
+            feedback: self.feedback,
+            use_matcher: self.use_matcher,
+            t: self.t,
+            admitted: self.admitted,
+        }
     }
 
     /// Execute one forward iteration for every active slot (the loop body
@@ -593,6 +824,11 @@ impl<'e> BatchSession<'e> {
                         }
                         let p = if eng.cfg.priority_enabled { prio } else { 0.5 };
                         eng.sim.submit_prefetch(key, p, t, &ctx);
+                        if eng.cfg.cancel_retired_prefetch {
+                            // last predictor wins: retirement cancels only
+                            // keys nobody re-predicted since
+                            eng.prefetch_owner[key.flat(n_experts)] = slot as u32 + 1;
+                        }
                     }
                     eng.pred_buf = buf;
                 }
@@ -679,6 +915,7 @@ impl<'e> BatchSession<'e> {
                         .observe(&eng.cur_eams[slot], recall >= eng.cfg.well_predicted_recall);
                     eng.batch_eam.subtract(&eng.cur_eams[slot]);
                     eng.slot_occupant[slot] = FREE_SLOT;
+                    eng.cancel_owned_prefetches(slot);
                     if rebuilt && use_matcher {
                         eng.resync_active_matchers();
                     }
@@ -1021,6 +1258,162 @@ mod tests {
             before + 1,
             "retirement must feed the EAMC before the session finishes"
         );
+        session.finish();
+    }
+
+    #[test]
+    fn evict_saves_state_and_resume_continues_identically() {
+        let s = spec();
+        let mut w = workload(&s, 21);
+        let mk = |w: &mut Workload| {
+            let eamc = {
+                let ds = w.gen_eam_dataset(30);
+                Eamc::construct(8, &ds, 11)
+            };
+            SimEngine::new(
+                s.clone(),
+                tier(&s, 64, CacheKind::Activation),
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            )
+        };
+        let mut eng_a = mk(&mut w);
+        let mut w2 = workload(&s, 21);
+        let mut eng_b = mk(&mut w2);
+        let seq = w.gen_sequence();
+        let iters = seq.iterations();
+        assert!(iters >= 2, "need a multi-iteration sequence");
+        let lookup = |_id: u64| &seq;
+        let mut step = StepResult::default();
+
+        // reference: uninterrupted run, per-iteration demand counts
+        let mut want = Vec::new();
+        let mut sa = eng_a.begin_session(0.0, FeedbackMode::Immediate);
+        sa.admit(0, &seq);
+        while sa.step(&lookup, &mut step) {
+            want.push(step.demands);
+        }
+        sa.finish();
+
+        // interrupted run: evict mid-flight, resume, finish
+        let cut = iters / 2;
+        let mut got = Vec::new();
+        let mut sb = eng_b.begin_session(0.0, FeedbackMode::Immediate);
+        sb.admit(0, &seq);
+        let mut saved = PreemptedSeq::new(s.n_layers, s.experts_per_layer);
+        for _ in 0..cut {
+            assert!(sb.step(&lookup, &mut step));
+            got.push(step.demands);
+        }
+        sb.evict(0, &mut saved);
+        assert_eq!(saved.ext_id(), 0);
+        assert_eq!(saved.iterations_done(), cut as u32);
+        assert_eq!(sb.active(), 0, "evicted slot must free");
+        // the saved EAM is exactly the prefix trace
+        let mut prefix = crate::trace::Eam::new(s.n_layers, s.experts_per_layer);
+        for it in 0..cut {
+            for l in 0..s.n_layers {
+                for &(e, c) in &seq.routes[it][l] {
+                    prefix.record(l, e as usize, c);
+                }
+            }
+        }
+        assert_eq!(saved.eam(), &prefix, "evict must save the traced EAM");
+        let before = sb.engine().eamc().stats().observed_since_build;
+        let slot = sb.admit_resumed(&saved);
+        assert_eq!(slot, 0, "freed slot is recycled");
+        while sb.step(&lookup, &mut step) {
+            got.push(step.demands);
+        }
+        assert_eq!(
+            sb.engine().eamc().stats().observed_since_build,
+            before + 1,
+            "resumed sequence still feeds the EAMC exactly once, at retirement"
+        );
+        sb.finish();
+        assert_eq!(
+            got, want,
+            "per-iteration expert demands must match the uninterrupted run"
+        );
+    }
+
+    #[test]
+    fn retirement_cancels_owned_queued_prefetches_when_enabled() {
+        let s = spec();
+        let run = |cancel: bool| -> usize {
+            let mut w = workload(&s, 22);
+            let eamc = eamc_for(&s, &mut w, 30, 8);
+            // tiny GPU cache + narrow prefetch budget: predictions pile up
+            // in the queues instead of transferring immediately
+            let mut t = tier(&s, 8, CacheKind::Activation);
+            t.prefetch_gpu_budget = 0.2;
+            let mut eng = SimEngine::new(
+                s.clone(),
+                t,
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig {
+                    cancel_retired_prefetch: cancel,
+                    ..Default::default()
+                },
+            );
+            let seq = w.gen_sequence();
+            let lookup = |_id: u64| &seq;
+            let mut step = StepResult::default();
+            let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+            session.admit(0, &seq);
+            while session.step(&lookup, &mut step) {}
+            // the sequence just retired; anything still queued is dead
+            // traffic its retirement could have cancelled
+            let queued = session.engine().sim().queued();
+            session.finish();
+            queued
+        };
+        let kept = run(false);
+        let cancelled = run(true);
+        // the two runs share one timeline up to the (single) retirement, so
+        // the queue depths differ exactly by what cancellation dropped
+        assert!(
+            kept > 0,
+            "scenario must leave a queued-prediction backlog at retirement"
+        );
+        assert!(
+            cancelled < kept,
+            "retirement must cancel owned queued prefetches ({cancelled} vs {kept})"
+        );
+    }
+
+    #[test]
+    fn suspend_resume_roundtrips_session() {
+        let s = spec();
+        let mut w = workload(&s, 23);
+        let eamc = eamc_for(&s, &mut w, 20, 6);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, 64, CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let seq = w.gen_sequence();
+        let lookup = |_id: u64| &seq;
+        let mut step = StepResult::default();
+        let session = eng.begin_session(0.0, FeedbackMode::Immediate);
+        let state = session.suspend();
+        assert_eq!(state.now(), 0.0);
+        let mut session = eng.resume_session(state);
+        session.admit(0, &seq);
+        let mut n = 0;
+        loop {
+            let state = session.suspend();
+            session = eng.resume_session(state);
+            if !session.step(&lookup, &mut step) {
+                break;
+            }
+            n += 1;
+        }
+        assert_eq!(n, seq.iterations(), "suspension must not lose slots");
         session.finish();
     }
 

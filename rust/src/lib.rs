@@ -9,8 +9,10 @@
 //!   ([`prefetch`]), activation-aware caching ([`cache`]), a multi-tier
 //!   memory/PCIe discrete-event simulator ([`memory`]), the generative
 //!   inference engine implementing the paper's Algorithm 1 ([`engine`]),
-//!   a request router + batcher ([`server`]), expert-parallel cluster
-//!   support ([`cluster`]) and whole-system baselines ([`baselines`]).
+//!   a request-lifecycle serving API — `Scheduler` trait, priority classes
+//!   with preemption, task-affinity multi-replica `Router` ([`server`]),
+//!   expert-parallel cluster support ([`cluster`]) and whole-system
+//!   baselines ([`baselines`]).
 //! * **L2** — a JAX decode-step MoE model (`python/compile/model.py`),
 //!   AOT-lowered to HLO-text artifacts consumed by [`runtime`]).
 //! * **L1** — Pallas kernels for the expert FFN and router

@@ -84,6 +84,11 @@ fn run() -> Result<()> {
                  serve    --config <toml> | --model <preset> --system <name> --rps <f> --duration <s>\n\
                  \x20        [--scheduler static|continuous]  batching discipline (default: static\n\
                  \x20        run-to-completion; continuous admits/retires at iteration boundaries)\n\
+                 \x20        [--priority fifo|classes]  continuous admission: strict FIFO or\n\
+                 \x20        priority classes with SLO slack + voluntary preemption\n\
+                 \x20        [--replicas <n>]  engine replicas behind the request router\n\
+                 \x20        [--routing round-robin|least-loaded|task-affinity]  replica dispatch\n\
+                 \x20        [--interactive-frac <f>]  fraction of requests tagged interactive\n\
                  \x20        [--threads <n>]  offline-construction workers (default:\n\
                  \x20        MOE_POOL_THREADS or all cores; results identical at any count)\n\
                  generate --artifacts <dir> --prompts <n> --tokens <n>\n"
@@ -133,6 +138,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         cfg.scheduler = moe_infinity::config::SchedulerKind::by_name(s)
             .ok_or_else(|| anyhow!("--scheduler: unknown '{s}' (static|continuous)"))?;
     }
+    if let Some(p) = args.get("priority") {
+        cfg.priority = moe_infinity::server::AdmissionPolicy::by_name(p)
+            .ok_or_else(|| anyhow!("--priority: unknown '{p}' (fifo|classes)"))?;
+    }
+    if let Some(n) = args.get("replicas") {
+        cfg.replicas = n.parse::<usize>().map_err(|e| anyhow!("--replicas: {e}"))?;
+    }
+    if let Some(r) = args.get("routing") {
+        cfg.routing = moe_infinity::server::RoutingPolicy::by_name(r).ok_or_else(|| {
+            anyhow!("--routing: unknown '{r}' (round-robin|least-loaded|task-affinity)")
+        })?;
+    }
+    if let Some(f) = args.get_f64("interactive-frac")? {
+        cfg.workload.interactive_frac = f;
+    }
     if let Some(r) = args.get_f64("rps")? {
         cfg.workload.rps = r;
     }
@@ -149,11 +169,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
 
     println!(
-        "serving {} [{}] dataset={} scheduler={} rps={} duration={}s (offline pool: {} threads) ...",
+        "serving {} [{}] dataset={} scheduler={} priority={} replicas={} routing={} rps={} duration={}s (offline pool: {} threads) ...",
         cfg.model,
         cfg.system,
         cfg.dataset,
         cfg.scheduler.name(),
+        cfg.priority.name(),
+        cfg.replicas,
+        cfg.routing.name(),
         cfg.workload.rps,
         cfg.workload.duration,
         pool.threads()
@@ -175,6 +198,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("p99  token lat  : {}", fmt_secs(report.token_latency.p99()));
     println!("p50  request lat: {}", fmt_secs(report.request_latency.p50()));
     println!("p99  request lat: {}", fmt_secs(report.request_latency.p99()));
+    println!("p50  TTFT       : {}", fmt_secs(report.ttft.p50()));
+    println!("p99  TTFT       : {}", fmt_secs(report.ttft.p99()));
+    println!("p50  TPOT       : {}", fmt_secs(report.tpot.p50()));
+    println!("p99  TPOT       : {}", fmt_secs(report.tpot.p99()));
+    println!("GPU hit ratio   : {:.3}", report.gpu_hit_ratio());
     println!("throughput      : {:.1} tokens/s", report.token_throughput());
     Ok(())
 }

@@ -299,6 +299,16 @@ impl MemorySim {
         self.gpu_cache.clear_protection();
     }
 
+    /// Cancel a *queued* prefetch for `key` on both stage queues (a transfer
+    /// already in flight is never interrupted). Used when the sequence that
+    /// predicted the expert retires or is preempted before the transfer
+    /// starts — the prediction no longer has a consumer, so moving the
+    /// expert would be dead PCIe traffic.
+    pub fn cancel_prefetch(&mut self, key: ExpertKey) {
+        self.q_ssd.cancel(key);
+        self.q_gpu.cancel(key);
+    }
+
     /// Blocking demand (Alg. 1 steps 9-12): returns the time at which the
     /// expert is available on the GPU. Jumps the queues at MAX_PRIORITY but
     /// never preempts in-flight transfers; accounts the stall.
@@ -829,6 +839,30 @@ mod tests {
         let sim = MemorySim::new(&spec(), cfg(4, 4, Tier::Ssd));
         assert_eq!(sim.stats().gpu_hit_ratio(), 1.0);
         assert_eq!(sim.stats().prefetch_coverage(), 1.0);
+    }
+
+    #[test]
+    fn cancel_prefetch_drops_queued_but_not_in_flight() {
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
+        // first submit occupies the DRAM→GPU link; the next two queue behind
+        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, 0.0, &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 1), 0.8, 0.0, &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 2), 0.7, 0.0, &ctx);
+        assert_eq!(sim.queued(), 2);
+        sim.cancel_prefetch(ExpertKey::new(2, 1));
+        sim.cancel_prefetch(ExpertKey::new(2, 0)); // in flight: no-op
+        assert_eq!(sim.queued(), 1);
+        let dt = s.expert_bytes() as f64 / 10e9;
+        sim.advance_to(3.0 * dt, &ctx);
+        assert!(sim.is_on_gpu(ExpertKey::new(2, 0)), "in-flight completes");
+        assert!(!sim.is_on_gpu(ExpertKey::new(2, 1)), "cancelled never moves");
+        assert!(sim.is_on_gpu(ExpertKey::new(2, 2)), "uncancelled proceeds");
     }
 
     #[test]

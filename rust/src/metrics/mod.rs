@@ -19,6 +19,20 @@ impl LatencyRecorder {
         self.sorted = false;
     }
 
+    /// Pre-size for `additional` more samples. Serving schedulers reserve at
+    /// request submission so steady-state recording never reallocates (the
+    /// router's warmed-iteration allocation guard depends on this).
+    pub fn reserve(&mut self, additional: usize) {
+        self.samples.reserve(additional);
+    }
+
+    /// Append `other`'s samples in their insertion order (the router merges
+    /// per-replica reports this way; with one replica it is the identity).
+    pub fn append(&mut self, other: &LatencyRecorder) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -162,6 +176,24 @@ mod tests {
             assert!(w[1].1 > w[0].1);
         }
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn append_preserves_order_and_reserve_prevents_growth() {
+        let mut a = LatencyRecorder::new();
+        a.record(3.0);
+        let mut b = LatencyRecorder::new();
+        b.record(1.0);
+        b.record(2.0);
+        a.append(&b);
+        assert_eq!(a.samples(), &[3.0, 1.0, 2.0]);
+        let mut r = LatencyRecorder::new();
+        r.reserve(4);
+        let cap_probe = r.samples.capacity();
+        for i in 0..4 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.samples.capacity(), cap_probe, "reserved pushes must not grow");
     }
 
     #[test]

@@ -1,20 +1,58 @@
-//! Request router + batcher + serving loop (paper §8.2 methodology).
+//! The request-lifecycle serving API.
 //!
-//! Two schedulers share the engine:
-//! * [`serve`] — **static** run-to-completion batches: requests accumulate
-//!   until either `max_batch` sequences or `max_wait` elapses from the
-//!   first queued request (16 / 1s in the paper, both from AlpaServe),
-//!   then the whole batch runs to completion.
-//! * [`serve_continuous`] — **continuous batching** on the resumable
+//! Serving is organized around the [`Scheduler`] trait — `submit` requests
+//! in arrival order, `tick` one scheduling quantum at a time, `drain` to a
+//! [`ServeReport`] — with three implementations sharing one engine
+//! substrate:
+//!
+//! * [`StaticScheduler`] — AlpaServe-style run-to-completion batches (the
+//!   paper's §8.2 methodology): requests accumulate until either
+//!   `max_batch` sequences or `max_wait` elapses from the first queued
+//!   request, then the whole batch holds the engine until its longest
+//!   member finishes.
+//! * [`ContinuousScheduler`] — continuous batching on the resumable
 //!   [`crate::engine::BatchSession`]: arrivals join free slots at every
-//!   iteration boundary and sequences retire the iteration they finish,
-//!   removing the static path's head-of-line blocking under load.
+//!   iteration boundary and sequences retire the iteration they finish.
+//!   Under [`AdmissionPolicy::Classes`] admission is priority- and
+//!   SLO-aware instead of FIFO, and a high-priority arrival may
+//!   *voluntarily preempt* a lower-priority sequence mid-flight
+//!   ([`crate::engine::BatchSession::evict`] saves its traced EAM and
+//!   position; [`crate::engine::BatchSession::admit_resumed`] continues it
+//!   later with identical per-token expert demands).
+//! * [`router::Router`] — owns N engine replicas and dispatches one
+//!   request stream across per-replica continuous schedulers with a
+//!   pluggable [`router::RoutingPolicy`] (round-robin, least-loaded, or
+//!   eMoE-style task affinity scored against each replica's EAMC).
 //!
-//! Both replays are fully deterministic in virtual time.
+//! Compatibility is pinned bitwise: with default request classes the
+//! continuous scheduler reproduces the pre-trait `serve_continuous` replay
+//! exactly, the static scheduler reproduces `serve`, continuous at
+//! `max_batch = 1` equals static, and a 1-replica round-robin router
+//! equals a bare continuous scheduler (`rust/tests/parallel.rs`,
+//! `rust/tests/scheduler.rs`). All replays are fully deterministic in
+//! virtual time.
 
-use crate::engine::{FeedbackMode, SimEngine, StepResult};
+pub mod router;
+
+pub use router::{Router, RoutingPolicy};
+
+use std::collections::VecDeque;
+
+use crate::engine::{BatchResult, FeedbackMode, PreemptedSeq, SessionState, SimEngine, StepResult};
 use crate::metrics::LatencyRecorder;
-use crate::workload::Request;
+use crate::workload::{Priority, Request};
+
+/// The shared batching-window check used by both [`Batcher::new`] (hard
+/// assert) and `config::ServeConfig::validate` (soft error): a NaN or
+/// negative window would poison the static batcher's dispatch arithmetic
+/// and silently mis-batch every request.
+pub fn check_max_wait(max_wait: f64) -> Result<(), String> {
+    if max_wait.is_finite() && max_wait >= 0.0 {
+        Ok(())
+    } else {
+        Err(format!("max_wait must be finite and >= 0, got {max_wait}"))
+    }
+}
 
 /// Batching policy. `max_wait` only applies to the static scheduler; the
 /// continuous scheduler admits at iteration boundaries and never holds a
@@ -28,12 +66,9 @@ pub struct Batcher {
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: f64) -> Batcher {
         assert!(max_batch >= 1);
-        // a NaN window would poison `next_batch`'s dispatch arithmetic and
-        // silently mis-batch every request; reject it (and negatives) here
-        assert!(
-            max_wait.is_finite() && max_wait >= 0.0,
-            "max_wait must be finite and >= 0, got {max_wait}"
-        );
+        if let Err(e) = check_max_wait(max_wait) {
+            panic!("{e}");
+        }
         Batcher {
             max_batch,
             max_wait,
@@ -45,7 +80,7 @@ impl Batcher {
     /// batch starting at `start_idx`.
     pub fn next_batch(
         &self,
-        requests: &[Request],
+        requests: &[&Request],
         start_idx: usize,
         engine_free: f64,
     ) -> (f64, usize) {
@@ -75,22 +110,70 @@ impl Batcher {
     }
 }
 
+/// Admission discipline of the continuous scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Strict arrival order, no preemption — the pre-priority behavior,
+    /// bitwise-pinned by the differential suite.
+    #[default]
+    Fifo,
+    /// Priority classes: free slots go to the highest
+    /// [`crate::workload::Priority`] tier first (least SLO slack, then
+    /// earliest arrival within a tier), and a waiting request may preempt
+    /// an in-flight sequence of a *strictly lower* tier at an iteration
+    /// boundary. With every request on the default class this degenerates
+    /// to FIFO exactly.
+    Classes,
+}
+
+impl AdmissionPolicy {
+    pub fn by_name(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "fifo" => Some(AdmissionPolicy::Fifo),
+            "classes" => Some(AdmissionPolicy::Classes),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::Classes => "classes",
+        }
+    }
+}
+
 /// Outcome of one serving replay.
 #[derive(Debug, Default)]
 pub struct ServeReport {
     /// Per-forward-iteration (per-token) latency; the first iteration of a
-    /// request carries its queueing delay.
+    /// request carries its queueing delay, and the first iteration after a
+    /// preemption carries the suspension gap.
     pub token_latency: LatencyRecorder,
     /// Per-request mean token latency (queueing included), recorded the
     /// iteration the request actually finishes.
     pub request_latency: LatencyRecorder,
+    /// Time to first token per request: from arrival to the end of the
+    /// request's first *executed* iteration.
+    pub ttft: LatencyRecorder,
+    /// Time per output token per request: mean latency of the iterations
+    /// after the first (only recorded for multi-iteration requests).
+    pub tpot: LatencyRecorder,
     pub requests: u64,
     pub tokens: u64,
     /// Static scheduler: dispatched batches. Continuous scheduler: engine
-    /// iterations executed (there is no batch boundary to count).
+    /// iterations executed (there is no batch boundary to count). Router:
+    /// iterations summed over replicas.
     pub batches: u64,
-    /// Virtual makespan of the replay.
+    /// Virtual makespan of the replay (max over replicas for the router).
     pub makespan: f64,
+    /// Aggregate expert-demand outcomes from the memory simulator (summed
+    /// over replicas): total demands and how many were already GPU-resident.
+    pub demands: u64,
+    pub gpu_hits: u64,
+    /// Total bytes moved by prefetch transfers (dead-traffic accounting for
+    /// the retired-prefetch cancellation experiments).
+    pub prefetch_bytes: u64,
 }
 
 impl ServeReport {
@@ -101,118 +184,666 @@ impl ServeReport {
             self.tokens as f64 / self.makespan
         }
     }
+
+    /// Fraction of expert demands served without any blocking transfer.
+    /// Zero-demand convention: 1.0 (matches `MemoryStats::gpu_hit_ratio`).
+    pub fn gpu_hit_ratio(&self) -> f64 {
+        if self.demands == 0 {
+            1.0
+        } else {
+            self.gpu_hits as f64 / self.demands as f64
+        }
+    }
+
+    /// Fold `other` into `self` (the router merges per-replica reports in
+    /// replica order; merging into an empty report is the identity).
+    pub fn merge(&mut self, other: &ServeReport) {
+        self.token_latency.append(&other.token_latency);
+        self.request_latency.append(&other.request_latency);
+        self.ttft.append(&other.ttft);
+        self.tpot.append(&other.tpot);
+        self.requests += other.requests;
+        self.tokens += other.tokens;
+        self.batches += other.batches;
+        self.makespan = self.makespan.max(other.makespan);
+        self.demands += other.demands;
+        self.gpu_hits += other.gpu_hits;
+        self.prefetch_bytes += other.prefetch_bytes;
+    }
+
+    /// Copy the engine-level demand/traffic tallies into the report (called
+    /// once at drain, when the replay is complete).
+    fn absorb_sim_stats(&mut self, engine: &SimEngine) {
+        let st = engine.sim().stats();
+        self.demands = st.demand_total();
+        self.gpu_hits = st.demand_gpu_hits;
+        self.prefetch_bytes = st.total_prefetch_bytes();
+    }
 }
 
-/// Replay `requests` (sorted by arrival) through `engine` with `batcher`.
-pub fn serve(engine: &mut SimEngine, batcher: Batcher, requests: &[Request]) -> ServeReport {
-    let mut report = ServeReport::default();
-    let mut idx = 0;
-    let mut engine_free = engine.now();
-    while idx < requests.len() {
-        let (dispatch, end) = batcher.next_batch(requests, idx, engine_free);
-        let batch = &requests[idx..end];
+/// The request-lifecycle interface every serving discipline implements.
+///
+/// Usage: `submit` the arrival-sorted request stream (all up front, or
+/// incrementally as long as arrival order is respected), then either call
+/// `drain` for the whole replay or interleave `tick` calls to advance one
+/// scheduling quantum at a time. `drain` finalizes and returns the report;
+/// it is a one-shot call (subsequent drains return an empty report).
+pub trait Scheduler<'r> {
+    /// Enqueue a request. Must be called in nondecreasing arrival order.
+    fn submit(&mut self, req: &'r Request);
+
+    /// Advance one scheduling quantum (one dispatched batch, one engine
+    /// iteration, or one router event). Returns `false` when no work is
+    /// left.
+    fn tick(&mut self) -> bool;
+
+    /// Run all submitted work to completion and return the report.
+    fn drain(&mut self) -> ServeReport;
+
+    /// Convenience: submit a whole arrival-sorted slice.
+    fn submit_all(&mut self, reqs: &'r [Request]) {
+        for r in reqs {
+            self.submit(r);
+        }
+    }
+}
+
+/// Run-to-completion batch scheduler (the paper's §8.2 methodology; the
+/// former free function `serve`, bitwise-preserved).
+pub struct StaticScheduler<'r> {
+    engine: SimEngine,
+    batcher: Batcher,
+    pending: Vec<&'r Request>,
+    idx: usize,
+    engine_free: f64,
+    result: BatchResult,
+    report: ServeReport,
+    drained: bool,
+}
+
+impl<'r> StaticScheduler<'r> {
+    pub fn new(engine: SimEngine, batcher: Batcher) -> StaticScheduler<'r> {
+        let engine_free = engine.now();
+        StaticScheduler {
+            engine,
+            batcher,
+            pending: Vec::new(),
+            idx: 0,
+            engine_free,
+            result: BatchResult::default(),
+            report: ServeReport::default(),
+            drained: false,
+        }
+    }
+
+    pub fn engine(&self) -> &SimEngine {
+        &self.engine
+    }
+
+    pub fn into_engine(self) -> SimEngine {
+        self.engine
+    }
+}
+
+impl<'r> Scheduler<'r> for StaticScheduler<'r> {
+    fn submit(&mut self, req: &'r Request) {
+        assert!(!self.drained, "submit after drain: the request would be lost");
+        debug_assert!(
+            self.pending.last().map_or(true, |p| p.arrival <= req.arrival),
+            "requests must be submitted in arrival order"
+        );
+        self.pending.push(req);
+    }
+
+    /// Dispatch and run one batch to completion. Batching decisions look
+    /// ahead only at requests already submitted, so submit the full stream
+    /// before ticking to reproduce the historical replay.
+    fn tick(&mut self) -> bool {
+        if self.idx >= self.pending.len() {
+            return false;
+        }
+        let (dispatch, end) = self
+            .batcher
+            .next_batch(&self.pending, self.idx, self.engine_free);
+        let batch = &self.pending[self.idx..end];
         let seqs: Vec<_> = batch.iter().map(|r| r.seq.clone()).collect();
-        let result = engine.run_batch(&seqs, dispatch);
+        self.engine.run_batch_into(&seqs, dispatch, &mut self.result);
 
         // queueing delay per request = dispatch - arrival
         for r in batch {
             let queue_delay = dispatch - r.arrival;
-            let n_iters = r.seq.iterations().min(result.token_latencies.len());
+            let n_iters = r.seq.iterations().min(self.result.token_latencies.len());
             let mut mean = 0.0;
-            for (i, &lat) in result.token_latencies[..n_iters].iter().enumerate() {
+            for (i, &lat) in self.result.token_latencies[..n_iters].iter().enumerate() {
                 let l = if i == 0 { lat + queue_delay } else { lat };
-                report.token_latency.record(l);
+                self.report.token_latency.record(l);
                 mean += l;
             }
             if n_iters > 0 {
-                report.request_latency.record(mean / n_iters as f64);
+                self.report.request_latency.record(mean / n_iters as f64);
+                // TTFT = queueing delay + the batch's first iteration; TPOT
+                // = mean of the remaining iterations the request rode in
+                let ttft = self.result.token_latencies[0] + queue_delay;
+                self.report.ttft.record(ttft);
+                if n_iters > 1 {
+                    self.report.tpot.record((mean - ttft) / (n_iters - 1) as f64);
+                }
             }
-            report.tokens += r.seq.total_tokens() as u64;
+            self.report.tokens += r.seq.total_tokens() as u64;
         }
-        report.requests += batch.len() as u64;
-        report.batches += 1;
-        engine_free = result.finish;
-        idx = end;
+        self.report.requests += batch.len() as u64;
+        self.report.batches += 1;
+        self.engine_free = self.result.finish;
+        self.idx = end;
+        true
     }
-    report.makespan = engine_free;
-    report
+
+    fn drain(&mut self) -> ServeReport {
+        if self.drained {
+            return ServeReport::default(); // one-shot: nothing new to report
+        }
+        self.drained = true;
+        while self.tick() {}
+        self.report.makespan = self.engine_free;
+        self.report.absorb_sim_stats(&self.engine);
+        std::mem::take(&mut self.report)
+    }
 }
 
-/// Replay `requests` (sorted by arrival) with **continuous batching**: one
-/// resumable [`crate::engine::BatchSession`] spans the whole replay;
-/// arrivals are admitted into free slots at every iteration boundary (up
-/// to `batcher.max_batch` in flight) and sequences retire — recording
-/// their completion latency — the iteration they finish, not at the batch
-/// tail.
-///
-/// Degenerate case: with `max_batch = 1` the admission instants equal the
-/// static scheduler's dispatch instants (`max(arrival, engine-free)`), so
-/// the replay is bitwise identical to [`serve`] — pinned by the
-/// differential suite in `rust/tests/parallel.rs`.
-pub fn serve_continuous(
-    engine: &mut SimEngine,
-    batcher: Batcher,
-    requests: &[Request],
-) -> ServeReport {
-    let mut report = ServeReport::default();
-    let n = requests.len();
-    // per-request accounting (request ids double as session external ids)
-    let mut lat_sum = vec![0.0f64; n];
-    let mut lat_n = vec![0u32; n];
-    let mut queue_delay = vec![0.0f64; n];
-    let mut first_pending = vec![false; n];
-    let mut step = StepResult::default();
-    let start = engine.now();
-    let mut session = engine.begin_session(start, FeedbackMode::Immediate);
-    let mut next = 0usize; // next request to admit
-    loop {
-        // iteration boundary: fill free slots with everyone already here
-        while next < n
-            && session.active() < batcher.max_batch
-            && requests[next].arrival <= session.now()
-        {
-            let r = &requests[next];
-            session.admit(next as u64, &r.seq);
-            queue_delay[next] = session.now() - r.arrival;
-            first_pending[next] = true;
-            next += 1;
-        }
-        if session.active() == 0 {
-            if next >= n {
-                break;
-            }
-            session.idle_until(requests[next].arrival);
-            continue;
-        }
-        let ran = session.step(|id| &requests[id as usize].seq, &mut step);
-        debug_assert!(ran, "active slots must step");
-        report.batches += 1; // = engine iterations under this scheduler
-        let dt = step.latency();
-        for &rid in &step.executed {
-            let rid = rid as usize;
-            let mut l = dt;
-            if first_pending[rid] {
-                // the request's first iteration carries its queueing delay
-                l += queue_delay[rid];
-                first_pending[rid] = false;
-            }
-            report.token_latency.record(l);
-            lat_sum[rid] += l;
-            lat_n[rid] += 1;
-        }
-        for &rid in &step.finished {
-            let rid = rid as usize;
-            if lat_n[rid] > 0 {
-                report
-                    .request_latency
-                    .record(lat_sum[rid] / lat_n[rid] as f64);
-            }
-            report.tokens += requests[rid].seq.total_tokens() as u64;
-            report.requests += 1;
+/// Sentinel for "not currently mapped" slot/park indices.
+const NONE_U32: u32 = u32::MAX;
+
+/// Per-request outcome exposed after a continuous replay (the priority /
+/// preemption experiments slice latencies by class with this).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestStat {
+    pub id: u64,
+    pub priority: Priority,
+    pub arrival: f64,
+    pub finished: bool,
+    /// Mean per-token latency, queueing and suspension charges included
+    /// (the `request_latency` sample of this request).
+    pub latency: f64,
+    /// Time to first token (0 if nothing executed).
+    pub ttft: f64,
+    /// How many times the sequence was preempted.
+    pub preemptions: u32,
+}
+
+/// Continuous-batching scheduler on one engine (the former free function
+/// `serve_continuous`, bitwise-preserved under [`AdmissionPolicy::Fifo`]),
+/// plus priority-class admission and voluntary preemption under
+/// [`AdmissionPolicy::Classes`].
+pub struct ContinuousScheduler<'r> {
+    engine: SimEngine,
+    max_batch: usize,
+    admission: AdmissionPolicy,
+    layers: usize,
+    experts: usize,
+    /// Suspended session continuation (`None` once drained).
+    session: Option<SessionState>,
+    step: StepResult,
+    /// Submitted requests in arrival order; index = session external id.
+    reqs: Vec<&'r Request>,
+    /// First request not yet moved into `waiting`.
+    next_arrival: usize,
+    /// Arrived, unadmitted request indices in arrival order (deque: FIFO
+    /// admission pops the front in O(1) even under deep overload backlogs).
+    waiting: VecDeque<u32>,
+    /// In-flight request indices (unordered; scanned for victims).
+    active: Vec<u32>,
+    /// Preempted request indices awaiting resume.
+    preempted: Vec<u32>,
+    /// Pool of saved preemption states; `park_of` maps requests to slots.
+    parked: Vec<PreemptedSeq>,
+    free_park: Vec<u32>,
+    finished: usize,
+    expected_tokens: usize,
+    // --- per-request accounting, index-aligned with `reqs` ---
+    lat_sum: Vec<f64>,
+    lat_n: Vec<u32>,
+    /// Waiting time (initial queueing or suspension gap) to fold into the
+    /// next executed token's latency.
+    pending_extra: Vec<f64>,
+    charge: Vec<bool>,
+    ttft_val: Vec<f64>,
+    first_done: Vec<bool>,
+    evict_t: Vec<f64>,
+    slot_of: Vec<u32>,
+    park_of: Vec<u32>,
+    preemptions: Vec<u32>,
+    done: Vec<bool>,
+    report: ServeReport,
+}
+
+/// Reserve to an absolute capacity target (`reserve` already no-ops once
+/// capacity suffices) — the router pre-sizes replica buffers this way so
+/// dispatch-time pushes inside a warmed iteration never allocate.
+fn reserve_to<T>(v: &mut Vec<T>, total: usize) {
+    v.reserve(total.saturating_sub(v.len()));
+}
+
+/// [`reserve_to`] for the wait deque.
+fn reserve_deque_to<T>(v: &mut VecDeque<T>, total: usize) {
+    v.reserve(total.saturating_sub(v.len()));
+}
+
+/// `(priority, slack, arrival, idx)` admission key: higher tier first,
+/// then least SLO slack, then earliest arrival, then lowest index.
+fn candidate_beats(
+    a: (Priority, f64, f64, u32),
+    b: (Priority, f64, f64, u32),
+) -> bool {
+    if a.0 != b.0 {
+        return a.0 > b.0;
+    }
+    if a.1 != b.1 {
+        return a.1 < b.1;
+    }
+    if a.2 != b.2 {
+        return a.2 < b.2;
+    }
+    a.3 < b.3
+}
+
+/// Best admission candidate across the waiting and preempted lists.
+/// Returns `(from_preempted, position_in_that_list)`.
+fn pick_candidate(
+    reqs: &[&Request],
+    waiting: &VecDeque<u32>,
+    preempted: &[u32],
+    now: f64,
+) -> Option<(bool, usize)> {
+    let key = |i: u32| {
+        let r = reqs[i as usize];
+        (r.class.priority, r.class.slack(r.arrival, now), r.arrival, i)
+    };
+    let mut best: Option<((Priority, f64, f64, u32), bool, usize)> = None;
+    for (pos, &i) in waiting.iter().enumerate() {
+        let k = key(i);
+        if best.map_or(true, |(bk, _, _)| candidate_beats(k, bk)) {
+            best = Some((k, false, pos));
         }
     }
-    report.makespan = session.finish();
-    report
+    for (pos, &i) in preempted.iter().enumerate() {
+        let k = key(i);
+        if best.map_or(true, |(bk, _, _)| candidate_beats(k, bk)) {
+            best = Some((k, true, pos));
+        }
+    }
+    best.map(|(_, from_preempted, pos)| (from_preempted, pos))
+}
+
+/// Preemption victim: the *youngest of the lowest tier* among active
+/// requests (min priority, then max arrival, then max index). Returns the
+/// position in `active`.
+fn pick_victim(reqs: &[&Request], active: &[u32]) -> Option<usize> {
+    let mut best: Option<((Priority, f64, u32), usize)> = None;
+    for (pos, &i) in active.iter().enumerate() {
+        let r = reqs[i as usize];
+        let k = (r.class.priority, r.arrival, i);
+        let worse = |b: (Priority, f64, u32)| {
+            if k.0 != b.0 {
+                return k.0 < b.0;
+            }
+            if k.1 != b.1 {
+                return k.1 > b.1;
+            }
+            k.2 > b.2
+        };
+        if best.map_or(true, |(bk, _)| worse(bk)) {
+            best = Some((k, pos));
+        }
+    }
+    best.map(|(_, pos)| pos)
+}
+
+impl<'r> ContinuousScheduler<'r> {
+    pub fn new(
+        mut engine: SimEngine,
+        batcher: Batcher,
+        admission: AdmissionPolicy,
+    ) -> ContinuousScheduler<'r> {
+        let start = engine.now();
+        let session = engine.begin_session(start, FeedbackMode::Immediate).suspend();
+        let (layers, experts) = (engine.spec().n_layers, engine.spec().experts_per_layer);
+        let active = Vec::with_capacity(batcher.max_batch);
+        ContinuousScheduler {
+            engine,
+            max_batch: batcher.max_batch,
+            admission,
+            layers,
+            experts,
+            session: Some(session),
+            step: StepResult::default(),
+            reqs: Vec::new(),
+            next_arrival: 0,
+            waiting: VecDeque::new(),
+            active,
+            preempted: Vec::new(),
+            parked: Vec::new(),
+            free_park: Vec::new(),
+            finished: 0,
+            expected_tokens: 0,
+            lat_sum: Vec::new(),
+            lat_n: Vec::new(),
+            pending_extra: Vec::new(),
+            charge: Vec::new(),
+            ttft_val: Vec::new(),
+            first_done: Vec::new(),
+            evict_t: Vec::new(),
+            slot_of: Vec::new(),
+            park_of: Vec::new(),
+            preemptions: Vec::new(),
+            done: Vec::new(),
+            report: ServeReport::default(),
+        }
+    }
+
+    pub fn engine(&self) -> &SimEngine {
+        &self.engine
+    }
+
+    pub fn into_engine(self) -> SimEngine {
+        self.engine
+    }
+
+    /// Virtual time of the current iteration boundary.
+    pub fn now(&self) -> f64 {
+        match &self.session {
+            Some(s) => s.now(),
+            None => self.engine.now(),
+        }
+    }
+
+    /// Anything submitted and not yet finished?
+    pub fn has_work(&self) -> bool {
+        self.finished < self.reqs.len()
+    }
+
+    /// Dispatched-but-unfinished request count (the router's load signal).
+    pub fn load(&self) -> usize {
+        self.reqs.len() - self.finished
+    }
+
+    /// Earliest virtual time at which this scheduler's next state change
+    /// can happen: the current boundary while anything is admitted or
+    /// admissible, else the next queued arrival. `None` when idle-empty.
+    /// The router dispatches a request once every replica's bound has
+    /// reached its arrival — replica states at the arrival instant are
+    /// then final, keeping the replay deterministic and causal.
+    pub fn next_event_bound(&self) -> Option<f64> {
+        if !self.has_work() {
+            return None;
+        }
+        if !self.active.is_empty() || !self.waiting.is_empty() || !self.preempted.is_empty() {
+            return Some(self.now());
+        }
+        debug_assert!(self.next_arrival < self.reqs.len());
+        Some(self.reqs[self.next_arrival].arrival.max(self.now()))
+    }
+
+    /// Pre-size every per-request buffer and report recorder for a stream
+    /// of `total_requests` requests / `total_tokens` iterations, so that
+    /// later `submit` calls (the router dispatches mid-replay) and
+    /// steady-state recording never reallocate.
+    pub fn reserve_for(&mut self, total_requests: usize, total_tokens: usize) {
+        reserve_to(&mut self.reqs, total_requests);
+        reserve_deque_to(&mut self.waiting, total_requests);
+        reserve_to(&mut self.preempted, total_requests);
+        reserve_to(&mut self.lat_sum, total_requests);
+        reserve_to(&mut self.lat_n, total_requests);
+        reserve_to(&mut self.pending_extra, total_requests);
+        reserve_to(&mut self.charge, total_requests);
+        reserve_to(&mut self.ttft_val, total_requests);
+        reserve_to(&mut self.first_done, total_requests);
+        reserve_to(&mut self.evict_t, total_requests);
+        reserve_to(&mut self.slot_of, total_requests);
+        reserve_to(&mut self.park_of, total_requests);
+        reserve_to(&mut self.preemptions, total_requests);
+        reserve_to(&mut self.done, total_requests);
+        let r = &mut self.report;
+        r.token_latency
+            .reserve(total_tokens.saturating_sub(r.token_latency.len()));
+        r.request_latency
+            .reserve(total_requests.saturating_sub(r.request_latency.len()));
+        r.ttft.reserve(total_requests.saturating_sub(r.ttft.len()));
+        r.tpot.reserve(total_requests.saturating_sub(r.tpot.len()));
+    }
+
+    /// Per-request outcomes (id, class, latency, TTFT, preemption count).
+    pub fn request_stats(&self) -> Vec<RequestStat> {
+        (0..self.reqs.len())
+            .map(|i| RequestStat {
+                id: self.reqs[i].id,
+                priority: self.reqs[i].class.priority,
+                arrival: self.reqs[i].arrival,
+                finished: self.done[i],
+                latency: if self.lat_n[i] == 0 {
+                    0.0
+                } else {
+                    self.lat_sum[i] / self.lat_n[i] as f64
+                },
+                ttft: self.ttft_val[i],
+                preemptions: self.preemptions[i],
+            })
+            .collect()
+    }
+
+    /// Admit from the wait/preempted queues into free slots at the current
+    /// boundary; under [`AdmissionPolicy::Classes`], additionally preempt
+    /// strictly-lower-priority in-flight sequences for waiting
+    /// higher-priority requests.
+    ///
+    /// Cost note: the FIFO path pops the deque front in O(1). Classes
+    /// scans the waiting/preempted lists once per admission attempt —
+    /// O((max_batch + evictions + 1) · backlog) per boundary. The key
+    /// (priority desc, arrival+slo, arrival, idx) is time-invariant, so an
+    /// indexed heap could cut this to O(log n); deferred until a CI
+    /// profile shows Classes replays backlog-bound (ROADMAP).
+    fn admit_and_preempt(&mut self) {
+        let state = self.session.take().expect("live session");
+        let now = state.now();
+        let mut session = self.engine.resume_session(state);
+        loop {
+            // next candidate under the admission discipline
+            let picked = match self.admission {
+                AdmissionPolicy::Fifo => {
+                    if self.waiting.is_empty() {
+                        None
+                    } else {
+                        Some((false, 0))
+                    }
+                }
+                AdmissionPolicy::Classes => {
+                    pick_candidate(&self.reqs, &self.waiting, &self.preempted, now)
+                }
+            };
+            let Some((from_preempted, pos)) = picked else {
+                break;
+            };
+            if session.active() >= self.max_batch {
+                // no free slot: under Classes the candidate may evict the
+                // youngest lowest-tier in-flight sequence — but only a
+                // *strictly* lower one, so equal tiers never thrash and
+                // FIFO (which never preempts) just stops here
+                if self.admission != AdmissionPolicy::Classes {
+                    break;
+                }
+                let cand = if from_preempted {
+                    self.preempted[pos]
+                } else {
+                    self.waiting[pos]
+                } as usize;
+                let Some(vpos) = pick_victim(&self.reqs, &self.active) else {
+                    break;
+                };
+                let v = self.active[vpos] as usize;
+                if self.reqs[v].class.priority >= self.reqs[cand].class.priority {
+                    break; // nobody strictly below the candidate — keep order
+                }
+                // evict the victim into a (recycled) park slot; the freed
+                // engine slot then goes to the candidate below
+                let park = match self.free_park.pop() {
+                    Some(p) => p,
+                    None => {
+                        self.parked.push(PreemptedSeq::new(self.layers, self.experts));
+                        (self.parked.len() - 1) as u32
+                    }
+                };
+                session.evict(self.slot_of[v] as usize, &mut self.parked[park as usize]);
+                self.active.swap_remove(vpos);
+                self.park_of[v] = park;
+                self.slot_of[v] = NONE_U32;
+                self.evict_t[v] = now;
+                self.preemptions[v] += 1;
+                self.preempted.push(v as u32);
+            }
+            // admit the candidate into the free slot
+            if from_preempted {
+                let i = self.preempted.remove(pos) as usize;
+                let park = self.park_of[i];
+                let slot = session.admit_resumed(&self.parked[park as usize]);
+                self.free_park.push(park);
+                self.park_of[i] = NONE_U32;
+                self.slot_of[i] = slot as u32;
+                // the suspension gap is charged to the next executed token
+                self.pending_extra[i] += now - self.evict_t[i];
+                self.charge[i] = true;
+                self.active.push(i as u32);
+            } else {
+                let i = self.waiting.remove(pos).expect("picked position") as usize;
+                let slot = session.admit(i as u64, &self.reqs[i].seq);
+                self.slot_of[i] = slot as u32;
+                self.pending_extra[i] = now - self.reqs[i].arrival;
+                self.charge[i] = true;
+                self.active.push(i as u32);
+            }
+        }
+        self.session = Some(session.suspend());
+    }
+}
+
+impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
+    fn submit(&mut self, req: &'r Request) {
+        assert!(
+            self.session.is_some(),
+            "submit after drain: the request would be lost"
+        );
+        debug_assert!(
+            self.reqs.last().map_or(true, |p| p.arrival <= req.arrival),
+            "requests must be submitted in arrival order"
+        );
+        self.reqs.push(req);
+        self.lat_sum.push(0.0);
+        self.lat_n.push(0);
+        self.pending_extra.push(0.0);
+        self.charge.push(false);
+        self.ttft_val.push(0.0);
+        self.first_done.push(false);
+        self.evict_t.push(0.0);
+        self.slot_of.push(NONE_U32);
+        self.park_of.push(NONE_U32);
+        self.preemptions.push(0);
+        self.done.push(false);
+        self.expected_tokens += req.seq.iterations();
+        let (nr, nt) = (self.reqs.len(), self.expected_tokens);
+        self.reserve_for(nr, nt);
+    }
+
+    /// One engine iteration (admissions at the boundary included), or one
+    /// idle hop to the next arrival.
+    fn tick(&mut self) -> bool {
+        if self.session.is_none() {
+            return false; // drained
+        }
+        loop {
+            let now = self.now();
+            // iteration boundary: everyone already here joins the queue
+            while self.next_arrival < self.reqs.len()
+                && self.reqs[self.next_arrival].arrival <= now
+            {
+                self.waiting.push_back(self.next_arrival as u32);
+                self.next_arrival += 1;
+            }
+            self.admit_and_preempt();
+            if self.active.is_empty() {
+                if self.next_arrival >= self.reqs.len() {
+                    return false; // nothing in flight, nothing queued
+                }
+                debug_assert!(self.waiting.is_empty() && self.preempted.is_empty());
+                let t = self.reqs[self.next_arrival].arrival;
+                let state = self.session.take().expect("live session");
+                let mut session = self.engine.resume_session(state);
+                session.idle_until(t);
+                self.session = Some(session.suspend());
+                continue;
+            }
+            // execute one forward iteration for everything in flight
+            let state = self.session.take().expect("live session");
+            let reqs = &self.reqs;
+            let mut session = self.engine.resume_session(state);
+            let ran = session.step(|id| &reqs[id as usize].seq, &mut self.step);
+            debug_assert!(ran, "active slots must step");
+            self.session = Some(session.suspend());
+            self.report.batches += 1; // = engine iterations under this scheduler
+            let dt = self.step.latency();
+            for &ext in &self.step.executed {
+                let i = ext as usize;
+                let mut l = dt;
+                if self.charge[i] {
+                    // the first token after (re)admission carries the
+                    // queueing delay / suspension gap
+                    l += self.pending_extra[i];
+                    self.pending_extra[i] = 0.0;
+                    self.charge[i] = false;
+                }
+                self.report.token_latency.record(l);
+                self.lat_sum[i] += l;
+                self.lat_n[i] += 1;
+                if !self.first_done[i] {
+                    self.first_done[i] = true;
+                    self.ttft_val[i] = l;
+                    self.report.ttft.record(l);
+                }
+            }
+            for &ext in &self.step.finished {
+                let i = ext as usize;
+                if self.lat_n[i] > 0 {
+                    self.report
+                        .request_latency
+                        .record(self.lat_sum[i] / self.lat_n[i] as f64);
+                }
+                if self.lat_n[i] > 1 {
+                    self.report
+                        .tpot
+                        .record((self.lat_sum[i] - self.ttft_val[i]) / (self.lat_n[i] - 1) as f64);
+                }
+                self.report.tokens += self.reqs[i].seq.total_tokens() as u64;
+                self.report.requests += 1;
+                self.done[i] = true;
+                self.slot_of[i] = NONE_U32;
+                self.finished += 1;
+                if let Some(p) = self.active.iter().position(|&r| r as usize == i) {
+                    self.active.swap_remove(p);
+                }
+            }
+            return true;
+        }
+    }
+
+    fn drain(&mut self) -> ServeReport {
+        while self.tick() {}
+        match self.session.take() {
+            Some(state) => {
+                self.report.makespan = self.engine.resume_session(state).finish();
+                self.report.absorb_sim_stats(&self.engine);
+                std::mem::take(&mut self.report)
+            }
+            // one-shot: the session is gone, so is the report
+            None => ServeReport::default(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -224,7 +855,7 @@ mod tests {
     use crate::model::ModelSpec;
     use crate::trace::Eamc;
     use crate::util::Rng;
-    use crate::workload::{ArrivalProcess, DatasetPreset, Workload};
+    use crate::workload::{ArrivalProcess, DatasetPreset, RequestClass, Workload};
 
     fn mk_requests(n: usize, rps: f64, seed: u64) -> (ModelSpec, Vec<Request>, Workload) {
         let spec = ModelSpec::preset("switch-base-32").unwrap();
@@ -235,11 +866,7 @@ mod tests {
         let reqs = (0..n)
             .map(|i| {
                 t += proc.next_gap(&mut rng);
-                Request {
-                    id: i as u64,
-                    arrival: t,
-                    seq: w.gen_sequence(),
-                }
+                Request::new(i as u64, t, w.gen_sequence())
             })
             .collect();
         (spec, reqs, w)
@@ -271,19 +898,48 @@ mod tests {
         )
     }
 
+    /// Regenerate the `(n, rps, seed)` trace and serve it statically —
+    /// engine built from the same advanced workload stream the pre-trait
+    /// tests used, so the pinned assertions replay identically.
+    fn run_static(n: usize, rps: f64, seed: u64, batcher: Batcher) -> ServeReport {
+        let (spec, reqs, mut w) = mk_requests(n, rps, seed);
+        let eng = engine_for(&spec, &mut w);
+        let mut s = StaticScheduler::new(eng, batcher);
+        s.submit_all(&reqs);
+        s.drain()
+    }
+
+    fn run_continuous(
+        n: usize,
+        rps: f64,
+        seed: u64,
+        batcher: Batcher,
+        admission: AdmissionPolicy,
+    ) -> (ServeReport, Vec<RequestStat>) {
+        let (spec, reqs, mut w) = mk_requests(n, rps, seed);
+        let eng = engine_for(&spec, &mut w);
+        let mut s = ContinuousScheduler::new(eng, batcher, admission);
+        s.submit_all(&reqs);
+        let report = s.drain();
+        let stats = s.request_stats();
+        (report, stats)
+    }
+
     #[test]
     fn batcher_respects_max_batch() {
         let (_, reqs, _) = mk_requests(50, 100.0, 1); // rapid arrivals
+        let refs: Vec<&Request> = reqs.iter().collect();
         let b = Batcher::new(16, 1.0);
-        let (_, end) = b.next_batch(&reqs, 0, 0.0);
+        let (_, end) = b.next_batch(&refs, 0, 0.0);
         assert!(end <= 16);
     }
 
     #[test]
     fn batcher_respects_max_wait_under_low_load() {
         let (_, reqs, _) = mk_requests(3, 0.1, 2); // sparse arrivals
+        let refs: Vec<&Request> = reqs.iter().collect();
         let b = Batcher::new(16, 1.0);
-        let (dispatch, end) = b.next_batch(&reqs, 0, 0.0);
+        let (dispatch, end) = b.next_batch(&refs, 0, 0.0);
         // window expires before batch fills: dispatch ~ first arrival + 1s
         assert!((dispatch - (reqs[0].arrival + 1.0)).abs() < 1e-9);
         assert!(end >= 1);
@@ -292,23 +948,12 @@ mod tests {
     #[test]
     fn batcher_waits_for_engine() {
         let (_, reqs, _) = mk_requests(5, 10.0, 3);
+        let refs: Vec<&Request> = reqs.iter().collect();
         let b = Batcher::new(4, 0.5);
         let engine_free = reqs[4].arrival + 100.0;
-        let (dispatch, end) = b.next_batch(&reqs, 0, engine_free);
+        let (dispatch, end) = b.next_batch(&refs, 0, engine_free);
         assert_eq!(dispatch, engine_free);
         assert_eq!(end, 4, "everyone arrived while engine busy rides along");
-    }
-
-    #[test]
-    fn serve_processes_all_requests() {
-        let (spec, reqs, mut w) = mk_requests(12, 2.0, 4);
-        let mut eng = engine_for(&spec, &mut w);
-        let report = serve(&mut eng, Batcher::new(8, 0.5), &reqs);
-        assert_eq!(report.requests, 12);
-        assert!(report.batches >= 2);
-        assert!(report.token_latency.len() > 0);
-        assert!(report.token_throughput() > 0.0);
-        assert!(report.makespan >= reqs.last().unwrap().arrival);
     }
 
     #[test]
@@ -330,10 +975,22 @@ mod tests {
     }
 
     #[test]
-    fn serve_continuous_processes_all_requests() {
-        let (spec, reqs, mut w) = mk_requests(12, 2.0, 4);
-        let mut eng = engine_for(&spec, &mut w);
-        let report = serve_continuous(&mut eng, Batcher::new(8, 0.5), &reqs);
+    fn static_scheduler_processes_all_requests() {
+        let report = run_static(12, 2.0, 4, Batcher::new(8, 0.5));
+        let (_, reqs, _) = mk_requests(12, 2.0, 4); // same deterministic trace
+        assert_eq!(report.requests, 12);
+        assert!(report.batches >= 2);
+        assert!(report.token_latency.len() > 0);
+        assert!(report.token_throughput() > 0.0);
+        assert!(report.makespan >= reqs.last().unwrap().arrival);
+        assert_eq!(report.ttft.len(), 12, "one TTFT sample per request");
+        assert!(report.demands > 0, "sim stats must flow into the report");
+    }
+
+    #[test]
+    fn continuous_scheduler_processes_all_requests() {
+        let (report, stats) = run_continuous(12, 2.0, 4, Batcher::new(8, 0.5), AdmissionPolicy::Fifo);
+        let (_, reqs, _) = mk_requests(12, 2.0, 4); // same deterministic trace
         assert_eq!(report.requests, 12);
         assert!(report.batches >= 12, "at least one iteration per request");
         assert!(report.token_latency.len() > 0);
@@ -344,6 +1001,34 @@ mod tests {
             12,
             "every request records a completion latency"
         );
+        assert_eq!(report.ttft.len(), 12);
+        assert!(stats.iter().all(|s| s.finished && s.preemptions == 0));
+    }
+
+    #[test]
+    fn ttft_tpot_decompose_request_latency() {
+        let (mut report, _) =
+            run_continuous(6, 1.0, 8, Batcher::new(4, 0.5), AdmissionPolicy::Fifo);
+        assert_eq!(report.ttft.len() as u64, report.requests);
+        assert!(report.tpot.len() as u64 <= report.requests);
+        assert!(report.ttft.p50() > 0.0);
+        assert!(report.tpot.p50() > 0.0);
+    }
+
+    #[test]
+    fn classes_with_default_requests_is_bitwise_fifo() {
+        let (fifo, _) = run_continuous(20, 20.0, 6, Batcher::new(4, 0.1), AdmissionPolicy::Fifo);
+        let (cls, _) = run_continuous(20, 20.0, 6, Batcher::new(4, 0.1), AdmissionPolicy::Classes);
+        assert_eq!(fifo.requests, cls.requests);
+        assert_eq!(fifo.tokens, cls.tokens);
+        assert_eq!(fifo.batches, cls.batches);
+        assert_eq!(fifo.makespan.to_bits(), cls.makespan.to_bits());
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(fifo.token_latency.samples()),
+            bits(cls.token_latency.samples()),
+            "default classes must not change the replay"
+        );
     }
 
     #[test]
@@ -351,12 +1036,8 @@ mod tests {
         // the head-of-line blocking continuous batching removes: under a
         // Poisson overload, late arrivals no longer wait for whole batches
         // to run to completion, so tail request latency must improve.
-        let (spec, reqs, mut w) = mk_requests(30, 50.0, 5);
-        let mut eng = engine_for(&spec, &mut w);
-        let mut stat = serve(&mut eng, Batcher::new(4, 0.1), &reqs);
-        let (spec2, reqs2, mut w2) = mk_requests(30, 50.0, 5); // same trace
-        let mut eng2 = engine_for(&spec2, &mut w2);
-        let mut cont = serve_continuous(&mut eng2, Batcher::new(4, 0.1), &reqs2);
+        let mut stat = run_static(30, 50.0, 5, Batcher::new(4, 0.1));
+        let (mut cont, _) = run_continuous(30, 50.0, 5, Batcher::new(4, 0.1), AdmissionPolicy::Fifo);
         assert_eq!(cont.requests, stat.requests);
         assert_eq!(cont.tokens, stat.tokens);
         assert!(
@@ -369,17 +1050,93 @@ mod tests {
 
     #[test]
     fn queueing_delay_shows_up_under_overload() {
-        let (spec, reqs, mut w) = mk_requests(30, 50.0, 5); // heavy overload
-        let mut eng = engine_for(&spec, &mut w);
-        let mut report = serve(&mut eng, Batcher::new(4, 0.1), &reqs);
-        let (spec2, reqs2, mut w2) = mk_requests(30, 0.2, 5); // light load
-        let mut eng2 = engine_for(&spec2, &mut w2);
-        let mut report2 = serve(&mut eng2, Batcher::new(4, 0.1), &reqs2);
+        let mut report = run_static(30, 50.0, 5, Batcher::new(4, 0.1)); // heavy overload
+        let mut report2 = run_static(30, 0.2, 5, Batcher::new(4, 0.1)); // light load
         assert!(
             report.request_latency.p99() > report2.request_latency.p99(),
             "overloaded p99 {} must exceed light p99 {}",
             report.request_latency.p99(),
             report2.request_latency.p99()
         );
+    }
+
+    #[test]
+    fn preemption_lowers_high_priority_p99_under_overload() {
+        // The acceptance contract of the priority tentpole: under a mixed
+        // overload, interactive requests must see lower tail latency with
+        // class-aware admission + preemption than with FIFO admission.
+        let run = |admission: AdmissionPolicy| -> Vec<RequestStat> {
+            let (spec, mut reqs, mut w) = mk_requests(30, 50.0, 9);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.class = if i % 4 == 0 {
+                    RequestClass::interactive().with_slo(2.0)
+                } else {
+                    RequestClass::batch()
+                };
+            }
+            let eng = engine_for(&spec, &mut w);
+            let mut s = ContinuousScheduler::new(eng, Batcher::new(4, 0.1), admission);
+            s.submit_all(&reqs);
+            let _ = s.drain();
+            s.request_stats()
+        };
+        let hi_p99 = |stats: &[RequestStat]| {
+            let mut rec = LatencyRecorder::new();
+            for s in stats {
+                if s.priority == Priority::Interactive {
+                    assert!(s.finished, "interactive request must finish");
+                    rec.record(s.latency);
+                }
+            }
+            assert!(rec.len() > 0);
+            rec.p99()
+        };
+        let fifo_stats = run(AdmissionPolicy::Fifo);
+        let cls_stats = run(AdmissionPolicy::Classes);
+        let fifo_p99 = hi_p99(&fifo_stats);
+        let cls_p99 = hi_p99(&cls_stats);
+        assert!(
+            cls_p99 < fifo_p99,
+            "priority+preemption interactive p99 {cls_p99} must beat FIFO {fifo_p99}"
+        );
+        // preemption actually fired on the batch tier
+        assert!(
+            cls_stats.iter().any(|s| s.preemptions > 0),
+            "overload with mixed classes must trigger voluntary preemption"
+        );
+        // and every batch-tier request still finishes (no starvation)
+        assert!(cls_stats.iter().all(|s| s.finished));
+    }
+
+    #[test]
+    fn drain_is_one_shot_for_both_schedulers() {
+        let (spec, reqs, mut w) = mk_requests(4, 1.0, 14);
+        let eng = engine_for(&spec, &mut w);
+        let mut s = ContinuousScheduler::new(eng, Batcher::new(4, 0.5), AdmissionPolicy::Fifo);
+        s.submit_all(&reqs);
+        let first = s.drain();
+        assert_eq!(first.requests, 4);
+        let second = s.drain();
+        assert_eq!(second.requests, 0, "second drain must be empty");
+        assert_eq!(second.demands, 0, "no double-counted sim stats");
+        assert_eq!(second.makespan, 0.0);
+
+        let (spec2, reqs2, mut w2) = mk_requests(4, 1.0, 14);
+        let eng2 = engine_for(&spec2, &mut w2);
+        let mut st = StaticScheduler::new(eng2, Batcher::new(4, 0.5));
+        st.submit_all(&reqs2);
+        assert_eq!(st.drain().requests, 4);
+        let again = st.drain();
+        assert_eq!(again.requests, 0);
+        assert_eq!(again.demands, 0);
+    }
+
+    #[test]
+    fn check_max_wait_is_shared_contract() {
+        assert!(check_max_wait(0.0).is_ok());
+        assert!(check_max_wait(1.5).is_ok());
+        assert!(check_max_wait(f64::NAN).is_err());
+        assert!(check_max_wait(-1.0).is_err());
+        assert!(check_max_wait(f64::INFINITY).is_err());
     }
 }

@@ -1,0 +1,453 @@
+//! Multi-replica request routing (the ROADMAP "multi-replica routing"
+//! item, eMoE-style).
+//!
+//! A [`Router`] owns N engine replicas, each wrapped in its own
+//! [`ContinuousScheduler`], and dispatches one arrival-ordered request
+//! stream across them with a pluggable [`RoutingPolicy`]. The interesting
+//! policy is **task affinity**: each replica's EAMC is scored against the
+//! request's task signature (its prefill-iteration routing trace — the
+//! simulator's stand-in for eMoE's task-level profiling) through the
+//! incremental `trace::matcher` machinery, and the request lands on the
+//! replica whose collection already represents its task best, lightly
+//! penalized by load. Same-task sequences therefore pile onto the same
+//! replica, which is exactly what preserves the activation locality the
+//! expert cache and prefetcher exploit — the per-replica EAMCs then keep
+//! specializing through the §4.3 online feedback loop.
+//!
+//! ## Determinism
+//!
+//! Each replica is an independent virtual timeline. The router's event
+//! loop interleaves two actions: *dispatch* the next pending arrival once
+//! every busy replica's [`ContinuousScheduler::next_event_bound`] has
+//! reached it (replica states at the arrival instant are then final — no
+//! later-simulated event can precede it), and otherwise *step* the replica
+//! with the earliest bound by one quantum. The replay is a pure function
+//! of the request stream and the replica set. With **one replica and
+//! round-robin** the dispatch gate provably never changes admission
+//! instants, so the replay is bitwise identical to a bare
+//! [`ContinuousScheduler`] (pinned in `rust/tests/scheduler.rs`).
+
+use std::collections::VecDeque;
+
+use crate::engine::SimEngine;
+use crate::server::{AdmissionPolicy, Batcher, ContinuousScheduler, Scheduler, ServeReport};
+use crate::trace::EamcMatcher;
+use crate::workload::Request;
+
+/// How the router picks a replica for each arriving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Cycle through replicas in submission order.
+    #[default]
+    RoundRobin,
+    /// Fewest dispatched-but-unfinished requests (ties to lowest index).
+    LeastLoaded,
+    /// Minimal `EAMC distance + load penalty`: the request goes to the
+    /// replica whose expert-activation collection best matches its prefill
+    /// routing signature (ties to lowest index).
+    TaskAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn by_name(s: &str) -> Option<RoutingPolicy> {
+        match s {
+            "round-robin" => Some(RoutingPolicy::RoundRobin),
+            "least-loaded" => Some(RoutingPolicy::LeastLoaded),
+            "task-affinity" => Some(RoutingPolicy::TaskAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::TaskAffinity => "task-affinity",
+        }
+    }
+}
+
+/// Weight of the occupancy term in the task-affinity score: distance is in
+/// `[0, 1]`-ish Eq. 1 units, load is normalized by `max_batch`, so 0.25
+/// breaks affinity ties toward idle replicas without overriding a clear
+/// task match.
+const AFFINITY_LOAD_WEIGHT: f64 = 0.25;
+
+/// A task-affinity multi-replica request router. See the module docs.
+pub struct Router<'r> {
+    replicas: Vec<ContinuousScheduler<'r>>,
+    policy: RoutingPolicy,
+    max_batch: usize,
+    rr_next: usize,
+    /// Submitted, not yet dispatched (arrival order).
+    pending: VecDeque<&'r Request>,
+    /// Per-replica matcher scratch for affinity scoring (reused; scoring a
+    /// request is allocation-free once warmed).
+    scorers: Vec<EamcMatcher>,
+    total_requests: usize,
+    total_tokens: usize,
+}
+
+impl<'r> Router<'r> {
+    /// Wrap `engines` (one per replica) in per-replica continuous
+    /// schedulers sharing one batching/admission policy.
+    pub fn new(
+        engines: Vec<SimEngine>,
+        batcher: Batcher,
+        policy: RoutingPolicy,
+        admission: AdmissionPolicy,
+    ) -> Router<'r> {
+        assert!(!engines.is_empty(), "router needs at least one replica");
+        let n = engines.len();
+        Router {
+            replicas: engines
+                .into_iter()
+                .map(|e| ContinuousScheduler::new(e, batcher, admission))
+                .collect(),
+            policy,
+            max_batch: batcher.max_batch,
+            rr_next: 0,
+            pending: VecDeque::new(),
+            scorers: (0..n).map(|_| EamcMatcher::new()).collect(),
+            total_requests: 0,
+            total_tokens: 0,
+        }
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Read access to the per-replica schedulers (post-run stats).
+    pub fn replicas(&self) -> &[ContinuousScheduler<'r>] {
+        &self.replicas
+    }
+
+    /// Pick the replica for `req` under the configured policy.
+    fn pick_replica(&mut self, req: &Request) -> usize {
+        let n = self.replicas.len();
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let k = self.rr_next % n;
+                self.rr_next += 1;
+                k
+            }
+            RoutingPolicy::LeastLoaded => {
+                let mut best = 0;
+                for k in 1..n {
+                    if self.replicas[k].load() < self.replicas[best].load() {
+                        best = k;
+                    }
+                }
+                best
+            }
+            RoutingPolicy::TaskAffinity => {
+                let mut best = 0;
+                let mut best_score = f64::INFINITY;
+                for k in 0..n {
+                    let eamc = self.replicas[k].engine().eamc();
+                    let scorer = &mut self.scorers[k];
+                    scorer.attach(eamc);
+                    let index = eamc.index();
+                    // task signature = the prefill iteration's routing
+                    for (l, row) in req.seq.routes[0].iter().enumerate() {
+                        for &(e, c) in row {
+                            scorer.record(index, l, e as usize, c);
+                        }
+                    }
+                    // an empty EAMC (non-activation-aware bundles) scores
+                    // neutrally; the load term then decides
+                    let dist = scorer.nearest().map_or(0.0, |(_, d)| d);
+                    let load = self.replicas[k].load() as f64 / self.max_batch as f64;
+                    let score = dist + AFFINITY_LOAD_WEIGHT * load;
+                    if score < best_score {
+                        best_score = score;
+                        best = k;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Queue one request (arrival order asserted) without re-sizing
+    /// replica buffers; callers re-size via [`Router::presize_replicas`].
+    fn enqueue(&mut self, req: &'r Request) {
+        debug_assert!(
+            self.pending.back().map_or(true, |p| p.arrival <= req.arrival),
+            "requests must be submitted in arrival order"
+        );
+        self.total_requests += 1;
+        self.total_tokens += req.seq.iterations();
+        self.pending.push_back(req);
+    }
+
+    /// Any replica may end up with the whole stream; pre-sizing after
+    /// submission keeps dispatch-time replica pushes allocation-free
+    /// mid-replay.
+    fn presize_replicas(&mut self) {
+        for rep in &mut self.replicas {
+            rep.reserve_for(self.total_requests, self.total_tokens);
+        }
+    }
+
+    /// Earliest next-event bound across replicas that still have work.
+    fn frontier(&self) -> Option<f64> {
+        let mut m: Option<f64> = None;
+        for rep in &self.replicas {
+            if let Some(t) = rep.next_event_bound() {
+                m = Some(match m {
+                    Some(x) => x.min(t),
+                    None => t,
+                });
+            }
+        }
+        m
+    }
+}
+
+impl<'r> Scheduler<'r> for Router<'r> {
+    fn submit(&mut self, req: &'r Request) {
+        self.enqueue(req);
+        self.presize_replicas();
+    }
+
+    /// One replica pre-sizing pass for the whole slice instead of one per
+    /// request (`submit` would probe every replica buffer M×R times).
+    fn submit_all(&mut self, reqs: &'r [Request]) {
+        for req in reqs {
+            self.enqueue(req);
+        }
+        self.presize_replicas();
+    }
+
+    /// One router event: dispatch the next due arrival, or advance the
+    /// earliest-bounded replica by one scheduling quantum.
+    fn tick(&mut self) -> bool {
+        if let Some(&req) = self.pending.front() {
+            // safe to route once no busy replica can produce an earlier
+            // event (idle replicas don't change state on their own)
+            let due = self.frontier().map_or(true, |f| req.arrival <= f);
+            if due {
+                self.pending.pop_front();
+                let k = self.pick_replica(req);
+                self.replicas[k].submit(req);
+                return true;
+            }
+        }
+        // step the replica with the earliest next event
+        let mut best: Option<(f64, usize)> = None;
+        for (k, rep) in self.replicas.iter().enumerate() {
+            if let Some(t) = rep.next_event_bound() {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, k));
+                }
+            }
+        }
+        match best {
+            Some((_, k)) => {
+                let stepped = self.replicas[k].tick();
+                debug_assert!(stepped, "a replica with work must make progress");
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn drain(&mut self) -> ServeReport {
+        while self.tick() {}
+        let mut out = ServeReport::default();
+        for rep in &mut self.replicas {
+            let r = rep.drain();
+            out.merge(&r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheKind;
+    use crate::engine::{ComputeModel, EngineConfig};
+    use crate::memory::{Link, Tier, TierConfig};
+    use crate::model::ModelSpec;
+    use crate::trace::Eamc;
+    use crate::util::Rng;
+    use crate::workload::{ArrivalProcess, DatasetPreset, Workload};
+
+    fn mk_engine(seed: u64, gpu: usize) -> (ModelSpec, SimEngine) {
+        let spec = ModelSpec::preset("switch-base-32").unwrap();
+        let mut w = Workload::new(&spec, DatasetPreset::by_name("mixed").unwrap(), seed);
+        let ds = w.gen_eam_dataset(40);
+        let eamc = Eamc::construct(10, &ds, seed);
+        let tier = TierConfig {
+            gpu_capacity: gpu,
+            dram_capacity: 200,
+            backing: Tier::Ssd,
+            ssd_to_dram: Link::new(6.0, 50e-6),
+            dram_to_gpu: Link::new(32.0, 10e-6),
+            n_gpus: 1,
+            demand_extra_latency: 0.0,
+            demand_bw_factor: 1.0,
+            cache_kind: CacheKind::Activation,
+            oracle_trace: Vec::new(),
+            activation_terms: (true, true),
+            prefetch_gpu_budget: 0.5,
+        };
+        let eng = SimEngine::new(
+            spec.clone(),
+            tier,
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        (spec, eng)
+    }
+
+    fn mk_requests(n: usize, rps: f64, seed: u64) -> Vec<Request> {
+        let spec = ModelSpec::preset("switch-base-32").unwrap();
+        let mut w = Workload::new(&spec, DatasetPreset::by_name("mixed").unwrap(), seed ^ 0x77);
+        let mut rng = Rng::new(seed ^ 0xabc);
+        let proc = ArrivalProcess::Poisson { rps };
+        let mut t = 0.0;
+        (0..n)
+            .map(|i| {
+                t += proc.next_gap(&mut rng);
+                Request::new(i as u64, t, w.gen_sequence())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn routing_policy_names_roundtrip() {
+        for p in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::TaskAffinity,
+        ] {
+            assert_eq!(RoutingPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(RoutingPolicy::by_name("random"), None);
+        assert_eq!(RoutingPolicy::default(), RoutingPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn router_serves_everything_across_replicas() {
+        for policy in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::TaskAffinity,
+        ] {
+            let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
+            let reqs = mk_requests(16, 8.0, 3);
+            let mut router = Router::new(engines, Batcher::new(4, 0.1), policy, AdmissionPolicy::Fifo);
+            router.submit_all(&reqs);
+            let report = router.drain();
+            assert_eq!(report.requests, 16, "{policy:?} must serve every request");
+            assert_eq!(report.request_latency.len(), 16);
+            assert_eq!(report.ttft.len(), 16);
+            assert!(report.makespan > 0.0);
+            assert!(report.token_throughput() > 0.0);
+            // work actually spread across replicas under round-robin
+            if policy == RoutingPolicy::RoundRobin {
+                for rep in router.replicas() {
+                    assert_eq!(rep.load(), 0, "all dispatched work finished");
+                    assert!(rep.engine().now() > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_splits_evenly() {
+        let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
+        let reqs = mk_requests(10, 4.0, 5);
+        let mut router = Router::new(
+            engines,
+            Batcher::new(4, 0.1),
+            RoutingPolicy::RoundRobin,
+            AdmissionPolicy::Fifo,
+        );
+        router.submit_all(&reqs);
+        let report = router.drain();
+        assert_eq!(report.requests, 10);
+        let per_replica: Vec<usize> = router
+            .replicas()
+            .iter()
+            .map(|r| r.request_stats().len())
+            .collect();
+        assert_eq!(per_replica, vec![5, 5], "round-robin splits evenly");
+    }
+
+    #[test]
+    fn task_affinity_routes_same_task_to_its_replica() {
+        // two replicas whose EAMCs cover *disjoint task ranges* of the same
+        // workload (same seed => identical task profiles): every sequence
+        // of a task must land on the replica whose collection knows it
+        let spec = ModelSpec::preset("switch-base-32").unwrap();
+        let preset = DatasetPreset::by_name("translation").unwrap();
+        let mk_replica = |tasks: std::ops::Range<usize>| -> SimEngine {
+            let w = Workload::new(&spec, preset.clone(), 9);
+            let mut rng = Rng::new(0xD15C ^ tasks.start as u64);
+            let ds: Vec<crate::trace::Eam> = tasks
+                .flat_map(|t| {
+                    (0..6)
+                        .map(|_| {
+                            w.gen_sequence_for_task_with(t, &mut rng)
+                                .to_eam(spec.n_layers, spec.experts_per_layer)
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            let eamc = Eamc::construct(8, &ds, 4);
+            let tier = TierConfig {
+                gpu_capacity: 64,
+                dram_capacity: 200,
+                backing: Tier::Ssd,
+                ssd_to_dram: Link::new(6.0, 50e-6),
+                dram_to_gpu: Link::new(32.0, 10e-6),
+                n_gpus: 1,
+                demand_extra_latency: 0.0,
+                demand_bw_factor: 1.0,
+                cache_kind: CacheKind::Activation,
+                oracle_trace: Vec::new(),
+                activation_terms: (true, true),
+                prefetch_gpu_budget: 0.5,
+            };
+            SimEngine::new(
+                spec.clone(),
+                tier,
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            )
+        };
+        let engines = vec![mk_replica(0..4), mk_replica(4..8)];
+        let mut w = Workload::new(&spec, preset.clone(), 9);
+        // sparse arrivals so load never influences the affinity score;
+        // task 6 lives only in replica 1's collection
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| Request::new(i as u64, i as f64 * 40.0, w.gen_sequence_for_task(6)))
+            .collect();
+        let mut router = Router::new(
+            engines,
+            Batcher::new(4, 0.1),
+            RoutingPolicy::TaskAffinity,
+            AdmissionPolicy::Fifo,
+        );
+        router.submit_all(&reqs);
+        let report = router.drain();
+        assert_eq!(report.requests, 5);
+        let counts: Vec<usize> = router
+            .replicas()
+            .iter()
+            .map(|r| r.request_stats().len())
+            .collect();
+        assert_eq!(
+            counts,
+            vec![0, 5],
+            "task-6 sequences must stick to the replica whose EAMC covers task 6"
+        );
+    }
+}

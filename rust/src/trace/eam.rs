@@ -248,6 +248,26 @@ impl Eam {
         }
     }
 
+    /// Add `other`'s counts into this matrix — the inverse of
+    /// [`Eam::subtract`]. Used when a preempted sequence resumes: its saved
+    /// per-sequence EAM re-enters the combined batch EAM so cache decisions
+    /// again see its working set. Rows that change bump their version.
+    pub fn add(&mut self, other: &Eam) {
+        debug_assert_eq!(self.layers, other.layers);
+        debug_assert_eq!(self.experts, other.experts);
+        for l in 0..self.layers {
+            if other.row_sums[l] == 0 {
+                continue;
+            }
+            let base = l * self.experts;
+            for e in 0..self.experts {
+                self.counts[base + e] += other.counts[base + e];
+            }
+            self.row_sums[l] += other.row_sums[l];
+            self.row_versions[l] += 1;
+        }
+    }
+
     /// Memory footprint of the counts (for the §8.5 overhead accounting).
     pub fn bytes(&self) -> usize {
         self.counts.len() * std::mem::size_of::<u32>()
@@ -286,6 +306,19 @@ mod tests {
             }
         }
         m
+    }
+
+    #[test]
+    fn add_inverts_subtract() {
+        let base = eam_from(&[&[3, 0, 2, 0], &[1, 1, 1, 1]]);
+        let part = eam_from(&[&[1, 0, 2, 0], &[0, 1, 0, 1]]);
+        let mut m = base.clone();
+        let v0 = m.row_version(0);
+        m.subtract(&part);
+        m.add(&part);
+        assert_eq!(m, base);
+        assert!(m.row_version(0) > v0, "changed rows must bump versions");
+        assert_eq!(m.row_sum(0), base.row_sum(0));
     }
 
     #[test]

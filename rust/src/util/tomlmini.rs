@@ -88,6 +88,10 @@ impl TomlDoc {
         self.map.insert(key.into(), TomlValue::Num(v));
     }
 
+    pub fn set_bool(&mut self, key: &str, v: bool) {
+        self.map.insert(key.into(), TomlValue::Bool(v));
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }

@@ -5,13 +5,108 @@
 use crate::util::Rng;
 use crate::workload::SequenceActivation;
 
+/// Priority tier of a request. Ordered: `Batch < Normal < Interactive`
+/// (derived `Ord` follows variant order), so schedulers can compare tiers
+/// directly. The default is [`Priority::Normal`], which preserves the
+/// pre-priority serving behavior: when every request carries the default
+/// class, priority admission degenerates to FIFO and preemption never
+/// fires (pinned by the scheduler differential tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Throughput-oriented background work; first to be preempted.
+    Batch,
+    #[default]
+    Normal,
+    /// Latency-sensitive traffic; may preempt lower tiers under load.
+    Interactive,
+}
+
+impl Priority {
+    pub fn by_name(s: &str) -> Option<Priority> {
+        match s {
+            "batch" => Some(Priority::Batch),
+            "normal" => Some(Priority::Normal),
+            "interactive" => Some(Priority::Interactive),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Normal => "normal",
+            Priority::Interactive => "interactive",
+        }
+    }
+}
+
+/// Service class of a request: a priority tier plus an optional SLO
+/// deadline. The default class (`Normal`, no SLO) reproduces the
+/// class-unaware serving behavior exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RequestClass {
+    pub priority: Priority,
+    /// Target completion latency in seconds from arrival. Under priority
+    /// admission, requests with less remaining slack are admitted first
+    /// within a tier; `None` sorts after every finite slack.
+    pub slo: Option<f64>,
+}
+
+impl RequestClass {
+    pub fn interactive() -> RequestClass {
+        RequestClass {
+            priority: Priority::Interactive,
+            slo: None,
+        }
+    }
+
+    pub fn batch() -> RequestClass {
+        RequestClass {
+            priority: Priority::Batch,
+            slo: None,
+        }
+    }
+
+    pub fn with_slo(mut self, slo: f64) -> RequestClass {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Remaining slack until the SLO deadline at time `now` (arrival given);
+    /// `+inf` when no SLO is set.
+    pub fn slack(&self, arrival: f64, now: f64) -> f64 {
+        match self.slo {
+            Some(s) => arrival + s - now,
+            None => f64::INFINITY,
+        }
+    }
+}
+
 /// One inference request: an arrival instant plus the routing trace of the
-/// sequence it carries.
+/// sequence it carries and its service class.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub arrival: f64,
     pub seq: SequenceActivation,
+    pub class: RequestClass,
+}
+
+impl Request {
+    /// Request with the default class (`Normal` priority, no SLO).
+    pub fn new(id: u64, arrival: f64, seq: SequenceActivation) -> Request {
+        Request {
+            id,
+            arrival,
+            seq,
+            class: RequestClass::default(),
+        }
+    }
+
+    pub fn with_class(mut self, class: RequestClass) -> Request {
+        self.class = class;
+        self
+    }
 }
 
 /// Inter-arrival generator.
@@ -64,6 +159,27 @@ impl ArrivalProcess {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn priority_tiers_are_ordered() {
+        assert!(Priority::Batch < Priority::Normal);
+        assert!(Priority::Normal < Priority::Interactive);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Batch, Priority::Normal, Priority::Interactive] {
+            assert_eq!(Priority::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Priority::by_name("urgent"), None);
+    }
+
+    #[test]
+    fn default_class_preserves_legacy_semantics() {
+        let c = RequestClass::default();
+        assert_eq!(c.priority, Priority::Normal);
+        assert_eq!(c.slo, None);
+        assert_eq!(c.slack(1.0, 100.0), f64::INFINITY);
+        let slo = RequestClass::interactive().with_slo(0.5);
+        assert!((slo.slack(2.0, 2.1) - 0.4).abs() < 1e-12);
+    }
 
     #[test]
     fn poisson_rate_matches() {

@@ -16,7 +16,7 @@
 mod arrivals;
 mod dataset;
 
-pub use arrivals::{ArrivalProcess, Request};
+pub use arrivals::{ArrivalProcess, Priority, Request, RequestClass};
 pub use dataset::{DatasetPreset, DATASETS};
 
 use crate::model::ModelSpec;

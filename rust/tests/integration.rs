@@ -8,7 +8,7 @@ use moe_infinity::config::ServeConfig;
 use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
 use moe_infinity::model::ModelSpec;
 use moe_infinity::prefetch::PredictorKind;
-use moe_infinity::server::{serve, Batcher};
+use moe_infinity::server::{Batcher, Scheduler, StaticScheduler};
 use moe_infinity::workload::{DatasetPreset, Workload};
 
 fn small_cfg(system: &str) -> ServeConfig {
@@ -116,7 +116,7 @@ fn serve_with_engine_components_composes() {
     let spec = ModelSpec::preset("switch-base-32").unwrap();
     let ds = DatasetPreset::by_name("translation").unwrap();
     let eamc = build_eamc(&spec, &ds, 60, 12, 3);
-    let mut engine = SimEngine::new(
+    let engine = SimEngine::new(
         spec.clone(),
         tier_with(&spec, 128, 256, 6.0, 32.0, CacheKind::Activation),
         eamc,
@@ -125,16 +125,15 @@ fn serve_with_engine_components_composes() {
     );
     let mut w = Workload::new(&spec, ds, 3);
     let reqs: Vec<_> = (0..6)
-        .map(|i| moe_infinity::workload::Request {
-            id: i,
-            arrival: i as f64 * 0.4,
-            seq: w.gen_sequence(),
-        })
+        .map(|i| moe_infinity::workload::Request::new(i, i as f64 * 0.4, w.gen_sequence()))
         .collect();
-    let report = serve(&mut engine, Batcher::new(4, 0.3), &reqs);
+    let mut sched = StaticScheduler::new(engine, Batcher::new(4, 0.3));
+    sched.submit_all(&reqs);
+    let report = sched.drain();
     assert_eq!(report.requests, 6);
-    // memory stats flowed through the stack
-    assert!(engine.sim().stats().demand_total() > 0);
+    // memory stats flowed through the stack and into the report
+    assert!(sched.engine().sim().stats().demand_total() > 0);
+    assert!(report.demands > 0);
 }
 
 #[test]

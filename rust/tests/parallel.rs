@@ -104,6 +104,19 @@ fn small_grid() -> Vec<ServeConfig> {
         cfg.eamc.capacity = 6;
         grid.push(cfg);
     }
+    // a multi-replica router point: its replay must be exactly as pooled-
+    // deterministic as the bare schedulers (per-replica EAMC construction
+    // runs on the pool; the replay itself is virtual-time serial)
+    let mut cfg = ServeConfig::default();
+    cfg.model = "switch-base-32".into();
+    cfg.scheduler = SchedulerKind::Continuous;
+    cfg.replicas = 2;
+    cfg.routing = moe_infinity::server::RoutingPolicy::TaskAffinity;
+    cfg.workload.rps = 3.0;
+    cfg.workload.duration = 6.0;
+    cfg.eamc.trace_sequences = 25;
+    cfg.eamc.capacity = 6;
+    grid.push(cfg);
     grid
 }
 

@@ -224,11 +224,7 @@ fn prop_batcher_invariants() {
             let reqs: Vec<Request> = (0..n)
                 .map(|i| {
                     t += rng.exp(2.0);
-                    Request {
-                        id: i as u64,
-                        arrival: t,
-                        seq: w.gen_sequence(),
-                    }
+                    Request::new(i as u64, t, w.gen_sequence())
                 })
                 .collect();
             let max_batch = 1 + rng.below(8);
@@ -238,10 +234,11 @@ fn prop_batcher_invariants() {
         },
         |(reqs, max_batch, max_wait, engine_free)| {
             let b = Batcher::new(*max_batch, *max_wait);
+            let refs: Vec<&Request> = reqs.iter().collect();
             let mut idx = 0;
             let mut last_dispatch = 0.0f64;
             while idx < reqs.len() {
-                let (dispatch, end) = b.next_batch(reqs, idx, *engine_free);
+                let (dispatch, end) = b.next_batch(&refs, idx, *engine_free);
                 if end <= idx {
                     return Err("empty batch".into());
                 }

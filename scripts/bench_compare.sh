@@ -4,14 +4,20 @@
 #
 #   scripts/bench_compare.sh BENCH_offline.before.json BENCH_offline.json
 #   scripts/bench_compare.sh BENCH_scheduler.before.json BENCH_scheduler.json
+#   scripts/bench_compare.sh BENCH_router.before.json BENCH_router.json
 #
 # Values are ns/op for the perf_* benches and seconds / tokens-per-second
-# for BENCH_scheduler.json (`*_p50_s`/`*_p99_s`/`*_tput` rows — for
-# latency rows speedup > 1 still means the new run is faster; for `_tput`
-# rows the ratio is old/new throughput, so < 1 means the new run moves
-# MORE tokens). Rows present in only one file print with a '-'
-# placeholder. `*_speedup_*` rows are already ratios; the old/new columns
-# still show them, the speedup column then compares the ratios themselves.
+# for BENCH_scheduler.json and BENCH_router.json (`*_p50_s`/`*_p99_s`/
+# `*_ttft_p99_s`/`*_tpot_p50_s`/`*_tput` rows — for latency rows
+# speedup > 1 still means the new run is faster; for `_tput` rows the
+# ratio is old/new throughput, so < 1 means the new run moves MORE
+# tokens). BENCH_router.json additionally carries `*_hit_*` GPU-hit
+# ratios in [0,1] (higher is better: ratio < 1 means the new run hits
+# more) and BENCH_scheduler.json carries `cancel_{off,on}_prefetch_mb`
+# prefetch-traffic totals (lower is less dead PCIe traffic). Rows present
+# in only one file print with a '-' placeholder. `*_speedup_*` rows are
+# already ratios; the old/new columns still show them, the speedup column
+# then compares the ratios themselves.
 set -euo pipefail
 if [ $# -ne 2 ]; then
     echo "usage: $0 OLD.json NEW.json" >&2

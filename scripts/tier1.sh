@@ -27,8 +27,14 @@ MOE_BENCH_SMOKE=1 cargo bench --bench perf_offline
 
 echo "== perf_scheduler (smoke mode -> BENCH_scheduler.json)"
 # static vs continuous batching on the same Poisson trace; asserts the
-# overload-point p99 improvement before writing the JSON
+# overload-point p99 improvement before writing the JSON; also records
+# the retired-prefetch cancellation traffic delta (cancel_* rows)
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_scheduler
+
+echo "== perf_router (smoke mode -> BENCH_router.json)"
+# routing policies over the same mixed-task overload trace; asserts
+# task-affinity beats round-robin on GPU hit ratio AND p99 at N=2
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_router
 
 echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
 # the suite pins explicit pool sizes internally (and now also the
@@ -37,7 +43,13 @@ echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1
 # (from_env) code path
 MOE_POOL_THREADS=1 cargo test -q --test parallel
 
+echo "== serving-API differential suite (Scheduler trait / Router redesign)"
+# 1-replica round-robin router == bare continuous (bitwise), router
+# replays deterministic across pools, preempt/resume demand equality
+cargo test -q --test scheduler
+
 echo "== done; bench numbers:"
 cat BENCH_hotpath.json
 cat BENCH_offline.json
 cat BENCH_scheduler.json
+cat BENCH_router.json
