@@ -1,0 +1,178 @@
+//! §Prefill — chunked prefill vs continuous batching on a mixed-length
+//! prompt trace.
+//!
+//! Continuous batching removed request-level head-of-line blocking, but a
+//! joining request still executes its whole prompt as one iteration-0
+//! burst inside the shared batch: every in-flight decode eats the burst's
+//! dense compute + expert fetches as one giant "token". Chunked prefill
+//! (the vLLM token-budget knob) caps the prompt tokens per iteration, so
+//! decode steps stay short at the cost of a few extra iterations per
+//! prompt. This bench replays the **same Poisson overload trace** (the
+//! `mixed` chatbot preset: prompts 16–128 tokens, so short and long
+//! prompts interleave) through the continuous scheduler and the chunked
+//! scheduler across a chunk-size sweep, recording per point:
+//!
+//! * `*_decode_p99_s` — p99 of raw pure-decode iteration latency
+//!   (`ServeReport::decode_latency`), the stall metric chunking protects;
+//! * `*_ttft_p99_s` — p99 time-to-first-token (chunking trades a little
+//!   TTFT for decode smoothness: the last chunk completes later);
+//! * `*_p99_s` / `*_tput` — p99 request latency and tokens/s.
+//!
+//! Results land in `BENCH_prefill.json` (latency rows in seconds, `*_tput`
+//! in tokens/s); diff runs with `scripts/bench_compare.sh`. Set
+//! `MOE_BENCH_SMOKE=1` for the fast CI pass (scripts/tier1.sh does).
+//!
+//! Acceptance targets (EXPERIMENTS.md §Prefill), asserted before exit:
+//! 1. the unlimited-chunk point is **bitwise identical** to continuous
+//!    (the compatibility chain's chunked link);
+//! 2. at the overload point, the best finite chunk strictly improves
+//!    decode p99 over continuous;
+//! 3. that chunk keeps token throughput within the stated band
+//!    (>= 0.85x continuous — chunking re-demands a prompt's experts once
+//!    per chunk and adds iteration overheads, and that is all it may pay).
+
+use moe_infinity::benchsuite::{run_grid, BenchJson, Table};
+use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::util::{fmt_secs, Pool};
+
+/// Throughput band: the winning chunk must keep >= this fraction of the
+/// continuous scheduler's tokens/s.
+const TPUT_BAND: f64 = 0.85;
+
+fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    // chunk sizes in prompt tokens; 0 = unlimited (the bitwise-continuous
+    // sentinel). The mixed preset's prompts span 16-128 tokens.
+    let chunks: &[usize] = if smoke { &[0, 16, 64] } else { &[0, 16, 32, 64, 128] };
+    let duration = if smoke { 6.0 } else { 30.0 };
+    let rps = 16.0; // the perf_scheduler overload point: prompts queue up
+    let pool = Pool::from_env();
+    println!(
+        "prefill bench: {} mode, chunk sweep {:?}, rps {rps}, duration {duration}s",
+        if smoke { "smoke" } else { "full" },
+        chunks
+    );
+
+    let base = {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.dataset = "mixed".into();
+        // 4GB GPU: offloading engages, so a prompt burst costs expert
+        // fetches on top of dense compute — the worst case for decodes
+        cfg.memory.gpu_gb = 4.0;
+        cfg.workload.rps = rps;
+        cfg.workload.duration = duration;
+        cfg.batching.max_batch = 8;
+        cfg.batching.max_wait = 0.5;
+        cfg.eamc.trace_sequences = if smoke { 25 } else { 120 };
+        cfg.eamc.capacity = if smoke { 8 } else { 24 };
+        cfg
+    };
+    let mut grid = Vec::new();
+    {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::Continuous;
+        grid.push(cfg);
+    }
+    for &chunk in chunks {
+        let mut cfg = base.clone();
+        cfg.scheduler = SchedulerKind::Chunked;
+        cfg.prefill_chunk = chunk;
+        grid.push(cfg);
+    }
+
+    let mut table = Table::new(&[
+        "scheduler", "chunk", "decode p99", "TTFT p99", "p99 req", "tokens/s", "iters",
+    ]);
+    let mut json = BenchJson::new();
+    let mut cont: Option<(f64, f64, u64, u64)> = None; // (decode p99, tput, makespan bits, batches)
+    let mut best_finite: Option<(usize, f64, f64)> = None; // (chunk, decode p99, tput)
+    let mut inf_point: Option<(u64, u64)> = None; // (makespan bits, batches)
+    for (cfg, r) in grid.iter().zip(run_grid(&grid, &pool)) {
+        let mut r = r.expect("serve");
+        let decode99 = r.decode_latency.p99();
+        let ttft99 = r.ttft.p99();
+        let p99 = r.request_latency.p99();
+        let tput = r.token_throughput();
+        let (name, tag) = match cfg.scheduler {
+            SchedulerKind::Continuous => ("continuous".to_string(), "continuous".to_string()),
+            SchedulerKind::Chunked if cfg.prefill_chunk == 0 => {
+                ("chunked".to_string(), "chunk_inf".to_string())
+            }
+            SchedulerKind::Chunked => {
+                ("chunked".to_string(), format!("chunk{}", cfg.prefill_chunk))
+            }
+            SchedulerKind::Static => unreachable!("no static point in this sweep"),
+        };
+        let chunk_label = match cfg.scheduler {
+            SchedulerKind::Continuous => "-".to_string(),
+            _ if cfg.prefill_chunk == 0 => "inf".to_string(),
+            _ => format!("{}", cfg.prefill_chunk),
+        };
+        table.row(&[
+            name,
+            chunk_label,
+            fmt_secs(decode99),
+            fmt_secs(ttft99),
+            fmt_secs(p99),
+            format!("{tput:.1}"),
+            format!("{}", r.batches),
+        ]);
+        json.add(&format!("{tag}_decode_p99_s"), decode99);
+        json.add(&format!("{tag}_ttft_p99_s"), ttft99);
+        json.add(&format!("{tag}_p99_s"), p99);
+        json.add(&format!("{tag}_tput"), tput);
+        match cfg.scheduler {
+            SchedulerKind::Continuous => {
+                cont = Some((decode99, tput, r.makespan.to_bits(), r.batches))
+            }
+            SchedulerKind::Chunked if cfg.prefill_chunk == 0 => {
+                inf_point = Some((r.makespan.to_bits(), r.batches))
+            }
+            SchedulerKind::Chunked => {
+                if best_finite.map_or(true, |(_, d, _)| decode99 < d) {
+                    best_finite = Some((cfg.prefill_chunk, decode99, tput));
+                }
+            }
+            SchedulerKind::Static => unreachable!(),
+        }
+    }
+    table.print("§Prefill — chunked prefill vs continuous (same overload trace)");
+
+    // write the rows BEFORE the acceptance asserts so a miss on a CI
+    // machine leaves the full table for diagnosis
+    let path = "BENCH_prefill.json";
+    match json.write(path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+
+    let (cont_decode99, cont_tput, cont_makespan, cont_iters) = cont.expect("continuous ran");
+    let (inf_makespan, inf_iters) = inf_point.expect("∞-chunk point ran");
+    assert_eq!(
+        (inf_makespan, inf_iters),
+        (cont_makespan, cont_iters),
+        "chunked with an unlimited budget must replay continuous bitwise"
+    );
+    let (chunk, decode99, tput) = best_finite.expect("a finite chunk ran");
+    println!(
+        "\noverload (rps {rps}): continuous decode p99 {} vs chunk {chunk} decode p99 {} \
+         ({:.2}x); tokens/s {:.1} vs {:.1} ({:.3} of continuous)",
+        fmt_secs(cont_decode99),
+        fmt_secs(decode99),
+        cont_decode99 / decode99,
+        cont_tput,
+        tput,
+        tput / cont_tput
+    );
+    assert!(
+        decode99 < cont_decode99,
+        "chunked prefill must cap decode p99 under prompt-burst overload \
+         (continuous {cont_decode99}, best finite chunk {chunk}: {decode99})"
+    );
+    assert!(
+        tput >= TPUT_BAND * cont_tput,
+        "chunk {chunk} token throughput {tput} fell below the {TPUT_BAND}x band \
+         of continuous {cont_tput}"
+    );
+}

@@ -103,10 +103,13 @@ fn main() {
 
     // --- retired-slot prefetch cancellation: dead-PCIe-traffic delta ---
     // Same continuous overload replay with and without
-    // `cancel_retired_prefetch`: the `cancel_*` rows quantify how much
-    // prefetch traffic retirement-time cancellation saves (the ROADMAP
-    // "measure with BENCH_scheduler.json first" item). Off stays the
-    // default — the bitwise differential suite pins the uncancelled replay.
+    // `cancel_retired_prefetch` (both set explicitly — cancellation is the
+    // default now): the `cancel_*` rows quantify how much prefetch traffic
+    // retirement-time cancellation saves, and the asserts below are the
+    // standing contract behind the default flip — savings (or at worst
+    // parity) in traffic at no meaningful p99 cost. If a CI machine ever
+    // trips them, flip `EngineConfig::default().cancel_retired_prefetch`
+    // back off and re-pin.
     let overload_rps = *rps_points.last().unwrap();
     let mut cancel_cfg = grid.last().unwrap().clone();
     cancel_cfg.scheduler = SchedulerKind::Continuous;
@@ -114,23 +117,43 @@ fn main() {
     // small cache => real offloading churn, where dead prefetches cost
     cancel_cfg.memory.gpu_gb = 4.0;
     let mut cancel_grid = vec![cancel_cfg.clone(), cancel_cfg];
+    cancel_grid[0].cancel_retired_prefetch = false;
     cancel_grid[1].cancel_retired_prefetch = true;
     let results = run_grid(&cancel_grid, &pool);
     let mut cancel_mb = [0.0f64; 2];
+    let mut cancel_p99 = [0.0f64; 2];
     for (i, r) in results.into_iter().enumerate() {
         let mut r = r.expect("cancellation serve");
         let label = if i == 0 { "cancel_off" } else { "cancel_on" };
         let mb = r.prefetch_bytes as f64 / 1e6;
         cancel_mb[i] = mb;
+        cancel_p99[i] = r.request_latency.p99();
         json.add(&format!("{label}_prefetch_mb"), mb);
-        json.add(&format!("{label}_p99_s"), r.request_latency.p99());
+        json.add(&format!("{label}_p99_s"), cancel_p99[i]);
     }
     println!(
         "\nretired-prefetch cancellation at rps {overload_rps}: \
-         {:.1} MB prefetched without, {:.1} MB with ({:+.1} MB delta)",
+         {:.1} MB prefetched without, {:.1} MB with ({:+.1} MB delta); \
+         p99 {:.3}s -> {:.3}s",
         cancel_mb[0],
         cancel_mb[1],
-        cancel_mb[1] - cancel_mb[0]
+        cancel_mb[1] - cancel_mb[0],
+        cancel_p99[0],
+        cancel_p99[1]
+    );
+    assert!(
+        cancel_mb[1] <= cancel_mb[0],
+        "cancellation must not move MORE prefetch traffic \
+         (off {} MB, on {} MB) — the default-on flip rests on this",
+        cancel_mb[0],
+        cancel_mb[1]
+    );
+    assert!(
+        cancel_p99[1] <= cancel_p99[0] * 1.05,
+        "cancellation must be ~free on p99 request latency \
+         (off {}, on {}) — the default-on flip rests on this",
+        cancel_p99[0],
+        cancel_p99[1]
     );
 
     let path = "BENCH_scheduler.json";

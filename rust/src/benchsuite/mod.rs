@@ -9,7 +9,8 @@ use crate::memory::TierConfig;
 use crate::model::ModelSpec;
 use crate::prefetch::{Predictor, PredictorKind};
 use crate::server::{
-    Batcher, ContinuousScheduler, Router, Scheduler, ServeReport, StaticScheduler,
+    Batcher, ChunkedScheduler, ContinuousScheduler, Router, Scheduler, ServeReport,
+    StaticScheduler,
 };
 use crate::trace::{Eam, Eamc};
 use crate::util::{Pool, Rng};
@@ -149,6 +150,9 @@ pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeRep
     if cfg.replicas > 1 {
         let engines = build_replica_engines_with(cfg, pool)?;
         let mut router = Router::new(engines, batcher, cfg.routing, cfg.priority);
+        if cfg.scheduler == SchedulerKind::Chunked {
+            router = router.with_prefill_chunk(cfg.prefill_chunk_u32());
+        }
         router.submit_all(&requests);
         return Ok(router.drain());
     }
@@ -161,6 +165,12 @@ pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeRep
         }
         SchedulerKind::Continuous => {
             let mut s = ContinuousScheduler::new(engine, batcher, cfg.priority);
+            s.submit_all(&requests);
+            s.drain()
+        }
+        SchedulerKind::Chunked => {
+            let mut s =
+                ChunkedScheduler::new(engine, batcher, cfg.priority, cfg.prefill_chunk_u32());
             s.submit_all(&requests);
             s.drain()
         }
@@ -406,6 +416,24 @@ mod tests {
         assert!(report.requests > 0);
         assert!(report.token_throughput() > 0.0);
         assert_eq!(report.request_latency.len() as u64, report.requests);
+    }
+
+    #[test]
+    fn run_serve_chunked_end_to_end_small() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 8.0;
+        cfg.workload.rps = 2.0;
+        cfg.eamc.trace_sequences = 30;
+        cfg.eamc.capacity = 8;
+        cfg.scheduler = SchedulerKind::Chunked;
+        cfg.prefill_chunk = 16;
+        let report = run_serve(&cfg).unwrap();
+        assert!(report.requests > 0);
+        assert!(report.token_throughput() > 0.0);
+        assert_eq!(report.request_latency.len() as u64, report.requests);
+        assert_eq!(report.ttft.len() as u64, report.requests);
+        assert!(report.decode_latency.len() > 0, "decode samples must record");
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub enum SchedulerKind {
     /// free slots at every iteration boundary, sequences retire the
     /// iteration they finish.
     Continuous,
+    /// Continuous batching plus chunked prefill: a joining prompt executes
+    /// at most `prefill_chunk` tokens per iteration, so prompt bursts no
+    /// longer stall in-flight decodes (`prefill_chunk = 0` means
+    /// unlimited, which is bitwise the continuous scheduler).
+    Chunked,
 }
 
 impl SchedulerKind {
@@ -32,6 +37,7 @@ impl SchedulerKind {
         match s {
             "static" => Some(SchedulerKind::Static),
             "continuous" => Some(SchedulerKind::Continuous),
+            "chunked" => Some(SchedulerKind::Chunked),
             _ => None,
         }
     }
@@ -40,7 +46,14 @@ impl SchedulerKind {
         match self {
             SchedulerKind::Static => "static",
             SchedulerKind::Continuous => "continuous",
+            SchedulerKind::Chunked => "chunked",
         }
+    }
+
+    /// Schedulers built on the resumable session substrate (everything the
+    /// router and priority classes require).
+    pub fn is_continuous_family(self) -> bool {
+        matches!(self, SchedulerKind::Continuous | SchedulerKind::Chunked)
     }
 }
 
@@ -54,8 +67,12 @@ pub struct ServeConfig {
     /// System policy bundle: "moe-infinity", "zero-infinity", "zero-offload"
     /// or "pytorch-um".
     pub system: String,
-    /// Serving-loop scheduler: "static" or "continuous".
+    /// Serving-loop scheduler: "static", "continuous" or "chunked".
     pub scheduler: SchedulerKind,
+    /// Chunked-prefill per-iteration prompt-token budget (used by
+    /// `scheduler = "chunked"`; 0 = unlimited — bitwise the continuous
+    /// scheduler).
+    pub prefill_chunk: usize,
     /// Continuous-scheduler admission: "fifo" (strict arrival order) or
     /// "classes" (priority tiers + SLO slack + voluntary preemption).
     pub priority: AdmissionPolicy,
@@ -66,8 +83,11 @@ pub struct ServeConfig {
     /// "task-affinity" (only used when `replicas > 1`).
     pub routing: RoutingPolicy,
     /// Cancel a retired/preempted sequence's still-queued prefetches (see
-    /// `EngineConfig::cancel_retired_prefetch`; off preserves the pinned
-    /// bitwise replays).
+    /// `EngineConfig::cancel_retired_prefetch`; on by default — pure
+    /// dead-traffic savings per `BENCH_scheduler.json` `cancel_*` rows,
+    /// with the no-p99-cost contract asserted by `perf_scheduler`. The
+    /// bitwise differential pins that replay the uncancelled history set
+    /// this to false explicitly).
     pub cancel_retired_prefetch: bool,
     pub workload: WorkloadConfig,
     pub batching: BatchConfig,
@@ -126,10 +146,11 @@ impl Default for ServeConfig {
             dataset: "mixed".into(),
             system: "moe-infinity".into(),
             scheduler: SchedulerKind::Static,
+            prefill_chunk: 64,
             priority: AdmissionPolicy::Fifo,
             replicas: 1,
             routing: RoutingPolicy::RoundRobin,
-            cancel_retired_prefetch: false,
+            cancel_retired_prefetch: true,
             workload: WorkloadConfig {
                 rps: 1.0,
                 cv: 1.0,
@@ -173,9 +194,10 @@ impl ServeConfig {
         if let Some(v) = doc.get("scheduler") {
             let s = v.as_str().ok_or_else(|| anyhow!("scheduler must be a string"))?;
             c.scheduler = SchedulerKind::by_name(s).ok_or_else(|| {
-                anyhow!("unknown scheduler '{s}' (expected 'static' or 'continuous')")
+                anyhow!("unknown scheduler '{s}' (expected 'static', 'continuous' or 'chunked')")
             })?;
         }
+        c.prefill_chunk = gu(&doc, "prefill_chunk", c.prefill_chunk);
         if let Some(v) = doc.get("priority") {
             let s = v.as_str().ok_or_else(|| anyhow!("priority must be a string"))?;
             c.priority = AdmissionPolicy::by_name(s).ok_or_else(|| {
@@ -228,6 +250,7 @@ impl ServeConfig {
         d.set_str("dataset", &self.dataset);
         d.set_str("system", &self.system);
         d.set_str("scheduler", self.scheduler.name());
+        d.set_num("prefill_chunk", self.prefill_chunk as f64);
         d.set_str("priority", self.priority.name());
         d.set_num("replicas", self.replicas as f64);
         d.set_str("routing", self.routing.name());
@@ -273,21 +296,35 @@ impl ServeConfig {
         if self.replicas == 0 {
             return Err(anyhow!("replicas must be >= 1"));
         }
-        if self.replicas > 1 && self.scheduler != SchedulerKind::Continuous {
+        if self.replicas > 1 && !self.scheduler.is_continuous_family() {
             return Err(anyhow!(
-                "multi-replica routing requires scheduler = \"continuous\" \
-                 (the router drives per-replica continuous schedulers)"
+                "multi-replica routing requires scheduler = \"continuous\" or \
+                 \"chunked\" (the router drives per-replica session schedulers)"
             ));
         }
-        if self.priority == AdmissionPolicy::Classes && self.scheduler != SchedulerKind::Continuous
-        {
+        if self.priority == AdmissionPolicy::Classes && !self.scheduler.is_continuous_family() {
             return Err(anyhow!(
-                "priority = \"classes\" requires scheduler = \"continuous\" \
-                 (the static batcher never consults request classes — a \
-                 priority experiment on it would silently bench plain FIFO)"
+                "priority = \"classes\" requires scheduler = \"continuous\" or \
+                 \"chunked\" (the static batcher never consults request classes — \
+                 a priority experiment on it would silently bench plain FIFO)"
+            ));
+        }
+        if self.prefill_chunk > u32::MAX as usize {
+            return Err(anyhow!(
+                "prefill_chunk {} exceeds the engine's u32 token budget",
+                self.prefill_chunk
             ));
         }
         Ok(())
+    }
+
+    /// The engine-facing chunk budget: `0` (unlimited) maps to `u32::MAX`.
+    pub fn prefill_chunk_u32(&self) -> u32 {
+        if self.prefill_chunk == 0 {
+            u32::MAX
+        } else {
+            self.prefill_chunk as u32
+        }
     }
 
     pub fn model_spec(&self) -> Result<ModelSpec> {
@@ -383,6 +420,27 @@ mod tests {
     }
 
     #[test]
+    fn chunked_scheduler_parses_and_roundtrips() {
+        let c =
+            ServeConfig::from_toml("scheduler = \"chunked\"\nprefill_chunk = 128").unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Chunked);
+        assert_eq!(c.prefill_chunk, 128);
+        assert_eq!(c.prefill_chunk_u32(), 128);
+        let back = ServeConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, back);
+        // 0 = unlimited maps to the engine's "no budget" sentinel
+        let inf = ServeConfig::from_toml("scheduler = \"chunked\"\nprefill_chunk = 0").unwrap();
+        assert_eq!(inf.prefill_chunk_u32(), u32::MAX);
+        // chunked is a continuous-family scheduler: router + classes compose
+        assert!(ServeConfig::from_toml("scheduler = \"chunked\"\nreplicas = 2").is_ok());
+        assert!(
+            ServeConfig::from_toml("scheduler = \"chunked\"\npriority = \"classes\"").is_ok()
+        );
+        assert!(SchedulerKind::Chunked.is_continuous_family());
+        assert!(!SchedulerKind::Static.is_continuous_family());
+    }
+
+    #[test]
     fn routing_and_priority_parse_and_roundtrip() {
         let c = ServeConfig::from_toml(
             "scheduler = \"continuous\"\npriority = \"classes\"\nreplicas = 4\nrouting = \"task-affinity\"\ncancel_retired_prefetch = true\n[workload]\ninteractive_frac = 0.25\n",
@@ -400,7 +458,9 @@ mod tests {
         assert_eq!(d.priority, AdmissionPolicy::Fifo);
         assert_eq!(d.replicas, 1);
         assert_eq!(d.routing, RoutingPolicy::RoundRobin);
-        assert!(!d.cancel_retired_prefetch);
+        // cancellation graduated to default-on (BENCH_scheduler cancel_*
+        // rows: dead-traffic savings at no p99 cost)
+        assert!(d.cancel_retired_prefetch);
         assert_eq!(d.workload.interactive_frac, 0.0);
     }
 

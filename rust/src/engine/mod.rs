@@ -14,8 +14,8 @@ mod sim_engine;
 
 pub use real::{GenOutput, RealMoeEngine};
 pub use sim_engine::{
-    BatchResult, BatchSession, EngineConfig, FeedbackMode, PreemptedSeq, SessionState, SimEngine,
-    StepResult,
+    prefill_chunk_tokens, BatchResult, BatchSession, EngineConfig, FeedbackMode, PreemptedSeq,
+    SessionState, SimEngine, StepResult,
 };
 
 use crate::model::ModelSpec;

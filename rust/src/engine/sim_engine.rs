@@ -30,10 +30,12 @@ pub struct EngineConfig {
     /// re-prioritization pass drains them. Ownership is "last predictor
     /// wins": a key predicted later by a still-live sequence is not
     /// cancelled, and an over-eager cancel is healed by the next
-    /// iteration's re-prediction. Off by default — cancellation changes
-    /// transfer timing, and the bitwise scheduler differentials pin the
-    /// uncancelled behavior (`BENCH_scheduler.json` quantifies the
-    /// dead-PCIe-traffic delta).
+    /// iteration's re-prediction. **On by default** since the
+    /// `cancel_{off,on}_prefetch_mb` rows in `BENCH_scheduler.json` showed
+    /// the cancellation is pure dead-PCIe-traffic savings (perf_scheduler
+    /// asserts the no-p99-cost contract on every CI run); the bitwise
+    /// scheduler differentials that pin the *uncancelled* replay set this
+    /// to `false` explicitly, so the suite is stable under either default.
     pub cancel_retired_prefetch: bool,
 }
 
@@ -45,9 +47,27 @@ impl Default for EngineConfig {
             well_predicted_recall: 0.5,
             min_prefetch_ratio: 0.05,
             fetch_all_experts: false,
-            cancel_retired_prefetch: false,
+            cancel_retired_prefetch: true,
         }
     }
+}
+
+/// Proportional prefix-split of one prefill row cell: how many of an
+/// expert's `c` prompt tokens land in the chunk covering prompt positions
+/// `[done, done + k)` of a `prompt`-token prefill.
+///
+/// `floor(c·(done+k)/prompt) − floor(c·done/prompt)` telescopes exactly:
+/// summing over any chunk partition of `[0, prompt)` returns `c`, and the
+/// full range `[0, prompt)` is `c` itself — which is what makes a
+/// chunk-size-∞ chunked replay record the same counts as the historical
+/// whole-prompt iteration 0 (pinned bitwise) and what the chunk-sum
+/// property test in `tests/properties.rs` pins for every finite split.
+#[inline]
+pub fn prefill_chunk_tokens(c: u32, done: u32, k: u32, prompt: u32) -> u32 {
+    debug_assert!(prompt > 0 && done + k <= prompt);
+    let hi = (c as u64 * (done + k) as u64) / prompt as u64;
+    let lo = (c as u64 * done as u64) / prompt as u64;
+    (hi - lo) as u32
 }
 
 /// Outcome of one batch generation (all sequences run to completion).
@@ -134,8 +154,35 @@ pub struct SimEngine {
     slot_total: Vec<u32>,
     /// Prompt length of each slot's sequence (iteration-0 token count).
     slot_prompt: Vec<u32>,
+    /// Prompt tokens already consumed by completed prefill chunks. A slot
+    /// with `slot_iter == 0 && slot_prefill_done < slot_prompt` is in the
+    /// `Prefilling(consumed..)` state: its next step executes the next
+    /// chunk of the prompt instead of a decode token.
+    slot_prefill_done: Vec<u32>,
+    /// Prompt tokens granted to each slot for the *current* step (scratch,
+    /// written at the top of every [`BatchSession::step`]).
+    slot_chunk: Vec<u32>,
+    /// Prefill grant precedence per slot: the per-iteration chunk budget
+    /// is granted in ascending `(rank, slot)` order, NOT slot order — slot
+    /// ids recycle, so a newly admitted prompt can occupy a *lower* slot
+    /// than an older mid-prefill sequence and would otherwise steal the
+    /// whole budget every iteration (starvation). Defaults to a monotone
+    /// admission counter (FCFS); schedulers may override via
+    /// [`BatchSession::set_prefill_rank`] (the Classes policy ranks by
+    /// priority so an interactive prefill is never budget-starved behind a
+    /// batch one).
+    slot_rank: Vec<u64>,
+    /// Monotone source for the default FCFS `slot_rank`.
+    next_rank: u64,
+    /// Reusable ordering scratch for the budget-grant pass.
+    grant_scratch: Vec<u32>,
     /// Occupied slot ids, ascending — the deterministic step order.
     slot_active: Vec<u32>,
+    /// Per-iteration prefill token budget shared by all prefilling slots in
+    /// slot order (`u32::MAX` = unlimited, the historical whole-prompt
+    /// iteration 0). Schedulers set it through
+    /// [`BatchSession::set_prefill_limit`] before each step.
+    prefill_limit: u32,
     /// Pooled step-event buffers for `run_batch_into`.
     step_scratch: StepResult,
     /// Last predictor of each expert's queued prefetch (`slot + 1`, 0 =
@@ -193,6 +240,9 @@ pub struct PreemptedSeq {
     iter: u32,
     total: u32,
     prompt: u32,
+    /// Prompt tokens consumed by completed prefill chunks at eviction time
+    /// (a sequence may be preempted mid-prefill under chunked scheduling).
+    prefill_done: u32,
     demands: u64,
     hits: u64,
     eam: Eam,
@@ -208,6 +258,7 @@ impl PreemptedSeq {
             iter: 0,
             total: 0,
             prompt: 0,
+            prefill_done: 0,
             demands: 0,
             hits: 0,
             eam: Eam::new(layers, experts),
@@ -240,6 +291,16 @@ pub struct StepResult {
     /// External ids of the sequences that executed this iteration, in slot
     /// order.
     pub executed: Vec<u64>,
+    /// External ids of executed sequences still mid-prefill *after* this
+    /// iteration (a non-final prefill chunk ran). An executed id absent
+    /// from this list either decoded or just completed its last prefill
+    /// chunk — the iteration TTFT accounting keys on.
+    pub prefilling: Vec<u64>,
+    /// External ids of active prefilling sequences that received zero
+    /// prefill budget this iteration (the shared chunk budget was consumed
+    /// by earlier slots). They rode the iteration without executing;
+    /// schedulers charge the gap like a suspension.
+    pub stalled: Vec<u64>,
     /// External ids of the sequences that finished (retired) at this
     /// iteration's end.
     pub finished: Vec<u64>,
@@ -260,6 +321,8 @@ impl StepResult {
         self.t_start = 0.0;
         self.t_end = 0.0;
         self.executed.clear();
+        self.prefilling.clear();
+        self.stalled.clear();
         self.finished.clear();
         self.demands = 0;
         self.gpu_hits = 0;
@@ -302,7 +365,13 @@ impl SimEngine {
             slot_iter: Vec::new(),
             slot_total: Vec::new(),
             slot_prompt: Vec::new(),
+            slot_prefill_done: Vec::new(),
+            slot_chunk: Vec::new(),
+            slot_rank: Vec::new(),
+            next_rank: 0,
+            grant_scratch: Vec::new(),
             slot_active: Vec::new(),
+            prefill_limit: u32::MAX,
             step_scratch: StepResult::default(),
             prefetch_owner: vec![0; n_layers * n_experts],
         }
@@ -427,6 +496,9 @@ impl SimEngine {
         let use_matcher = matches!(self.cfg.predictor, PredictorKind::ActivationAware { .. });
         self.slot_active.clear();
         self.slot_occupant.fill(FREE_SLOT);
+        // a fresh session starts on the historical whole-prompt iteration 0;
+        // chunked schedulers re-set the budget before every step
+        self.prefill_limit = u32::MAX;
         BatchSession {
             eng: self,
             feedback,
@@ -547,6 +619,9 @@ fn alloc_slot(eng: &mut SimEngine) -> usize {
             eng.slot_iter.push(0);
             eng.slot_total.push(0);
             eng.slot_prompt.push(0);
+            eng.slot_prefill_done.push(0);
+            eng.slot_chunk.push(0);
+            eng.slot_rank.push(0);
             eng.cur_eams.push(Eam::new(l, e));
             eng.matchers.push(EamcMatcher::new());
             eng.seq_demands.push(0);
@@ -554,6 +629,18 @@ fn alloc_slot(eng: &mut SimEngine) -> usize {
             s
         }
     }
+}
+
+/// Whether `slot` received a zero prefill grant for the current step (set
+/// by the budget pass at the top of [`BatchSession::step`]): still
+/// mid-prefill but `slot_chunk` is 0. Zero-prompt sequences (nothing to
+/// consume) are *not* stalled — they execute an empty iteration 0 exactly
+/// as the pre-chunking engine did.
+#[inline]
+fn slot_stalled(eng: &SimEngine, slot: usize) -> bool {
+    eng.slot_iter[slot] == 0
+        && eng.slot_chunk[slot] == 0
+        && eng.slot_prefill_done[slot] < eng.slot_prompt[slot]
 }
 
 /// A resumable batch over the engine: Alg. 1 generalized to
@@ -594,6 +681,31 @@ impl<'e> BatchSession<'e> {
         self.eng
     }
 
+    /// Set the prefill token budget of the *next* step: at most `limit`
+    /// prompt tokens are executed across all prefilling slots, granted
+    /// greedily in slot order (`u32::MAX` = unlimited — the historical
+    /// whole-prompt iteration 0, which is bitwise identical to the
+    /// pre-chunking engine). A prompt longer than its grant continues in
+    /// the `Prefilling(consumed..)` state at the next iteration boundary;
+    /// prefilling slots granted zero tokens are reported in
+    /// [`StepResult::stalled`] and make no progress. Decode tokens are
+    /// never budgeted — chunking exists to protect them.
+    pub fn set_prefill_limit(&mut self, limit: u32) {
+        assert!(limit >= 1, "prefill limit must be >= 1 (u32::MAX = unlimited)");
+        self.eng.prefill_limit = limit;
+    }
+
+    /// Override `slot`'s prefill-budget precedence: the per-iteration
+    /// chunk budget is granted in ascending `(rank, slot)` order. Defaults
+    /// to a monotone admission counter (FCFS — an older mid-prefill
+    /// sequence is never starved by newer arrivals recycling lower slot
+    /// ids); a class-aware scheduler sets `rank = (tier-inverted, seq)` so
+    /// higher-priority prefills drain first. Irrelevant while the budget
+    /// is unlimited (everyone gets their full prompt).
+    pub fn set_prefill_rank(&mut self, slot: usize, rank: u64) {
+        self.eng.slot_rank[slot] = rank;
+    }
+
     /// Advance virtual time across an idle gap (no arrivals, no active
     /// slots). Queued and in-flight transfers keep draining, exactly as
     /// they do between static batches.
@@ -626,6 +738,10 @@ impl<'e> BatchSession<'e> {
         eng.slot_iter[slot] = 0;
         eng.slot_total[slot] = seq.iterations() as u32;
         eng.slot_prompt[slot] = seq.prompt_len as u32;
+        eng.slot_prefill_done[slot] = 0;
+        eng.slot_chunk[slot] = 0;
+        eng.slot_rank[slot] = eng.next_rank;
+        eng.next_rank += 1;
         // Alg. 1 step 2: fresh EAM, matcher synced to the current build
         eng.cur_eams[slot].clear();
         if self.use_matcher {
@@ -666,6 +782,7 @@ impl<'e> BatchSession<'e> {
         out.iter = eng.slot_iter[slot];
         out.total = eng.slot_total[slot];
         out.prompt = eng.slot_prompt[slot];
+        out.prefill_done = eng.slot_prefill_done[slot];
         out.demands = eng.seq_demands[slot];
         out.hits = eng.seq_hits[slot];
         out.eam.copy_from(&eng.cur_eams[slot]);
@@ -702,6 +819,12 @@ impl<'e> BatchSession<'e> {
         eng.slot_iter[slot] = saved.iter;
         eng.slot_total[slot] = saved.total;
         eng.slot_prompt[slot] = saved.prompt;
+        eng.slot_prefill_done[slot] = saved.prefill_done;
+        eng.slot_chunk[slot] = 0;
+        // FCFS default: a resumed prefill re-queues for budget at the back;
+        // class-aware schedulers re-rank it right after this call
+        eng.slot_rank[slot] = eng.next_rank;
+        eng.next_rank += 1;
         eng.cur_eams[slot].copy_from(&saved.eam);
         eng.seq_demands[slot] = saved.demands;
         eng.seq_hits[slot] = saved.hits;
@@ -750,16 +873,60 @@ impl<'e> BatchSession<'e> {
         let (n_layers, n_experts) = (eng.spec.n_layers, eng.spec.experts_per_layer);
         let use_matcher = self.use_matcher;
 
+        // Grant this step's prefill budget greedily in ascending
+        // `(slot_rank, slot)` order — FCFS by default, class-ranked under
+        // priority scheduling — NOT slot order (slot ids recycle, so a new
+        // prompt in a lower slot would otherwise steal the budget from an
+        // older mid-prefill sequence every iteration). A prefilling slot
+        // takes `min(remaining prompt, remaining budget)` tokens; with the
+        // default unlimited budget every prompt runs whole (the historical
+        // iteration 0, bitwise-preserved). A prefilling slot granted zero
+        // tokens stalls — it stays active but executes nothing this
+        // iteration. Decode slots always run one token, unbudgeted.
+        let mut grant_scratch = std::mem::take(&mut eng.grant_scratch);
+        grant_scratch.clear();
+        for i in 0..eng.slot_active.len() {
+            let slot = eng.slot_active[i] as usize;
+            if eng.slot_iter[slot] == 0 {
+                eng.slot_chunk[slot] = 0;
+                if eng.slot_prefill_done[slot] < eng.slot_prompt[slot] {
+                    let key = (eng.slot_rank[slot], slot);
+                    let pos = grant_scratch
+                        .partition_point(|&s| (eng.slot_rank[s as usize], s as usize) < key);
+                    grant_scratch.insert(pos, slot as u32);
+                }
+            }
+        }
+        let mut prefill_left = eng.prefill_limit;
+        for idx in 0..grant_scratch.len() {
+            let slot = grant_scratch[idx] as usize;
+            let rem = eng.slot_prompt[slot] - eng.slot_prefill_done[slot];
+            let k = rem.min(prefill_left);
+            prefill_left -= k;
+            eng.slot_chunk[slot] = k;
+        }
+        eng.grant_scratch = grant_scratch;
+        // emit executed/stalled in slot order — the deterministic step
+        // order every downstream consumer (and the bitwise pins) sees
         let mut batch_tokens = 0u32;
         for i in 0..eng.slot_active.len() {
             let slot = eng.slot_active[i] as usize;
-            out.executed.push(eng.slot_occupant[slot]);
-            batch_tokens += if eng.slot_iter[slot] == 0 {
-                eng.slot_prompt[slot]
+            if eng.slot_iter[slot] == 0 {
+                if slot_stalled(eng, slot) {
+                    out.stalled.push(eng.slot_occupant[slot]);
+                    continue;
+                }
+                out.executed.push(eng.slot_occupant[slot]);
+                batch_tokens += eng.slot_chunk[slot];
             } else {
-                1
-            };
+                out.executed.push(eng.slot_occupant[slot]);
+                batch_tokens += 1;
+            }
         }
+        debug_assert!(
+            !out.executed.is_empty(),
+            "a limit >= 1 always grants some prefilling slot something"
+        );
 
         for l in 0..n_layers {
             // ---- dense part of the layer (attention etc.)
@@ -776,9 +943,28 @@ impl<'e> BatchSession<'e> {
             eng.union_active.clear();
             for i in 0..eng.slot_active.len() {
                 let slot = eng.slot_active[i] as usize;
+                if slot_stalled(eng, slot) {
+                    continue; // zero prefill grant: nothing routes this step
+                }
                 let s = seq_of(eng.slot_occupant[slot]);
                 let iter = eng.slot_iter[slot] as usize;
+                // a prefilling slot routes only its chunk's proportional
+                // share of each row cell; the full-range split equals the
+                // stored counts, so the unlimited path records identically
+                let (done, k, prompt) = (
+                    eng.slot_prefill_done[slot],
+                    eng.slot_chunk[slot],
+                    eng.slot_prompt[slot],
+                );
                 for &(e, c) in &s.routes[iter][l] {
+                    let c = if iter == 0 {
+                        prefill_chunk_tokens(c, done, k, prompt)
+                    } else {
+                        c
+                    };
+                    if c == 0 {
+                        continue; // this chunk carries none of the expert's tokens
+                    }
                     eng.cur_eams[slot].record(l, e as usize, c);
                     eng.batch_eam.record(l, e as usize, c);
                     eng.predictor.observe_route(l, e as usize, c);
@@ -798,6 +984,9 @@ impl<'e> BatchSession<'e> {
             // ---- Alg. 1 step 8: resubmit prefetch priorities
             for i in 0..eng.slot_active.len() {
                 let slot = eng.slot_active[i] as usize;
+                if slot_stalled(eng, slot) {
+                    continue; // no new routing observed: keep the standing prediction
+                }
                 let iter = eng.slot_iter[slot] as usize;
                 if eng.predictor.should_predict(l, iter) {
                     let mut buf = std::mem::take(&mut eng.pred_buf);
@@ -892,11 +1081,25 @@ impl<'e> BatchSession<'e> {
         self.t = t;
         eng.clock = t;
 
-        // ---- iteration boundary: advance local iterations, retire
-        // finished sequences at their true finish iteration.
+        // ---- iteration boundary: advance prefill positions and local
+        // iterations, retire finished sequences at their true finish
+        // iteration. A slot whose prompt is only partially consumed stays
+        // on iteration 0 in the `Prefilling(consumed..)` state.
         let mut i = 0;
         while i < eng.slot_active.len() {
             let slot = eng.slot_active[i] as usize;
+            if eng.slot_iter[slot] == 0 {
+                if slot_stalled(eng, slot) {
+                    i += 1; // zero grant: no progress this iteration
+                    continue;
+                }
+                eng.slot_prefill_done[slot] += eng.slot_chunk[slot];
+                if eng.slot_prefill_done[slot] < eng.slot_prompt[slot] {
+                    out.prefilling.push(eng.slot_occupant[slot]);
+                    i += 1; // mid-prefill: iteration 0 is not done yet
+                    continue;
+                }
+            }
             eng.slot_iter[slot] += 1;
             if eng.slot_iter[slot] >= eng.slot_total[slot] {
                 out.finished.push(eng.slot_occupant[slot]);
@@ -1336,6 +1539,236 @@ mod tests {
             got, want,
             "per-iteration expert demands must match the uninterrupted run"
         );
+    }
+
+    #[test]
+    fn unlimited_prefill_limit_is_identical_to_default() {
+        // an explicit u32::MAX budget must replay the historical
+        // whole-prompt iteration 0 bitwise (the chunked-scheduler-with-∞ ==
+        // continuous pin rests on this)
+        let s = spec();
+        let run = |explicit: bool| -> (Vec<u64>, Vec<u64>) {
+            let mut w = workload(&s, 31);
+            let eamc = eamc_for(&s, &mut w, 30, 8);
+            let mut eng = SimEngine::new(
+                s.clone(),
+                tier(&s, 64, CacheKind::Activation),
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            );
+            let seq = w.gen_sequence();
+            let lookup = |_id: u64| &seq;
+            let mut step = StepResult::default();
+            let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+            session.admit(0, &seq);
+            let mut demands = Vec::new();
+            let mut lat_bits = Vec::new();
+            loop {
+                if explicit {
+                    session.set_prefill_limit(u32::MAX);
+                }
+                if !session.step(&lookup, &mut step) {
+                    break;
+                }
+                assert!(step.prefilling.is_empty() && step.stalled.is_empty());
+                demands.push(step.demands);
+                lat_bits.push(step.latency().to_bits());
+            }
+            session.finish();
+            (demands, lat_bits)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn chunked_prefill_splits_iteration_zero_and_conserves_row_sums() {
+        let s = spec();
+        let mut w = workload(&s, 32);
+        let eamc = eamc_for(&s, &mut w, 30, 8);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, 64, CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let seq = w.gen_sequence();
+        let prompt = seq.prompt_len as u32;
+        assert!(prompt >= 8, "preset prompts are >= 16");
+        let chunk = 5u32;
+        let n_chunks = ((prompt + chunk - 1) / chunk) as usize; // ceil (MSRV < div_ceil)
+        let lookup = |_id: u64| &seq;
+        let mut step = StepResult::default();
+        let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+        session.admit(0, &seq);
+        let mut steps = 0usize;
+        let mut prefill_steps = 0usize;
+        loop {
+            session.set_prefill_limit(chunk);
+            if !session.step(&lookup, &mut step) {
+                break;
+            }
+            steps += 1;
+            if step.prefilling.contains(&0) {
+                prefill_steps += 1;
+                assert!(step.finished.is_empty(), "mid-prefill never retires");
+            }
+        }
+        // every non-final chunk reports `prefilling`; the final chunk and
+        // all decode iterations do not
+        assert_eq!(prefill_steps, n_chunks - 1);
+        assert_eq!(steps, n_chunks + seq.iterations() - 1);
+        let t = session.finish();
+        assert_eq!(eng.now(), t);
+        // the accumulated per-sequence trace equals the whole-prompt EAM:
+        // the proportional split conserved every row cell
+        assert_eq!(
+            eng.cur_eams[0],
+            seq.to_eam(s.n_layers, s.experts_per_layer),
+            "chunked prefill must record exactly the sequence's EAM"
+        );
+    }
+
+    #[test]
+    fn shared_prefill_budget_stalls_later_slots_until_granted() {
+        let s = spec();
+        let mut w = workload(&s, 33);
+        let eamc = eamc_for(&s, &mut w, 30, 8);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, 64, CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let a = w.gen_sequence();
+        let b = w.gen_sequence();
+        let seqs = [a, b];
+        let lookup = |id: u64| &seqs[id as usize];
+        let mut step = StepResult::default();
+        let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+        session.admit(0, &seqs[0]);
+        session.admit(1, &seqs[1]);
+        // budget smaller than slot 0's prompt: slot 1 gets nothing yet
+        session.set_prefill_limit(4);
+        assert!(session.step(&lookup, &mut step));
+        assert_eq!(step.executed, vec![0]);
+        assert_eq!(step.stalled, vec![1], "slot 1 must report the stall");
+        assert_eq!(step.prefilling, vec![0]);
+        // run everything dry; both sequences must still complete
+        let mut finished = Vec::new();
+        loop {
+            session.set_prefill_limit(4);
+            if !session.step(&lookup, &mut step) {
+                break;
+            }
+            finished.extend_from_slice(&step.finished);
+        }
+        finished.sort_unstable();
+        assert_eq!(finished, vec![0, 1], "stalled prefills must recover");
+        session.finish();
+    }
+
+    #[test]
+    fn prefill_rank_overrides_slot_order_for_budget_grants() {
+        // slot ids recycle, so grant order must follow rank, not slot id:
+        // demoting slot 0 hands the whole budget to slot 1
+        let s = spec();
+        let mut w = workload(&s, 35);
+        let eamc = eamc_for(&s, &mut w, 30, 8);
+        let mut eng = SimEngine::new(
+            s.clone(),
+            tier(&s, 64, CacheKind::Activation),
+            eamc,
+            ComputeModel::a5000(),
+            EngineConfig::default(),
+        );
+        let a = w.gen_sequence();
+        let b = w.gen_sequence();
+        let seqs = [a, b];
+        let lookup = |id: u64| &seqs[id as usize];
+        let mut step = StepResult::default();
+        let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+        session.admit(0, &seqs[0]); // default FCFS rank 0
+        session.admit(1, &seqs[1]); // default FCFS rank 1
+        session.set_prefill_rank(0, u64::MAX); // demote the older slot
+        session.set_prefill_limit(4);
+        assert!(session.step(&lookup, &mut step));
+        assert_eq!(step.executed, vec![1], "ranked-first slot gets the budget");
+        assert_eq!(step.stalled, vec![0], "demoted slot stalls despite lower id");
+        session.finish();
+    }
+
+    #[test]
+    fn mid_prefill_evict_and_resume_continues_identically() {
+        // chunked analogue of the preempt/resume differential: evicting a
+        // sequence halfway through its *prefill* and resuming later must
+        // replay the remaining chunks' expert demands exactly
+        let s = spec();
+        let chunk = 5u32;
+        let run = |interrupt: bool, seed: u64| -> Vec<u64> {
+            let mut w = workload(&s, seed);
+            let eamc = eamc_for(&s, &mut w, 30, 8);
+            let mut eng = SimEngine::new(
+                s.clone(),
+                tier(&s, 64, CacheKind::Activation),
+                eamc,
+                ComputeModel::a5000(),
+                EngineConfig::default(),
+            );
+            let seq = w.gen_sequence();
+            let lookup = |_id: u64| &seq;
+            let mut step = StepResult::default();
+            let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+            session.admit(0, &seq);
+            let mut saved = PreemptedSeq::new(s.n_layers, s.experts_per_layer);
+            let mut demands = Vec::new();
+            // two prefill chunks, then (optionally) evict mid-prefill
+            for _ in 0..2 {
+                session.set_prefill_limit(chunk);
+                assert!(session.step(&lookup, &mut step));
+                demands.push(step.demands);
+            }
+            if interrupt {
+                session.evict(0, &mut saved);
+                assert_eq!(saved.ext_id(), 0);
+                assert_eq!(saved.iterations_done(), 0, "still on iteration 0");
+                let slot = session.admit_resumed(&saved);
+                assert_eq!(slot, 0);
+            }
+            loop {
+                session.set_prefill_limit(chunk);
+                if !session.step(&lookup, &mut step) {
+                    break;
+                }
+                demands.push(step.demands);
+            }
+            session.finish();
+            demands
+        };
+        assert_eq!(
+            run(false, 34),
+            run(true, 34),
+            "mid-prefill preemption must not change per-step expert demands"
+        );
+    }
+
+    #[test]
+    fn prefill_chunk_tokens_full_range_is_identity() {
+        for (c, prompt) in [(0u32, 7u32), (3, 7), (7, 7), (123, 456)] {
+            assert_eq!(prefill_chunk_tokens(c, 0, prompt, prompt), c);
+        }
+        // telescoping: any partition sums back to c
+        let (c, prompt) = (17u32, 40u32);
+        let mut total = 0;
+        let mut done = 0;
+        for k in [3u32, 10, 1, 26] {
+            total += prefill_chunk_tokens(c, done, k, prompt);
+            done += k;
+        }
+        assert_eq!(done, prompt);
+        assert_eq!(total, c);
     }
 
     #[test]

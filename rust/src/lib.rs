@@ -10,7 +10,8 @@
 //!   memory/PCIe discrete-event simulator ([`memory`]), the generative
 //!   inference engine implementing the paper's Algorithm 1 ([`engine`]),
 //!   a request-lifecycle serving API — `Scheduler` trait, priority classes
-//!   with preemption, task-affinity multi-replica `Router` ([`server`]),
+//!   with preemption, chunked prefill, task-affinity multi-replica
+//!   `Router` ([`server`]),
 //!   expert-parallel cluster support ([`cluster`]) and whole-system
 //!   baselines ([`baselines`]).
 //! * **L2** — a JAX decode-step MoE model (`python/compile/model.py`),

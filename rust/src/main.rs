@@ -82,8 +82,11 @@ fn run() -> Result<()> {
                 "usage: moe-infinity <serve|generate|models|systems|config> [--flag value ...]\n\
                  \n\
                  serve    --config <toml> | --model <preset> --system <name> --rps <f> --duration <s>\n\
-                 \x20        [--scheduler static|continuous]  batching discipline (default: static\n\
-                 \x20        run-to-completion; continuous admits/retires at iteration boundaries)\n\
+                 \x20        [--scheduler static|continuous|chunked]  batching discipline (default:\n\
+                 \x20        static run-to-completion; continuous admits/retires at iteration\n\
+                 \x20        boundaries; chunked additionally splits joining prompts)\n\
+                 \x20        [--prefill-chunk <n>]  chunked per-iteration prompt-token budget\n\
+                 \x20        (0 = unlimited, bitwise identical to continuous)\n\
                  \x20        [--priority fifo|classes]  continuous admission: strict FIFO or\n\
                  \x20        priority classes with SLO slack + voluntary preemption\n\
                  \x20        [--replicas <n>]  engine replicas behind the request router\n\
@@ -136,7 +139,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     if let Some(s) = args.get("scheduler") {
         cfg.scheduler = moe_infinity::config::SchedulerKind::by_name(s)
-            .ok_or_else(|| anyhow!("--scheduler: unknown '{s}' (static|continuous)"))?;
+            .ok_or_else(|| anyhow!("--scheduler: unknown '{s}' (static|continuous|chunked)"))?;
+    }
+    if let Some(n) = args.get("prefill-chunk") {
+        cfg.prefill_chunk = n.parse::<usize>().map_err(|e| anyhow!("--prefill-chunk: {e}"))?;
     }
     if let Some(p) = args.get("priority") {
         cfg.priority = moe_infinity::server::AdmissionPolicy::by_name(p)
@@ -168,12 +174,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         None => Pool::from_env(),
     };
 
+    let chunk_desc = if cfg.scheduler == moe_infinity::config::SchedulerKind::Chunked {
+        if cfg.prefill_chunk == 0 {
+            " prefill-chunk=unlimited".to_string()
+        } else {
+            format!(" prefill-chunk={}", cfg.prefill_chunk)
+        }
+    } else {
+        String::new()
+    };
     println!(
-        "serving {} [{}] dataset={} scheduler={} priority={} replicas={} routing={} rps={} duration={}s (offline pool: {} threads) ...",
+        "serving {} [{}] dataset={} scheduler={}{} priority={} replicas={} routing={} rps={} duration={}s (offline pool: {} threads) ...",
         cfg.model,
         cfg.system,
         cfg.dataset,
         cfg.scheduler.name(),
+        chunk_desc,
         cfg.priority.name(),
         cfg.replicas,
         cfg.routing.name(),
@@ -185,7 +201,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("requests        : {}", report.requests);
     println!(
         "{}: {}",
-        if cfg.scheduler == moe_infinity::config::SchedulerKind::Continuous {
+        if cfg.scheduler.is_continuous_family() {
             "iterations      "
         } else {
             "batches         "
@@ -202,6 +218,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("p99  TTFT       : {}", fmt_secs(report.ttft.p99()));
     println!("p50  TPOT       : {}", fmt_secs(report.tpot.p50()));
     println!("p99  TPOT       : {}", fmt_secs(report.tpot.p99()));
+    if report.decode_latency.len() > 0 {
+        println!(
+            "p99  decode step: {}",
+            fmt_secs(report.decode_latency.p99())
+        );
+    }
     println!("GPU hit ratio   : {:.3}", report.gpu_hit_ratio());
     println!("throughput      : {:.1} tokens/s", report.token_throughput());
     Ok(())

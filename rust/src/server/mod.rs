@@ -2,8 +2,8 @@
 //!
 //! Serving is organized around the [`Scheduler`] trait — `submit` requests
 //! in arrival order, `tick` one scheduling quantum at a time, `drain` to a
-//! [`ServeReport`] — with three implementations sharing one engine
-//! substrate:
+//! [`ServeReport`] — with a three-scheduler lineup sharing one engine
+//! substrate, plus a multi-replica router in front:
 //!
 //! * [`StaticScheduler`] — AlpaServe-style run-to-completion batches (the
 //!   paper's §8.2 methodology): requests accumulate until either
@@ -14,33 +14,67 @@
 //!   [`crate::engine::BatchSession`]: arrivals join free slots at every
 //!   iteration boundary and sequences retire the iteration they finish.
 //!   Under [`AdmissionPolicy::Classes`] admission is priority- and
-//!   SLO-aware instead of FIFO, and a high-priority arrival may
-//!   *voluntarily preempt* a lower-priority sequence mid-flight
-//!   ([`crate::engine::BatchSession::evict`] saves its traced EAM and
-//!   position; [`crate::engine::BatchSession::admit_resumed`] continues it
-//!   later with identical per-token expert demands).
+//!   SLO-aware instead of FIFO — served from a binary heap keyed by the
+//!   time-invariant `(priority desc, deadline, arrival, idx)` [`AdmitKey`]
+//!   (O(log n) per pop instead of an O(backlog) rescan) — and a
+//!   high-priority arrival may *voluntarily preempt* a lower-priority
+//!   sequence mid-flight ([`crate::engine::BatchSession::evict`] saves its
+//!   traced EAM and position; [`crate::engine::BatchSession::admit_resumed`]
+//!   continues it later with identical per-token expert demands).
+//! * [`ChunkedScheduler`] — continuous batching plus **chunked prefill**
+//!   (the vLLM token-budget knob): a joining prompt executes at most
+//!   `prefill_chunk` tokens per iteration, interleaved with the in-flight
+//!   decode tokens of the same session, so an iteration-0 prompt burst can
+//!   no longer stall every in-flight decode for a whole prompt's worth of
+//!   compute and expert fetches. The session admits the sequence in a
+//!   `Prefilling(consumed..)` state, partial prefill rows feed the
+//!   per-sequence EAM/matcher incrementally (prediction and prefetch see
+//!   the routing signature as it accumulates), and TTFT/EAMC-recall
+//!   accounting lands at the iteration the *last* chunk completes.
 //! * [`router::Router`] — owns N engine replicas and dispatches one
-//!   request stream across per-replica continuous schedulers with a
-//!   pluggable [`router::RoutingPolicy`] (round-robin, least-loaded, or
-//!   eMoE-style task affinity scored against each replica's EAMC).
+//!   request stream across per-replica continuous (or chunked) schedulers
+//!   with a pluggable [`router::RoutingPolicy`] (round-robin, least-loaded,
+//!   or eMoE-style task affinity scored against each replica's EAMC; under
+//!   chunked prefill the affinity score uses the first chunk's share of
+//!   the prompt signature — what a real dispatcher would have seen).
 //!
 //! Compatibility is pinned bitwise: with default request classes the
 //! continuous scheduler reproduces the pre-trait `serve_continuous` replay
 //! exactly, the static scheduler reproduces `serve`, continuous at
-//! `max_batch = 1` equals static, and a 1-replica round-robin router
-//! equals a bare continuous scheduler (`rust/tests/parallel.rs`,
-//! `rust/tests/scheduler.rs`). All replays are fully deterministic in
-//! virtual time.
+//! `max_batch = 1` equals static, a 1-replica round-robin router equals a
+//! bare continuous scheduler, a chunked scheduler with an unlimited
+//! `prefill_chunk` equals the continuous scheduler, and the Classes
+//! admission heap pops in exactly the retired rescan's order
+//! (`rust/tests/parallel.rs`, `rust/tests/scheduler.rs`). All replays are
+//! fully deterministic in virtual time.
 
 pub mod router;
 
 pub use router::{Router, RoutingPolicy};
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::engine::{BatchResult, FeedbackMode, PreemptedSeq, SessionState, SimEngine, StepResult};
 use crate::metrics::LatencyRecorder;
-use crate::workload::{Priority, Request};
+use crate::workload::{Priority, Request, SequenceActivation};
+
+/// Upper bound on the iterations a request will *execute* — the
+/// token-latency sample budget `reserve_for` pre-sizes recorders with.
+/// Unlimited prefill budget ⇒ exactly `seq.iterations()`. A finite chunk
+/// budget ⇒ one iteration per prompt token plus the decode iterations:
+/// `ceil(prompt/chunk)` is NOT a bound, because the shared per-iteration
+/// budget hands a lower-ranked slot the *leftover* of a higher-ranked
+/// slot's final partial chunk, splitting its prompt into sub-chunk grants
+/// (each executed grant still covers ≥ 1 token, so `prompt` is).
+pub(crate) fn expected_iterations(seq: &SequenceActivation, prefill_chunk: u32) -> usize {
+    if prefill_chunk == u32::MAX {
+        seq.iterations()
+    } else {
+        // zero-prompt sequences still execute one (empty) prefill iteration
+        seq.prompt_len.max(1) + seq.gen_len
+    }
+}
 
 /// The shared batching-window check used by both [`Batcher::new`] (hard
 /// assert) and `config::ServeConfig::validate` (soft error): a NaN or
@@ -159,6 +193,13 @@ pub struct ServeReport {
     /// Time per output token per request: mean latency of the iterations
     /// after the first (only recorded for multi-iteration requests).
     pub tpot: LatencyRecorder,
+    /// Raw per-iteration latency of every *pure decode* step a request
+    /// rode (its prefill already complete before the iteration started),
+    /// without queueing/suspension charges — the decode-stall metric
+    /// chunked prefill exists to cap. Continuous-substrate schedulers
+    /// record it; the static scheduler (whole batches, no interleaving)
+    /// leaves it empty.
+    pub decode_latency: LatencyRecorder,
     pub requests: u64,
     pub tokens: u64,
     /// Static scheduler: dispatched batches. Continuous scheduler: engine
@@ -202,6 +243,7 @@ impl ServeReport {
         self.request_latency.append(&other.request_latency);
         self.ttft.append(&other.ttft);
         self.tpot.append(&other.tpot);
+        self.decode_latency.append(&other.decode_latency);
         self.requests += other.requests;
         self.tokens += other.tokens;
         self.batches += other.batches;
@@ -378,6 +420,9 @@ pub struct ContinuousScheduler<'r> {
     engine: SimEngine,
     max_batch: usize,
     admission: AdmissionPolicy,
+    /// Per-iteration prefill token budget (`u32::MAX` = unlimited, the
+    /// plain continuous discipline). [`ChunkedScheduler`] sets it finite.
+    prefill_chunk: u32,
     layers: usize,
     experts: usize,
     /// Suspended session continuation (`None` once drained).
@@ -385,15 +430,22 @@ pub struct ContinuousScheduler<'r> {
     step: StepResult,
     /// Submitted requests in arrival order; index = session external id.
     reqs: Vec<&'r Request>,
-    /// First request not yet moved into `waiting`.
+    /// First request not yet moved into the backlog.
     next_arrival: usize,
-    /// Arrived, unadmitted request indices in arrival order (deque: FIFO
-    /// admission pops the front in O(1) even under deep overload backlogs).
+    /// FIFO backlog: arrived, unadmitted request indices in arrival order
+    /// (deque: admission pops the front in O(1) even under deep overload
+    /// backlogs). Empty under [`AdmissionPolicy::Classes`].
     waiting: VecDeque<u32>,
+    /// Classes backlog: waiting *and* preempted requests keyed by their
+    /// time-invariant [`AdmitKey`] (pop = next admission, O(log n); a
+    /// popped request resumes rather than admits fresh iff it holds a park
+    /// slot). Empty under [`AdmissionPolicy::Fifo`].
+    class_heap: BinaryHeap<AdmitKey>,
     /// In-flight request indices (unordered; scanned for victims).
     active: Vec<u32>,
-    /// Preempted request indices awaiting resume.
-    preempted: Vec<u32>,
+    /// Monotone admission counter — the low bits of the Classes prefill
+    /// rank, so equal-tier prefills drain the chunk budget FCFS.
+    admit_seq: u64,
     /// Pool of saved preemption states; `park_of` maps requests to slots.
     parked: Vec<PreemptedSeq>,
     free_park: Vec<u32>,
@@ -402,12 +454,15 @@ pub struct ContinuousScheduler<'r> {
     // --- per-request accounting, index-aligned with `reqs` ---
     lat_sum: Vec<f64>,
     lat_n: Vec<u32>,
-    /// Waiting time (initial queueing or suspension gap) to fold into the
-    /// next executed token's latency.
+    /// Waiting time (initial queueing, suspension gap, or a zero-budget
+    /// prefill stall) to fold into the next executed token's latency.
     pending_extra: Vec<f64>,
     charge: Vec<bool>,
     ttft_val: Vec<f64>,
     first_done: Vec<bool>,
+    /// Iterations spent prefilling (chunks), incl. the completing one —
+    /// the TPOT denominator excludes them.
+    prefill_iters: Vec<u32>,
     evict_t: Vec<f64>,
     slot_of: Vec<u32>,
     park_of: Vec<u32>,
@@ -430,6 +485,7 @@ fn reserve_deque_to<T>(v: &mut VecDeque<T>, total: usize) {
 
 /// `(priority, slack, arrival, idx)` admission key: higher tier first,
 /// then least SLO slack, then earliest arrival, then lowest index.
+/// Retained as part of the rescan reference (see [`pick_candidate`]).
 fn candidate_beats(
     a: (Priority, f64, f64, u32),
     b: (Priority, f64, f64, u32),
@@ -446,9 +502,13 @@ fn candidate_beats(
     a.3 < b.3
 }
 
-/// Best admission candidate across the waiting and preempted lists.
-/// Returns `(from_preempted, position_in_that_list)`.
-fn pick_candidate(
+/// **Reference implementation** of Classes admission: a full rescan of the
+/// waiting and preempted lists per admission attempt — O(backlog) each.
+/// The serving path now pops an [`AdmitKey`] heap instead (O(log n)); this
+/// scan is kept as the executable specification the heap order is pinned
+/// against bitwise in `rust/tests/scheduler.rs`. Returns
+/// `(from_preempted, position_in_that_list)` of the best candidate.
+pub fn pick_candidate(
     reqs: &[&Request],
     waiting: &VecDeque<u32>,
     preempted: &[u32],
@@ -472,6 +532,76 @@ fn pick_candidate(
         }
     }
     best.map(|(_, from_preempted, pos)| (from_preempted, pos))
+}
+
+/// Indexed Classes admission key. The rescan compared `(priority desc,
+/// slack asc, arrival asc, idx asc)` where slack = `arrival + slo − now`;
+/// subtraction of a common `now` is monotone, so the slack order equals
+/// the *deadline* (`arrival + slo`) order and the key is
+/// **time-invariant**: computed once when a request enters the backlog
+/// and valid forever after, which is what lets a binary heap replace the
+/// per-attempt O(backlog) rescan with O(log n) pops. (The one divergence
+/// class: two *distinct* deadlines whose `− now` rounds them equal — the
+/// scan then fell through to its arrival tie-break by floating-point
+/// accident; the heap keeps the true deadline order, which is the
+/// intended semantics.) `Ord` is arranged so the max-heap top is the next
+/// admission; `idx` is unique per request, so the order is total and the
+/// pop sequence is pinned bitwise against [`pick_candidate`]'s scan order
+/// in `rust/tests/scheduler.rs`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitKey {
+    priority: Priority,
+    /// `arrival + slo`, `+inf` when the class carries no SLO.
+    deadline: f64,
+    arrival: f64,
+    idx: u32,
+}
+
+/// The [`AdmitKey`] of request `idx` (index into the submission order).
+pub fn admit_key(r: &Request, idx: u32) -> AdmitKey {
+    AdmitKey {
+        priority: r.class.priority,
+        deadline: match r.class.slo {
+            Some(s) => r.arrival + s,
+            None => f64::INFINITY,
+        },
+        arrival: r.arrival,
+        idx,
+    }
+}
+
+impl AdmitKey {
+    /// The request index this key admits.
+    pub fn idx(&self) -> u32 {
+        self.idx
+    }
+}
+
+impl PartialEq for AdmitKey {
+    fn eq(&self, other: &AdmitKey) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for AdmitKey {}
+
+impl PartialOrd for AdmitKey {
+    fn partial_cmp(&self, other: &AdmitKey) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for AdmitKey {
+    fn cmp(&self, other: &AdmitKey) -> Ordering {
+        // greatest = admitted first: higher priority, then earlier
+        // deadline, then earlier arrival, then lower index (total_cmp:
+        // the ±inf deadlines of SLO-less classes order totally)
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.deadline.total_cmp(&self.deadline))
+            .then_with(|| other.arrival.total_cmp(&self.arrival))
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
 }
 
 /// Preemption victim: the *youngest of the lowest tier* among active
@@ -512,6 +642,7 @@ impl<'r> ContinuousScheduler<'r> {
             engine,
             max_batch: batcher.max_batch,
             admission,
+            prefill_chunk: u32::MAX,
             layers,
             experts,
             session: Some(session),
@@ -519,8 +650,9 @@ impl<'r> ContinuousScheduler<'r> {
             reqs: Vec::new(),
             next_arrival: 0,
             waiting: VecDeque::new(),
+            class_heap: BinaryHeap::new(),
             active,
-            preempted: Vec::new(),
+            admit_seq: 0,
             parked: Vec::new(),
             free_park: Vec::new(),
             finished: 0,
@@ -531,6 +663,7 @@ impl<'r> ContinuousScheduler<'r> {
             charge: Vec::new(),
             ttft_val: Vec::new(),
             first_done: Vec::new(),
+            prefill_iters: Vec::new(),
             evict_t: Vec::new(),
             slot_of: Vec::new(),
             park_of: Vec::new(),
@@ -538,6 +671,27 @@ impl<'r> ContinuousScheduler<'r> {
             done: Vec::new(),
             report: ServeReport::default(),
         }
+    }
+
+    /// Set the per-iteration prefill token budget (`u32::MAX` = unlimited).
+    /// [`ChunkedScheduler`] and [`Router::with_prefill_chunk`] route
+    /// through this; with the unlimited default the replay is bitwise the
+    /// plain continuous one.
+    pub(crate) fn set_prefill_chunk(&mut self, chunk: u32) {
+        assert!(chunk >= 1, "prefill_chunk must be >= 1 (u32::MAX = unlimited)");
+        self.prefill_chunk = chunk;
+    }
+
+    /// Builder form of [`ContinuousScheduler::set_prefill_chunk`].
+    pub(crate) fn with_prefill_chunk(mut self, chunk: u32) -> ContinuousScheduler<'r> {
+        self.set_prefill_chunk(chunk);
+        self
+    }
+
+    /// Arrived-but-unadmitted requests (waiting + preempted), whichever
+    /// backlog structure the admission policy uses.
+    fn backlog(&self) -> usize {
+        self.waiting.len() + self.class_heap.len()
     }
 
     pub fn engine(&self) -> &SimEngine {
@@ -576,7 +730,7 @@ impl<'r> ContinuousScheduler<'r> {
         if !self.has_work() {
             return None;
         }
-        if !self.active.is_empty() || !self.waiting.is_empty() || !self.preempted.is_empty() {
+        if !self.active.is_empty() || self.backlog() > 0 {
             return Some(self.now());
         }
         debug_assert!(self.next_arrival < self.reqs.len());
@@ -590,13 +744,15 @@ impl<'r> ContinuousScheduler<'r> {
     pub fn reserve_for(&mut self, total_requests: usize, total_tokens: usize) {
         reserve_to(&mut self.reqs, total_requests);
         reserve_deque_to(&mut self.waiting, total_requests);
-        reserve_to(&mut self.preempted, total_requests);
+        self.class_heap
+            .reserve(total_requests.saturating_sub(self.class_heap.len()));
         reserve_to(&mut self.lat_sum, total_requests);
         reserve_to(&mut self.lat_n, total_requests);
         reserve_to(&mut self.pending_extra, total_requests);
         reserve_to(&mut self.charge, total_requests);
         reserve_to(&mut self.ttft_val, total_requests);
         reserve_to(&mut self.first_done, total_requests);
+        reserve_to(&mut self.prefill_iters, total_requests);
         reserve_to(&mut self.evict_t, total_requests);
         reserve_to(&mut self.slot_of, total_requests);
         reserve_to(&mut self.park_of, total_requests);
@@ -609,6 +765,8 @@ impl<'r> ContinuousScheduler<'r> {
             .reserve(total_requests.saturating_sub(r.request_latency.len()));
         r.ttft.reserve(total_requests.saturating_sub(r.ttft.len()));
         r.tpot.reserve(total_requests.saturating_sub(r.tpot.len()));
+        r.decode_latency
+            .reserve(total_tokens.saturating_sub(r.decode_latency.len()));
     }
 
     /// Per-request outcomes (id, class, latency, TTFT, preemption count).
@@ -630,37 +788,33 @@ impl<'r> ContinuousScheduler<'r> {
             .collect()
     }
 
-    /// Admit from the wait/preempted queues into free slots at the current
-    /// boundary; under [`AdmissionPolicy::Classes`], additionally preempt
+    /// Admit from the backlog into free slots at the current boundary;
+    /// under [`AdmissionPolicy::Classes`], additionally preempt
     /// strictly-lower-priority in-flight sequences for waiting
     /// higher-priority requests.
     ///
-    /// Cost note: the FIFO path pops the deque front in O(1). Classes
-    /// scans the waiting/preempted lists once per admission attempt —
-    /// O((max_batch + evictions + 1) · backlog) per boundary. The key
-    /// (priority desc, arrival+slo, arrival, idx) is time-invariant, so an
-    /// indexed heap could cut this to O(log n); deferred until a CI
-    /// profile shows Classes replays backlog-bound (ROADMAP).
+    /// Cost note: the FIFO path pops the deque front in O(1). Classes pops
+    /// the [`AdmitKey`] heap in O(log backlog) per admission — the key is
+    /// time-invariant, so the heap order never needs refreshing; the pop
+    /// sequence equals the retired O(backlog) rescan's pick sequence
+    /// bitwise (pinned in `rust/tests/scheduler.rs`). Victim selection
+    /// still scans `active`, which is bounded by `max_batch`.
     fn admit_and_preempt(&mut self) {
         let state = self.session.take().expect("live session");
         let now = state.now();
         let mut session = self.engine.resume_session(state);
         loop {
-            // next candidate under the admission discipline
-            let picked = match self.admission {
-                AdmissionPolicy::Fifo => {
-                    if self.waiting.is_empty() {
-                        None
-                    } else {
-                        Some((false, 0))
-                    }
-                }
-                AdmissionPolicy::Classes => {
-                    pick_candidate(&self.reqs, &self.waiting, &self.preempted, now)
-                }
-            };
-            let Some((from_preempted, pos)) = picked else {
-                break;
+            // next candidate under the admission discipline (peek — the
+            // candidate stays in the backlog until actually admitted)
+            let cand = match self.admission {
+                AdmissionPolicy::Fifo => match self.waiting.front() {
+                    Some(&i) => i as usize,
+                    None => break,
+                },
+                AdmissionPolicy::Classes => match self.class_heap.peek() {
+                    Some(k) => k.idx() as usize,
+                    None => break,
+                },
             };
             if session.active() >= self.max_batch {
                 // no free slot: under Classes the candidate may evict the
@@ -670,11 +824,6 @@ impl<'r> ContinuousScheduler<'r> {
                 if self.admission != AdmissionPolicy::Classes {
                     break;
                 }
-                let cand = if from_preempted {
-                    self.preempted[pos]
-                } else {
-                    self.waiting[pos]
-                } as usize;
                 let Some(vpos) = pick_victim(&self.reqs, &self.active) else {
                     break;
                 };
@@ -683,7 +832,10 @@ impl<'r> ContinuousScheduler<'r> {
                     break; // nobody strictly below the candidate — keep order
                 }
                 // evict the victim into a (recycled) park slot; the freed
-                // engine slot then goes to the candidate below
+                // engine slot then goes to the candidate below. The victim
+                // re-enters the backlog under its (unchanged) key — it is
+                // strictly below the candidate, so the next pop still
+                // returns the candidate.
                 let park = match self.free_park.pop() {
                     Some(p) => p,
                     None => {
@@ -697,13 +849,21 @@ impl<'r> ContinuousScheduler<'r> {
                 self.slot_of[v] = NONE_U32;
                 self.evict_t[v] = now;
                 self.preemptions[v] += 1;
-                self.preempted.push(v as u32);
+                self.class_heap.push(admit_key(self.reqs[v], v as u32));
             }
-            // admit the candidate into the free slot
-            if from_preempted {
-                let i = self.preempted.remove(pos) as usize;
+            // admit the candidate into the free slot; a park slot marks it
+            // as a preempted sequence to resume rather than a fresh admit
+            let i = match self.admission {
+                AdmissionPolicy::Fifo => self.waiting.pop_front().expect("peeked") as usize,
+                AdmissionPolicy::Classes => {
+                    self.class_heap.pop().expect("peeked").idx() as usize
+                }
+            };
+            debug_assert_eq!(i, cand, "pop must return the peeked candidate");
+            let slot;
+            if self.park_of[i] != NONE_U32 {
                 let park = self.park_of[i];
-                let slot = session.admit_resumed(&self.parked[park as usize]);
+                slot = session.admit_resumed(&self.parked[park as usize]);
                 self.free_park.push(park);
                 self.park_of[i] = NONE_U32;
                 self.slot_of[i] = slot as u32;
@@ -712,13 +872,21 @@ impl<'r> ContinuousScheduler<'r> {
                 self.charge[i] = true;
                 self.active.push(i as u32);
             } else {
-                let i = self.waiting.remove(pos).expect("picked position") as usize;
-                let slot = session.admit(i as u64, &self.reqs[i].seq);
+                slot = session.admit(i as u64, &self.reqs[i].seq);
                 self.slot_of[i] = slot as u32;
                 self.pending_extra[i] = now - self.reqs[i].arrival;
                 self.charge[i] = true;
                 self.active.push(i as u32);
             }
+            if self.admission == AdmissionPolicy::Classes {
+                // rank the slot's chunk-budget precedence by tier (then
+                // FCFS within a tier): an interactive prefill must never
+                // be budget-starved behind a lower-priority prompt — the
+                // chunk grant honors the same order admission does
+                let tier_inv = Priority::Interactive as u64 - self.reqs[i].class.priority as u64;
+                session.set_prefill_rank(slot, (tier_inv << 56) | self.admit_seq);
+            }
+            self.admit_seq += 1;
         }
         self.session = Some(session.suspend());
     }
@@ -741,12 +909,18 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
         self.charge.push(false);
         self.ttft_val.push(0.0);
         self.first_done.push(false);
+        self.prefill_iters.push(0);
         self.evict_t.push(0.0);
         self.slot_of.push(NONE_U32);
         self.park_of.push(NONE_U32);
         self.preemptions.push(0);
         self.done.push(false);
-        self.expected_tokens += req.seq.iterations();
+        // expected *executed iterations*, the token_latency sample budget:
+        // under a finite chunk budget a prefill can span up to one
+        // iteration per prompt token (see `expected_iterations`) — an
+        // under-count here would let the recorder reallocate mid-replay
+        // and void the allocation-free contract
+        self.expected_tokens += expected_iterations(&req.seq, self.prefill_chunk);
         let (nr, nt) = (self.reqs.len(), self.expected_tokens);
         self.reserve_for(nr, nt);
     }
@@ -759,11 +933,17 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
         }
         loop {
             let now = self.now();
-            // iteration boundary: everyone already here joins the queue
+            // iteration boundary: everyone already here joins the backlog
             while self.next_arrival < self.reqs.len()
                 && self.reqs[self.next_arrival].arrival <= now
             {
-                self.waiting.push_back(self.next_arrival as u32);
+                let i = self.next_arrival as u32;
+                match self.admission {
+                    AdmissionPolicy::Fifo => self.waiting.push_back(i),
+                    AdmissionPolicy::Classes => {
+                        self.class_heap.push(admit_key(self.reqs[i as usize], i))
+                    }
+                }
                 self.next_arrival += 1;
             }
             self.admit_and_preempt();
@@ -771,7 +951,7 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                 if self.next_arrival >= self.reqs.len() {
                     return false; // nothing in flight, nothing queued
                 }
-                debug_assert!(self.waiting.is_empty() && self.preempted.is_empty());
+                debug_assert!(self.backlog() == 0);
                 let t = self.reqs[self.next_arrival].arrival;
                 let state = self.session.take().expect("live session");
                 let mut session = self.engine.resume_session(state);
@@ -779,10 +959,12 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                 self.session = Some(session.suspend());
                 continue;
             }
-            // execute one forward iteration for everything in flight
+            // execute one forward iteration for everything in flight, the
+            // prompt tokens of joining sequences capped by the chunk budget
             let state = self.session.take().expect("live session");
             let reqs = &self.reqs;
             let mut session = self.engine.resume_session(state);
+            session.set_prefill_limit(self.prefill_chunk);
             let ran = session.step(|id| &reqs[id as usize].seq, &mut self.step);
             debug_assert!(ran, "active slots must step");
             self.session = Some(session.suspend());
@@ -798,14 +980,37 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                     self.pending_extra[i] = 0.0;
                     self.charge[i] = false;
                 }
+                let was_decoding = self.first_done[i];
+                if was_decoding {
+                    // raw iteration latency of a pure decode step — the
+                    // stall metric a joining prompt burst inflates and
+                    // chunked prefill caps (charges excluded: queueing is
+                    // not an iteration-length effect)
+                    self.report.decode_latency.record(dt);
+                }
                 self.report.token_latency.record(l);
                 self.lat_sum[i] += l;
                 self.lat_n[i] += 1;
-                if !self.first_done[i] {
-                    self.first_done[i] = true;
-                    self.ttft_val[i] = l;
-                    self.report.ttft.record(l);
+                if !was_decoding {
+                    self.prefill_iters[i] += 1;
+                    if !self.step.prefilling.contains(&ext) {
+                        // the LAST prefill chunk just completed: the first
+                        // token exists only now, so TTFT is everything
+                        // accumulated from arrival through this iteration
+                        // (= `l` itself when the prompt ran as one chunk)
+                        self.first_done[i] = true;
+                        self.ttft_val[i] = self.lat_sum[i];
+                        self.report.ttft.record(self.ttft_val[i]);
+                    }
                 }
+            }
+            // zero-budget prefill slots rode the iteration without
+            // executing; the gap is charged to their next executed chunk,
+            // exactly like a suspension gap
+            for &ext in &self.step.stalled {
+                let i = ext as usize;
+                self.pending_extra[i] += dt;
+                self.charge[i] = true;
             }
             for &ext in &self.step.finished {
                 let i = ext as usize;
@@ -814,10 +1019,13 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                         .request_latency
                         .record(self.lat_sum[i] / self.lat_n[i] as f64);
                 }
-                if self.lat_n[i] > 1 {
+                if self.lat_n[i] > self.prefill_iters[i] {
+                    // mean decode-token latency: everything after the last
+                    // prefill chunk, averaged over the decode iterations
+                    let n_decode = (self.lat_n[i] - self.prefill_iters[i]) as f64;
                     self.report
                         .tpot
-                        .record((self.lat_sum[i] - self.ttft_val[i]) / (self.lat_n[i] - 1) as f64);
+                        .record((self.lat_sum[i] - self.ttft_val[i]) / n_decode);
                 }
                 self.report.tokens += self.reqs[i].seq.total_tokens() as u64;
                 self.report.requests += 1;
@@ -843,6 +1051,105 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
             // one-shot: the session is gone, so is the report
             None => ServeReport::default(),
         }
+    }
+}
+
+/// Continuous batching with **chunked prefill**: identical to
+/// [`ContinuousScheduler`] except that a joining prompt executes at most
+/// `prefill_chunk` tokens per iteration (the shared per-iteration budget
+/// is granted to prefilling sequences in slot order; decode tokens are
+/// never budgeted). Splitting the prefill across iteration boundaries
+/// caps the latency an iteration-0 prompt burst inflicts on every
+/// in-flight decode — the prompt-level analogue of the head-of-line
+/// blocking continuous batching removed at the request level.
+///
+/// Semantics under chunking:
+/// * the session holds the sequence in a `Prefilling(consumed..)` state;
+///   each chunk routes its proportional share of the prompt's per-layer
+///   expert counts (exact-telescoping split — any chunking accumulates
+///   the identical per-sequence EAM), feeding prediction/prefetch the
+///   accumulating routing signature;
+/// * TTFT is recorded at the iteration the **last** chunk completes (the
+///   first output token exists only then), TPOT over the decode
+///   iterations that follow, and EAMC recall feedback still lands at
+///   retirement over the full accumulated trace;
+/// * a prefilling sequence granted zero budget (earlier slots consumed
+///   the iteration's chunk) stalls for the iteration and the gap is
+///   charged to its next executed chunk, like a suspension gap.
+///
+/// With `prefill_chunk = u32::MAX` (unlimited) the replay is **bitwise
+/// identical** to [`ContinuousScheduler`] — pinned on the determinism
+/// grid in `rust/tests/scheduler.rs`; `perf_prefill` measures what finite
+/// chunks buy (capped decode p99) and cost (slightly more iterations).
+pub struct ChunkedScheduler<'r> {
+    inner: ContinuousScheduler<'r>,
+}
+
+impl<'r> ChunkedScheduler<'r> {
+    /// `prefill_chunk` is the per-iteration prompt-token budget (>= 1;
+    /// `u32::MAX` = unlimited, reproducing the continuous scheduler).
+    pub fn new(
+        engine: SimEngine,
+        batcher: Batcher,
+        admission: AdmissionPolicy,
+        prefill_chunk: u32,
+    ) -> ChunkedScheduler<'r> {
+        ChunkedScheduler {
+            inner: ContinuousScheduler::new(engine, batcher, admission)
+                .with_prefill_chunk(prefill_chunk),
+        }
+    }
+
+    pub fn engine(&self) -> &SimEngine {
+        self.inner.engine()
+    }
+
+    pub fn into_engine(self) -> SimEngine {
+        self.inner.into_engine()
+    }
+
+    /// Virtual time of the current iteration boundary.
+    pub fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    /// Anything submitted and not yet finished?
+    pub fn has_work(&self) -> bool {
+        self.inner.has_work()
+    }
+
+    /// Dispatched-but-unfinished request count.
+    pub fn load(&self) -> usize {
+        self.inner.load()
+    }
+
+    /// See [`ContinuousScheduler::next_event_bound`].
+    pub fn next_event_bound(&self) -> Option<f64> {
+        self.inner.next_event_bound()
+    }
+
+    /// See [`ContinuousScheduler::reserve_for`].
+    pub fn reserve_for(&mut self, total_requests: usize, total_tokens: usize) {
+        self.inner.reserve_for(total_requests, total_tokens);
+    }
+
+    /// Per-request outcomes (id, class, latency, TTFT, preemption count).
+    pub fn request_stats(&self) -> Vec<RequestStat> {
+        self.inner.request_stats()
+    }
+}
+
+impl<'r> Scheduler<'r> for ChunkedScheduler<'r> {
+    fn submit(&mut self, req: &'r Request) {
+        self.inner.submit(req);
+    }
+
+    fn tick(&mut self) -> bool {
+        self.inner.tick()
+    }
+
+    fn drain(&mut self) -> ServeReport {
+        self.inner.drain()
     }
 }
 
@@ -1106,6 +1413,169 @@ mod tests {
         );
         // and every batch-tier request still finishes (no starvation)
         assert!(cls_stats.iter().all(|s| s.finished));
+    }
+
+    fn run_chunked(
+        n: usize,
+        rps: f64,
+        seed: u64,
+        batcher: Batcher,
+        admission: AdmissionPolicy,
+        chunk: u32,
+    ) -> (ServeReport, Vec<RequestStat>) {
+        let (spec, reqs, mut w) = mk_requests(n, rps, seed);
+        let eng = engine_for(&spec, &mut w);
+        let mut s = ChunkedScheduler::new(eng, batcher, admission, chunk);
+        s.submit_all(&reqs);
+        let report = s.drain();
+        let stats = s.request_stats();
+        (report, stats)
+    }
+
+    #[test]
+    fn chunked_with_unlimited_budget_is_bitwise_continuous() {
+        let (cont, _) = run_continuous(20, 20.0, 6, Batcher::new(4, 0.1), AdmissionPolicy::Fifo);
+        let (chk, _) = run_chunked(
+            20,
+            20.0,
+            6,
+            Batcher::new(4, 0.1),
+            AdmissionPolicy::Fifo,
+            u32::MAX,
+        );
+        assert_eq!(cont.requests, chk.requests);
+        assert_eq!(cont.tokens, chk.tokens);
+        assert_eq!(cont.batches, chk.batches);
+        assert_eq!(cont.makespan.to_bits(), chk.makespan.to_bits());
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(cont.token_latency.samples()),
+            bits(chk.token_latency.samples()),
+            "unlimited chunk budget must not change the replay"
+        );
+        assert_eq!(bits(cont.ttft.samples()), bits(chk.ttft.samples()));
+        assert_eq!(bits(cont.tpot.samples()), bits(chk.tpot.samples()));
+        assert_eq!(
+            bits(cont.decode_latency.samples()),
+            bits(chk.decode_latency.samples())
+        );
+    }
+
+    #[test]
+    fn chunked_finite_serves_all_work_across_more_iterations() {
+        // chunk below the preset's minimum prompt: every prefill splits, so
+        // the same work takes strictly more iterations, every request still
+        // finishes, and TTFT/decode accounting stays per-request complete
+        let (cont, _) = run_continuous(16, 8.0, 4, Batcher::new(4, 0.1), AdmissionPolicy::Fifo);
+        let (chk, stats) = run_chunked(16, 8.0, 4, Batcher::new(4, 0.1), AdmissionPolicy::Fifo, 8);
+        assert_eq!(chk.requests, cont.requests);
+        assert_eq!(chk.tokens, cont.tokens);
+        assert!(
+            chk.batches > cont.batches,
+            "splitting every prefill must add iterations ({} vs {})",
+            chk.batches,
+            cont.batches
+        );
+        assert_eq!(chk.ttft.len() as u64, chk.requests);
+        assert_eq!(chk.request_latency.len() as u64, chk.requests);
+        assert!(chk.decode_latency.len() > 0);
+        assert!(stats.iter().all(|s| s.finished && s.ttft > 0.0));
+    }
+
+    #[test]
+    fn chunked_caps_decode_stall_from_a_joining_long_prompt() {
+        // The acceptance scenario in miniature: one sequence decodes while
+        // a long-prompt request joins. Continuous executes the whole prompt
+        // inside one shared iteration — every in-flight decode eats the
+        // burst; chunked caps the per-iteration prompt share, so the worst
+        // decode-step latency must drop.
+        let spec = ModelSpec::preset("switch-base-32").unwrap();
+        let synth = |prompt: usize, gen: usize, hot: usize| -> crate::workload::SequenceActivation {
+            let route = |tokens: u32| -> Vec<Vec<(u16, u32)>> {
+                (0..spec.n_layers)
+                    .map(|l| vec![(((hot + l) % spec.experts_per_layer) as u16, tokens)])
+                    .collect()
+            };
+            let mut routes = vec![route(prompt as u32)];
+            for _ in 0..gen {
+                routes.push(route(1));
+            }
+            crate::workload::SequenceActivation {
+                task: 0,
+                prompt_len: prompt,
+                gen_len: gen,
+                routes,
+            }
+        };
+        let run = |chunk: u32| -> ServeReport {
+            let mut w = {
+                let (_, _, w) = mk_requests(1, 1.0, 7);
+                w
+            };
+            let eng = engine_for(&spec, &mut w);
+            let reqs = vec![
+                Request::new(0, 0.0, synth(8, 200, 0)),
+                Request::new(1, 0.05, synth(400, 4, 7)),
+            ];
+            let mut s = ChunkedScheduler::new(eng, Batcher::new(4, 0.1), AdmissionPolicy::Fifo, chunk);
+            s.submit_all(&reqs);
+            s.drain()
+        };
+        let mut cont = run(u32::MAX);
+        let mut chk = run(16);
+        assert_eq!(cont.requests, 2);
+        assert_eq!(chk.requests, 2);
+        assert_eq!(cont.tokens, chk.tokens);
+        assert!(
+            chk.decode_latency.max() < cont.decode_latency.max(),
+            "chunked worst decode step {} must beat continuous {}",
+            chk.decode_latency.max(),
+            cont.decode_latency.max()
+        );
+    }
+
+    #[test]
+    fn chunked_composes_with_classes_preemption() {
+        let (spec, mut reqs, mut w) = mk_requests(30, 50.0, 9);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.class = if i % 4 == 0 {
+                RequestClass::interactive().with_slo(2.0)
+            } else {
+                RequestClass::batch()
+            };
+        }
+        let eng = engine_for(&spec, &mut w);
+        let mut s = ChunkedScheduler::new(eng, Batcher::new(4, 0.1), AdmissionPolicy::Classes, 16);
+        s.submit_all(&reqs);
+        let report = s.drain();
+        let stats = s.request_stats();
+        assert_eq!(report.requests, 30);
+        assert!(stats.iter().all(|st| st.finished), "no starvation under chunking");
+        assert!(
+            stats.iter().any(|st| st.preemptions > 0),
+            "mixed-class overload must still trigger preemption under chunking"
+        );
+    }
+
+    #[test]
+    fn admit_key_order_matches_scan_key_semantics() {
+        let (_, reqs, _) = mk_requests(1, 1.0, 3);
+        let seq = reqs[0].seq.clone();
+        let mk = |pri: Priority, slo: Option<f64>, arrival: f64, idx: u32| {
+            let mut r = Request::new(idx as u64, arrival, seq.clone());
+            r.class = RequestClass { priority: pri, slo };
+            admit_key(&r, idx)
+        };
+        // priority dominates everything
+        assert!(mk(Priority::Interactive, None, 9.0, 5) > mk(Priority::Batch, Some(0.1), 0.0, 0));
+        // finite deadline beats no-SLO within a tier
+        assert!(mk(Priority::Normal, Some(1.0), 0.0, 1) > mk(Priority::Normal, None, 0.0, 0));
+        // tighter deadline first
+        assert!(mk(Priority::Normal, Some(1.0), 0.0, 1) > mk(Priority::Normal, Some(5.0), 0.0, 0));
+        // deadline tie -> earlier arrival
+        assert!(mk(Priority::Normal, None, 1.0, 2) > mk(Priority::Normal, None, 2.0, 1));
+        // full tie -> lower index
+        assert!(mk(Priority::Normal, None, 1.0, 1) > mk(Priority::Normal, None, 1.0, 2));
     }
 
     #[test]

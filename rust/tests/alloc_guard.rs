@@ -152,6 +152,72 @@ fn steady_state_continuous_batching_is_allocation_free() {
 }
 
 #[test]
+fn steady_state_chunked_prefill_window_is_allocation_free() {
+    // The chunked-prefill contract: a warmed admit → chunk-step… →
+    // last-chunk → decode… → retire window allocates nothing. Chunking
+    // adds per-step state (`slot_prefill_done`/`slot_chunk`, the
+    // `prefilling`/`stalled` event buffers) — all of it pooled per slot or
+    // reused per step, so the budgeted path must be exactly as
+    // allocation-free as the unlimited one.
+    let spec = ModelSpec::preset("switch-base-32").unwrap();
+    let ds = DatasetPreset::by_name("translation").unwrap();
+    let mut w = Workload::new(&spec, ds, 13);
+    let eam_ds = w.gen_eam_dataset(30);
+    let mut eamc = Eamc::construct(8, &eam_ds, 11);
+    eamc.set_rebuild_threshold(usize::MAX);
+    eamc.set_recent_capacity(2);
+
+    let mut eng = SimEngine::new(
+        spec.clone(),
+        tier(&spec, 64),
+        eamc,
+        ComputeModel::a5000(),
+        EngineConfig::default(),
+    );
+    let a = w.gen_sequence();
+    let b = w.gen_sequence();
+    let mut step = StepResult::default();
+    let mut session = eng.begin_session(0.0, FeedbackMode::Immediate);
+
+    // admit two sequences and run them dry under a small shared chunk
+    // budget — slot 1 stalls while slot 0's prompt chunks through, so the
+    // stalled/prefilling paths are exercised every cycle
+    fn cycle<'s>(
+        session: &mut moe_infinity::engine::BatchSession<'_>,
+        step: &mut StepResult,
+        a: &'s SequenceActivation,
+        b: &'s SequenceActivation,
+        base: u64,
+    ) {
+        session.admit(base, a);
+        session.admit(base + 1, b);
+        let mut active = 2usize;
+        while active > 0 {
+            session.set_prefill_limit(8);
+            assert!(session.step(|id: u64| if id % 2 == 0 { a } else { b }, step));
+            active -= step.finished.len();
+        }
+    }
+
+    for i in 0..5u64 {
+        cycle(&mut session, &mut step, &a, &b, 2 * i);
+    }
+
+    let (_, stats) = measure(|| {
+        cycle(&mut session, &mut step, &a, &b, 10);
+    });
+    assert_eq!(
+        stats.total(),
+        0,
+        "a warmed chunked admit → chunk-step → retire window must not \
+         allocate, but did: {stats:?}"
+    );
+    assert!(step.t_end > 0.0);
+    let t = session.finish();
+    assert_eq!(eng.now(), t);
+}
+
+#[test]
 fn steady_state_router_iteration_is_allocation_free() {
     // The router contract: submission pre-sizes every replica buffer and
     // report recorder, affinity scoring reuses per-replica matcher

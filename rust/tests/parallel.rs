@@ -117,6 +117,20 @@ fn small_grid() -> Vec<ServeConfig> {
     cfg.eamc.trace_sequences = 25;
     cfg.eamc.capacity = 6;
     grid.push(cfg);
+    // chunked-prefill points: a finite chunk (real splitting) and the
+    // unlimited sentinel (the chunked == continuous differential in
+    // rust/tests/scheduler.rs replays this grid's base config)
+    for chunk in [32usize, 0] {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.scheduler = SchedulerKind::Chunked;
+        cfg.prefill_chunk = chunk;
+        cfg.workload.rps = 3.0;
+        cfg.workload.duration = 6.0;
+        cfg.eamc.trace_sequences = 25;
+        cfg.eamc.capacity = 6;
+        grid.push(cfg);
+    }
     grid
 }
 
@@ -187,6 +201,12 @@ fn continuous_single_slot_matches_static_bitwise() {
         cfg.batching.max_batch = 1;
         cfg.eamc.trace_sequences = 25;
         cfg.eamc.capacity = 6;
+        // this differential pins the *uncancelled* historical replay: the
+        // static (deferred-feedback) path never cancels at retirement, so
+        // with the now-default cancellation the continuous timeline would
+        // legitimately diverge between a retirement and the next batch
+        // boundary. Explicit false keeps the pin stable under any default.
+        cfg.cancel_retired_prefetch = false;
         let pool = Pool::serial();
         let stat = run_serve_with(&cfg, &pool).expect("static serve");
         let mut c2 = cfg.clone();

@@ -513,6 +513,57 @@ fn prop_cache_with_indexed_policy_matches_scan_cache() {
 }
 
 #[test]
+fn prop_prefill_chunk_split_conserves_per_layer_rows() {
+    // The chunked-prefill conservation law: for ANY chunk size, walking a
+    // real prefill row chunk by chunk through the proportional split
+    // accumulates (a) exactly the stored count for every expert cell and
+    // therefore (b) exactly `prompt_len` tokens per layer — so a chunked
+    // replay's per-sequence EAM is identical to the unchunked one no
+    // matter how the prompt was sliced.
+    use moe_infinity::engine::prefill_chunk_tokens;
+    let spec = ModelSpec::preset("switch-base-16").unwrap();
+    forall_res(
+        0xC4A2,
+        40,
+        |rng| (rng.next_u64(), 1 + rng.below(24) as u32),
+        |&(seed, chunk)| {
+            let mut w = Workload::new(
+                &spec,
+                DatasetPreset::by_name("mixed").unwrap(),
+                seed,
+            );
+            let seq = w.gen_sequence();
+            let prompt = seq.prompt_len as u32;
+            for (l, row) in seq.routes[0].iter().enumerate() {
+                let mut layer_total = 0u32;
+                for &(e, c) in row {
+                    let mut acc = 0u32;
+                    let mut done = 0u32;
+                    while done < prompt {
+                        let k = chunk.min(prompt - done);
+                        acc += prefill_chunk_tokens(c, done, k, prompt);
+                        done += k;
+                    }
+                    if acc != c {
+                        return Err(format!(
+                            "layer {l} expert {e}: chunked sum {acc} != stored {c} \
+                             (chunk {chunk}, prompt {prompt})"
+                        ));
+                    }
+                    layer_total += acc;
+                }
+                if layer_total != prompt {
+                    return Err(format!(
+                        "layer {l}: chunked row total {layer_total} != prompt {prompt}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_workload_eam_invariant() {
     let spec = ModelSpec::preset("switch-base-16").unwrap();
     forall_res(

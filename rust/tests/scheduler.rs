@@ -13,15 +13,26 @@
 //! * Preempt-then-resume equals the uninterrupted run in per-token expert
 //!   demands (engine-level version lives in `engine::sim_engine` tests;
 //!   here the scheduler-level replay is pinned end to end).
+//! * A `ChunkedScheduler` with an unlimited `prefill_chunk` equals a bare
+//!   `ContinuousScheduler` bitwise (the ∞-chunk proportional split records
+//!   the identical whole-prompt counts).
+//! * The Classes admission heap pops in exactly the order the retired
+//!   O(backlog) rescan picked — the `AdmitKey` is time-invariant, so heap
+//!   order at enqueue time equals scan order at any later `now`.
 //! * Multi-replica routing replays are deterministic functions of the
 //!   config.
 
+use std::collections::{BinaryHeap, VecDeque};
+
 use moe_infinity::benchsuite::{build_engine_with, build_requests, run_serve_with};
 use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::model::ModelSpec;
 use moe_infinity::server::{
-    AdmissionPolicy, Batcher, Router, RoutingPolicy, Scheduler, ServeReport,
+    admit_key, pick_candidate, AdmissionPolicy, Batcher, Router, RoutingPolicy, Scheduler,
+    ServeReport,
 };
-use moe_infinity::util::Pool;
+use moe_infinity::util::{Pool, Rng};
+use moe_infinity::workload::{DatasetPreset, Priority, Request, RequestClass, Workload};
 
 fn base_cfg(rps: f64) -> ServeConfig {
     let mut cfg = ServeConfig::default();
@@ -64,6 +75,11 @@ fn assert_bitwise(a: &ServeReport, b: &ServeReport, ctx: &str) {
     );
     assert_eq!(bits(a.ttft.samples()), bits(b.ttft.samples()), "{ctx}: ttft");
     assert_eq!(bits(a.tpot.samples()), bits(b.tpot.samples()), "{ctx}: tpot");
+    assert_eq!(
+        bits(a.decode_latency.samples()),
+        bits(b.decode_latency.samples()),
+        "{ctx}: decode latencies"
+    );
 }
 
 #[test]
@@ -108,6 +124,121 @@ fn multi_replica_router_replay_is_deterministic() {
 }
 
 #[test]
+fn chunked_unlimited_matches_bare_continuous_bitwise() {
+    // the acceptance pin: ChunkedScheduler with prefill_chunk = ∞ replays
+    // the continuous scheduler exactly, in both the sparse and the queued
+    // regime of the pooled determinism grid's base config
+    for rps in [0.5, 4.0] {
+        let cfg = base_cfg(rps);
+        let cont = run_serve_with(&cfg, &Pool::serial()).expect("continuous");
+        let mut c2 = cfg.clone();
+        c2.scheduler = SchedulerKind::Chunked;
+        c2.prefill_chunk = 0; // unlimited
+        let chunked = run_serve_with(&c2, &Pool::serial()).expect("chunked ∞");
+        assert_bitwise(&chunked, &cont, &format!("chunked-∞ rps={rps}"));
+    }
+}
+
+#[test]
+fn chunked_finite_serves_identical_work() {
+    // a real chunk splits every long prompt across iterations: the same
+    // requests and tokens complete, per-request accounting stays whole,
+    // and the replay takes strictly more engine iterations
+    let cfg = base_cfg(6.0);
+    let cont = run_serve_with(&cfg, &Pool::serial()).expect("continuous");
+    let mut c2 = cfg.clone();
+    c2.scheduler = SchedulerKind::Chunked;
+    c2.prefill_chunk = 8; // below the mixed preset's minimum prompt (16)
+    let chunked = run_serve_with(&c2, &Pool::serial()).expect("chunked");
+    assert_eq!(chunked.requests, cont.requests);
+    assert_eq!(chunked.tokens, cont.tokens);
+    assert_eq!(chunked.request_latency.len(), cont.request_latency.len());
+    assert_eq!(chunked.ttft.len(), cont.ttft.len());
+    assert!(
+        chunked.batches > cont.batches,
+        "splitting every prefill must add iterations ({} vs {})",
+        chunked.batches,
+        cont.batches
+    );
+    assert!(chunked.decode_latency.len() > 0);
+}
+
+#[test]
+fn chunked_composes_with_classes_and_router_deterministically() {
+    let mut cfg = base_cfg(3.0);
+    cfg.scheduler = SchedulerKind::Chunked;
+    cfg.prefill_chunk = 32;
+    cfg.replicas = 2;
+    cfg.routing = RoutingPolicy::TaskAffinity;
+    cfg.priority = AdmissionPolicy::Classes;
+    cfg.workload.interactive_frac = 0.3;
+    let a = run_serve_with(&cfg, &Pool::serial()).expect("chunked router");
+    let b = run_serve_with(&cfg, &Pool::new(4)).expect("chunked router again");
+    assert_bitwise(&a, &b, "chunked+classes+affinity");
+    assert!(a.requests > 0);
+    assert_eq!(a.request_latency.len() as u64, a.requests);
+}
+
+#[test]
+fn classes_heap_pops_in_reference_rescan_order() {
+    // The Indexed-Classes differential: the AdmitKey heap must admit in
+    // exactly the order the retired O(backlog) rescan picked. The scan key
+    // uses slack = deadline − now, so the reference is evaluated at a
+    // *different, advancing* `now` for every pick — the heap (whose keys
+    // were computed once at enqueue) must still agree, which is precisely
+    // the time-invariance the O(log n) replacement rests on.
+    let spec = ModelSpec::preset("switch-base-32").unwrap();
+    let mut w = Workload::new(&spec, DatasetPreset::by_name("mixed").unwrap(), 11);
+    let seq = w.gen_sequence();
+    let mut rng = Rng::new(0xC1A55E5);
+    let n = 200usize;
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            // deliberate collisions: few distinct arrivals and SLOs so the
+            // deadline/arrival tie-breaks are exercised, plus no-SLO keys
+            let arrival = (rng.below(8) as f64) * 0.5;
+            let priority = match rng.below(3) {
+                0 => Priority::Batch,
+                1 => Priority::Normal,
+                _ => Priority::Interactive,
+            };
+            let slo = match rng.below(3) {
+                0 => None,
+                1 => Some(1.0),
+                _ => Some((rng.below(4) as f64 + 1.0) * 0.25),
+            };
+            let mut r = Request::new(i as u64, arrival, seq.clone());
+            r.class = RequestClass { priority, slo };
+            r
+        })
+        .collect();
+    let refs: Vec<&Request> = reqs.iter().collect();
+
+    // reference: repeated rescans over a shrinking waiting list, `now`
+    // advancing between picks
+    let mut waiting: VecDeque<u32> = (0..n as u32).collect();
+    let mut scan_order = Vec::with_capacity(n);
+    let mut now = 10.0;
+    while let Some((from_preempted, pos)) = pick_candidate(&refs, &waiting, &[], now) {
+        assert!(!from_preempted);
+        scan_order.push(waiting.remove(pos).unwrap());
+        now += 0.37; // admissions happen at later and later boundaries
+    }
+
+    // heap: keys computed once, popped straight
+    let mut heap: BinaryHeap<_> = (0..n as u32).map(|i| admit_key(refs[i as usize], i)).collect();
+    let mut heap_order = Vec::with_capacity(n);
+    while let Some(k) = heap.pop() {
+        heap_order.push(k.idx());
+    }
+
+    assert_eq!(
+        heap_order, scan_order,
+        "AdmitKey heap order must replay the rescan's admission order bitwise"
+    );
+}
+
+#[test]
 fn classes_admission_serves_the_same_work_as_fifo() {
     let mut cfg = base_cfg(6.0);
     cfg.workload.interactive_frac = 0.25;
@@ -131,6 +262,7 @@ fn prefetch_cancellation_serves_identical_work() {
     // pinned in the engine and memory-sim unit tests)
     let mut cfg = base_cfg(6.0);
     cfg.memory.gpu_gb = 3.0; // heavier offloading => more queued predictions
+    cfg.cancel_retired_prefetch = false; // explicit: on is the default now
     let off = run_serve_with(&cfg, &Pool::serial()).expect("cancel off");
     cfg.cancel_retired_prefetch = true;
     let on = run_serve_with(&cfg, &Pool::serial()).expect("cancel on");

@@ -5,6 +5,7 @@
 #   scripts/bench_compare.sh BENCH_offline.before.json BENCH_offline.json
 #   scripts/bench_compare.sh BENCH_scheduler.before.json BENCH_scheduler.json
 #   scripts/bench_compare.sh BENCH_router.before.json BENCH_router.json
+#   scripts/bench_compare.sh BENCH_prefill.before.json BENCH_prefill.json
 #
 # Values are ns/op for the perf_* benches and seconds / tokens-per-second
 # for BENCH_scheduler.json and BENCH_router.json (`*_p50_s`/`*_p99_s`/
@@ -14,7 +15,10 @@
 # tokens). BENCH_router.json additionally carries `*_hit_*` GPU-hit
 # ratios in [0,1] (higher is better: ratio < 1 means the new run hits
 # more) and BENCH_scheduler.json carries `cancel_{off,on}_prefetch_mb`
-# prefetch-traffic totals (lower is less dead PCIe traffic). Rows present
+# prefetch-traffic totals (lower is less dead PCIe traffic).
+# BENCH_prefill.json rows are per chunk-size point (`chunk16_*`,
+# `chunk_inf_*`, `continuous_*`): `*_decode_p99_s` is the pure-decode
+# iteration-latency tail chunking exists to cap. Rows present
 # in only one file print with a '-' placeholder. `*_speedup_*` rows are
 # already ratios; the old/new columns still show them, the speedup column
 # then compares the ratios themselves.

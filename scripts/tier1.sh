@@ -36,6 +36,12 @@ echo "== perf_router (smoke mode -> BENCH_router.json)"
 # task-affinity beats round-robin on GPU hit ratio AND p99 at N=2
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_router
 
+echo "== perf_prefill (smoke mode -> BENCH_prefill.json)"
+# chunked prefill vs continuous on the same mixed-length overload trace;
+# asserts the ∞-chunk point replays continuous bitwise, that the best
+# finite chunk caps decode p99, and that it stays within the tokens/s band
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_prefill
+
 echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
 # the suite pins explicit pool sizes internally (and now also the
 # scheduler differential: continuous at max_batch=1 == static, bitwise);
@@ -53,3 +59,4 @@ cat BENCH_hotpath.json
 cat BENCH_offline.json
 cat BENCH_scheduler.json
 cat BENCH_router.json
+cat BENCH_prefill.json
