@@ -1,0 +1,253 @@
+//! §Faults — deterministic fault injection: graceful degradation sweep.
+//!
+//! The serving stack must *degrade*, not collapse, when the offload
+//! substrate misbehaves: transient transfer failures are retried with
+//! capped exponential backoff in simulated time, failed prefetches fall
+//! back to on-demand fetches, brownouts scale effective link bandwidth,
+//! and SLO-carrying requests whose deadline is already unreachable are
+//! shed instead of poisoning the batch. This bench replays the **same
+//! overload trace** (mixed chatbot preset, 30% interactive with an SLO)
+//! across a per-transfer failure-probability sweep on both links,
+//! recording per point:
+//!
+//! * `f{p}_goodput_tps` — completed-within-SLO tokens/s (the metric that
+//!   must degrade gracefully);
+//! * `f{p}_tput` / `f{p}_p99_s` — raw tokens/s and p99 request latency;
+//! * `f{p}_shed` / `f{p}_timeout` — requests dropped at admission vs
+//!   aborted mid-flight;
+//! * `f{p}_retries` / `f{p}_demand_failures` — fault-layer work.
+//!
+//! Results land in `BENCH_faults.json`; diff runs with
+//! `scripts/bench_compare.sh`. Set `MOE_BENCH_SMOKE=1` for the fast CI
+//! pass (scripts/tier1.sh does).
+//!
+//! Acceptance targets (EXPERIMENTS.md §Faults), asserted before exit:
+//! 1. an explicitly installed **empty** fault plan replays the fault-free
+//!    stack bitwise (the fault layer is pay-for-what-you-break);
+//! 2. no goodput cliff: at the mid fault point the goodput stays >= the
+//!    stated fraction of the fault-free point's;
+//! 3. a replica crash mid-replay fails its in-flight work over to the
+//!    survivor warm: every request still completes and the replayed token
+//!    trace (and therefore each token's expert demands) is preserved.
+
+use moe_infinity::benchsuite::{build_engine_with, build_replica_engines_with, build_requests, run_grid, BenchJson, Table};
+use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::faults::{CrashWindow, FaultPlan};
+use moe_infinity::server::{AdmissionPolicy, Batcher, ContinuousScheduler, Router, Scheduler, ServeReport};
+use moe_infinity::util::{fmt_secs, Pool};
+
+/// No-cliff band: goodput at the mid fault point must keep >= this
+/// fraction of the fault-free point's goodput.
+const GOODPUT_BAND: f64 = 0.5;
+/// The mid fault point the band is asserted at.
+const MID_P: f64 = 0.15;
+
+fn base_cfg(smoke: bool) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "switch-base-32".into();
+    cfg.dataset = "mixed".into();
+    // 4GB GPU: offloading engages, so every injected transfer failure
+    // lands on the critical path of some token
+    cfg.memory.gpu_gb = 4.0;
+    cfg.scheduler = SchedulerKind::Continuous;
+    cfg.priority = AdmissionPolicy::Classes;
+    cfg.workload.rps = 8.0;
+    cfg.workload.duration = if smoke { 6.0 } else { 30.0 };
+    cfg.workload.interactive_frac = 0.3;
+    cfg.workload.interactive_slo = if smoke { 4.0 } else { 8.0 };
+    cfg.batching.max_batch = 8;
+    cfg.batching.max_wait = 0.5;
+    cfg.eamc.trace_sequences = if smoke { 25 } else { 120 };
+    cfg.eamc.capacity = if smoke { 8 } else { 24 };
+    cfg
+}
+
+fn run_scheduler(cfg: &ServeConfig, pool: &Pool, plan: Option<&FaultPlan>) -> ServeReport {
+    let reqs = build_requests(cfg).expect("requests");
+    let mut engine = build_engine_with(cfg, pool).expect("engine");
+    if let Some(p) = plan {
+        engine.set_fault_plan(p);
+    }
+    let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    let mut s = ContinuousScheduler::new(engine, batcher, cfg.priority);
+    s.submit_all(&reqs);
+    s.drain()
+}
+
+fn assert_bitwise(a: &mut ServeReport, b: &mut ServeReport, what: &str) {
+    assert_eq!(a.requests, b.requests, "{what}: requests");
+    assert_eq!(a.tokens, b.tokens, "{what}: tokens");
+    assert_eq!(a.batches, b.batches, "{what}: iterations");
+    assert_eq!(a.demands, b.demands, "{what}: demands");
+    assert_eq!(a.gpu_hits, b.gpu_hits, "{what}: gpu hits");
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{what}: makespan"
+    );
+    let (sa, sb) = (a.token_latency.samples(), b.token_latency.samples());
+    assert_eq!(sa.len(), sb.len(), "{what}: token latency count");
+    for (x, y) in sa.iter().zip(sb) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: token latency sample");
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let ps: &[f64] = if smoke {
+        &[0.0, 0.15, 0.3]
+    } else {
+        &[0.0, 0.05, 0.15, 0.3]
+    };
+    let pool = Pool::from_env();
+    let base = base_cfg(smoke);
+    println!(
+        "faults bench: {} mode, failure-p sweep {:?}, rps {}, duration {}s",
+        if smoke { "smoke" } else { "full" },
+        ps,
+        base.workload.rps,
+        base.workload.duration
+    );
+
+    // ---- target 1: empty plan == fault-free, bitwise --------------------
+    // `FaultPlan::new` with no probabilities/brownouts/crashes must leave
+    // the whole stack untouched; pinned here end-to-end on the overload
+    // trace (unit/scheduler tests pin the narrower layers).
+    {
+        let mut plain = run_scheduler(&base, &pool, None);
+        let mut empty = run_scheduler(&base, &pool, Some(&FaultPlan::new(base.seed ^ 0xFA57)));
+        assert_eq!(empty.transfer_retries, 0, "empty plan must not retry");
+        assert_eq!(empty.demand_failures, 0, "empty plan must not fail");
+        assert_bitwise(&mut plain, &mut empty, "empty fault plan");
+        println!("empty fault plan replays the fault-free stack bitwise ✓");
+    }
+
+    // ---- degradation sweep ----------------------------------------------
+    let grid: Vec<ServeConfig> = ps
+        .iter()
+        .map(|&p| {
+            let mut cfg = base.clone();
+            cfg.faults.ssd_failure_p = p;
+            cfg.faults.gpu_failure_p = p;
+            cfg.faults.shedding = true;
+            // the top point also rides a mid-replay PCIe brownout, so the
+            // sweep exercises both fault families together
+            if p >= 0.3 {
+                cfg.faults.brownout = 0.5;
+                cfg.faults.brownout_start = base.workload.duration * 0.25;
+                cfg.faults.brownout_end = base.workload.duration * 0.75;
+            }
+            cfg
+        })
+        .collect();
+
+    let mut table = Table::new(&[
+        "failure p", "goodput t/s", "tokens/s", "p99 req", "shed", "timeout", "retries",
+    ]);
+    let mut json = BenchJson::new();
+    let mut goodputs: Vec<(f64, f64)> = Vec::new(); // (p, goodput)
+    for (cfg, r) in grid.iter().zip(run_grid(&grid, &pool)) {
+        let mut r = r.expect("serve");
+        let p = cfg.faults.ssd_failure_p;
+        let goodput = r.goodput();
+        let tput = r.token_throughput();
+        let p99 = r.request_latency.p99();
+        table.row(&[
+            format!("{p:.2}"),
+            format!("{goodput:.1}"),
+            format!("{tput:.1}"),
+            fmt_secs(p99),
+            format!("{}", r.shed),
+            format!("{}", r.timed_out),
+            format!("{}", r.transfer_retries),
+        ]);
+        let tag = format!("f{:02}", (p * 100.0).round() as u32);
+        json.add(&format!("{tag}_goodput_tps"), goodput);
+        json.add(&format!("{tag}_tput"), tput);
+        json.add(&format!("{tag}_p99_s"), p99);
+        json.add(&format!("{tag}_shed"), r.shed as f64);
+        json.add(&format!("{tag}_timeout"), r.timed_out as f64);
+        json.add(&format!("{tag}_retries"), r.transfer_retries as f64);
+        json.add(&format!("{tag}_demand_failures"), r.demand_failures as f64);
+        goodputs.push((p, goodput));
+        if p > 0.0 {
+            assert!(r.transfer_retries > 0, "p={p} must exercise retries");
+        }
+    }
+    table.print("§Faults — goodput under a transfer-failure sweep (same trace)");
+
+    // ---- target 3: warm failover across a replica crash -----------------
+    // 2 replicas, replica 0 crashes mid-replay and never recovers: its
+    // in-flight sequences must resume warm on the survivor. The replayed
+    // traces are the workload's (deterministic), so "all requests complete
+    // with the same token count" pins per-token expert demands too.
+    let failover = {
+        let mut cfg = base.clone();
+        cfg.replicas = 2;
+        let reqs = build_requests(&cfg).expect("requests");
+        let mk_router = |plan: Option<&FaultPlan>| -> ServeReport {
+            let engines = build_replica_engines_with(&cfg, &pool).expect("engines");
+            let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+            let mut router = Router::new(engines, batcher, cfg.routing, cfg.priority);
+            if let Some(p) = plan {
+                router = router.with_fault_plan(p);
+            }
+            router.submit_all(&reqs);
+            router.drain()
+        };
+        let clean = mk_router(None);
+        let mut plan = FaultPlan::new(cfg.seed ^ 0xFA57);
+        plan.crashes.push(CrashWindow {
+            replica: 0,
+            crash: cfg.workload.duration * 0.3,
+            recover: f64::INFINITY,
+        });
+        let crashed = mk_router(Some(&plan));
+        assert_eq!(
+            crashed.requests, clean.requests,
+            "every request must survive the crash via warm failover"
+        );
+        assert_eq!(
+            crashed.tokens, clean.tokens,
+            "failover must preserve the per-token trace (and its expert demands)"
+        );
+        assert!(crashed.demands > 0, "the crashed run must still serve");
+        println!(
+            "failover: {} requests, {} tokens preserved across a replica crash ✓",
+            crashed.requests, crashed.tokens
+        );
+        (clean.requests, crashed.requests)
+    };
+    json.add("failover_clean_requests", failover.0 as f64);
+    json.add("failover_crashed_requests", failover.1 as f64);
+
+    // write the rows BEFORE the remaining acceptance asserts so a miss on
+    // a CI machine leaves the full table for diagnosis
+    let path = "BENCH_faults.json";
+    match json.write(path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+
+    // ---- target 2: no goodput cliff -------------------------------------
+    let g0 = goodputs
+        .iter()
+        .find(|(p, _)| *p == 0.0)
+        .expect("fault-free point ran")
+        .1;
+    let gmid = goodputs
+        .iter()
+        .find(|(p, _)| *p == MID_P)
+        .expect("mid fault point ran")
+        .1;
+    println!(
+        "\ngoodput: fault-free {g0:.1} t/s, p={MID_P} {gmid:.1} t/s ({:.3} of fault-free)",
+        gmid / g0
+    );
+    assert!(g0 > 0.0, "fault-free goodput must be positive");
+    assert!(
+        gmid >= GOODPUT_BAND * g0,
+        "goodput cliff: p={MID_P} goodput {gmid} fell below the {GOODPUT_BAND}x band \
+         of fault-free {g0}"
+    );
+}

@@ -124,6 +124,11 @@ pub fn build_requests(cfg: &ServeConfig) -> anyhow::Result<Vec<Request>> {
         for r in reqs.iter_mut() {
             if crng.f64() < cfg.workload.interactive_frac {
                 r.class.priority = Priority::Interactive;
+                // an SLO only attaches when configured (default 0.0 keeps
+                // the historical classes: priority without a deadline)
+                if cfg.workload.interactive_slo > 0.0 {
+                    r.class.slo = Some(cfg.workload.interactive_slo);
+                }
             }
         }
     }
@@ -146,17 +151,30 @@ pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeRep
     // Err — `Batcher::new` would otherwise assert and abort a whole grid
     cfg.validate()?;
     let requests = build_requests(cfg)?;
-    let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    // satellite of the fault-injection PR: a bad batching config is a
+    // per-point Err, not a process abort mid-grid
+    let batcher = Batcher::try_new(cfg.batching.max_batch, cfg.batching.max_wait)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let plan = cfg.fault_plan();
     if cfg.replicas > 1 {
         let engines = build_replica_engines_with(cfg, pool)?;
         let mut router = Router::new(engines, batcher, cfg.routing, cfg.priority);
         if cfg.scheduler == SchedulerKind::Chunked {
             router = router.with_prefill_chunk(cfg.prefill_chunk_u32());
         }
+        if let Some(p) = &plan {
+            router = router.with_fault_plan(p);
+        }
+        if cfg.faults.shedding {
+            router.set_shedding(true);
+        }
         router.submit_all(&requests);
         return Ok(router.drain());
     }
-    let engine = build_engine_with(cfg, pool)?;
+    let mut engine = build_engine_with(cfg, pool)?;
+    if let Some(p) = &plan {
+        engine.set_fault_plan(p);
+    }
     Ok(match cfg.scheduler {
         SchedulerKind::Static => {
             let mut s = StaticScheduler::new(engine, batcher);
@@ -165,12 +183,14 @@ pub fn run_serve_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Result<ServeRep
         }
         SchedulerKind::Continuous => {
             let mut s = ContinuousScheduler::new(engine, batcher, cfg.priority);
+            s.set_shedding(cfg.faults.shedding);
             s.submit_all(&requests);
             s.drain()
         }
         SchedulerKind::Chunked => {
             let mut s =
                 ChunkedScheduler::new(engine, batcher, cfg.priority, cfg.prefill_chunk_u32());
+            s.set_shedding(cfg.faults.shedding);
             s.submit_all(&requests);
             s.drain()
         }
@@ -458,6 +478,50 @@ mod tests {
             assert_eq!(report.request_latency.len() as u64, report.requests);
             assert_eq!(report.ttft.len() as u64, report.requests);
             assert!(report.token_throughput() > 0.0);
+        }
+    }
+
+    #[test]
+    fn faulty_config_serves_end_to_end_and_counts_faults() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 8.0;
+        cfg.workload.rps = 1.0;
+        cfg.eamc.trace_sequences = 30;
+        cfg.eamc.capacity = 8;
+        cfg.scheduler = SchedulerKind::Continuous;
+        let clean = run_serve(&cfg).unwrap();
+        assert_eq!(clean.transfer_retries, 0);
+        assert_eq!(clean.demand_failures, 0);
+        cfg.faults.gpu_failure_p = 0.5;
+        let faulty = run_serve(&cfg).unwrap();
+        assert_eq!(faulty.requests, clean.requests, "faults must not lose requests");
+        assert_eq!(faulty.tokens, clean.tokens);
+        assert!(faulty.transfer_retries > 0, "p=0.5 must force retries");
+        assert!(
+            faulty.makespan >= clean.makespan,
+            "retries cost simulated time"
+        );
+    }
+
+    #[test]
+    fn interactive_slo_attaches_to_interactive_requests_only() {
+        let mut cfg = ServeConfig::default();
+        cfg.model = "switch-base-32".into();
+        cfg.workload.duration = 20.0;
+        cfg.workload.rps = 2.0;
+        cfg.workload.interactive_frac = 0.5;
+        let untimed = build_requests(&cfg).unwrap();
+        cfg.workload.interactive_slo = 1.5;
+        let timed = build_requests(&cfg).unwrap();
+        assert_eq!(untimed.len(), timed.len());
+        for (a, b) in untimed.iter().zip(&timed) {
+            assert_eq!(a.class.priority, b.class.priority, "slo must not retag");
+            assert!(a.class.slo.is_none());
+            match b.class.priority {
+                Priority::Interactive => assert_eq!(b.class.slo, Some(1.5)),
+                _ => assert!(b.class.slo.is_none()),
+            }
         }
     }
 

@@ -7,6 +7,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::cache::CacheKind;
+use crate::faults::{Brownout, FaultLink, FaultPlan, RetryPolicy};
 use crate::memory::{Link, Tier, TierConfig};
 use crate::model::ModelSpec;
 use crate::prefetch::PredictorKind;
@@ -93,6 +94,7 @@ pub struct ServeConfig {
     pub batching: BatchConfig,
     pub memory: MemoryConfig,
     pub eamc: EamcConfig,
+    pub faults: FaultsConfig,
     pub seed: u64,
 }
 
@@ -108,6 +110,63 @@ pub struct WorkloadConfig {
     /// on the default class). 0.0 — the default — generates exactly the
     /// pre-priority request stream.
     pub interactive_frac: f64,
+    /// SLO deadline (seconds from arrival) attached to interactive-tagged
+    /// requests. 0.0 — the default — attaches no SLO, generating exactly
+    /// the historical class tagging; with an SLO attached, goodput and the
+    /// shedding/timeout machinery become meaningful.
+    pub interactive_slo: f64,
+}
+
+/// Deterministic fault-injection knobs (the config-expressible subset of
+/// [`crate::faults::FaultPlan`]: per-link transient failure probabilities,
+/// the retry/backoff policy, one bandwidth-brownout window on the
+/// DRAM→GPU link, and SLO deadline shedding). Replica crash/recover
+/// windows carry a replica index + two instants each and are programmatic
+/// only (the TOML subset has no arrays); `perf_faults` builds them
+/// directly. All-default = no plan installed — the bitwise-pinned
+/// fault-free replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Per-attempt failure probability of SSD→DRAM transfers, in [0, 1).
+    pub ssd_failure_p: f64,
+    /// Per-attempt failure probability of DRAM→GPU transfers, in [0, 1).
+    pub gpu_failure_p: f64,
+    /// First retry backoff delay, seconds (doubles per retry).
+    pub retry_base: f64,
+    /// Backoff cap, seconds.
+    pub retry_max_delay: f64,
+    /// Retries before a transfer permanently fails (prefetches drop to
+    /// on-demand; demanded transfers force-land and count
+    /// `demand_failures`).
+    pub max_retries: usize,
+    /// Bandwidth multiplier of the brownout window, in (0, 1]; 1.0 = no
+    /// brownout.
+    pub brownout: f64,
+    /// Brownout window start, seconds of virtual time.
+    pub brownout_start: f64,
+    /// Brownout window end, seconds (must be >= start; an empty window is
+    /// a no-op).
+    pub brownout_end: f64,
+    /// Enable SLO deadline shedding / timeout aborts on the continuous
+    /// scheduler family.
+    pub shedding: bool,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        let retry = RetryPolicy::default();
+        FaultsConfig {
+            ssd_failure_p: 0.0,
+            gpu_failure_p: 0.0,
+            retry_base: retry.base_delay,
+            retry_max_delay: retry.max_delay,
+            max_retries: retry.max_retries as usize,
+            brownout: 1.0,
+            brownout_start: 0.0,
+            brownout_end: 0.0,
+            shedding: false,
+        }
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -156,6 +215,7 @@ impl Default for ServeConfig {
                 cv: 1.0,
                 duration: 120.0,
                 interactive_frac: 0.0,
+                interactive_slo: 0.0,
             },
             batching: BatchConfig {
                 max_batch: 16,
@@ -172,6 +232,7 @@ impl Default for ServeConfig {
                 capacity: 120,
                 trace_sequences: 600,
             },
+            faults: FaultsConfig::default(),
             seed: 42,
         }
     }
@@ -225,6 +286,8 @@ impl ServeConfig {
         c.workload.duration = gf(&doc, "workload.duration", c.workload.duration);
         c.workload.interactive_frac =
             gf(&doc, "workload.interactive_frac", c.workload.interactive_frac);
+        c.workload.interactive_slo =
+            gf(&doc, "workload.interactive_slo", c.workload.interactive_slo);
         c.batching.max_batch = gu(&doc, "batching.max_batch", c.batching.max_batch);
         c.batching.max_wait = gf(&doc, "batching.max_wait", c.batching.max_wait);
         c.memory.gpu_gb = gf(&doc, "memory.gpu_gb", c.memory.gpu_gb);
@@ -234,6 +297,19 @@ impl ServeConfig {
         c.memory.n_gpus = gu(&doc, "memory.n_gpus", c.memory.n_gpus);
         c.eamc.capacity = gu(&doc, "eamc.capacity", c.eamc.capacity);
         c.eamc.trace_sequences = gu(&doc, "eamc.trace_sequences", c.eamc.trace_sequences);
+        c.faults.ssd_failure_p = gf(&doc, "faults.ssd_failure_p", c.faults.ssd_failure_p);
+        c.faults.gpu_failure_p = gf(&doc, "faults.gpu_failure_p", c.faults.gpu_failure_p);
+        c.faults.retry_base = gf(&doc, "faults.retry_base", c.faults.retry_base);
+        c.faults.retry_max_delay = gf(&doc, "faults.retry_max_delay", c.faults.retry_max_delay);
+        c.faults.max_retries = gu(&doc, "faults.max_retries", c.faults.max_retries);
+        c.faults.brownout = gf(&doc, "faults.brownout", c.faults.brownout);
+        c.faults.brownout_start = gf(&doc, "faults.brownout_start", c.faults.brownout_start);
+        c.faults.brownout_end = gf(&doc, "faults.brownout_end", c.faults.brownout_end);
+        if let Some(v) = doc.get("faults.shedding") {
+            c.faults.shedding = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("faults.shedding must be a bool"))?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -260,6 +336,7 @@ impl ServeConfig {
         d.set_num("workload.cv", self.workload.cv);
         d.set_num("workload.duration", self.workload.duration);
         d.set_num("workload.interactive_frac", self.workload.interactive_frac);
+        d.set_num("workload.interactive_slo", self.workload.interactive_slo);
         d.set_num("batching.max_batch", self.batching.max_batch as f64);
         d.set_num("batching.max_wait", self.batching.max_wait);
         d.set_num("memory.gpu_gb", self.memory.gpu_gb);
@@ -269,6 +346,15 @@ impl ServeConfig {
         d.set_num("memory.n_gpus", self.memory.n_gpus as f64);
         d.set_num("eamc.capacity", self.eamc.capacity as f64);
         d.set_num("eamc.trace_sequences", self.eamc.trace_sequences as f64);
+        d.set_num("faults.ssd_failure_p", self.faults.ssd_failure_p);
+        d.set_num("faults.gpu_failure_p", self.faults.gpu_failure_p);
+        d.set_num("faults.retry_base", self.faults.retry_base);
+        d.set_num("faults.retry_max_delay", self.faults.retry_max_delay);
+        d.set_num("faults.max_retries", self.faults.max_retries as f64);
+        d.set_num("faults.brownout", self.faults.brownout);
+        d.set_num("faults.brownout_start", self.faults.brownout_start);
+        d.set_num("faults.brownout_end", self.faults.brownout_end);
+        d.set_bool("faults.shedding", self.faults.shedding);
         d.to_string_pretty()
     }
 
@@ -315,7 +401,94 @@ impl ServeConfig {
                 self.prefill_chunk
             ));
         }
+        if !self.workload.interactive_slo.is_finite() || self.workload.interactive_slo < 0.0 {
+            return Err(anyhow!(
+                "workload.interactive_slo must be finite and >= 0, got {}",
+                self.workload.interactive_slo
+            ));
+        }
+        let f = &self.faults;
+        for (name, p) in [
+            ("faults.ssd_failure_p", f.ssd_failure_p),
+            ("faults.gpu_failure_p", f.gpu_failure_p),
+        ] {
+            // p = 1 would never land a prefetch and is a degenerate plan,
+            // not a brownout — reject it with the NaNs
+            if !(0.0..1.0).contains(&p) {
+                return Err(anyhow!("{name} must be in [0, 1), got {p}"));
+            }
+        }
+        if !f.retry_base.is_finite() || f.retry_base < 0.0 {
+            return Err(anyhow!(
+                "faults.retry_base must be finite and >= 0, got {}",
+                f.retry_base
+            ));
+        }
+        if !f.retry_max_delay.is_finite() || f.retry_max_delay < f.retry_base {
+            return Err(anyhow!(
+                "faults.retry_max_delay must be finite and >= retry_base, got {}",
+                f.retry_max_delay
+            ));
+        }
+        if f.max_retries > u32::MAX as usize {
+            return Err(anyhow!("faults.max_retries {} exceeds u32", f.max_retries));
+        }
+        if !(f.brownout > 0.0 && f.brownout <= 1.0) {
+            return Err(anyhow!(
+                "faults.brownout must be in (0, 1], got {} (a zero-bandwidth \
+                 link never completes any transfer)",
+                f.brownout
+            ));
+        }
+        if !f.brownout_start.is_finite()
+            || !f.brownout_end.is_finite()
+            || f.brownout_end < f.brownout_start
+        {
+            return Err(anyhow!(
+                "faults.brownout window [{}, {}) must be finite with end >= start",
+                f.brownout_start,
+                f.brownout_end
+            ));
+        }
+        if f.shedding && !self.scheduler.is_continuous_family() {
+            return Err(anyhow!(
+                "faults.shedding requires scheduler = \"continuous\" or \
+                 \"chunked\" (the static batcher runs whole batches to \
+                 completion — it has no iteration boundary to shed at)"
+            ));
+        }
         Ok(())
+    }
+
+    /// The engine-facing fault plan this config describes, or `None` when
+    /// every link-fault knob is at its no-fault default (no plan installed
+    /// — the bitwise-pinned fault-free replay; `faults.shedding` is a
+    /// scheduler knob, not part of the plan). The plan's RNG seed derives
+    /// from the config seed through a dedicated constant, so fault draws
+    /// never perturb workload/arrival streams.
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        let f = &self.faults;
+        let browned = f.brownout < 1.0 && f.brownout_end > f.brownout_start;
+        if f.ssd_failure_p <= 0.0 && f.gpu_failure_p <= 0.0 && !browned {
+            return None;
+        }
+        let mut plan = FaultPlan::new(self.seed ^ 0xFA57);
+        plan.ssd_failure_p = f.ssd_failure_p;
+        plan.gpu_failure_p = f.gpu_failure_p;
+        plan.retry = RetryPolicy {
+            base_delay: f.retry_base,
+            max_delay: f.retry_max_delay,
+            max_retries: f.max_retries as u32,
+        };
+        if browned {
+            plan.brownouts.push(Brownout {
+                link: FaultLink::DramToGpu,
+                start: f.brownout_start,
+                end: f.brownout_end,
+                factor: f.brownout,
+            });
+        }
+        Some(plan)
     }
 
     /// The engine-facing chunk budget: `0` (unlimited) maps to `u32::MAX`.
@@ -493,6 +666,60 @@ mod tests {
         assert!(c.validate().is_err(), "infinite max_wait must not validate");
         c.batching.max_wait = 0.0;
         assert!(c.validate().is_ok(), "zero window is a valid policy");
+    }
+
+    #[test]
+    fn faults_parse_roundtrip_and_map_to_a_plan() {
+        let c = ServeConfig::from_toml(
+            "scheduler = \"continuous\"\nseed = 7\n[workload]\ninteractive_frac = 0.5\ninteractive_slo = 2.5\n[faults]\nssd_failure_p = 0.1\ngpu_failure_p = 0.05\nmax_retries = 3\nbrownout = 0.5\nbrownout_start = 1.0\nbrownout_end = 4.0\nshedding = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.faults.ssd_failure_p, 0.1);
+        assert_eq!(c.faults.gpu_failure_p, 0.05);
+        assert_eq!(c.faults.max_retries, 3);
+        assert!(c.faults.shedding);
+        assert_eq!(c.workload.interactive_slo, 2.5);
+        let back = ServeConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, back);
+        let plan = c.fault_plan().expect("non-default faults yield a plan");
+        assert_eq!(plan.ssd_failure_p, 0.1);
+        assert_eq!(plan.gpu_failure_p, 0.05);
+        assert_eq!(plan.retry.max_retries, 3);
+        assert_eq!(plan.brownouts.len(), 1);
+        assert_eq!(plan.seed, 7 ^ 0xFA57);
+        assert!(plan.crashes.is_empty(), "crash windows are programmatic-only");
+        // the default config carries no plan at all
+        assert!(ServeConfig::default().fault_plan().is_none());
+        // a brownout with an empty window is a no-op, not a plan
+        let mut d = ServeConfig::default();
+        d.faults.brownout = 0.5;
+        assert!(d.fault_plan().is_none());
+        d.faults.brownout_end = 2.0;
+        assert!(d.fault_plan().is_some());
+    }
+
+    #[test]
+    fn invalid_fault_configs_rejected() {
+        assert!(ServeConfig::from_toml("[faults]\nssd_failure_p = 1.0").is_err());
+        assert!(ServeConfig::from_toml("[faults]\ngpu_failure_p = -0.1").is_err());
+        assert!(ServeConfig::from_toml("[faults]\nbrownout = 0.0").is_err());
+        assert!(ServeConfig::from_toml("[faults]\nbrownout = 1.5").is_err());
+        assert!(
+            ServeConfig::from_toml("[faults]\nbrownout_start = 5.0\nbrownout_end = 1.0").is_err()
+        );
+        assert!(ServeConfig::from_toml("[faults]\nretry_base = -1.0").is_err());
+        assert!(
+            ServeConfig::from_toml("[faults]\nretry_base = 0.01\nretry_max_delay = 0.001")
+                .is_err()
+        );
+        assert!(ServeConfig::from_toml("[faults]\nshedding = 3").is_err());
+        // shedding needs an iteration boundary: static batching is rejected
+        assert!(ServeConfig::from_toml("[faults]\nshedding = true").is_err());
+        assert!(
+            ServeConfig::from_toml("scheduler = \"continuous\"\n[faults]\nshedding = true")
+                .is_ok()
+        );
+        assert!(ServeConfig::from_toml("[workload]\ninteractive_slo = -1.0").is_err());
     }
 
     #[test]

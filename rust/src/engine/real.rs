@@ -228,7 +228,7 @@ impl RealMoeEngine {
         let t0 = Instant::now();
         let mut stall = 0.0f64;
 
-        let mut x = self.rt.embed(ids, self.ckpt.get("emb"))?;
+        let mut x = self.rt.embed(ids, self.ckpt.try_get("emb")?)?;
         for l in 0..c.n_layers {
             // attention
             let (nx, nk, nv) = self.rt.attn_step(
@@ -236,17 +236,17 @@ impl RealMoeEngine {
                 &state.k[l],
                 &state.v[l],
                 pos as i32,
-                self.ckpt.get(&format!("l{l}.wq")),
-                self.ckpt.get(&format!("l{l}.wk")),
-                self.ckpt.get(&format!("l{l}.wv")),
-                self.ckpt.get(&format!("l{l}.wo")),
+                self.ckpt.try_get(&format!("l{l}.wq"))?,
+                self.ckpt.try_get(&format!("l{l}.wk"))?,
+                self.ckpt.try_get(&format!("l{l}.wv"))?,
+                self.ckpt.try_get(&format!("l{l}.wo"))?,
             )?;
             x = nx;
             state.k[l] = nk;
             state.v[l] = nv;
 
             // router (L1 Pallas kernel)
-            let (gates, idx) = self.rt.router(&x, self.ckpt.get(&format!("l{l}.wr")))?;
+            let (gates, idx) = self.rt.router(&x, self.ckpt.try_get(&format!("l{l}.wr"))?)?;
 
             // trace (Alg. 1 steps 6-7)
             for (row, &e) in idx.iter().enumerate().take(cur_eams.len()) {
@@ -304,7 +304,7 @@ impl RealMoeEngine {
                 for (slot, &r) in rows.iter().enumerate() {
                     xin[slot * d..(slot + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
                 }
-                let [w1, b1, w2, b2] = self.ckpt.expert_tensors(l, e as usize);
+                let [w1, b1, w2, b2] = self.ckpt.try_expert_tensors(l, e as usize)?;
                 let y = self.rt.expert(&xin, w1, b1, w2, b2)?;
                 for (slot, &r) in rows.iter().enumerate() {
                     eo[r * d..(r + 1) * d].copy_from_slice(&y[slot * d..(slot + 1) * d]);
@@ -312,7 +312,7 @@ impl RealMoeEngine {
             }
             x = self.rt.combine(&x, &eo, &gates, sel)?;
         }
-        let next = self.rt.lm_head(&x, self.ckpt.get("w_out"))?;
+        let next = self.rt.lm_head(&x, self.ckpt.try_get("w_out")?)?;
         let wall = t0.elapsed().as_secs_f64();
         self.vtime += wall + stall;
         Ok((wall, stall, next))

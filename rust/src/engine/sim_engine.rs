@@ -270,6 +270,14 @@ impl PreemptedSeq {
         self.ext_id
     }
 
+    /// Re-tag the saved state with a new external id. Cross-replica warm
+    /// failover needs this: the surviving replica assigns its own request
+    /// index as the session-local id, while the traced EAM, resume point
+    /// and recall tallies carry over untouched.
+    pub fn set_ext_id(&mut self, ext_id: u64) {
+        self.ext_id = ext_id;
+    }
+
     /// Iterations already executed (the resume point).
     pub fn iterations_done(&self) -> u32 {
         self.iter
@@ -395,6 +403,14 @@ impl SimEngine {
 
     pub fn sim(&self) -> &MemorySim {
         &self.sim
+    }
+
+    /// Install a fault plan on this replica's memory simulator (see
+    /// [`crate::faults::FaultPlan`]). An empty or crash-only plan is a
+    /// strict no-op — the replay stays bitwise identical to an engine that
+    /// never saw a plan (pinned in `tests/scheduler.rs`).
+    pub fn set_fault_plan(&mut self, plan: &crate::faults::FaultPlan) {
+        self.sim.set_fault_plan(plan);
     }
 
     pub fn eamc(&self) -> &Eamc {

@@ -30,6 +30,7 @@ pub mod cache;
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod faults;
 pub mod memory;
 pub mod metrics;
 pub mod model;

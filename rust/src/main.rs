@@ -92,6 +92,16 @@ fn run() -> Result<()> {
                  \x20        [--replicas <n>]  engine replicas behind the request router\n\
                  \x20        [--routing round-robin|least-loaded|task-affinity]  replica dispatch\n\
                  \x20        [--interactive-frac <f>]  fraction of requests tagged interactive\n\
+                 \x20        [--interactive-slo <s>]  deadline attached to interactive requests\n\
+                 \x20        (0 = none; enables goodput accounting and --shedding)\n\
+                 \x20        [--ssd-failure-p <p>] [--gpu-failure-p <p>]  per-transfer transient\n\
+                 \x20        failure probability on each link (deterministic, seeded; retried\n\
+                 \x20        with capped exponential backoff in simulated time)\n\
+                 \x20        [--brownout <f>] [--brownout-start <s>] [--brownout-end <s>]\n\
+                 \x20        bandwidth multiplier in (0,1] over a virtual-time window\n\
+                 \x20        (no window = whole replay)\n\
+                 \x20        [--shedding on|off]  shed/abort requests whose SLO deadline already\n\
+                 \x20        passed (continuous/chunked schedulers only)\n\
                  \x20        [--threads <n>]  offline-construction workers (default:\n\
                  \x20        MOE_POOL_THREADS or all cores; results identical at any count)\n\
                  generate --artifacts <dir> --prompts <n> --tokens <n>\n"
@@ -159,11 +169,41 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(f) = args.get_f64("interactive-frac")? {
         cfg.workload.interactive_frac = f;
     }
+    if let Some(s) = args.get_f64("interactive-slo")? {
+        cfg.workload.interactive_slo = s;
+    }
     if let Some(r) = args.get_f64("rps")? {
         cfg.workload.rps = r;
     }
     if let Some(d) = args.get_f64("duration")? {
         cfg.workload.duration = d;
+    }
+    if let Some(p) = args.get_f64("ssd-failure-p")? {
+        cfg.faults.ssd_failure_p = p;
+    }
+    if let Some(p) = args.get_f64("gpu-failure-p")? {
+        cfg.faults.gpu_failure_p = p;
+    }
+    if let Some(t) = args.get_f64("brownout-start")? {
+        cfg.faults.brownout_start = t;
+    }
+    if let Some(t) = args.get_f64("brownout-end")? {
+        cfg.faults.brownout_end = t;
+    }
+    if let Some(b) = args.get_f64("brownout")? {
+        cfg.faults.brownout = b;
+        // a factor without a window means "the whole replay" (the window
+        // must stay finite for validate(), so use the largest finite bound)
+        if cfg.faults.brownout_end <= cfg.faults.brownout_start {
+            cfg.faults.brownout_end = f64::MAX;
+        }
+    }
+    if let Some(s) = args.get("shedding") {
+        cfg.faults.shedding = match s {
+            "true" | "on" | "1" => true,
+            "false" | "off" | "0" => false,
+            other => return Err(anyhow!("--shedding: expected on|off, got '{other}'")),
+        };
     }
     cfg.validate()?;
     // worker count for the offline side (EAMC construction); the replay
@@ -226,6 +266,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     println!("GPU hit ratio   : {:.3}", report.gpu_hit_ratio());
     println!("throughput      : {:.1} tokens/s", report.token_throughput());
+    println!("goodput         : {:.1} tokens/s", report.goodput());
+    if report.shed + report.timed_out > 0 {
+        println!("shed            : {}", report.shed);
+        println!("timed out       : {}", report.timed_out);
+    }
+    if report.transfer_retries + report.demand_failures > 0 {
+        println!("transfer retries: {}", report.transfer_retries);
+        println!("demand failures : {}", report.demand_failures);
+    }
     Ok(())
 }
 

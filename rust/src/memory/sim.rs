@@ -3,6 +3,7 @@
 
 use crate::cache::{CacheCtx, CacheKind, ExpertCache, Policy};
 use crate::cache::{IndexedActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy, OraclePolicy};
+use crate::faults::{draw_transfer, FaultLink, FaultPlan, FaultState, TransferOutcome};
 use crate::memory::{Link, Tier};
 use crate::model::{ExpertKey, ModelSpec};
 use crate::prefetch::{PrefetchQueue, MAX_PRIORITY};
@@ -87,6 +88,17 @@ pub struct MemoryStats {
     /// Total time the GPU spent blocked waiting for experts.
     pub stall_time: f64,
     pub transfers_completed: u64,
+    /// Fault layer: retry attempts burned by transient transfer failures
+    /// (zero unless a fault plan with link failures is installed).
+    pub transfer_retries: u64,
+    /// Fault layer: prefetch transfers dropped after exhausting their
+    /// retries — the expert stays put and a later demand fetches it on the
+    /// critical path (degraded, never wedged).
+    pub prefetch_drops: u64,
+    /// Fault layer: demand transfers that exhausted their retries and were
+    /// force-landed with one extra granted attempt (a real system would
+    /// fail the request; the simulator charges the time and stays total).
+    pub demand_failures: u64,
 }
 
 impl MemoryStats {
@@ -135,6 +147,10 @@ struct InFlight {
     prio: f64,
     /// True when this transfer was started by a blocking demand.
     demand: bool,
+    /// True when the fault layer decided at start time that this transfer
+    /// permanently fails: it occupies the link for its (burned) duration
+    /// but moves nothing on completion.
+    dropped: bool,
 }
 
 /// Per-expert residency bits.
@@ -163,6 +179,9 @@ pub struct MemorySim {
     /// prefetch priority (otherwise the prefetch budget can starve a
     /// blocking demand forever).
     demand_upgrades: std::collections::HashSet<ExpertKey>,
+    /// Fault-injection state; `None` (the default, and for any plan that
+    /// does not perturb links) keeps the hot path to a single null check.
+    faults: Option<Box<FaultState>>,
     now: f64,
     stats: MemoryStats,
 }
@@ -212,6 +231,7 @@ impl MemorySim {
             ssd_busy: None,
             gpu_busy: vec![None; cfg.n_gpus],
             demand_upgrades: std::collections::HashSet::new(),
+            faults: None,
             now: 0.0,
             stats: MemoryStats::default(),
             cfg,
@@ -258,6 +278,19 @@ impl MemorySim {
 
     pub fn stats(&self) -> &MemoryStats {
         &self.stats
+    }
+
+    /// Install a fault plan. Only link-affecting plans (failure
+    /// probabilities or brownouts) allocate state; installing an empty or
+    /// crash-only plan leaves `faults = None`, so the replay is bitwise
+    /// identical to a simulator that never saw a plan at all (pinned in
+    /// tests). Re-installing resets the per-link fault RNG streams.
+    pub fn set_fault_plan(&mut self, plan: &FaultPlan) {
+        self.faults = if plan.affects_links() {
+            Some(Box::new(FaultState::new(plan.clone(), self.cfg.n_gpus)))
+        } else {
+            None
+        };
     }
 
     pub fn gpu_cache(&self) -> &ExpertCache {
@@ -435,6 +468,15 @@ impl MemorySim {
 
     fn complete_ssd(&mut self, f: InFlight, ctx: &CacheCtx) {
         self.q_ssd.complete(f.key);
+        if f.dropped {
+            // the failed transfer burned its link time but moved nothing;
+            // if a demand blocked on it meanwhile, re-run the hop on the
+            // critical path instead of silently stranding the waiter
+            if self.demand_upgrades.remove(&f.key) {
+                self.q_ssd.submit(f.key, MAX_PRIORITY);
+            }
+            return;
+        }
         let idx = f.key.flat(self.experts_per_layer);
         if let Some(evicted) = self.dram_cache.insert(f.key, ctx) {
             self.residency[evicted.flat(self.experts_per_layer)].dram = false;
@@ -456,6 +498,12 @@ impl MemorySim {
 
     fn complete_gpu(&mut self, f: InFlight, ctx: &CacheCtx) {
         self.q_gpu.complete(f.key);
+        if f.dropped {
+            if self.demand_upgrades.remove(&f.key) {
+                self.q_gpu.submit(f.key, MAX_PRIORITY);
+            }
+            return;
+        }
         let idx = f.key.flat(self.experts_per_layer);
         if let Some(evicted) = self.gpu_cache.insert(f.key, ctx) {
             self.residency[evicted.flat(self.experts_per_layer)].gpu = false;
@@ -509,15 +557,13 @@ impl MemorySim {
                     }
                     continue;
                 }
-                let mut dt = self.cfg.ssd_to_dram.transfer_time(self.expert_bytes);
-                if prio == MAX_PRIORITY && self.cfg.demand_bw_factor < 1.0 {
-                    dt /= self.cfg.demand_bw_factor;
-                }
+                let (dt, dropped) = self.transfer_duration(FaultLink::SsdToDram, 0, key, prio);
                 self.ssd_busy = Some(InFlight {
                     key,
                     finish: self.now + dt,
                     prio,
                     demand: prio == MAX_PRIORITY,
+                    dropped,
                 });
                 break;
             }
@@ -557,15 +603,13 @@ impl MemorySim {
                     self.q_gpu.complete(key);
                     continue;
                 }
-                let mut dt = self.cfg.dram_to_gpu.transfer_time(self.expert_bytes);
-                if prio == MAX_PRIORITY && self.cfg.demand_bw_factor < 1.0 {
-                    dt /= self.cfg.demand_bw_factor;
-                }
+                let (dt, dropped) = self.transfer_duration(FaultLink::DramToGpu, g, key, prio);
                 self.gpu_busy[g] = Some(InFlight {
                     key,
                     finish: self.now + dt,
                     prio,
                     demand: prio == MAX_PRIORITY,
+                    dropped,
                 });
                 started = true;
                 break;
@@ -575,6 +619,68 @@ impl MemorySim {
             }
             if !started && self.gpu_busy[g].is_none() {
                 // nothing routed to this link
+            }
+        }
+    }
+
+    /// Service time for one expert on `link` (index `g` for the per-GPU
+    /// links) at the current instant, with the fault layer applied: active
+    /// brownouts scale effective bandwidth, and with a failure probability
+    /// installed the transfer's full retry/backoff sequence is drawn *now*
+    /// and folded into the returned duration — in-flight transfers
+    /// therefore always land, so the demand event loop stays total. The
+    /// returned flag marks a transfer that permanently failed (prefetch
+    /// drop): it occupies the link for the burned duration but moves
+    /// nothing. Without an installed fault state this reproduces
+    /// `Link::transfer_time` (+ the demand bandwidth factor) bit for bit.
+    fn transfer_duration(&mut self, link: FaultLink, g: usize, key: ExpertKey, prio: f64) -> (f64, bool) {
+        let (lat, bw) = match link {
+            FaultLink::SsdToDram => (self.cfg.ssd_to_dram.latency, self.cfg.ssd_to_dram.bandwidth),
+            FaultLink::DramToGpu => (self.cfg.dram_to_gpu.latency, self.cfg.dram_to_gpu.bandwidth),
+        };
+        let mut dt = lat + self.expert_bytes as f64 / bw;
+        if let Some(fs) = self.faults.as_deref() {
+            let bf = fs.plan.brownout_factor(link, self.now);
+            if bf < 1.0 {
+                dt = lat + self.expert_bytes as f64 / (bw * bf);
+            }
+        }
+        if prio == MAX_PRIORITY && self.cfg.demand_bw_factor < 1.0 {
+            dt /= self.cfg.demand_bw_factor;
+        }
+        let p = match (self.faults.as_deref(), link) {
+            (None, _) => return (dt, false),
+            (Some(fs), FaultLink::SsdToDram) => fs.plan.ssd_failure_p,
+            (Some(fs), FaultLink::DramToGpu) => fs.plan.gpu_failure_p,
+        };
+        if p <= 0.0 {
+            return (dt, false);
+        }
+        // a transfer carrying a blocked demand must never be dropped —
+        // either it started at MAX_PRIORITY or a demand latched onto it
+        // while queued/in-flight (`demand_upgrades`)
+        let demanded = prio == MAX_PRIORITY || self.demand_upgrades.contains(&key);
+        let fs = self.faults.as_deref_mut().expect("fault state checked above");
+        let rng = match link {
+            FaultLink::SsdToDram => &mut fs.rng_ssd,
+            FaultLink::DramToGpu => &mut fs.rng_gpu[g],
+        };
+        match draw_transfer(rng, p, &fs.plan.retry, dt) {
+            TransferOutcome::Lands { delay, retries } => {
+                self.stats.transfer_retries += retries as u64;
+                (delay, false)
+            }
+            TransferOutcome::Failed { delay, retries } => {
+                self.stats.transfer_retries += retries as u64;
+                if demanded {
+                    self.stats.demand_failures += 1;
+                    // force-land with one extra granted attempt so the
+                    // replay makes progress; the burned time is charged
+                    (delay + dt, false)
+                } else {
+                    self.stats.prefetch_drops += 1;
+                    (delay, true)
+                }
             }
         }
     }
@@ -881,5 +987,175 @@ mod tests {
         assert_eq!(st.prefetch_bytes_gpu, s.expert_bytes());
         assert_eq!(st.demand_bytes, s.expert_bytes());
         assert_eq!(st.transfers_completed, 2);
+    }
+
+    #[test]
+    fn empty_fault_plan_replays_bitwise() {
+        use crate::faults::FaultPlan;
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let run = |plan: Option<FaultPlan>| -> (Vec<u64>, MemoryStats) {
+            let mut sim = MemorySim::new(&s, cfg(4, 8, Tier::Ssd));
+            if let Some(p) = plan {
+                sim.set_fault_plan(&p);
+            }
+            let mut readies = Vec::new();
+            sim.submit_prefetch(ExpertKey::new(2, 5), 0.9, 0.0, &ctx);
+            sim.submit_prefetch(ExpertKey::new(3, 6), 0.8, 0.0, &ctx);
+            let mut t = 0.001;
+            for l in 0..4 {
+                for ex in [0usize, 3, 7] {
+                    let r = sim.demand(ExpertKey::new(l, ex), t, &ctx);
+                    readies.push(r.to_bits());
+                    t = r + 0.0005;
+                }
+            }
+            (readies, sim.stats().clone())
+        };
+        let (base, bstats) = run(None);
+        // an empty plan (even crash-only) must not perturb a single bit
+        let mut crash_only = FaultPlan::new(99);
+        crash_only.crashes.push(crate::faults::CrashWindow {
+            replica: 0,
+            crash: 0.0,
+            recover: 1.0,
+        });
+        for plan in [FaultPlan::new(7), crash_only] {
+            let (got, gstats) = run(Some(plan));
+            assert_eq!(got, base, "ready instants must be bitwise identical");
+            assert_eq!(gstats.stall_time.to_bits(), bstats.stall_time.to_bits());
+            assert_eq!(gstats.transfers_completed, bstats.transfers_completed);
+            assert_eq!(gstats.transfer_retries, 0);
+            assert_eq!(gstats.prefetch_drops, 0);
+            assert_eq!(gstats.demand_failures, 0);
+        }
+    }
+
+    #[test]
+    fn brownout_scales_effective_bandwidth() {
+        use crate::faults::{Brownout, FaultLink, FaultPlan};
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
+        let mut plan = FaultPlan::new(1);
+        plan.brownouts.push(Brownout {
+            link: FaultLink::DramToGpu,
+            start: 0.0,
+            end: 10.0,
+            factor: 0.5,
+        });
+        sim.set_fault_plan(&plan);
+        let key = ExpertKey::new(2, 0); // DRAM-resident
+        let ready = sim.demand(key, 0.0, &ctx);
+        let nominal = s.expert_bytes() as f64 / 10e9;
+        assert!(
+            (ready - 2.0 * nominal).abs() < 1e-9,
+            "half bandwidth must double the hop: ready {ready}, nominal {nominal}"
+        );
+        // outside the window the link is back to full speed
+        let key2 = ExpertKey::new(2, 1);
+        let r2 = sim.demand(key2, 20.0, &ctx);
+        assert!(((r2 - 20.0) - nominal).abs() < 1e-9, "post-window hop {}", r2 - 20.0);
+    }
+
+    #[test]
+    fn failed_prefetch_degrades_to_demand_fetch_not_a_stall() {
+        use crate::faults::{FaultPlan, RetryPolicy};
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
+        let mut plan = FaultPlan::new(3);
+        plan.gpu_failure_p = 0.999_999; // every attempt fails (deterministically, per stream)
+        plan.retry = RetryPolicy {
+            base_delay: 1e-4,
+            max_delay: 1e-3,
+            max_retries: 1,
+        };
+        sim.set_fault_plan(&plan);
+        let key = ExpertKey::new(2, 0); // DRAM-resident
+        sim.submit_prefetch(key, 0.9, 0.0, &ctx);
+        sim.advance_to(1.0, &ctx);
+        assert!(!sim.is_on_gpu(key), "the dropped prefetch must not land");
+        assert_eq!(sim.stats().prefetch_drops, 1);
+        assert!(sim.stats().transfer_retries >= 1);
+        // the later demand force-lands through the same faulty link
+        let ready = sim.demand(key, 1.0, &ctx);
+        assert!(sim.is_on_gpu(key), "demand must land despite permanent failures");
+        assert!(ready > 1.0, "the fetch cost real (degraded) time");
+        assert_eq!(sim.stats().demand_failures, 1);
+    }
+
+    #[test]
+    fn demand_on_faulty_link_terminates_and_counts_failures() {
+        use crate::faults::{FaultPlan, RetryPolicy};
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let mut sim = MemorySim::new(&s, cfg(4, 4, Tier::Ssd));
+        let mut plan = FaultPlan::new(5);
+        plan.ssd_failure_p = 0.999_999;
+        plan.gpu_failure_p = 0.999_999;
+        plan.retry = RetryPolicy {
+            base_delay: 1e-4,
+            max_delay: 1e-3,
+            max_retries: 2,
+        };
+        sim.set_fault_plan(&plan);
+        let key = ExpertKey::new(3, 7); // SSD-only: both hops on faulty links
+        let ready = sim.demand(key, 0.0, &ctx);
+        assert!(sim.is_on_gpu(key));
+        let eb = s.expert_bytes() as f64;
+        let nominal = eb / 1e9 + eb / 10e9;
+        assert!(
+            ready > nominal,
+            "retries + backoff must cost more than the clean path: {ready} <= {nominal}"
+        );
+        assert_eq!(sim.stats().demand_failures, 2, "one forced landing per hop");
+        assert!(sim.stats().transfer_retries >= 4);
+    }
+
+    #[test]
+    fn fault_timeline_is_deterministic_per_seed() {
+        use crate::faults::FaultPlan;
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let run = |seed: u64| -> Vec<u64> {
+            let mut sim = MemorySim::new(&s, cfg(4, 8, Tier::Ssd));
+            let mut plan = FaultPlan::new(seed);
+            plan.ssd_failure_p = 0.3;
+            plan.gpu_failure_p = 0.2;
+            sim.set_fault_plan(&plan);
+            let mut out = Vec::new();
+            let mut t = 0.0;
+            for l in 0..4 {
+                for ex in 0..8 {
+                    let r = sim.demand(ExpertKey::new(l, ex), t, &ctx);
+                    out.push(r.to_bits());
+                    t = r;
+                }
+            }
+            out
+        };
+        assert_eq!(run(11), run(11), "same plan seed => same degraded timeline");
+        assert_ne!(run(11), run(12), "different seeds must actually differ");
     }
 }

@@ -149,20 +149,37 @@ impl SyntheticCheckpoint {
         }
     }
 
-    /// Borrow a tensor by name; panics on unknown names (programming error).
+    /// Borrow a tensor by name; panics on unknown names. Kept for tests and
+    /// setup-time callers where a missing tensor is a programming error —
+    /// runtime inference paths go through [`SyntheticCheckpoint::try_get`].
     pub fn get(&self, name: &str) -> &[f32] {
+        self.try_get(name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible tensor lookup: a name that drifted from the generated
+    /// checkpoint (geometry mismatch, renamed layer) surfaces as an `Err`
+    /// the serving loop can report, instead of aborting mid-request.
+    pub fn try_get(&self, name: &str) -> Result<&[f32]> {
         self.tensors
             .get(name)
-            .unwrap_or_else(|| panic!("unknown tensor {name}"))
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow!("unknown tensor {name}"))
     }
 
     pub fn expert_tensors(&self, layer: usize, expert: usize) -> [&[f32]; 4] {
-        [
-            self.get(&format!("l{layer}.e{expert}.w1")),
-            self.get(&format!("l{layer}.e{expert}.b1")),
-            self.get(&format!("l{layer}.e{expert}.w2")),
-            self.get(&format!("l{layer}.e{expert}.b2")),
-        ]
+        self.try_expert_tensors(layer, expert)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`SyntheticCheckpoint::expert_tensors`].
+    pub fn try_expert_tensors(&self, layer: usize, expert: usize) -> Result<[&[f32]; 4]> {
+        Ok([
+            self.try_get(&format!("l{layer}.e{expert}.w1"))?,
+            self.try_get(&format!("l{layer}.e{expert}.b1"))?,
+            self.try_get(&format!("l{layer}.e{expert}.w2"))?,
+            self.try_get(&format!("l{layer}.e{expert}.b2"))?,
+        ])
     }
 
     pub fn tensor_count(&self) -> usize {
@@ -210,6 +227,16 @@ mod tests {
             ck.tensor_count(),
             c.n_layers * (5 + 4 * c.n_experts) + 2
         );
+    }
+
+    #[test]
+    fn try_get_reports_unknown_names_instead_of_panicking() {
+        let ck = SyntheticCheckpoint::generate(&cfg(), 42, 4);
+        assert!(ck.try_get("emb").is_ok());
+        let err = ck.try_get("l0.e999.w1").unwrap_err();
+        assert!(err.to_string().contains("l0.e999.w1"), "{err}");
+        assert!(ck.try_expert_tensors(0, 0).is_ok());
+        assert!(ck.try_expert_tensors(99, 0).is_err());
     }
 
     #[test]

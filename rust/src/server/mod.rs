@@ -99,14 +99,24 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: f64) -> Batcher {
-        assert!(max_batch >= 1);
-        if let Err(e) = check_max_wait(max_wait) {
-            panic!("{e}");
+        match Batcher::try_new(max_batch, max_wait) {
+            Ok(b) => b,
+            Err(e) => panic!("{e}"),
         }
-        Batcher {
+    }
+
+    /// Fallible form of [`Batcher::new`]: returns the validation message
+    /// instead of aborting the process, so replay drivers (`benchsuite`'s
+    /// per-point grid errors) can surface a bad batching window as data.
+    pub fn try_new(max_batch: usize, max_wait: f64) -> Result<Batcher, String> {
+        if max_batch < 1 {
+            return Err(format!("max_batch must be >= 1, got {max_batch}"));
+        }
+        check_max_wait(max_wait)?;
+        Ok(Batcher {
             max_batch,
             max_wait,
-        }
+        })
     }
 
     /// Given arrival-sorted requests and the engine-free time, decide the
@@ -215,6 +225,21 @@ pub struct ServeReport {
     /// Total bytes moved by prefetch transfers (dead-traffic accounting for
     /// the retired-prefetch cancellation experiments).
     pub prefetch_bytes: u64,
+    /// Requests shed at admission because their SLO deadline had already
+    /// passed (zero unless deadline shedding is enabled).
+    pub shed: u64,
+    /// Requests aborted at an iteration boundary after partial execution
+    /// because their SLO deadline passed (zero unless shedding is enabled).
+    pub timed_out: u64,
+    /// Tokens of requests that completed within their SLO deadline
+    /// (SLO-less requests always count) — the goodput numerator.
+    pub goodput_tokens: u64,
+    /// Demanded transfers that exhausted their fault-retry budget and were
+    /// force-landed anyway (from `MemoryStats`; zero without a fault plan).
+    pub demand_failures: u64,
+    /// Transfer attempts retried by the fault layer (from `MemoryStats`;
+    /// zero without a fault plan).
+    pub transfer_retries: u64,
 }
 
 impl ServeReport {
@@ -223,6 +248,19 @@ impl ServeReport {
             0.0
         } else {
             self.tokens as f64 / self.makespan
+        }
+    }
+
+    /// Goodput: completed-within-SLO tokens per second of makespan. With
+    /// no SLOs attached this equals [`ServeReport::token_throughput`] for
+    /// a fully-completed replay; under faults/shedding it is the paper's
+    /// graceful-degradation surface (`perf_faults` pins its no-cliff
+    /// shape).
+    pub fn goodput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.goodput_tokens as f64 / self.makespan
         }
     }
 
@@ -251,6 +289,11 @@ impl ServeReport {
         self.demands += other.demands;
         self.gpu_hits += other.gpu_hits;
         self.prefetch_bytes += other.prefetch_bytes;
+        self.shed += other.shed;
+        self.timed_out += other.timed_out;
+        self.goodput_tokens += other.goodput_tokens;
+        self.demand_failures += other.demand_failures;
+        self.transfer_retries += other.transfer_retries;
     }
 
     /// Copy the engine-level demand/traffic tallies into the report (called
@@ -260,6 +303,8 @@ impl ServeReport {
         self.demands = st.demand_total();
         self.gpu_hits = st.demand_gpu_hits;
         self.prefetch_bytes = st.total_prefetch_bytes();
+        self.demand_failures = st.demand_failures;
+        self.transfer_retries = st.transfer_retries;
     }
 }
 
@@ -372,6 +417,12 @@ impl<'r> Scheduler<'r> for StaticScheduler<'r> {
                 }
             }
             self.report.tokens += r.seq.total_tokens() as u64;
+            // goodput: the whole batch completes at its longest member's
+            // finish, so that instant is every member's (conservative)
+            // completion time for the within-SLO test. Static never sheds.
+            if r.class.slo.map_or(true, |s| self.result.finish <= r.arrival + s) {
+                self.report.goodput_tokens += r.seq.total_tokens() as u64;
+            }
         }
         self.report.requests += batch.len() as u64;
         self.report.batches += 1;
@@ -395,6 +446,24 @@ impl<'r> Scheduler<'r> for StaticScheduler<'r> {
 /// Sentinel for "not currently mapped" slot/park indices.
 const NONE_U32: u32 = u32::MAX;
 
+/// Terminal disposition of a request under SLO-aware degraded-mode
+/// serving. Without shedding enabled every request ends `Completed` — the
+/// historical behavior, bitwise-pinned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RequestOutcome {
+    /// Ran to completion (within or past its SLO; goodput separates the
+    /// two — see [`ServeReport::goodput_tokens`]).
+    #[default]
+    Completed,
+    /// Aborted after partial execution: its SLO deadline passed while it
+    /// was in flight or parked, and the slot was reclaimed via the evict
+    /// path.
+    TimedOut,
+    /// Rejected at admission before executing anything: its deadline had
+    /// already passed when a slot finally opened.
+    Shed,
+}
+
 /// Per-request outcome exposed after a continuous replay (the priority /
 /// preemption experiments slice latencies by class with this).
 #[derive(Debug, Clone, Copy)]
@@ -403,6 +472,8 @@ pub struct RequestStat {
     pub priority: Priority,
     pub arrival: f64,
     pub finished: bool,
+    /// Terminal disposition (`Completed` unless deadline shedding fired).
+    pub outcome: RequestOutcome,
     /// Mean per-token latency, queueing and suspension charges included
     /// (the `request_latency` sample of this request).
     pub latency: f64,
@@ -468,6 +539,13 @@ pub struct ContinuousScheduler<'r> {
     park_of: Vec<u32>,
     preemptions: Vec<u32>,
     done: Vec<bool>,
+    /// Terminal disposition per request (`Completed` unless shedding
+    /// fired), index-aligned with `reqs`.
+    outcome: Vec<RequestOutcome>,
+    /// Deadline shedding / timeout aborts for SLO-carrying requests.
+    /// Off by default — the fault-free replay is bitwise-pinned with the
+    /// flag off, and SLO classes historically never aborted.
+    shedding: bool,
     report: ServeReport,
 }
 
@@ -669,8 +747,19 @@ impl<'r> ContinuousScheduler<'r> {
             park_of: Vec::new(),
             preemptions: Vec::new(),
             done: Vec::new(),
+            outcome: Vec::new(),
+            shedding: false,
             report: ServeReport::default(),
         }
+    }
+
+    /// Enable SLO deadline shedding: requests whose deadline has already
+    /// passed are rejected at admission ([`RequestOutcome::Shed`]) and
+    /// in-flight SLO-carrying sequences past their deadline are aborted at
+    /// iteration boundaries via the evict path
+    /// ([`RequestOutcome::TimedOut`]). SLO-less requests are never shed.
+    pub fn set_shedding(&mut self, on: bool) {
+        self.shedding = on;
     }
 
     /// Set the per-iteration prefill token budget (`u32::MAX` = unlimited).
@@ -758,6 +847,7 @@ impl<'r> ContinuousScheduler<'r> {
         reserve_to(&mut self.park_of, total_requests);
         reserve_to(&mut self.preemptions, total_requests);
         reserve_to(&mut self.done, total_requests);
+        reserve_to(&mut self.outcome, total_requests);
         let r = &mut self.report;
         r.token_latency
             .reserve(total_tokens.saturating_sub(r.token_latency.len()));
@@ -777,6 +867,7 @@ impl<'r> ContinuousScheduler<'r> {
                 priority: self.reqs[i].class.priority,
                 arrival: self.reqs[i].arrival,
                 finished: self.done[i],
+                outcome: self.outcome[i],
                 latency: if self.lat_n[i] == 0 {
                     0.0
                 } else {
@@ -816,6 +907,40 @@ impl<'r> ContinuousScheduler<'r> {
                     None => break,
                 },
             };
+            if self.shedding
+                && self.reqs[cand]
+                    .class
+                    .slo
+                    .map_or(false, |s| now >= self.reqs[cand].arrival + s)
+            {
+                // the candidate's deadline has already passed: no admission
+                // can yield a within-SLO completion, so shed it instead of
+                // burning a slot — load shedding at the admission gate. A
+                // preempted candidate surrenders its park slot; one that
+                // executed before being parked counts as timed out.
+                match self.admission {
+                    AdmissionPolicy::Fifo => {
+                        self.waiting.pop_front();
+                    }
+                    AdmissionPolicy::Classes => {
+                        self.class_heap.pop();
+                    }
+                }
+                if self.park_of[cand] != NONE_U32 {
+                    self.free_park.push(self.park_of[cand]);
+                    self.park_of[cand] = NONE_U32;
+                }
+                if self.lat_n[cand] > 0 {
+                    self.outcome[cand] = RequestOutcome::TimedOut;
+                    self.report.timed_out += 1;
+                } else {
+                    self.outcome[cand] = RequestOutcome::Shed;
+                    self.report.shed += 1;
+                }
+                self.done[cand] = true;
+                self.finished += 1;
+                continue;
+            }
             if session.active() >= self.max_batch {
                 // no free slot: under Classes the candidate may evict the
                 // youngest lowest-tier in-flight sequence — but only a
@@ -890,18 +1015,139 @@ impl<'r> ContinuousScheduler<'r> {
         }
         self.session = Some(session.suspend());
     }
-}
 
-impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
-    fn submit(&mut self, req: &'r Request) {
+    /// Abort in-flight SLO-carrying sequences whose deadline passed at
+    /// this iteration boundary, reclaiming their slots through the evict
+    /// path (batch-EAM subtraction + owned-prefetch cancellation come for
+    /// free). Only called with shedding enabled; the cheap scan keeps the
+    /// no-timeout boundary session-free.
+    fn abort_timed_out(&mut self, now: f64) {
+        let past_deadline = |r: &Request| r.class.slo.map_or(false, |s| now >= r.arrival + s);
+        if !self.active.iter().any(|&i| past_deadline(self.reqs[i as usize])) {
+            return;
+        }
+        let state = self.session.take().expect("live session");
+        let mut session = self.engine.resume_session(state);
+        let mut pos = 0;
+        while pos < self.active.len() {
+            let i = self.active[pos] as usize;
+            if !past_deadline(self.reqs[i]) {
+                pos += 1;
+                continue;
+            }
+            // evict into a recycled park slot and immediately return it:
+            // the saved state is discarded — the request is over
+            let park = match self.free_park.pop() {
+                Some(p) => p,
+                None => {
+                    self.parked.push(PreemptedSeq::new(self.layers, self.experts));
+                    (self.parked.len() - 1) as u32
+                }
+            };
+            session.evict(self.slot_of[i] as usize, &mut self.parked[park as usize]);
+            self.free_park.push(park);
+            self.active.swap_remove(pos);
+            self.slot_of[i] = NONE_U32;
+            self.outcome[i] = RequestOutcome::TimedOut;
+            self.report.timed_out += 1;
+            self.done[i] = true;
+            self.finished += 1;
+        }
+        self.session = Some(session.suspend());
+    }
+
+    /// Crash hand-off: surrender every unfinished request this scheduler
+    /// owns, capturing in-flight and preempted sequences as
+    /// [`PreemptedSeq`]s (warm state: traced EAM, position, per-token
+    /// demands) and undispatched/waiting ones bare. Appended to `out` in
+    /// submission-index (= arrival) order, so the router's re-dispatch is
+    /// deterministic. The scheduler is left inert — everything is marked
+    /// locally done (ownership transferred; its report keeps only the
+    /// token samples of iterations it actually executed) — and rejoins
+    /// the dispatch set on recovery via plain `submit`.
+    pub fn fail_over(&mut self, out: &mut Vec<(&'r Request, Option<PreemptedSeq>)>) {
+        let state = self.session.take().expect("fail_over after drain");
+        let mut session = self.engine.resume_session(state);
+        for i in 0..self.reqs.len() {
+            if self.done[i] {
+                continue;
+            }
+            let saved = if self.slot_of[i] != NONE_U32 {
+                let mut s = PreemptedSeq::new(self.layers, self.experts);
+                session.evict(self.slot_of[i] as usize, &mut s);
+                self.slot_of[i] = NONE_U32;
+                Some(s)
+            } else if self.park_of[i] != NONE_U32 {
+                let park = self.park_of[i] as usize;
+                self.park_of[i] = NONE_U32;
+                let s = std::mem::replace(
+                    &mut self.parked[park],
+                    PreemptedSeq::new(self.layers, self.experts),
+                );
+                self.free_park.push(park as u32);
+                Some(s)
+            } else {
+                None
+            };
+            out.push((self.reqs[i], saved));
+            self.done[i] = true;
+            self.finished += 1;
+        }
+        self.next_arrival = self.reqs.len();
+        self.waiting.clear();
+        self.class_heap.clear();
+        self.active.clear();
+        self.session = Some(session.suspend());
+    }
+
+    /// Re-dispatch a failed-over request onto this (surviving) scheduler.
+    /// `saved` is the warm state captured by [`ContinuousScheduler::fail_over`]
+    /// on the crashed replica — parked here under the request's *local*
+    /// index so the normal resume path (`admit_resumed`) continues it with
+    /// identical per-token expert demands. `handoff_t` (the crash-fire
+    /// instant) is clamped to this replica's clock so cross-replica skew
+    /// never charges a negative suspension gap. Bypasses `submit`'s
+    /// arrival-order assertion: a failed-over arrival is legitimately
+    /// older than this replica's newest dispatch.
+    pub fn submit_failover(
+        &mut self,
+        req: &'r Request,
+        saved: Option<PreemptedSeq>,
+        handoff_t: f64,
+    ) {
         assert!(
             self.session.is_some(),
             "submit after drain: the request would be lost"
         );
-        debug_assert!(
-            self.reqs.last().map_or(true, |p| p.arrival <= req.arrival),
-            "requests must be submitted in arrival order"
-        );
+        let i = self.reqs.len();
+        self.push_request(req);
+        if let Some(mut s) = saved {
+            s.set_ext_id(i as u64);
+            let park = match self.free_park.pop() {
+                Some(p) => {
+                    self.parked[p as usize] = s;
+                    p
+                }
+                None => {
+                    self.parked.push(s);
+                    (self.parked.len() - 1) as u32
+                }
+            };
+            self.park_of[i] = park;
+            self.evict_t[i] = handoff_t.min(self.now());
+            self.preemptions[i] += 1;
+        }
+    }
+
+    /// Mutable engine access for the router's fault wiring (per-replica
+    /// link-fault streams are installed through here).
+    pub(crate) fn engine_mut(&mut self) -> &mut SimEngine {
+        &mut self.engine
+    }
+
+    /// The `submit` body minus the arrival-order assertion — shared by the
+    /// normal path and [`ContinuousScheduler::submit_failover`].
+    fn push_request(&mut self, req: &'r Request) {
         self.reqs.push(req);
         self.lat_sum.push(0.0);
         self.lat_n.push(0);
@@ -915,6 +1161,7 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
         self.park_of.push(NONE_U32);
         self.preemptions.push(0);
         self.done.push(false);
+        self.outcome.push(RequestOutcome::Completed);
         // expected *executed iterations*, the token_latency sample budget:
         // under a finite chunk budget a prefill can span up to one
         // iteration per prompt token (see `expected_iterations`) — an
@@ -923,6 +1170,20 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
         self.expected_tokens += expected_iterations(&req.seq, self.prefill_chunk);
         let (nr, nt) = (self.reqs.len(), self.expected_tokens);
         self.reserve_for(nr, nt);
+    }
+}
+
+impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
+    fn submit(&mut self, req: &'r Request) {
+        assert!(
+            self.session.is_some(),
+            "submit after drain: the request would be lost"
+        );
+        debug_assert!(
+            self.reqs.last().map_or(true, |p| p.arrival <= req.arrival),
+            "requests must be submitted in arrival order"
+        );
+        self.push_request(req);
     }
 
     /// One engine iteration (admissions at the boundary included), or one
@@ -946,6 +1207,11 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                 }
                 self.next_arrival += 1;
             }
+            if self.shedding {
+                // timeout aborts happen before admission so the freed
+                // slots are reusable at this very boundary
+                self.abort_timed_out(now);
+            }
             self.admit_and_preempt();
             if self.active.is_empty() {
                 if self.next_arrival >= self.reqs.len() {
@@ -968,6 +1234,10 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
             let ran = session.step(|id| &reqs[id as usize].seq, &mut self.step);
             debug_assert!(ran, "active slots must step");
             self.session = Some(session.suspend());
+            // the boundary the step just advanced to — every sequence the
+            // step finished completed at exactly this instant (goodput's
+            // within-SLO test below)
+            let t_end = self.now();
             self.report.batches += 1; // = engine iterations under this scheduler
             let dt = self.step.latency();
             for &ext in &self.step.executed {
@@ -1029,6 +1299,10 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                 }
                 self.report.tokens += self.reqs[i].seq.total_tokens() as u64;
                 self.report.requests += 1;
+                let r = self.reqs[i];
+                if r.class.slo.map_or(true, |s| t_end <= r.arrival + s) {
+                    self.report.goodput_tokens += r.seq.total_tokens() as u64;
+                }
                 self.done[i] = true;
                 self.slot_of[i] = NONE_U32;
                 self.finished += 1;
@@ -1136,6 +1410,11 @@ impl<'r> ChunkedScheduler<'r> {
     /// Per-request outcomes (id, class, latency, TTFT, preemption count).
     pub fn request_stats(&self) -> Vec<RequestStat> {
         self.inner.request_stats()
+    }
+
+    /// See [`ContinuousScheduler::set_shedding`].
+    pub fn set_shedding(&mut self, on: bool) {
+        self.inner.set_shedding(on);
     }
 }
 
@@ -1599,6 +1878,67 @@ mod tests {
         let again = st.drain();
         assert_eq!(again.requests, 0);
         assert_eq!(again.demands, 0);
+    }
+
+    #[test]
+    fn try_new_propagates_validation_errors() {
+        assert!(Batcher::try_new(0, 0.5).is_err());
+        assert!(Batcher::try_new(4, f64::NAN).is_err());
+        assert!(Batcher::try_new(4, -1.0).is_err());
+        let b = Batcher::try_new(4, 0.5).unwrap();
+        assert_eq!(b.max_batch, 4);
+    }
+
+    #[test]
+    fn goodput_equals_throughput_without_slos() {
+        // no SLOs anywhere: every completed token is a goodput token
+        let (report, _) = run_continuous(12, 2.0, 4, Batcher::new(8, 0.5), AdmissionPolicy::Fifo);
+        assert_eq!(report.goodput_tokens, report.tokens);
+        assert_eq!(report.goodput().to_bits(), report.token_throughput().to_bits());
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.timed_out, 0);
+    }
+
+    #[test]
+    fn shedding_converts_hopeless_requests_into_shed_or_timeout() {
+        let run = |shedding: bool| {
+            let (spec, mut reqs, mut w) = mk_requests(30, 50.0, 9);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.class = if i % 2 == 0 {
+                    RequestClass::interactive().with_slo(0.05) // hopeless under overload
+                } else {
+                    RequestClass::batch()
+                };
+            }
+            let eng = engine_for(&spec, &mut w);
+            let mut s = ContinuousScheduler::new(eng, Batcher::new(2, 0.1), AdmissionPolicy::Classes);
+            s.set_shedding(shedding);
+            s.submit_all(&reqs);
+            let report = s.drain();
+            (report, s.request_stats())
+        };
+        let (off, off_stats) = run(false);
+        assert_eq!(off.requests, 30, "shedding off: everything completes");
+        assert_eq!(off.shed + off.timed_out, 0);
+        assert!(off_stats.iter().all(|st| st.outcome == RequestOutcome::Completed));
+
+        let (on, on_stats) = run(true);
+        assert!(
+            on.shed + on.timed_out > 0,
+            "a 50 rps overload with 50 ms SLOs must shed or abort"
+        );
+        assert_eq!(on.requests + on.shed + on.timed_out, 30);
+        assert!(on.goodput_tokens <= on.tokens);
+        // every request still reaches a terminal state; SLO-less batch
+        // requests are never shed
+        assert!(on_stats.iter().all(|st| st.finished));
+        assert!(on_stats
+            .iter()
+            .filter(|st| st.priority == Priority::Batch)
+            .all(|st| st.outcome == RequestOutcome::Completed));
+        // shedding frees capacity: the work the survivors represent is a
+        // subset, so makespan cannot grow
+        assert!(on.makespan <= off.makespan);
     }
 
     #[test]

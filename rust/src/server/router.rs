@@ -30,11 +30,17 @@
 use std::collections::VecDeque;
 
 use crate::engine::{prefill_chunk_tokens, SimEngine};
+use crate::faults::{CrashWindow, FaultPlan};
 use crate::server::{
     expected_iterations, AdmissionPolicy, Batcher, ContinuousScheduler, Scheduler, ServeReport,
 };
 use crate::trace::{EamcMatcher, MatcherIndex};
 use crate::workload::{Request, SequenceActivation};
+
+/// Per-replica fault-stream seed stride: replica `k` draws its link faults
+/// from `plan.seed + k * 0x5EED`, so replicas fail independently yet the
+/// whole timeline stays a pure function of the plan seed.
+const REPLICA_FAULT_SEED_STRIDE: u64 = 0x5EED;
 
 /// How the router picks a replica for each arriving request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -94,6 +100,12 @@ pub struct Router<'r> {
     scorers: Vec<EamcMatcher>,
     total_requests: usize,
     total_tokens: usize,
+    /// Replica crash/recover windows from the fault plan (empty = the
+    /// historical immortal-replica replay, bitwise-preserved: every fault
+    /// hook below early-outs on `is_empty`).
+    fault_windows: Vec<CrashWindow>,
+    /// Whether each window's crash has fired (captured + re-dispatched).
+    fired: Vec<bool>,
 }
 
 impl<'r> Router<'r> {
@@ -120,6 +132,40 @@ impl<'r> Router<'r> {
             scorers: (0..n).map(|_| EamcMatcher::new()).collect(),
             total_requests: 0,
             total_tokens: 0,
+            fault_windows: Vec::new(),
+            fired: Vec::new(),
+        }
+    }
+
+    /// Install a fault plan across the replica set: the link-fault portion
+    /// (failure probabilities, retry policy, brownouts) lands on every
+    /// replica's engine under a per-replica derived seed
+    /// ([`REPLICA_FAULT_SEED_STRIDE`]), and the crash/recover windows are
+    /// kept by the router itself — a window fires at the first iteration
+    /// boundary its replica's clock reaches, capturing in-flight sequences
+    /// as warm [`crate::engine::PreemptedSeq`]s and re-dispatching them
+    /// (and all waiting work) to survivors; the replica rejoins the
+    /// dispatch set once its recover instant passes. An empty plan leaves
+    /// the replay bitwise untouched.
+    pub fn with_fault_plan(mut self, plan: &FaultPlan) -> Router<'r> {
+        if plan.affects_links() {
+            for (k, rep) in self.replicas.iter_mut().enumerate() {
+                let mut p = plan.clone();
+                p.seed = plan.seed.wrapping_add(k as u64 * REPLICA_FAULT_SEED_STRIDE);
+                p.crashes.clear();
+                rep.engine_mut().set_fault_plan(&p);
+            }
+        }
+        self.fault_windows = plan.crashes.clone();
+        self.fired = vec![false; self.fault_windows.len()];
+        self
+    }
+
+    /// Enable SLO deadline shedding on every replica (see
+    /// [`ContinuousScheduler::set_shedding`]).
+    pub fn set_shedding(&mut self, on: bool) {
+        for rep in &mut self.replicas {
+            rep.set_shedding(on);
         }
     }
 
@@ -145,28 +191,79 @@ impl<'r> Router<'r> {
         &self.replicas
     }
 
-    /// Pick the replica for `req` under the configured policy.
-    fn pick_replica(&mut self, req: &Request) -> usize {
+    /// Does window `w` make replica `k` undispatchable at instant `t`?
+    /// Down at the dispatch instant itself, or — while the replica is
+    /// still busy, so its clock is live — down at its current boundary (a
+    /// fired crash whose recover instant the clock hasn't reached). An
+    /// idle replica's frozen clock is deliberately ignored: a new submit
+    /// idle-hops it to the arrival instant, past the window.
+    fn window_blocks(&self, w: &CrashWindow, k: usize, t: f64) -> bool {
+        w.replica == k
+            && (w.down_at(t) || (self.replicas[k].has_work() && w.down_at(self.replicas[k].now())))
+    }
+
+    /// Is replica `k` inside any crash window at dispatch instant `t`?
+    /// O(0) with no fault plan.
+    fn replica_down(&self, k: usize, t: f64) -> bool {
+        self.fault_windows
+            .iter()
+            .any(|w| self.window_blocks(w, k, t))
+    }
+
+    /// Pick the replica for `req` (dispatched at instant `t`) under the
+    /// configured policy, skipping crashed replicas. With no fault plan
+    /// the down-filter is free and the historical pick is bitwise
+    /// unchanged.
+    fn pick_replica(&mut self, req: &Request, t: f64) -> usize {
         let n = self.replicas.len();
+        if !self.fault_windows.is_empty() && (0..n).all(|k| self.replica_down(k, t)) {
+            // total blackout: park the request on the replica that
+            // recovers soonest — it waits in that backlog instead of
+            // deadlocking the dispatch gate
+            let mut best = 0;
+            let mut best_rec = f64::INFINITY;
+            for k in 0..n {
+                let mut rec = 0.0f64;
+                for wi in 0..self.fault_windows.len() {
+                    let w = self.fault_windows[wi].clone();
+                    if self.window_blocks(&w, k, t) {
+                        rec = rec.max(w.recover);
+                    }
+                }
+                if rec < best_rec {
+                    best_rec = rec;
+                    best = k;
+                }
+            }
+            return best;
+        }
         match self.policy {
-            RoutingPolicy::RoundRobin => {
+            RoutingPolicy::RoundRobin => loop {
                 let k = self.rr_next % n;
                 self.rr_next += 1;
-                k
-            }
+                if !self.replica_down(k, t) {
+                    return k;
+                }
+            },
             RoutingPolicy::LeastLoaded => {
-                let mut best = 0;
-                for k in 1..n {
-                    if self.replicas[k].load() < self.replicas[best].load() {
+                let mut best = usize::MAX;
+                for k in 0..n {
+                    if self.replica_down(k, t) {
+                        continue;
+                    }
+                    if best == usize::MAX || self.replicas[k].load() < self.replicas[best].load() {
                         best = k;
                     }
                 }
                 best
             }
             RoutingPolicy::TaskAffinity => {
-                let mut best = 0;
+                let mut best = usize::MAX;
                 let mut best_score = f64::INFINITY;
                 for k in 0..n {
+                    if self.replica_down(k, t) {
+                        continue;
+                    }
                     let eamc = self.replicas[k].engine().eamc();
                     let scorer = &mut self.scorers[k];
                     scorer.attach(eamc);
@@ -180,12 +277,45 @@ impl<'r> Router<'r> {
                     let dist = scorer.nearest().map_or(0.0, |(_, d)| d);
                     let load = self.replicas[k].load() as f64 / self.max_batch as f64;
                     let score = dist + AFFINITY_LOAD_WEIGHT * load;
-                    if score < best_score {
+                    if best == usize::MAX || score < best_score {
                         best_score = score;
                         best = k;
                     }
                 }
                 best
+            }
+        }
+    }
+
+    /// Fire every crash window whose replica's clock has reached its crash
+    /// instant: the replica's unfinished work — in-flight sequences as
+    /// warm [`crate::engine::PreemptedSeq`] state, waiting/undispatched
+    /// requests bare — is captured via
+    /// [`ContinuousScheduler::fail_over`] and immediately re-dispatched to
+    /// the surviving replicas under the routing policy (warm failover:
+    /// `admit_resumed` on the survivor continues each sequence with
+    /// identical per-token expert demands). A replica that idles past its
+    /// whole window never fires it — there was nothing to lose — and the
+    /// window degrades to pure dispatch filtering.
+    fn fire_due_crashes(&mut self) {
+        if self.fault_windows.is_empty() {
+            return;
+        }
+        for wi in 0..self.fault_windows.len() {
+            if self.fired[wi] {
+                continue;
+            }
+            let w = self.fault_windows[wi].clone();
+            if self.replicas[w.replica].now() < w.crash {
+                continue;
+            }
+            self.fired[wi] = true;
+            let handoff_t = self.replicas[w.replica].now();
+            let mut captured = Vec::new();
+            self.replicas[w.replica].fail_over(&mut captured);
+            for (req, saved) in captured {
+                let dst = self.pick_replica(req, handoff_t);
+                self.replicas[dst].submit_failover(req, saved, handoff_t);
             }
         }
     }
@@ -289,13 +419,14 @@ impl<'r> Scheduler<'r> for Router<'r> {
     /// One router event: dispatch the next due arrival, or advance the
     /// earliest-bounded replica by one scheduling quantum.
     fn tick(&mut self) -> bool {
+        self.fire_due_crashes();
         if let Some(&req) = self.pending.front() {
             // safe to route once no busy replica can produce an earlier
             // event (idle replicas don't change state on their own)
             let due = self.frontier().map_or(true, |f| req.arrival <= f);
             if due {
                 self.pending.pop_front();
-                let k = self.pick_replica(req);
+                let k = self.pick_replica(req, req.arrival);
                 self.replicas[k].submit(req);
                 return true;
             }
@@ -584,6 +715,119 @@ mod tests {
             counts,
             vec![0, 5],
             "first-chunk signatures must still route task 6 to its replica"
+        );
+    }
+
+    #[test]
+    fn empty_fault_plan_router_replays_bitwise() {
+        let run = |plan: Option<FaultPlan>| -> ServeReport {
+            let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
+            let reqs = mk_requests(16, 8.0, 3);
+            let mut router = Router::new(
+                engines,
+                Batcher::new(4, 0.1),
+                RoutingPolicy::RoundRobin,
+                AdmissionPolicy::Fifo,
+            );
+            if let Some(p) = plan {
+                router = router.with_fault_plan(&p);
+            }
+            router.submit_all(&reqs);
+            router.drain()
+        };
+        let base = run(None);
+        let empty = run(Some(FaultPlan::new(99)));
+        assert_eq!(base.requests, empty.requests);
+        assert_eq!(base.tokens, empty.tokens);
+        assert_eq!(base.batches, empty.batches);
+        assert_eq!(base.makespan.to_bits(), empty.makespan.to_bits());
+        assert_eq!(base.demands, empty.demands);
+        assert_eq!(base.gpu_hits, empty.gpu_hits);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(base.token_latency.samples()),
+            bits(empty.token_latency.samples()),
+            "an empty fault plan must not change the router replay"
+        );
+        assert_eq!(empty.transfer_retries, 0);
+        assert_eq!(empty.demand_failures, 0);
+    }
+
+    #[test]
+    fn replica_crash_fails_over_in_flight_work_to_the_survivor() {
+        let spec = ModelSpec::preset("switch-base-32").unwrap();
+        let mut w = Workload::new(&spec, DatasetPreset::by_name("mixed").unwrap(), 0x77 ^ 3);
+        // tight arrivals: both replicas are mid-flight when replica 0 dies
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request::new(i as u64, i as f64 * 0.01, w.gen_sequence()))
+            .collect();
+        let mut plan = FaultPlan::new(5);
+        plan.crashes.push(CrashWindow {
+            replica: 0,
+            crash: 0.02,
+            recover: f64::INFINITY, // never comes back
+        });
+        let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
+        let mut router = Router::new(
+            engines,
+            Batcher::new(4, 0.1),
+            RoutingPolicy::RoundRobin,
+            AdmissionPolicy::Fifo,
+        )
+        .with_fault_plan(&plan);
+        router.submit_all(&reqs);
+        let report = router.drain();
+        assert_eq!(report.requests, 4, "every request survives the crash");
+        assert_eq!(report.request_latency.len(), 4);
+        // the survivor ended up owning everything replica 0 lost
+        let survivor_stats = router.replicas()[1].request_stats();
+        assert!(
+            survivor_stats.len() >= 3,
+            "failed-over work must re-dispatch to the survivor (got {})",
+            survivor_stats.len()
+        );
+        assert!(
+            survivor_stats.iter().any(|s| s.preemptions > 0),
+            "at least one sequence must resume from warm captured state"
+        );
+        assert!(survivor_stats.iter().all(|s| s.finished));
+    }
+
+    #[test]
+    fn recovered_replica_rejoins_the_dispatch_set() {
+        let spec = ModelSpec::preset("switch-base-32").unwrap();
+        let mut w = Workload::new(&spec, DatasetPreset::by_name("mixed").unwrap(), 0x77 ^ 9);
+        // burst one: both replicas busy when replica 0 dies; burst two
+        // arrives long after recovery and must spread across both again
+        let mut reqs: Vec<Request> = (0..4)
+            .map(|i| Request::new(i as u64, i as f64 * 0.01, w.gen_sequence()))
+            .collect();
+        for i in 0..4 {
+            reqs.push(Request::new(4 + i as u64, 1000.0 + i as f64 * 0.01, w.gen_sequence()));
+        }
+        let mut plan = FaultPlan::new(5);
+        plan.crashes.push(CrashWindow {
+            replica: 0,
+            crash: 0.02,
+            recover: 500.0,
+        });
+        let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
+        let mut router = Router::new(
+            engines,
+            Batcher::new(4, 0.1),
+            RoutingPolicy::RoundRobin,
+            AdmissionPolicy::Fifo,
+        )
+        .with_fault_plan(&plan);
+        router.submit_all(&reqs);
+        let report = router.drain();
+        assert_eq!(report.requests, 8);
+        // replica 0 received post-recovery dispatches (round-robin resumes
+        // including it once the window has passed)
+        let r0 = router.replicas()[0].request_stats();
+        assert!(
+            r0.iter().any(|s| s.arrival >= 1000.0),
+            "a recovered replica must rejoin the dispatch set"
         );
     }
 

@@ -131,6 +131,28 @@ fn small_grid() -> Vec<ServeConfig> {
         cfg.eamc.capacity = 6;
         grid.push(cfg);
     }
+    // a fault-injected point: transfer failures, a brownout, SLOs and
+    // deadline shedding together — the degraded path must be exactly as
+    // pooled-deterministic as the clean ones (every fault draw comes from
+    // a seeded per-link stream, never from wall time)
+    let mut cfg = ServeConfig::default();
+    cfg.model = "switch-base-32".into();
+    // 4GB GPU: offloading engages, so the injected transfer faults land
+    cfg.memory.gpu_gb = 4.0;
+    cfg.scheduler = SchedulerKind::Continuous;
+    cfg.workload.rps = 3.0;
+    cfg.workload.duration = 6.0;
+    cfg.workload.interactive_frac = 0.3;
+    cfg.workload.interactive_slo = 1.0;
+    cfg.eamc.trace_sequences = 25;
+    cfg.eamc.capacity = 6;
+    cfg.faults.ssd_failure_p = 0.1;
+    cfg.faults.gpu_failure_p = 0.1;
+    cfg.faults.brownout = 0.5;
+    cfg.faults.brownout_start = 1.0;
+    cfg.faults.brownout_end = 4.0;
+    cfg.faults.shedding = true;
+    grid.push(cfg);
     grid
 }
 
@@ -139,6 +161,14 @@ fn assert_reports_identical(a: &ServeReport, b: &ServeReport, ctx: &str) {
     assert_eq!(a.requests, b.requests, "{ctx}: requests");
     assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
     assert_eq!(a.batches, b.batches, "{ctx}: batches");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed");
+    assert_eq!(a.timed_out, b.timed_out, "{ctx}: timed out");
+    assert_eq!(a.goodput_tokens, b.goodput_tokens, "{ctx}: goodput tokens");
+    assert_eq!(a.demand_failures, b.demand_failures, "{ctx}: demand failures");
+    assert_eq!(
+        a.transfer_retries, b.transfer_retries,
+        "{ctx}: transfer retries"
+    );
     assert_eq!(
         a.makespan.to_bits(),
         b.makespan.to_bits(),

@@ -24,13 +24,17 @@
 
 use std::collections::{BinaryHeap, VecDeque};
 
-use moe_infinity::benchsuite::{build_engine_with, build_requests, run_serve_with};
+use moe_infinity::benchsuite::{
+    build_engine_with, build_replica_engines_with, build_requests, run_serve_with,
+};
 use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::faults::FaultPlan;
 use moe_infinity::model::ModelSpec;
 use moe_infinity::server::{
-    admit_key, pick_candidate, AdmissionPolicy, Batcher, Router, RoutingPolicy, Scheduler,
-    ServeReport,
+    admit_key, pick_candidate, AdmissionPolicy, Batcher, ChunkedScheduler, ContinuousScheduler,
+    Router, RoutingPolicy, Scheduler, ServeReport, StaticScheduler,
 };
+use moe_infinity::trace::Eam;
 use moe_infinity::util::{Pool, Rng};
 use moe_infinity::workload::{DatasetPreset, Priority, Request, RequestClass, Workload};
 
@@ -55,6 +59,14 @@ fn assert_bitwise(a: &ServeReport, b: &ServeReport, ctx: &str) {
     assert_eq!(a.demands, b.demands, "{ctx}: demands");
     assert_eq!(a.gpu_hits, b.gpu_hits, "{ctx}: gpu hits");
     assert_eq!(a.prefetch_bytes, b.prefetch_bytes, "{ctx}: prefetch bytes");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed");
+    assert_eq!(a.timed_out, b.timed_out, "{ctx}: timed out");
+    assert_eq!(a.goodput_tokens, b.goodput_tokens, "{ctx}: goodput tokens");
+    assert_eq!(a.demand_failures, b.demand_failures, "{ctx}: demand failures");
+    assert_eq!(
+        a.transfer_retries, b.transfer_retries,
+        "{ctx}: transfer retries"
+    );
     assert_eq!(
         a.makespan.to_bits(),
         b.makespan.to_bits(),
@@ -177,6 +189,194 @@ fn chunked_composes_with_classes_and_router_deterministically() {
     assert_bitwise(&a, &b, "chunked+classes+affinity");
     assert!(a.requests > 0);
     assert_eq!(a.request_latency.len() as u64, a.requests);
+}
+
+/// The fault layer's compatibility contract: an explicitly installed
+/// **empty** `FaultPlan` (no failure probabilities, no brownouts, no
+/// crash windows) must replay the entire existing stack bitwise — the
+/// static, continuous, and chunked schedulers and a 2-replica router.
+/// `MemorySim` only materializes fault state when a plan perturbs links,
+/// so this pins that the disabled path is the fault-free path, not an
+/// equivalent-looking reimplementation of it.
+#[test]
+fn empty_fault_plan_replays_every_scheduler_bitwise() {
+    let pool = Pool::serial();
+    let empty = |cfg: &ServeConfig| FaultPlan::new(cfg.seed ^ 0xFA57);
+    for sched in [
+        SchedulerKind::Static,
+        SchedulerKind::Continuous,
+        SchedulerKind::Chunked,
+    ] {
+        let mut cfg = base_cfg(3.0);
+        cfg.scheduler = sched;
+        if sched == SchedulerKind::Chunked {
+            cfg.prefill_chunk = 32;
+        }
+        let baseline = run_serve_with(&cfg, &pool).expect("fault-free serve");
+        let requests = build_requests(&cfg).expect("requests");
+        let mut engine = build_engine_with(&cfg, &pool).expect("engine");
+        engine.set_fault_plan(&empty(&cfg));
+        let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+        let faulted = match sched {
+            SchedulerKind::Static => {
+                let mut s = StaticScheduler::new(engine, batcher);
+                s.submit_all(&requests);
+                s.drain()
+            }
+            SchedulerKind::Continuous => {
+                let mut s = ContinuousScheduler::new(engine, batcher, cfg.priority);
+                s.submit_all(&requests);
+                s.drain()
+            }
+            SchedulerKind::Chunked => {
+                let mut s = ChunkedScheduler::new(
+                    engine,
+                    batcher,
+                    cfg.priority,
+                    cfg.prefill_chunk_u32(),
+                );
+                s.submit_all(&requests);
+                s.drain()
+            }
+        };
+        assert_eq!(faulted.transfer_retries, 0, "{sched:?}: no retries");
+        assert_eq!(faulted.demand_failures, 0, "{sched:?}: no failures");
+        assert_eq!(faulted.shed, 0, "{sched:?}: no shedding");
+        assert_eq!(faulted.timed_out, 0, "{sched:?}: no timeouts");
+        assert_bitwise(&faulted, &baseline, &format!("{sched:?} empty plan"));
+    }
+    // 2-replica router: the same pin through the dispatch layer
+    let mut cfg = base_cfg(3.0);
+    cfg.replicas = 2;
+    let baseline = run_serve_with(&cfg, &pool).expect("fault-free router");
+    let requests = build_requests(&cfg).expect("requests");
+    let engines = build_replica_engines_with(&cfg, &pool).expect("engines");
+    let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    let mut router =
+        Router::new(engines, batcher, cfg.routing, cfg.priority).with_fault_plan(&empty(&cfg));
+    router.submit_all(&requests);
+    let faulted = router.drain();
+    assert_bitwise(&faulted, &baseline, "2-replica router empty plan");
+}
+
+/// Satellite of the fault-injection PR (extends the PR 4 preempt/resume
+/// differential to the cross-replica case): a sequence evicted by a
+/// replica crash and resumed **on a different engine** must produce
+/// identical per-token expert demands to the uninterrupted run. Per-token
+/// demands are a pure function of the replayed trace (every activated
+/// expert is demanded, hit or miss), so the pin is exact: the traced EAM
+/// at handoff equals the trace prefix, and the crashed + survivor demand
+/// totals equal the uninterrupted run's.
+#[test]
+fn replica_crash_failover_preserves_per_token_expert_demands() {
+    let cfg = base_cfg(1.0);
+    let pool = Pool::serial();
+    let requests = build_requests(&cfg).expect("requests");
+    let req = &requests[0];
+    let iters = req.seq.iterations();
+    assert!(iters >= 2, "need a multi-iteration request");
+    let mk = || {
+        let engine = build_engine_with(&cfg, &pool).expect("engine");
+        let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+        ContinuousScheduler::new(engine, batcher, AdmissionPolicy::Fifo)
+    };
+
+    // reference: the request runs uninterrupted on one replica
+    let mut reference = mk();
+    reference.submit(req);
+    let whole = reference.drain();
+    assert_eq!(whole.requests, 1);
+
+    // crashed replica: partial work, then the router-style surrender. The
+    // crash instant is scanned until it lands strictly mid-flight (a fixed
+    // fraction could fall inside the long prefill iteration or past the
+    // last boundary, which the other asserts cover trivially).
+    let mut captured = None;
+    for frac in [0.5, 0.65, 0.8, 0.9, 0.35, 0.95] {
+        let mut crashed = mk();
+        crashed.submit(req);
+        let t_mid = req.arrival + frac * (whole.makespan - req.arrival);
+        crashed.tick(t_mid);
+        let mut handed = Vec::new();
+        crashed.fail_over(&mut handed);
+        assert_eq!(handed.len(), 1, "exactly the one request surrenders");
+        let (r0, saved) = handed.pop().unwrap();
+        if let Some(s) = saved {
+            let done = s.iterations_done() as usize;
+            if done > 0 && done < iters {
+                captured = Some((crashed.drain(), r0, s, t_mid));
+                break;
+            }
+        }
+    }
+    let (partial, r0, saved, t_mid) =
+        captured.expect("some crash instant must interrupt mid-flight");
+    assert_eq!(partial.requests, 0, "handed-over work is not completed here");
+    let done = saved.iterations_done() as usize;
+
+    // the saved EAM is exactly the executed trace prefix
+    let spec = ModelSpec::preset("switch-base-32").unwrap();
+    let mut prefix = Eam::new(spec.n_layers, spec.experts_per_layer);
+    for it in 0..done {
+        for l in 0..spec.n_layers {
+            for &(e, c) in &req.seq.routes[it][l] {
+                prefix.record(l, e as usize, c);
+            }
+        }
+    }
+    assert_eq!(
+        saved.eam(),
+        &prefix,
+        "handoff must carry the traced EAM of the executed prefix"
+    );
+
+    // survivor: resumes warm and finishes the request
+    let mut survivor = mk();
+    survivor.submit_failover(r0, Some(saved), t_mid);
+    let rest = survivor.drain();
+    assert_eq!(rest.requests, 1, "the survivor completes the request");
+    assert_eq!(
+        partial.tokens + rest.tokens,
+        whole.tokens,
+        "every token executes exactly once across the crash"
+    );
+    assert_eq!(
+        partial.demands + rest.demands,
+        whole.demands,
+        "per-token expert demands must match the uninterrupted run"
+    );
+}
+
+/// Deadline shedding is opt-in and scheduler-scoped: with it off, an
+/// overloaded replay completes everything late; with it on, hopeless
+/// SLO-carrying requests are shed at admission or aborted at iteration
+/// boundaries and the goodput numerator only counts within-SLO tokens.
+#[test]
+fn shedding_is_deterministic_and_only_drops_slo_work() {
+    let mut cfg = base_cfg(8.0);
+    cfg.priority = AdmissionPolicy::Classes;
+    cfg.workload.interactive_frac = 0.5;
+    cfg.workload.interactive_slo = 0.2; // tight: overload makes some hopeless
+    cfg.faults.shedding = true;
+    let a = run_serve_with(&cfg, &Pool::serial()).expect("shedding serve");
+    let b = run_serve_with(&cfg, &Pool::serial()).expect("shedding serve again");
+    assert_bitwise(&a, &b, "shedding replay");
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.timed_out, b.timed_out);
+    assert!(
+        a.shed + a.timed_out > 0,
+        "a 0.2s SLO at rps 8 must shed or abort something"
+    );
+    assert!(a.goodput_tokens <= a.tokens);
+    // every non-SLO request still completes: only SLO work may be dropped
+    let mut off = cfg.clone();
+    off.faults.shedding = false;
+    let full = run_serve_with(&off, &Pool::serial()).expect("no-shedding serve");
+    assert_eq!(
+        a.requests + a.shed + a.timed_out,
+        full.requests,
+        "shedding must account for every request"
+    );
 }
 
 #[test]

@@ -6,6 +6,7 @@
 #   scripts/bench_compare.sh BENCH_scheduler.before.json BENCH_scheduler.json
 #   scripts/bench_compare.sh BENCH_router.before.json BENCH_router.json
 #   scripts/bench_compare.sh BENCH_prefill.before.json BENCH_prefill.json
+#   scripts/bench_compare.sh BENCH_faults.before.json BENCH_faults.json
 #
 # Values are ns/op for the perf_* benches and seconds / tokens-per-second
 # for BENCH_scheduler.json and BENCH_router.json (`*_p50_s`/`*_p99_s`/
@@ -19,6 +20,12 @@
 # BENCH_prefill.json rows are per chunk-size point (`chunk16_*`,
 # `chunk_inf_*`, `continuous_*`): `*_decode_p99_s` is the pure-decode
 # iteration-latency tail chunking exists to cap. Rows present
+# BENCH_faults.json rows are per failure-probability point (`f00_*`,
+# `f15_*`, ...): `*_goodput_tps` is within-SLO tokens/s and behaves like
+# `_tput` (ratio < 1 means the new run is better); `*_shed`/`*_timeout`/
+# `*_retries`/`*_demand_failures` are counts (lower is better, so
+# speedup > 1 means fewer); `failover_*_requests` must stay equal
+# between the clean and crashed runs. Rows present
 # in only one file print with a '-' placeholder. `*_speedup_*` rows are
 # already ratios; the old/new columns still show them, the speedup column
 # then compares the ratios themselves.

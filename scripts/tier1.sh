@@ -42,6 +42,13 @@ echo "== perf_prefill (smoke mode -> BENCH_prefill.json)"
 # finite chunk caps decode p99, and that it stays within the tokens/s band
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_prefill
 
+echo "== perf_faults (smoke mode -> BENCH_faults.json)"
+# goodput under a transfer-failure-probability sweep on the same overload
+# trace; asserts an empty fault plan replays the fault-free stack bitwise,
+# that goodput holds the no-cliff band at the mid fault point, and that a
+# replica crash loses zero requests via warm failover
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_faults
+
 echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
 # the suite pins explicit pool sizes internally (and now also the
 # scheduler differential: continuous at max_batch=1 == static, bitwise);
@@ -60,3 +67,4 @@ cat BENCH_offline.json
 cat BENCH_scheduler.json
 cat BENCH_router.json
 cat BENCH_prefill.json
+cat BENCH_faults.json
