@@ -1,0 +1,244 @@
+//! §Events — the discrete-event router calendar: bitwise replay + host time.
+//!
+//! PR 7 replaced the router's lockstep polling loop (scan every replica's
+//! `next_event_bound` each tick) with a versioned binary-heap calendar and
+//! run-to-frontier batching. The contract is double-ended:
+//!
+//! 1. **Bitwise**: the calendar must *replay* the lockstep loop exactly —
+//!    same reports, same per-token expert demands, same fault counters —
+//!    under every scheduler kind and fault plan. The old loop survives as
+//!    `Router::drain_lockstep` precisely so this bench can diff the two
+//!    end-to-end on a flash-crowd trace with link faults and a mid-replay
+//!    replica crash.
+//! 2. **Host wall-clock**: at N=16 replicas under a thousands-of-rps flash
+//!    crowd the calendar must finish the same replay >= 2x faster than the
+//!    lockstep scan. This is the repo's first *host-time* regression
+//!    surface (everything before PR 7 pinned simulated time only), so the
+//!    timings land in `BENCH_events.json` for `scripts/bench_compare.sh`.
+//!
+//! Sweep: N in {2, 4, 16, 64} replicas (smoke: {2, 16}), each at a flash
+//! crowd peaking at thousands of arrivals/s. Per N the JSON records
+//! `events_lock_ms_n{N}`, `events_cal_ms_n{N}`, `events_speedup_n{N}` and
+//! `events_bitwise_n{N}` (1.0 = identical). Rows are written before the
+//! acceptance asserts so a miss leaves the full table for diagnosis.
+//!
+//! Set `MOE_BENCH_SMOKE=1` for the fast CI pass (scripts/tier1.sh does).
+
+use moe_infinity::benchsuite::{build_replica_engines_with, build_requests, BenchJson, Table};
+use moe_infinity::config::{SchedulerKind, ServeConfig};
+use moe_infinity::faults::{CrashWindow, FaultPlan};
+use moe_infinity::server::{Batcher, Router, Scheduler, ServeReport};
+use moe_infinity::util::Pool;
+use moe_infinity::workload::Request;
+use std::time::Instant;
+
+/// N=16 calendar-vs-lockstep host-time floor (EXPERIMENTS.md §Events).
+const SPEEDUP_FLOOR_N16: f64 = 2.0;
+
+/// Flash-crowd serving config at `n` replicas. The default 24GB GPU keeps
+/// the model fully resident, so the memory sim is near-idle and the router
+/// loop itself dominates host time — which is exactly the surface this
+/// bench regresses. The flash peak scales with N so a 64-replica point
+/// really sees thousands of arrivals per second.
+fn cfg_for(n: usize, smoke: bool) -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.model = "switch-base-32".into();
+    cfg.dataset = "mixed".into();
+    cfg.scheduler = SchedulerKind::Continuous;
+    cfg.replicas = n;
+    cfg.seed = 0xE7E47 ^ n as u64;
+    cfg.workload.duration = if smoke { 3.0 } else { 8.0 };
+    cfg.workload.rps = n as f64 * 8.0;
+    cfg.workload.flash_rps = n as f64 * if smoke { 100.0 } else { 250.0 };
+    cfg.workload.flash_start = cfg.workload.duration * 0.4;
+    cfg.workload.flash_end = cfg.workload.duration * 0.6;
+    cfg.batching.max_batch = 8;
+    cfg.batching.max_wait = 0.25;
+    cfg.eamc.trace_sequences = if smoke { 30 } else { 60 };
+    cfg.eamc.capacity = if smoke { 8 } else { 16 };
+    cfg
+}
+
+fn mk_router(cfg: &ServeConfig, pool: &Pool, plan: Option<&FaultPlan>) -> Router {
+    let engines = build_replica_engines_with(cfg, pool).expect("engines");
+    let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    let mut router = Router::new(engines, batcher, cfg.routing, cfg.priority);
+    if let Some(p) = plan {
+        router = router.with_fault_plan(p);
+    }
+    router
+}
+
+/// Non-panicking bitwise diff; returns the first mismatch's description so
+/// the JSON row can record the failure before the final assert fires.
+fn diff_reports(a: &mut ServeReport, b: &mut ServeReport) -> Option<String> {
+    if a.requests != b.requests {
+        return Some(format!("requests {} vs {}", a.requests, b.requests));
+    }
+    if a.tokens != b.tokens {
+        return Some(format!("tokens {} vs {}", a.tokens, b.tokens));
+    }
+    if a.batches != b.batches {
+        return Some(format!("batches {} vs {}", a.batches, b.batches));
+    }
+    if a.demands != b.demands {
+        return Some(format!("demands {} vs {}", a.demands, b.demands));
+    }
+    if a.gpu_hits != b.gpu_hits {
+        return Some(format!("gpu_hits {} vs {}", a.gpu_hits, b.gpu_hits));
+    }
+    if a.transfer_retries != b.transfer_retries {
+        return Some(format!(
+            "transfer_retries {} vs {}",
+            a.transfer_retries, b.transfer_retries
+        ));
+    }
+    if a.demand_failures != b.demand_failures {
+        return Some(format!(
+            "demand_failures {} vs {}",
+            a.demand_failures, b.demand_failures
+        ));
+    }
+    if a.makespan.to_bits() != b.makespan.to_bits() {
+        return Some(format!("makespan {} vs {}", a.makespan, b.makespan));
+    }
+    let (sa, sb) = (a.token_latency.samples(), b.token_latency.samples());
+    if sa.len() != sb.len() {
+        return Some(format!("token latency count {} vs {}", sa.len(), sb.len()));
+    }
+    for (i, (x, y)) in sa.iter().zip(sb).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Some(format!("token latency sample {i}: {x} vs {y}"));
+        }
+    }
+    None
+}
+
+/// Replay `reqs` through a fresh router; `calendar` picks the engine.
+/// Returns the report and the submit+drain host time in milliseconds.
+fn timed_replay(
+    cfg: &ServeConfig,
+    pool: &Pool,
+    reqs: &[Request],
+    plan: Option<&FaultPlan>,
+    calendar: bool,
+) -> (ServeReport, f64) {
+    let mut router = mk_router(cfg, pool, plan);
+    let start = Instant::now();
+    router.submit_all(reqs);
+    let report = if calendar {
+        router.drain()
+    } else {
+        router.drain_lockstep()
+    };
+    (report, start.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() {
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0");
+    let ns: &[usize] = if smoke { &[2, 16] } else { &[2, 4, 16, 64] };
+    let pool = Pool::from_env();
+    println!(
+        "events bench: {} mode, replica sweep {:?}, flash crowd at {}x base rps",
+        if smoke { "smoke" } else { "full" },
+        ns,
+        if smoke { 100.0 / 8.0 } else { 250.0 / 8.0 },
+    );
+
+    let mut table = Table::new(&[
+        "replicas", "requests", "lockstep ms", "calendar ms", "speedup", "bitwise",
+    ]);
+    let mut json = BenchJson::new();
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    let mut mismatches: Vec<(usize, String)> = Vec::new();
+
+    for &n in ns {
+        // ---- bitwise leg: faults + crash on a small GPU -----------------
+        // A separate, shorter config with a 4GB GPU so offloading engages
+        // and the injected link faults actually land on the replay; the
+        // 24GB timing leg would leave the fault counters trivially zero.
+        {
+            let mut fcfg = cfg_for(n, smoke);
+            fcfg.memory.gpu_gb = 4.0;
+            fcfg.workload.rps = n as f64 * 4.0;
+            fcfg.workload.flash_rps = n as f64 * 40.0;
+            let reqs = build_requests(&fcfg).expect("requests");
+            let mut plan = FaultPlan::new(fcfg.seed ^ 0xFA57);
+            plan.ssd_failure_p = 0.1;
+            plan.gpu_failure_p = 0.05;
+            plan.crashes.push(CrashWindow {
+                replica: 0,
+                crash: fcfg.workload.duration * 0.35,
+                recover: fcfg.workload.duration * 0.7,
+            });
+            let (mut lock, _) = timed_replay(&fcfg, &pool, &reqs, Some(&plan), false);
+            let (mut cal, _) = timed_replay(&fcfg, &pool, &reqs, Some(&plan), true);
+            if let Some(why) = diff_reports(&mut lock, &mut cal) {
+                mismatches.push((n, why));
+            }
+        }
+        let bitwise = mismatches.iter().all(|(m, _)| *m != n);
+
+        // ---- timed leg: fault-free flash crowd, resident model ----------
+        let cfg = cfg_for(n, smoke);
+        let reqs = build_requests(&cfg).expect("requests");
+        let (mut lock, lock_ms) = timed_replay(&cfg, &pool, &reqs, None, false);
+        let (mut cal, cal_ms) = timed_replay(&cfg, &pool, &reqs, None, true);
+        if let Some(why) = diff_reports(&mut lock, &mut cal) {
+            mismatches.push((n, format!("timed leg: {why}")));
+        }
+        let bitwise = bitwise && mismatches.iter().all(|(m, _)| *m != n);
+        let speedup = lock_ms / cal_ms.max(1e-9);
+        speedups.push((n, speedup));
+
+        table.row(&[
+            format!("{n}"),
+            format!("{}", lock.requests),
+            format!("{lock_ms:.1}"),
+            format!("{cal_ms:.1}"),
+            format!("{speedup:.2}x"),
+            if bitwise { "yes".into() } else { "NO".into() },
+        ]);
+        json.add(&format!("events_lock_ms_n{n}"), lock_ms);
+        json.add(&format!("events_cal_ms_n{n}"), cal_ms);
+        json.add(&format!("events_speedup_n{n}"), speedup);
+        json.add(
+            &format!("events_bitwise_n{n}"),
+            if bitwise { 1.0 } else { 0.0 },
+        );
+        json.add(&format!("events_requests_n{n}"), lock.requests as f64);
+        json.add(&format!("events_tokens_n{n}"), lock.tokens as f64);
+    }
+    table.print("§Events — calendar vs lockstep on a flash-crowd trace");
+
+    // write the rows BEFORE the acceptance asserts so a miss on a CI
+    // machine leaves the full table for diagnosis
+    let path = "BENCH_events.json";
+    match json.write(path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+
+    // ---- acceptance 1: bitwise replay at every swept N ------------------
+    for (n, why) in &mismatches {
+        eprintln!("n={n}: calendar diverged from lockstep: {why}");
+    }
+    assert!(
+        mismatches.is_empty(),
+        "the calendar must replay the lockstep loop bitwise at every N"
+    );
+    println!("calendar replays the lockstep loop bitwise at every swept N ✓");
+
+    // ---- acceptance 2: host-time floor at N=16 --------------------------
+    let (_, s16) = speedups
+        .iter()
+        .find(|(n, _)| *n == 16)
+        .copied()
+        .expect("N=16 point ran");
+    println!("N=16 host-time speedup: {s16:.2}x (floor {SPEEDUP_FLOOR_N16}x)");
+    assert!(
+        s16 >= SPEEDUP_FLOOR_N16,
+        "calendar must beat the lockstep scan by >= {SPEEDUP_FLOOR_N16}x at N=16 \
+         (measured {s16:.2}x)"
+    );
+}

@@ -94,6 +94,47 @@ pub fn build_replica_engines_with(cfg: &ServeConfig, pool: &Pool) -> anyhow::Res
         .collect()
 }
 
+/// Arrival process at `rps` under the config's burstiness knob.
+fn arrival_proc(cfg: &ServeConfig, rps: f64) -> ArrivalProcess {
+    if cfg.workload.cv > 1.0 {
+        ArrivalProcess::Bursty {
+            rps,
+            cv: cfg.workload.cv,
+        }
+    } else {
+        ArrivalProcess::Poisson { rps }
+    }
+}
+
+/// Flash-crowd arrival timestamps: gaps draw at `workload.rps` outside the
+/// `[flash_start, flash_end)` window and at `workload.flash_rps` inside it
+/// (burstiness `cv` applies in both phases). With `flash_rps == rps` this
+/// reproduces [`ArrivalProcess::timestamps`] draw for draw; callers only
+/// reach it when the overlay is actually on, so the historical single-rate
+/// stream stays byte-identical.
+fn flash_timestamps(cfg: &ServeConfig, rng: &mut Rng) -> Vec<f64> {
+    let w = &cfg.workload;
+    let base = arrival_proc(cfg, w.rps);
+    let peak = arrival_proc(cfg, w.flash_rps);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    loop {
+        // the gap's rate is decided by where the previous arrival left the
+        // clock — a piecewise-constant-rate renewal process
+        let proc = if t >= w.flash_start && t < w.flash_end {
+            &peak
+        } else {
+            &base
+        };
+        t += proc.next_gap(rng);
+        if t >= w.duration {
+            break;
+        }
+        out.push(t);
+    }
+    out
+}
+
 /// Generate the request stream for a config.
 pub fn build_requests(cfg: &ServeConfig) -> anyhow::Result<Vec<Request>> {
     let spec = cfg.model_spec()?;
@@ -101,17 +142,13 @@ pub fn build_requests(cfg: &ServeConfig) -> anyhow::Result<Vec<Request>> {
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
     let mut w = Workload::new(&spec, dataset, cfg.seed ^ 0xFACE);
     let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
-    let proc = if cfg.workload.cv > 1.0 {
-        ArrivalProcess::Bursty {
-            rps: cfg.workload.rps,
-            cv: cfg.workload.cv,
-        }
+    let flash = cfg.workload.flash_rps > 0.0 && cfg.workload.flash_end > cfg.workload.flash_start;
+    let ts = if flash {
+        flash_timestamps(cfg, &mut rng)
     } else {
-        ArrivalProcess::Poisson {
-            rps: cfg.workload.rps,
-        }
+        let proc = arrival_proc(cfg, cfg.workload.rps);
+        proc.timestamps(cfg.workload.duration, &mut rng)
     };
-    let ts = proc.timestamps(cfg.workload.duration, &mut rng);
     let mut reqs: Vec<Request> = ts
         .into_iter()
         .enumerate()

@@ -115,6 +115,16 @@ pub struct WorkloadConfig {
     /// the historical class tagging; with an SLO attached, goodput and the
     /// shedding/timeout machinery become meaningful.
     pub interactive_slo: f64,
+    /// Flash-crowd overlay: while `flash_start <= t < flash_end`, arrival
+    /// gaps draw at this rate instead of `rps` (burstiness `cv` applies in
+    /// both phases). 0.0 — the default — disables the overlay and
+    /// generates exactly the historical single-rate arrival stream.
+    pub flash_rps: f64,
+    /// Flash-crowd window start, seconds of virtual time.
+    pub flash_start: f64,
+    /// Flash-crowd window end, seconds (>= start; an empty window is a
+    /// no-op).
+    pub flash_end: f64,
 }
 
 /// Deterministic fault-injection knobs (the config-expressible subset of
@@ -216,6 +226,9 @@ impl Default for ServeConfig {
                 duration: 120.0,
                 interactive_frac: 0.0,
                 interactive_slo: 0.0,
+                flash_rps: 0.0,
+                flash_start: 0.0,
+                flash_end: 0.0,
             },
             batching: BatchConfig {
                 max_batch: 16,
@@ -288,6 +301,9 @@ impl ServeConfig {
             gf(&doc, "workload.interactive_frac", c.workload.interactive_frac);
         c.workload.interactive_slo =
             gf(&doc, "workload.interactive_slo", c.workload.interactive_slo);
+        c.workload.flash_rps = gf(&doc, "workload.flash_rps", c.workload.flash_rps);
+        c.workload.flash_start = gf(&doc, "workload.flash_start", c.workload.flash_start);
+        c.workload.flash_end = gf(&doc, "workload.flash_end", c.workload.flash_end);
         c.batching.max_batch = gu(&doc, "batching.max_batch", c.batching.max_batch);
         c.batching.max_wait = gf(&doc, "batching.max_wait", c.batching.max_wait);
         c.memory.gpu_gb = gf(&doc, "memory.gpu_gb", c.memory.gpu_gb);
@@ -337,6 +353,9 @@ impl ServeConfig {
         d.set_num("workload.duration", self.workload.duration);
         d.set_num("workload.interactive_frac", self.workload.interactive_frac);
         d.set_num("workload.interactive_slo", self.workload.interactive_slo);
+        d.set_num("workload.flash_rps", self.workload.flash_rps);
+        d.set_num("workload.flash_start", self.workload.flash_start);
+        d.set_num("workload.flash_end", self.workload.flash_end);
         d.set_num("batching.max_batch", self.batching.max_batch as f64);
         d.set_num("batching.max_wait", self.batching.max_wait);
         d.set_num("memory.gpu_gb", self.memory.gpu_gb);
@@ -405,6 +424,23 @@ impl ServeConfig {
             return Err(anyhow!(
                 "workload.interactive_slo must be finite and >= 0, got {}",
                 self.workload.interactive_slo
+            ));
+        }
+        if !self.workload.flash_rps.is_finite() || self.workload.flash_rps < 0.0 {
+            return Err(anyhow!(
+                "workload.flash_rps must be finite and >= 0 (0 disables the \
+                 flash-crowd overlay), got {}",
+                self.workload.flash_rps
+            ));
+        }
+        if !self.workload.flash_start.is_finite()
+            || !self.workload.flash_end.is_finite()
+            || self.workload.flash_end < self.workload.flash_start
+        {
+            return Err(anyhow!(
+                "workload flash window [{}, {}) must be finite with end >= start",
+                self.workload.flash_start,
+                self.workload.flash_end
             ));
         }
         let f = &self.faults;
@@ -720,6 +756,34 @@ mod tests {
                 .is_ok()
         );
         assert!(ServeConfig::from_toml("[workload]\ninteractive_slo = -1.0").is_err());
+    }
+
+    #[test]
+    fn flash_crowd_knobs_parse_roundtrip_and_validate() {
+        let c = ServeConfig::from_toml(
+            "scheduler = \"continuous\"\n[workload]\nrps = 10.0\nflash_rps = 2000.0\nflash_start = 3.0\nflash_end = 5.0\n",
+        )
+        .unwrap();
+        assert_eq!(c.workload.flash_rps, 2000.0);
+        assert_eq!(c.workload.flash_start, 3.0);
+        assert_eq!(c.workload.flash_end, 5.0);
+        let back = ServeConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, back);
+        // the default overlay is off: historical single-rate stream
+        let d = ServeConfig::default();
+        assert_eq!(d.workload.flash_rps, 0.0);
+        assert_eq!((d.workload.flash_start, d.workload.flash_end), (0.0, 0.0));
+        // rejected shapes
+        assert!(ServeConfig::from_toml("[workload]\nflash_rps = -5.0").is_err());
+        assert!(
+            ServeConfig::from_toml("[workload]\nflash_start = 5.0\nflash_end = 1.0").is_err()
+        );
+        // a zero-width window with a rate is a no-op, not an error (the
+        // brownout-window convention)
+        assert!(
+            ServeConfig::from_toml("[workload]\nflash_rps = 100.0\nflash_start = 2.0\nflash_end = 2.0")
+                .is_ok()
+        );
     }
 
     #[test]

@@ -66,6 +66,16 @@ impl CrashWindow {
     pub fn down_at(&self, t: f64) -> bool {
         t >= self.crash && t < self.recover
     }
+
+    /// Has the crash edge been reached by the replica's clock (`t >=
+    /// crash`)? This is the router's firing predicate, split out so the
+    /// event calendar and the lockstep reference loop share it verbatim:
+    /// a batched replica runs only until its clock crosses its earliest
+    /// unfired crash instant, so the window fires at exactly the
+    /// iteration boundary the per-tick polling loop fired it at.
+    pub fn fires_by(&self, t: f64) -> bool {
+        t >= self.crash
+    }
 }
 
 /// Capped exponential backoff schedule for failed transfers.
@@ -231,6 +241,21 @@ impl FaultState {
 mod tests {
     use super::*;
     use crate::util::proptest::forall_res;
+
+    #[test]
+    fn crash_window_edges_are_half_open() {
+        let w = CrashWindow {
+            replica: 0,
+            crash: 1.0,
+            recover: 2.0,
+        };
+        assert!(!w.down_at(0.999) && w.down_at(1.0) && w.down_at(1.999));
+        assert!(!w.down_at(2.0), "recover instant is exclusive of downtime");
+        // the firing predicate is the crash edge alone: a clock that idles
+        // past recover still fires the window if it ever crossed crash
+        assert!(!w.fires_by(0.999));
+        assert!(w.fires_by(1.0) && w.fires_by(5.0));
+    }
 
     #[test]
     fn empty_plan_is_empty_and_linkless() {

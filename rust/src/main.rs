@@ -94,6 +94,9 @@ fn run() -> Result<()> {
                  \x20        [--interactive-frac <f>]  fraction of requests tagged interactive\n\
                  \x20        [--interactive-slo <s>]  deadline attached to interactive requests\n\
                  \x20        (0 = none; enables goodput accounting and --shedding)\n\
+                 \x20        [--flash-rps <f>] [--flash-start <s>] [--flash-end <s>]  flash-crowd\n\
+                 \x20        overlay: arrivals draw at flash-rps inside the window (0 = off,\n\
+                 \x20        the historical single-rate stream)\n\
                  \x20        [--ssd-failure-p <p>] [--gpu-failure-p <p>]  per-transfer transient\n\
                  \x20        failure probability on each link (deterministic, seeded; retried\n\
                  \x20        with capped exponential backoff in simulated time)\n\
@@ -178,6 +181,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(d) = args.get_f64("duration")? {
         cfg.workload.duration = d;
     }
+    if let Some(r) = args.get_f64("flash-rps")? {
+        cfg.workload.flash_rps = r;
+    }
+    if let Some(t) = args.get_f64("flash-start")? {
+        cfg.workload.flash_start = t;
+    }
+    if let Some(t) = args.get_f64("flash-end")? {
+        cfg.workload.flash_end = t;
+    }
     if let Some(p) = args.get_f64("ssd-failure-p")? {
         cfg.faults.ssd_failure_p = p;
     }
@@ -223,8 +235,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     } else {
         String::new()
     };
+    let flash_desc = if cfg.workload.flash_rps > 0.0 && cfg.workload.flash_end > cfg.workload.flash_start
+    {
+        format!(
+            " flash={}rps@[{},{})s",
+            cfg.workload.flash_rps, cfg.workload.flash_start, cfg.workload.flash_end
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "serving {} [{}] dataset={} scheduler={}{} priority={} replicas={} routing={} rps={} duration={}s (offline pool: {} threads) ...",
+        "serving {} [{}] dataset={} scheduler={}{} priority={} replicas={} routing={} rps={}{} duration={}s (offline pool: {} threads) ...",
         cfg.model,
         cfg.system,
         cfg.dataset,
@@ -234,6 +255,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         cfg.replicas,
         cfg.routing.name(),
         cfg.workload.rps,
+        flash_desc,
         cfg.workload.duration,
         pool.threads()
     );

@@ -182,6 +182,15 @@ pub struct MemorySim {
     /// Fault-injection state; `None` (the default, and for any plan that
     /// does not perturb links) keeps the hot path to a single null check.
     faults: Option<Box<FaultState>>,
+    /// Something changed that could let an idle link start work (queue
+    /// submits/cancels, completions, residency or protection changes).
+    /// Clear means the last [`MemorySim::try_start`] proved a fixpoint and
+    /// nothing start-relevant moved since, so [`MemorySim::advance_to`]
+    /// skips its trailing O(queued) pass — start decisions depend only on
+    /// queues/busy-links/residency/protection, never on the clock itself
+    /// (only transfer *durations* read `now`), so skipping is
+    /// behavior-preserving.
+    start_dirty: bool,
     now: f64,
     stats: MemoryStats,
 }
@@ -232,6 +241,7 @@ impl MemorySim {
             gpu_busy: vec![None; cfg.n_gpus],
             demand_upgrades: std::collections::HashSet::new(),
             faults: None,
+            start_dirty: true,
             now: 0.0,
             stats: MemoryStats::default(),
             cfg,
@@ -321,6 +331,7 @@ impl MemorySim {
         } else {
             self.q_ssd.submit(key, prio);
         }
+        self.start_dirty = true;
         self.try_start(ctx);
     }
 
@@ -330,6 +341,7 @@ impl MemorySim {
         self.q_ssd.clear();
         self.q_gpu.clear();
         self.gpu_cache.clear_protection();
+        self.start_dirty = true;
     }
 
     /// Cancel a *queued* prefetch for `key` on both stage queues (a transfer
@@ -340,6 +352,7 @@ impl MemorySim {
     pub fn cancel_prefetch(&mut self, key: ExpertKey) {
         self.q_ssd.cancel(key);
         self.q_gpu.cancel(key);
+        self.start_dirty = true;
     }
 
     /// Blocking demand (Alg. 1 steps 9-12): returns the time at which the
@@ -347,6 +360,9 @@ impl MemorySim {
     /// never preempts in-flight transfers; accounts the stall.
     pub fn demand(&mut self, key: ExpertKey, t: f64, ctx: &CacheCtx) -> f64 {
         self.advance_to(t, ctx);
+        // everything below mutates start-gating state (protection counts,
+        // queue submits, cache accesses)
+        self.start_dirty = true;
         self.gpu_cache.access(key);
         let was_prefetched = self.gpu_cache.is_protected(key);
         // first use lifts the prefetch protection (§6.2)
@@ -421,7 +437,12 @@ impl MemorySim {
         if t > self.now {
             self.now = t;
         }
-        self.try_start(ctx);
+        // hot-path hoist: this runs at every engine iteration boundary, so
+        // skip the O(queued) scan unless something start-relevant changed
+        // since the last proven fixpoint (see `start_dirty`)
+        if self.start_dirty {
+            self.try_start(ctx);
+        }
     }
 
     fn next_event_time(&self) -> Option<f64> {
@@ -467,6 +488,7 @@ impl MemorySim {
     }
 
     fn complete_ssd(&mut self, f: InFlight, ctx: &CacheCtx) {
+        self.start_dirty = true;
         self.q_ssd.complete(f.key);
         if f.dropped {
             // the failed transfer burned its link time but moved nothing;
@@ -497,6 +519,7 @@ impl MemorySim {
     }
 
     fn complete_gpu(&mut self, f: InFlight, ctx: &CacheCtx) {
+        self.start_dirty = true;
         self.q_gpu.complete(f.key);
         if f.dropped {
             if self.demand_upgrades.remove(&f.key) {
@@ -541,9 +564,16 @@ impl MemorySim {
                 self.gpu_busy.iter().filter(|b| b.is_some()).count(),
             );
             if before == after {
-                break;
+                // proven fixpoint: until queues, residency, or the
+                // protection budget change again, repeating this scan
+                // cannot start anything — `advance_to` may skip it
+                self.start_dirty = false;
+                return;
             }
         }
+        // pass cap hit without a proven fixpoint — stay dirty so the next
+        // advance re-runs the scan
+        self.start_dirty = true;
     }
 
     fn try_start_once(&mut self, _ctx: &CacheCtx) {

@@ -321,7 +321,11 @@ pub trait Scheduler<'r> {
 
     /// Advance one scheduling quantum (one dispatched batch, one engine
     /// iteration, or one router event). Returns `false` when no work is
-    /// left.
+    /// left. Progress contract: while a scheduler reports a
+    /// `next_event_bound`, `tick` must return `true` and make progress —
+    /// the router turns a violation into a hard error in every build
+    /// profile, because a bound with no progress would spin `drain`
+    /// forever in release.
     fn tick(&mut self) -> bool;
 
     /// Run all submitted work to completion and return the report.
@@ -792,6 +796,7 @@ impl<'r> ContinuousScheduler<'r> {
     }
 
     /// Virtual time of the current iteration boundary.
+    #[inline]
     pub fn now(&self) -> f64 {
         match &self.session {
             Some(s) => s.now(),
@@ -800,11 +805,13 @@ impl<'r> ContinuousScheduler<'r> {
     }
 
     /// Anything submitted and not yet finished?
+    #[inline]
     pub fn has_work(&self) -> bool {
         self.finished < self.reqs.len()
     }
 
     /// Dispatched-but-unfinished request count (the router's load signal).
+    #[inline]
     pub fn load(&self) -> usize {
         self.reqs.len() - self.finished
     }
@@ -815,6 +822,15 @@ impl<'r> ContinuousScheduler<'r> {
     /// The router dispatches a request once every replica's bound has
     /// reached its arrival — replica states at the arrival instant are
     /// then final, keeping the replay deterministic and causal.
+    ///
+    /// **Bound-stability contract:** the returned value changes only when
+    /// this scheduler itself is mutated — `submit` / `submit_failover` /
+    /// `tick` / `fail_over` / `drain`. The router's event calendar
+    /// memoizes the bound under a per-replica version and re-reads it
+    /// exactly at those mutation points; anything that moves the bound
+    /// through another path must bump the memo or the calendar replay
+    /// diverges from the lockstep reference.
+    #[inline]
     pub fn next_event_bound(&self) -> Option<f64> {
         if !self.has_work() {
             return None;
@@ -1383,21 +1399,26 @@ impl<'r> ChunkedScheduler<'r> {
     }
 
     /// Virtual time of the current iteration boundary.
+    #[inline]
     pub fn now(&self) -> f64 {
         self.inner.now()
     }
 
     /// Anything submitted and not yet finished?
+    #[inline]
     pub fn has_work(&self) -> bool {
         self.inner.has_work()
     }
 
     /// Dispatched-but-unfinished request count.
+    #[inline]
     pub fn load(&self) -> usize {
         self.inner.load()
     }
 
-    /// See [`ContinuousScheduler::next_event_bound`].
+    /// See [`ContinuousScheduler::next_event_bound`] — including the
+    /// bound-stability contract the router's event calendar relies on.
+    #[inline]
     pub fn next_event_bound(&self) -> Option<f64> {
         self.inner.next_event_bound()
     }

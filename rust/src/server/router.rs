@@ -14,20 +14,52 @@
 //! expert cache and prefetcher exploit — the per-replica EAMCs then keep
 //! specializing through the §4.3 online feedback loop.
 //!
-//! ## Determinism
+//! ## The event calendar
 //!
-//! Each replica is an independent virtual timeline. The router's event
-//! loop interleaves two actions: *dispatch* the next pending arrival once
-//! every busy replica's [`ContinuousScheduler::next_event_bound`] has
-//! reached it (replica states at the arrival instant are then final — no
-//! later-simulated event can precede it), and otherwise *step* the replica
-//! with the earliest bound by one quantum. The replay is a pure function
-//! of the request stream and the replica set. With **one replica and
-//! round-robin** the dispatch gate provably never changes admission
-//! instants, so the replay is bitwise identical to a bare
-//! [`ContinuousScheduler`] (pinned in `rust/tests/scheduler.rs`).
+//! Each replica is an independent virtual timeline. Historically the
+//! router interleaved them with a lockstep polling loop: every tick
+//! re-scanned all N [`ContinuousScheduler::next_event_bound`]s (twice —
+//! once for the arrival-dispatch gate, once to pick the replica to step),
+//! re-checked every crash window, and advanced exactly one scheduling
+//! quantum, so simulated cluster time cost O(N · events) host time.
+//!
+//! [`Router::tick`] now runs a discrete-event calendar instead:
+//!
+//! * **Memoized bounds in a min-heap.** The calendar is a binary heap of
+//!   `(next_event_time, replica_idx)` entries, earliest on top, ties to
+//!   the lowest index — exactly the scan's `t < bt` pick order. Bounds
+//!   are *stable between mutations* of their scheduler (the contract on
+//!   [`ContinuousScheduler::next_event_bound`]), so they are re-read only
+//!   when the router itself mutates a replica: dispatch, stepping, or
+//!   crash failover. Invalidations are per-replica versioned and lazy —
+//!   stale entries are discarded when they surface at the top, O(log N)
+//!   per event instead of O(N) per tick.
+//! * **Arrivals and crash edges merged into the calendar.** The pending
+//!   front is compared against the heap top (not a fresh fleet scan), and
+//!   `fire_due_crashes` runs only when a `crash_pending` flag says some
+//!   window may actually fire — set when a plan is installed, when a
+//!   dispatch or failover hop can move a replica clock, and when a
+//!   batched replica crosses its own earliest unfired crash edge.
+//! * **Run-to-frontier batching.** The popped replica executes
+//!   consecutive internal quanta until its bound crosses the frontier
+//!   frozen at pop time (second-earliest calendar entry, pending-arrival
+//!   front, earliest unfired crash edge). Only that replica's state can
+//!   change while it runs, so the frozen frontier is exact and heap
+//!   traffic collapses from O(per quantum) to O(per frontier crossing).
+//!
+//! The calendar replays the lockstep loop **bitwise** — same dispatch
+//! instants, same replica pick at every tie, same crash-firing
+//! boundaries — under every scheduler kind and fault plan; the retired
+//! loop is kept verbatim as [`Router::tick_lockstep`] and pinned against
+//! the calendar in `rust/tests/scheduler.rs` and the `perf_events`
+//! bench. The replay is a pure function of the request stream and the
+//! replica set. With **one replica and round-robin** the dispatch gate
+//! provably never changes admission instants, so the replay is bitwise
+//! identical to a bare [`ContinuousScheduler`] (also pinned in
+//! `rust/tests/scheduler.rs`).
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::engine::{prefill_chunk_tokens, SimEngine};
 use crate::faults::{CrashWindow, FaultPlan};
@@ -81,6 +113,48 @@ impl RoutingPolicy {
 /// task match.
 const AFFINITY_LOAD_WEIGHT: f64 = 0.25;
 
+/// One memoized replica bound in the event calendar. The ordering is
+/// inverted (earliest `(time, idx)` at the heap top) with time ties broken
+/// toward the **lowest** replica index — exactly the retired lockstep
+/// scan's strict `t < bt` pick order, so popping the calendar replays the
+/// scan's choice bitwise. `version` is *not* part of the ordering: an
+/// entry whose version no longer matches its replica's current version is
+/// stale and is discarded lazily when it surfaces at the top.
+#[derive(Debug, Clone, Copy)]
+struct CalEntry {
+    time: f64,
+    idx: u32,
+    version: u64,
+}
+
+impl Ord for CalEntry {
+    fn cmp(&self, other: &CalEntry) -> Ordering {
+        // Reversed operands: BinaryHeap is a max-heap and we want the
+        // earliest entry on top. total_cmp is a total order over the
+        // bounds (never NaN); -0.0 is normalized to +0.0 before pushing
+        // so total_cmp's -0.0 < +0.0 distinction cannot reorder a tie the
+        // scan's `<` would have left to the index.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for CalEntry {
+    fn partial_cmp(&self, other: &CalEntry) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for CalEntry {
+    fn eq(&self, other: &CalEntry) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for CalEntry {}
+
 /// A task-affinity multi-replica request router. See the module docs.
 pub struct Router<'r> {
     replicas: Vec<ContinuousScheduler<'r>>,
@@ -106,6 +180,25 @@ pub struct Router<'r> {
     fault_windows: Vec<CrashWindow>,
     /// Whether each window's crash has fired (captured + re-dispatched).
     fired: Vec<bool>,
+    /// The event calendar: memoized `next_event_bound`s, earliest on top.
+    calendar: BinaryHeap<CalEntry>,
+    /// Monotonic per-replica entry version; [`Router::refresh`] bumps it,
+    /// so every calendar entry but a replica's newest is stale.
+    versions: Vec<u64>,
+    /// `total_requests` watermark at each replica's last `reserve_for`
+    /// (presize-by-delta: dispatch re-sizes one replica only when new
+    /// submissions arrived since its last re-size, so M incremental
+    /// submits cost O(M) amortized rather than O(M·N) fleet probes).
+    presized: Vec<usize>,
+    /// Some unfired crash window may be fireable. Clear implies
+    /// `fire_due_crashes` would be a read-only no-op — replica clocks only
+    /// move inside replica `tick`/`submit`/failover hops, all of which
+    /// re-set this — so the calendar path skips the scan entirely.
+    crash_pending: bool,
+    /// Memoized bounds may be stale (a lockstep tick stepped replicas
+    /// behind the calendar's back); rebuilt on the next calendar tick so
+    /// the two loops can be interleaved safely.
+    calendar_stale: bool,
 }
 
 impl<'r> Router<'r> {
@@ -134,6 +227,11 @@ impl<'r> Router<'r> {
             total_tokens: 0,
             fault_windows: Vec::new(),
             fired: Vec::new(),
+            calendar: BinaryHeap::new(),
+            versions: vec![0; n],
+            presized: vec![0; n],
+            crash_pending: false,
+            calendar_stale: false,
         }
     }
 
@@ -158,6 +256,7 @@ impl<'r> Router<'r> {
         }
         self.fault_windows = plan.crashes.clone();
         self.fired = vec![false; self.fault_windows.len()];
+        self.crash_pending = !self.fault_windows.is_empty();
         self
     }
 
@@ -288,15 +387,20 @@ impl<'r> Router<'r> {
     }
 
     /// Fire every crash window whose replica's clock has reached its crash
-    /// instant: the replica's unfinished work — in-flight sequences as
-    /// warm [`crate::engine::PreemptedSeq`] state, waiting/undispatched
-    /// requests bare — is captured via
+    /// instant ([`CrashWindow::fires_by`]): the replica's unfinished work
+    /// — in-flight sequences as warm [`crate::engine::PreemptedSeq`]
+    /// state, waiting/undispatched requests bare — is captured via
     /// [`ContinuousScheduler::fail_over`] and immediately re-dispatched to
     /// the surviving replicas under the routing policy (warm failover:
     /// `admit_resumed` on the survivor continues each sequence with
     /// identical per-token expert demands). A replica that idles past its
     /// whole window never fires it — there was nothing to lose — and the
     /// window degrades to pure dispatch filtering.
+    ///
+    /// The failover hops re-memoize both ends in the calendar, and firing
+    /// anything re-arms `crash_pending`: a survivor's clock may have
+    /// idle-hopped into *its own* window, which the single index-ordered
+    /// pass (the lockstep contract) only catches on the next tick.
     fn fire_due_crashes(&mut self) {
         if self.fault_windows.is_empty() {
             return;
@@ -306,22 +410,27 @@ impl<'r> Router<'r> {
                 continue;
             }
             let w = self.fault_windows[wi].clone();
-            if self.replicas[w.replica].now() < w.crash {
+            if !w.fires_by(self.replicas[w.replica].now()) {
                 continue;
             }
             self.fired[wi] = true;
+            self.crash_pending = true;
             let handoff_t = self.replicas[w.replica].now();
             let mut captured = Vec::new();
             self.replicas[w.replica].fail_over(&mut captured);
+            self.refresh(w.replica);
             for (req, saved) in captured {
                 let dst = self.pick_replica(req, handoff_t);
                 self.replicas[dst].submit_failover(req, saved, handoff_t);
+                self.refresh(dst);
             }
         }
     }
 
     /// Queue one request (arrival order asserted) without re-sizing
-    /// replica buffers; callers re-size via [`Router::presize_replicas`].
+    /// replica buffers; dispatch brings the receiving replica up to the
+    /// watermark via [`Router::ensure_presized`], and bulk submission
+    /// pre-sizes the whole fleet once via [`Router::presize_replicas`].
     fn enqueue(&mut self, req: &'r Request) {
         debug_assert!(
             self.pending.back().map_or(true, |p| p.arrival <= req.arrival),
@@ -335,16 +444,92 @@ impl<'r> Router<'r> {
         self.pending.push_back(req);
     }
 
-    /// Any replica may end up with the whole stream; pre-sizing after
-    /// submission keeps dispatch-time replica pushes allocation-free
-    /// mid-replay.
+    /// Any replica may end up with the whole stream; pre-sizing after bulk
+    /// submission keeps dispatch-time replica pushes *and* calendar pushes
+    /// allocation-free mid-replay (pinned in `tests/alloc_guard.rs`).
     fn presize_replicas(&mut self) {
-        for rep in &mut self.replicas {
+        for (k, rep) in self.replicas.iter_mut().enumerate() {
             rep.reserve_for(self.total_requests, self.total_tokens);
+            self.presized[k] = self.total_requests;
+        }
+        // Calendar high-water mark: at most one live entry per replica,
+        // plus one not-yet-collected stale entry per dispatch and per
+        // failover refresh between garbage-collecting pops.
+        let want = 2 * self.total_requests + self.replicas.len() + self.fault_windows.len() + 8;
+        if want > self.calendar.len() {
+            self.calendar.reserve(want - self.calendar.len());
         }
     }
 
-    /// Earliest next-event bound across replicas that still have work.
+    /// Bring replica `k`'s buffers up to the current submission watermark
+    /// (no-op unless new requests were enqueued since its last re-size).
+    fn ensure_presized(&mut self, k: usize) {
+        if self.presized[k] != self.total_requests {
+            self.replicas[k].reserve_for(self.total_requests, self.total_tokens);
+            self.presized[k] = self.total_requests;
+        }
+    }
+
+    /// Re-memoize replica `k`'s bound: bump its version (invalidating
+    /// every calendar entry it already has) and push the current bound, if
+    /// any. Called exactly where the bound-stability contract says the
+    /// bound can change: after dispatching to `k`, after stepping `k`, and
+    /// after a crash capture / failover hop touching `k`.
+    fn refresh(&mut self, k: usize) {
+        self.versions[k] = self.versions[k].wrapping_add(1);
+        if let Some(t) = self.replicas[k].next_event_bound() {
+            self.calendar.push(CalEntry {
+                // `+ 0.0` maps a (theoretical) -0.0 bound to +0.0 so the
+                // heap's total_cmp agrees with the scan's `<` on ties
+                time: t + 0.0,
+                idx: k as u32,
+                version: self.versions[k],
+            });
+        }
+    }
+
+    /// Earliest live calendar entry, lazily discarding stale entries from
+    /// the top. A live entry's time *is* its replica's current
+    /// `next_event_bound` (the bound-stability contract).
+    fn calendar_min(&mut self) -> Option<(f64, usize)> {
+        while let Some(e) = self.calendar.peek() {
+            if self.versions[e.idx as usize] == e.version {
+                return Some((e.time, e.idx as usize));
+            }
+            self.calendar.pop();
+        }
+        None
+    }
+
+    /// Drop every memoized bound and re-push the live ones. Needed only
+    /// after [`Router::tick_lockstep`] stepped replicas behind the
+    /// calendar's back.
+    fn rebuild_calendar(&mut self) {
+        self.calendar.clear();
+        for k in 0..self.replicas.len() {
+            self.refresh(k);
+        }
+        self.calendar_stale = false;
+    }
+
+    /// Earliest unfired crash instant among replica `k`'s windows (∞ if
+    /// none): the run-to-frontier batch must stop the moment `k`'s clock
+    /// crosses it, so the window fires at exactly the iteration boundary
+    /// the lockstep loop fired it at. Only `k`'s clock moves during a
+    /// batch, so only `k`'s windows can newly fire.
+    fn next_unfired_crash(&self, k: usize) -> f64 {
+        let mut m = f64::INFINITY;
+        for (wi, w) in self.fault_windows.iter().enumerate() {
+            if !self.fired[wi] && w.replica == k && w.crash < m {
+                m = w.crash;
+            }
+        }
+        m
+    }
+
+    /// Earliest next-event bound across replicas that still have work (the
+    /// retired loop's O(N) dispatch gate; the calendar path reads the heap
+    /// top instead).
     fn frontier(&self) -> Option<f64> {
         let mut m: Option<f64> = None;
         for rep in &self.replicas {
@@ -356,6 +541,69 @@ impl<'r> Router<'r> {
             }
         }
         m
+    }
+
+    /// The retired O(N)-scan lockstep event loop, kept verbatim as the
+    /// bitwise reference for the calendar: one call fires due crashes,
+    /// then either dispatches the next due arrival or advances the
+    /// earliest-bounded replica by **one** scheduling quantum. The
+    /// differential suites (`rust/tests/scheduler.rs`, `perf_events`) pin
+    /// [`Router::tick`] against this loop; don't optimize it.
+    ///
+    /// Interleaving with calendar ticks is safe: stepping replicas here
+    /// invalidates the memoized bounds, so the flags below force a
+    /// calendar rebuild and a crash re-check on the next calendar tick.
+    pub fn tick_lockstep(&mut self) -> bool {
+        self.calendar_stale = true;
+        self.crash_pending = true;
+        self.fire_due_crashes();
+        if let Some(&req) = self.pending.front() {
+            // safe to route once no busy replica can produce an earlier
+            // event (idle replicas don't change state on their own)
+            let due = self.frontier().map_or(true, |f| req.arrival <= f);
+            if due {
+                self.pending.pop_front();
+                let k = self.pick_replica(req, req.arrival);
+                self.ensure_presized(k);
+                self.replicas[k].submit(req);
+                return true;
+            }
+        }
+        // step the replica with the earliest next event
+        let mut best: Option<(f64, usize)> = None;
+        for (k, rep) in self.replicas.iter().enumerate() {
+            if let Some(t) = rep.next_event_bound() {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, k));
+                }
+            }
+        }
+        match best {
+            Some((t, k)) => {
+                let stepped = self.replicas[k].tick();
+                // a hard error in every profile: a bound with no progress
+                // would spin `drain` forever in release builds
+                assert!(
+                    stepped,
+                    "replica {k} reported next_event_bound = {t} but tick() made no \
+                     progress; the bound/step contract is broken"
+                );
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drain through [`Router::tick_lockstep`] (the reference loop); same
+    /// merged report shape as [`Scheduler::drain`].
+    pub fn drain_lockstep(&mut self) -> ServeReport {
+        while self.tick_lockstep() {}
+        let mut out = ServeReport::default();
+        for rep in &mut self.replicas {
+            let r = rep.drain();
+            out.merge(&r);
+        }
+        out
     }
 }
 
@@ -402,13 +650,18 @@ fn record_prefill_signature(
 }
 
 impl<'r> Scheduler<'r> for Router<'r> {
+    /// Queue one request. Replica buffer pre-sizing is deferred to
+    /// dispatch time ([`Router::ensure_presized`]), so M incremental
+    /// submits cost O(M) total instead of the former O(M·N) fleet probe
+    /// per call. Bulk callers should still prefer
+    /// [`Scheduler::submit_all`], which pre-sizes the whole fleet once up
+    /// front and thereby keeps warmed replays allocation-free.
     fn submit(&mut self, req: &'r Request) {
         self.enqueue(req);
-        self.presize_replicas();
     }
 
-    /// One replica pre-sizing pass for the whole slice instead of one per
-    /// request (`submit` would probe every replica buffer M×R times).
+    /// One fleet pre-sizing pass for the whole slice instead of per-submit
+    /// (and the calendar heap reserved to its high-water mark).
     fn submit_all(&mut self, reqs: &'r [Request]) {
         for req in reqs {
             self.enqueue(req);
@@ -416,38 +669,85 @@ impl<'r> Scheduler<'r> for Router<'r> {
         self.presize_replicas();
     }
 
-    /// One router event: dispatch the next due arrival, or advance the
-    /// earliest-bounded replica by one scheduling quantum.
+    /// One calendar event: dispatch the next due arrival, or pop the
+    /// earliest-bounded replica and run it to the frontier (see the module
+    /// docs). Bitwise-equivalent to [`Router::tick_lockstep`] iterated
+    /// over the same span.
     fn tick(&mut self) -> bool {
-        self.fire_due_crashes();
+        if self.calendar_stale {
+            self.rebuild_calendar();
+        }
+        if self.crash_pending {
+            self.crash_pending = false;
+            self.fire_due_crashes(); // may re-arm the flag
+        }
+        let front = self.calendar_min();
         if let Some(&req) = self.pending.front() {
             // safe to route once no busy replica can produce an earlier
             // event (idle replicas don't change state on their own)
-            let due = self.frontier().map_or(true, |f| req.arrival <= f);
+            let due = front.map_or(true, |(f, _)| req.arrival <= f);
             if due {
                 self.pending.pop_front();
                 let k = self.pick_replica(req, req.arrival);
+                self.ensure_presized(k);
                 self.replicas[k].submit(req);
+                self.refresh(k);
+                if !self.fault_windows.is_empty() {
+                    // the submit may idle-hop k's clock to the arrival
+                    // instant, possibly across a crash edge; lockstep's
+                    // unconditional per-tick pass would catch that next
+                    // tick — re-arm so the calendar does too
+                    self.crash_pending = true;
+                }
                 return true;
             }
         }
-        // step the replica with the earliest next event
-        let mut best: Option<(f64, usize)> = None;
-        for (k, rep) in self.replicas.iter().enumerate() {
-            if let Some(t) = rep.next_event_bound() {
-                if best.map_or(true, |(bt, _)| t < bt) {
-                    best = Some((t, k));
-                }
+        let Some((mut bound, k)) = front else {
+            return false; // no due arrivals, no bounded replicas: drained
+        };
+        // Run-to-frontier: k's live entry comes off the heap and k
+        // executes consecutive quanta while the lockstep scan would keep
+        // picking it. The frontier is frozen for the whole batch — only
+        // k's state changes while it runs — so the second-earliest
+        // calendar entry, the pending front, and k's earliest unfired
+        // crash edge are the only events that can preempt it.
+        self.calendar.pop();
+        let other = self.calendar_min();
+        let next_arrival = self.pending.front().map(|r| r.arrival);
+        let next_crash = self.next_unfired_crash(k);
+        loop {
+            let stepped = self.replicas[k].tick();
+            // a hard error in every profile: a bound with no progress
+            // would spin `drain` forever in release builds
+            assert!(
+                stepped,
+                "replica {k} reported next_event_bound = {bound} but tick() made no \
+                 progress; the bound/step contract is broken"
+            );
+            if self.replicas[k].now() >= next_crash {
+                // k crossed its own crash edge: the window fires before k
+                // runs anything else, exactly where lockstep fired it (at
+                // the head of the next tick)
+                self.crash_pending = true;
+                break;
+            }
+            match self.replicas[k].next_event_bound() {
+                None => break, // k ran out of work
+                Some(t) => bound = t,
+            }
+            // continue only while the lockstep scan would still pick k:
+            // earliest bound (ties to the lowest index) with no pending
+            // arrival due at or before it
+            let k_first = match other {
+                Some((to, j)) => bound < to || (bound == to && k < j),
+                None => true,
+            };
+            if !k_first || next_arrival.map_or(false, |a| a <= bound) {
+                break;
             }
         }
-        match best {
-            Some((_, k)) => {
-                let stepped = self.replicas[k].tick();
-                debug_assert!(stepped, "a replica with work must make progress");
-                true
-            }
-            None => false,
-        }
+        self.refresh(k);
+        true
     }
 
     fn drain(&mut self) -> ServeReport {
@@ -526,6 +826,22 @@ mod tests {
         }
         assert_eq!(RoutingPolicy::by_name("random"), None);
         assert_eq!(RoutingPolicy::default(), RoutingPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn calendar_entry_order_matches_the_lockstep_scan() {
+        // earliest time wins; time ties break to the LOWEST index (the
+        // scan's strict `t < bt` keeps the first minimum it saw)
+        let mut h = BinaryHeap::new();
+        for (t, i) in [(0.5, 3u32), (0.25, 2), (0.25, 1), (1.0, 0)] {
+            h.push(CalEntry { time: t, idx: i, version: 0 });
+        }
+        let order: Vec<(f64, u32)> = std::iter::from_fn(|| h.pop().map(|e| (e.time, e.idx)))
+            .collect();
+        assert_eq!(order, vec![(0.25, 1), (0.25, 2), (0.5, 3), (1.0, 0)]);
+        // -0.0 normalization: `t + 0.0` folds the signed zero away so
+        // total_cmp can't order it before a +0.0 tie partner
+        assert_eq!((-0.0f64 + 0.0).to_bits(), 0.0f64.to_bits());
     }
 
     #[test]
@@ -751,6 +1067,103 @@ mod tests {
         );
         assert_eq!(empty.transfer_retries, 0);
         assert_eq!(empty.demand_failures, 0);
+    }
+
+    #[test]
+    fn calendar_replays_the_lockstep_loop_bitwise() {
+        // one router drained through the calendar, an identically built
+        // one through the retired lockstep reference — every counter and
+        // sample must match to the bit, with and without a fault plan
+        // (link faults + a mid-flight crash). The full scheduler-kind ×
+        // plan × N matrix lives in rust/tests/scheduler.rs.
+        let mk_plan = || {
+            let mut plan = FaultPlan::new(0xCA1);
+            plan.ssd_failure_p = 0.1;
+            plan.gpu_failure_p = 0.05;
+            plan.crashes.push(CrashWindow {
+                replica: 0,
+                crash: 0.05,
+                recover: 1.5,
+            });
+            plan
+        };
+        for faulted in [false, true] {
+            let run = |lockstep: bool| -> ServeReport {
+                // small GPU so transfers (and thus link faults) engage
+                let engines = vec![mk_engine(1, 8).1, mk_engine(2, 8).1];
+                let reqs = mk_requests(14, 20.0, 7);
+                let mut router = Router::new(
+                    engines,
+                    Batcher::new(4, 0.1),
+                    RoutingPolicy::RoundRobin,
+                    AdmissionPolicy::Fifo,
+                );
+                if faulted {
+                    router = router.with_fault_plan(&mk_plan());
+                }
+                router.submit_all(&reqs);
+                if lockstep {
+                    router.drain_lockstep()
+                } else {
+                    router.drain()
+                }
+            };
+            let cal = run(false);
+            let lock = run(true);
+            assert_eq!(cal.requests, lock.requests, "faulted={faulted}");
+            assert_eq!(cal.tokens, lock.tokens, "faulted={faulted}");
+            assert_eq!(cal.batches, lock.batches, "faulted={faulted}");
+            assert_eq!(cal.demands, lock.demands, "faulted={faulted}");
+            assert_eq!(cal.gpu_hits, lock.gpu_hits, "faulted={faulted}");
+            assert_eq!(cal.transfer_retries, lock.transfer_retries, "faulted={faulted}");
+            assert_eq!(cal.demand_failures, lock.demand_failures, "faulted={faulted}");
+            assert_eq!(
+                cal.makespan.to_bits(),
+                lock.makespan.to_bits(),
+                "faulted={faulted}"
+            );
+            let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(cal.token_latency.samples()),
+                bits(lock.token_latency.samples()),
+                "calendar must replay lockstep bitwise (faulted={faulted})"
+            );
+        }
+    }
+
+    #[test]
+    fn single_submits_replay_submit_all_bitwise() {
+        // presize-by-delta must not change the simulation: incremental
+        // submits (no fleet presize) and one bulk submit_all produce the
+        // same replay, bit for bit
+        let run = |bulk: bool| -> ServeReport {
+            let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
+            let reqs = mk_requests(12, 8.0, 3);
+            let mut router = Router::new(
+                engines,
+                Batcher::new(4, 0.1),
+                RoutingPolicy::RoundRobin,
+                AdmissionPolicy::Fifo,
+            );
+            if bulk {
+                router.submit_all(&reqs);
+            } else {
+                for req in &reqs {
+                    router.submit(req);
+                }
+            }
+            router.drain()
+        };
+        let bulk = run(true);
+        let single = run(false);
+        assert_eq!(bulk.requests, single.requests);
+        assert_eq!(bulk.tokens, single.tokens);
+        assert_eq!(bulk.makespan.to_bits(), single.makespan.to_bits());
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(bulk.token_latency.samples()),
+            bits(single.token_latency.samples())
+        );
     }
 
     #[test]

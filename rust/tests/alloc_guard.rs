@@ -301,6 +301,15 @@ fn steady_state_router_iteration_is_allocation_free() {
     // handles, and replica steps run on the session substrate — so once
     // the replay is warmed, a window of router ticks (dispatch, admission,
     // stepping, retirement) performs zero heap allocations.
+    //
+    // Since PR 7, `tick` is the event-calendar loop, so the window also
+    // pins the calendar hot path: `submit_all` reserves the binary heap
+    // for the whole replay's worth of entries (2 per request + one live
+    // per replica + crash edges, covering the lazy-invalidation garbage
+    // bound), and a tick's pop → run-to-frontier batch → refresh pushes
+    // must recycle that capacity. A heap regrowth inside the measured
+    // window — i.e. an under-estimated stale-entry bound — fails the
+    // guard.
     let spec = ModelSpec::preset("switch-base-32").unwrap();
     let ds = DatasetPreset::by_name("translation").unwrap();
     let mk_engine = |seed: u64| {

@@ -28,11 +28,11 @@ use moe_infinity::benchsuite::{
     build_engine_with, build_replica_engines_with, build_requests, run_serve_with,
 };
 use moe_infinity::config::{SchedulerKind, ServeConfig};
-use moe_infinity::faults::FaultPlan;
+use moe_infinity::faults::{CrashWindow, FaultPlan};
 use moe_infinity::model::ModelSpec;
 use moe_infinity::server::{
     admit_key, pick_candidate, AdmissionPolicy, Batcher, ChunkedScheduler, ContinuousScheduler,
-    Router, RoutingPolicy, Scheduler, ServeReport, StaticScheduler,
+    RequestStat, Router, RoutingPolicy, Scheduler, ServeReport, StaticScheduler,
 };
 use moe_infinity::trace::Eam;
 use moe_infinity::util::{Pool, Rng};
@@ -296,7 +296,11 @@ fn replica_crash_failover_preserves_per_token_expert_demands() {
         let mut crashed = mk();
         crashed.submit(req);
         let t_mid = req.arrival + frac * (whole.makespan - req.arrival);
-        crashed.tick(t_mid);
+        while crashed.now() < t_mid {
+            if !crashed.tick() {
+                break;
+            }
+        }
         let mut handed = Vec::new();
         crashed.fail_over(&mut handed);
         assert_eq!(handed.len(), 1, "exactly the one request surrenders");
@@ -451,6 +455,137 @@ fn classes_admission_serves_the_same_work_as_fifo() {
     assert_eq!(fifo.tokens, cls.tokens);
     assert_eq!(fifo.request_latency.len(), cls.request_latency.len());
     assert_eq!(fifo.ttft.len(), cls.ttft.len());
+}
+
+/// Per-request outcome rows must agree field-for-field (floats by bits):
+/// this is what pins warm-failover *timing* — a request crashed off one
+/// replica and resumed on another reports its latency/ttft from the same
+/// instants under both router loops, not merely the same totals.
+fn assert_stats_bitwise(a: &[RequestStat], b: &[RequestStat], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: stat count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}: id");
+        assert_eq!(x.finished, y.finished, "{ctx}: req {} finished", x.id);
+        assert_eq!(x.outcome, y.outcome, "{ctx}: req {} outcome", x.id);
+        assert_eq!(
+            x.preemptions, y.preemptions,
+            "{ctx}: req {} preemptions",
+            x.id
+        );
+        assert_eq!(
+            x.arrival.to_bits(),
+            y.arrival.to_bits(),
+            "{ctx}: req {} arrival",
+            x.id
+        );
+        assert_eq!(
+            x.latency.to_bits(),
+            y.latency.to_bits(),
+            "{ctx}: req {} latency {} vs {}",
+            x.id,
+            x.latency,
+            y.latency
+        );
+        assert_eq!(
+            x.ttft.to_bits(),
+            y.ttft.to_bits(),
+            "{ctx}: req {} ttft {} vs {}",
+            x.id,
+            x.ttft,
+            y.ttft
+        );
+    }
+}
+
+/// Replay `reqs` through a fresh router; `lockstep` picks the loop.
+/// Returns the merged report plus each replica's per-request stat rows.
+fn replay_router(
+    cfg: &ServeConfig,
+    pool: &Pool,
+    reqs: &[Request],
+    plan: Option<&FaultPlan>,
+    chunk: Option<u32>,
+    lockstep: bool,
+) -> (ServeReport, Vec<Vec<RequestStat>>) {
+    let engines = build_replica_engines_with(cfg, pool).expect("engines");
+    let batcher = Batcher::new(cfg.batching.max_batch, cfg.batching.max_wait);
+    let mut router = Router::new(engines, batcher, cfg.routing, cfg.priority);
+    if let Some(c) = chunk {
+        router = router.with_prefill_chunk(c);
+    }
+    if let Some(p) = plan {
+        router = router.with_fault_plan(p);
+    }
+    router.submit_all(reqs);
+    let report = if lockstep {
+        router.drain_lockstep()
+    } else {
+        router.drain()
+    };
+    let stats = router.replicas().iter().map(|r| r.request_stats()).collect();
+    (report, stats)
+}
+
+/// The PR 7 acceptance differential: the event-calendar router loop must
+/// replay the retired lockstep polling loop **bitwise** — reports, per
+/// token latencies, fault counters, and per-request stat rows — across
+/// every scheduler kind ({continuous, chunked, classes}, each under a
+/// different routing policy), with and without a fault plan that injects
+/// link failures plus a replica-0 crash/recover window (so warm-failover
+/// timing is compared too), at 1, 2 and 4 replicas. The lockstep loop
+/// stays compiled (`Router::drain_lockstep`) precisely to serve as this
+/// reference.
+#[test]
+fn calendar_router_replays_lockstep_bitwise_across_the_matrix() {
+    let pool = Pool::serial();
+    // (label, scheduler flavor as (routing, admission, chunk))
+    let kinds: [(&str, RoutingPolicy, AdmissionPolicy, Option<u32>); 3] = [
+        ("continuous", RoutingPolicy::RoundRobin, AdmissionPolicy::Fifo, None),
+        ("chunked", RoutingPolicy::LeastLoaded, AdmissionPolicy::Fifo, Some(32)),
+        ("classes", RoutingPolicy::TaskAffinity, AdmissionPolicy::Classes, None),
+    ];
+    for n in [1usize, 2, 4] {
+        for &(label, routing, admission, chunk) in &kinds {
+            for faulted in [false, true] {
+                let mut cfg = base_cfg(2.0 * n as f64);
+                cfg.workload.duration = 6.0;
+                cfg.replicas = n;
+                cfg.routing = routing;
+                cfg.priority = admission;
+                if admission == AdmissionPolicy::Classes {
+                    cfg.workload.interactive_frac = 0.3;
+                }
+                let plan = faulted.then(|| {
+                    let mut p = FaultPlan::new(cfg.seed ^ 0xFA57);
+                    p.ssd_failure_p = 0.1;
+                    p.gpu_failure_p = 0.05;
+                    p.crashes.push(CrashWindow {
+                        replica: 0,
+                        crash: cfg.workload.duration * 0.3,
+                        recover: cfg.workload.duration * 0.6,
+                    });
+                    p
+                });
+                let reqs = build_requests(&cfg).expect("requests");
+                let ctx = format!("{label} n={n} faulted={faulted}");
+                let (lock, lock_stats) =
+                    replay_router(&cfg, &pool, &reqs, plan.as_ref(), chunk, true);
+                let (cal, cal_stats) =
+                    replay_router(&cfg, &pool, &reqs, plan.as_ref(), chunk, false);
+                assert!(lock.requests > 0, "{ctx}: replay must serve");
+                if faulted {
+                    assert!(
+                        lock.transfer_retries > 0,
+                        "{ctx}: fault plan must exercise retries"
+                    );
+                }
+                assert_bitwise(&cal, &lock, &ctx);
+                for (k, (ls, cs)) in lock_stats.iter().zip(&cal_stats).enumerate() {
+                    assert_stats_bitwise(cs, ls, &format!("{ctx} replica {k}"));
+                }
+            }
+        }
+    }
 }
 
 #[test]

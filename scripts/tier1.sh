@@ -49,6 +49,14 @@ echo "== perf_faults (smoke mode -> BENCH_faults.json)"
 # replica crash loses zero requests via warm failover
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_faults
 
+echo "== perf_events (smoke mode -> BENCH_events.json)"
+# discrete-event router calendar vs the retired lockstep polling loop on a
+# flash-crowd trace; asserts the calendar replays lockstep bitwise at every
+# swept replica count (incl. under link faults + a replica crash) and that
+# the N=16 point beats lockstep on host wall-clock by >= 2x — the repo's
+# first host-time regression surface
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_events
+
 echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
 # the suite pins explicit pool sizes internally (and now also the
 # scheduler differential: continuous at max_batch=1 == static, bitwise);
@@ -68,3 +76,4 @@ cat BENCH_scheduler.json
 cat BENCH_router.json
 cat BENCH_prefill.json
 cat BENCH_faults.json
+cat BENCH_events.json
