@@ -21,6 +21,7 @@ fn main() {
             let ds = DatasetPreset::by_name(dataset).unwrap();
             let eamc = build_eamc(&spec, &ds, 240, 80, 22);
             // fixed 15GB GPU expert budget: capacity doubles under bf16
+            // moelint: allow(float-cast, fixed 15GB budget floors to whole experts)
             let cap = (15e9 as u64 / spec.expert_bytes()) as usize;
             let mut engine = SimEngine::new(
                 spec.clone(),

@@ -35,6 +35,7 @@ fn main() {
 
         let mut table = Table::new(&["cache", "experts", "activation", "lru", "lfu", "neighbor", "oracle"]);
         for gb in sizes_gb {
+            // moelint: allow(float-cast, GB sweep point floors to whole experts)
             let cap = ((gb * 1e9) as u64 / spec.expert_bytes()) as usize;
             let mut row = vec![format!("{gb}GB"), cap.to_string()];
             for policy_name in ["activation", "lru", "lfu", "neighbor", "oracle"] {

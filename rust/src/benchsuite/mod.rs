@@ -339,6 +339,7 @@ pub fn time_ns_per_op<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) 
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
+    // moelint: allow(wall-clock, host timing is this helper's entire purpose)
     let t0 = std::time::Instant::now();
     for _ in 0..iters {
         std::hint::black_box(f());
@@ -400,6 +401,7 @@ impl Table {
     }
 
     pub fn print(&self, title: &str) {
+        // moelint: allow(print, Table::print exists to write bench reports to stdout)
         println!("\n## {title}");
         let widths: Vec<usize> = self
             .headers
@@ -421,10 +423,13 @@ impl Table {
             }
             s
         };
+        // moelint: allow(print, bench report header row)
         println!("{}", fmt_row(&self.headers));
         let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        // moelint: allow(print, bench report separator row)
         println!("{}", fmt_row(&sep));
         for r in &self.rows {
+            // moelint: allow(print, bench report data rows)
             println!("{}", fmt_row(r));
         }
     }

@@ -1,0 +1,82 @@
+//! `moelint` CLI — lint the repo's determinism & hot-path rules.
+//!
+//! Usage: `moelint [--json] [--rules] [ROOT]`
+//!
+//! * `ROOT` defaults to the current directory; it must contain `rust/src`
+//!   (the walk covers `rust/src`, `rust/benches`, `rust/tests`).
+//! * `--json` emits newline-delimited JSON objects instead of the
+//!   gcc-style `path:line:col: moelint(rule): msg` lines.
+//! * `--rules` prints the rule catalogue and exits 0.
+//!
+//! Exit codes (the contract `scripts/tier1.sh` and CI rely on):
+//!   0 — clean, no findings
+//!   1 — one or more findings (each printed to stdout)
+//!   2 — usage error or I/O failure (message on stderr)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use moe_infinity::lint::{lint_tree, rules::RULES, LINT_ROOTS};
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--rules" => {
+                for r in RULES {
+                    println!("{}  {:<11} {}", r.id, r.name, r.summary);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("usage: moelint [--json] [--rules] [ROOT]");
+                println!("lints {} for determinism & hot-path rules", LINT_ROOTS.join(", "));
+                println!("exit codes: 0 clean, 1 findings, 2 usage/IO error");
+                return ExitCode::SUCCESS;
+            }
+            a if a.starts_with('-') => {
+                eprintln!("moelint: unknown option `{a}` (try --help)");
+                return ExitCode::from(2);
+            }
+            a => {
+                if root.is_some() {
+                    eprintln!("moelint: more than one ROOT argument");
+                    return ExitCode::from(2);
+                }
+                root = Some(PathBuf::from(a));
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from("."));
+    if !root.join("rust/src").is_dir() {
+        eprintln!(
+            "moelint: `{}` does not look like the repo root (no rust/src)",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+
+    let findings = match lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("moelint: walk failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for f in &findings {
+        if json {
+            println!("{}", f.to_json());
+        } else {
+            println!("{f}");
+        }
+    }
+    if findings.is_empty() {
+        eprintln!("moelint: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("moelint: {} finding(s)", findings.len());
+        ExitCode::from(1)
+    }
+}

@@ -24,9 +24,8 @@ pub use policies::{
     OraclePolicy, Policy,
 };
 
-use std::collections::{HashMap, HashSet};
-
 use crate::model::ExpertKey;
+use crate::util::{det_map_with_capacity, DetMap, DetSet};
 use crate::trace::Eam;
 
 /// Replacement-decision context: Algorithm 2 consults the EAM of the
@@ -67,9 +66,9 @@ impl CacheKind {
 pub struct ExpertCache {
     capacity: usize,
     slots: Vec<ExpertKey>,
-    index: HashMap<ExpertKey, usize>,
+    index: DetMap<ExpertKey, usize>,
     policy: Box<dyn Policy>,
-    protected: HashSet<ExpertKey>,
+    protected: DetSet<ExpertKey>,
     hits: u64,
     misses: u64,
     evictions: u64,
@@ -80,9 +79,9 @@ impl ExpertCache {
         ExpertCache {
             capacity,
             slots: Vec::with_capacity(capacity),
-            index: HashMap::with_capacity(capacity),
+            index: det_map_with_capacity(capacity),
             policy,
-            protected: HashSet::new(),
+            protected: DetSet::default(),
             hits: 0,
             misses: 0,
             evictions: 0,

@@ -13,11 +13,12 @@
 //!   by differential proptests in `tests/properties.rs`.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::BinaryHeap;
 
 use crate::cache::CacheCtx;
 use crate::model::ExpertKey;
 use crate::prefetch::EPSILON;
+use crate::util::{DetMap, DetSet};
 
 /// Replacement policy plugged into [`crate::cache::ExpertCache`].
 pub trait Policy {
@@ -28,7 +29,7 @@ pub trait Policy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         ctx: &CacheCtx,
     ) -> ExpertKey;
     fn on_access(&mut self, _key: ExpertKey) {}
@@ -42,7 +43,7 @@ pub trait Policy {
 /// the exclusion (the caller guaranteed eviction must happen).
 fn pick_min<K: PartialOrd>(
     entries: &[ExpertKey],
-    excluded: Option<&HashSet<ExpertKey>>,
+    excluded: Option<&DetSet<ExpertKey>>,
     mut score: impl FnMut(&ExpertKey) -> K,
 ) -> ExpertKey {
     debug_assert!(!entries.is_empty());
@@ -135,7 +136,7 @@ impl Policy for ActivationPolicy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         ctx: &CacheCtx,
     ) -> ExpertKey {
         let (r, d) = (self.use_ratio, self.use_layer_decay);
@@ -197,12 +198,12 @@ pub struct IndexedActivationPolicy {
     pub use_layer_decay: bool,
     heap: BinaryHeap<Reverse<VictimEntry>>,
     /// Resident keys → current generation.
-    gen: HashMap<ExpertKey, u64>,
+    gen: DetMap<ExpertKey, u64>,
     next_gen: u64,
     /// Resident keys grouped by layer (for row-scoped invalidation).
     by_layer: Vec<Vec<ExpertKey>>,
     /// Key → position in its `by_layer` bucket (O(1) swap-remove).
-    pos: HashMap<ExpertKey, usize>,
+    pos: DetMap<ExpertKey, usize>,
     /// Per-layer `(eam id, row version)` the live priorities were computed
     /// under; a mismatch means that row's ratios may have changed.
     snap: Vec<(u64, u64)>,
@@ -277,7 +278,7 @@ impl Policy for IndexedActivationPolicy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         ctx: &CacheCtx,
     ) -> ExpertKey {
         debug_assert!(!entries.is_empty());
@@ -372,7 +373,7 @@ impl Policy for IndexedActivationPolicy {
 #[derive(Debug, Default)]
 pub struct LruPolicy {
     clock: u64,
-    last: HashMap<ExpertKey, u64>,
+    last: DetMap<ExpertKey, u64>,
 }
 
 impl LruPolicy {
@@ -392,7 +393,7 @@ impl Policy for LruPolicy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         _ctx: &CacheCtx,
     ) -> ExpertKey {
         pick_min(entries, excluded, |e| self.last.get(e).copied().unwrap_or(0))
@@ -415,7 +416,7 @@ impl Policy for LruPolicy {
 /// cross-iteration blindness §8.4 demonstrates.
 #[derive(Debug, Default)]
 pub struct LfuPolicy {
-    counts: HashMap<ExpertKey, u64>,
+    counts: DetMap<ExpertKey, u64>,
 }
 
 impl LfuPolicy {
@@ -431,7 +432,7 @@ impl Policy for LfuPolicy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         _ctx: &CacheCtx,
     ) -> ExpertKey {
         pick_min(entries, excluded, |e| self.counts.get(e).copied().unwrap_or(0))
@@ -457,7 +458,7 @@ impl Policy for LfuPolicy {
 pub struct NeighborPolicy {
     lru: LruPolicy,
     /// Reusable residency set for the victim scan.
-    resident: HashSet<ExpertKey>,
+    resident: DetSet<ExpertKey>,
 }
 
 impl NeighborPolicy {
@@ -473,7 +474,7 @@ impl Policy for NeighborPolicy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         _ctx: &CacheCtx,
     ) -> ExpertKey {
         self.resident.clear();
@@ -520,21 +521,21 @@ impl Policy for NeighborPolicy {
 #[derive(Debug)]
 pub struct OraclePolicy {
     /// Per-expert sorted future access positions.
-    future: HashMap<ExpertKey, Vec<u64>>,
+    future: DetMap<ExpertKey, Vec<u64>>,
     /// Per-expert cursor into `future`.
-    cursor: HashMap<ExpertKey, usize>,
+    cursor: DetMap<ExpertKey, usize>,
     now: u64,
 }
 
 impl OraclePolicy {
     pub fn from_trace(trace: &[ExpertKey]) -> OraclePolicy {
-        let mut future: HashMap<ExpertKey, Vec<u64>> = HashMap::new();
+        let mut future: DetMap<ExpertKey, Vec<u64>> = DetMap::default();
         for (t, k) in trace.iter().enumerate() {
             future.entry(*k).or_default().push(t as u64);
         }
         OraclePolicy {
             future,
-            cursor: HashMap::new(),
+            cursor: DetMap::default(),
             now: 0,
         }
     }
@@ -571,7 +572,7 @@ impl Policy for OraclePolicy {
     fn victim(
         &mut self,
         entries: &[ExpertKey],
-        excluded: Option<&HashSet<ExpertKey>>,
+        excluded: Option<&DetSet<ExpertKey>>,
         _ctx: &CacheCtx,
     ) -> ExpertKey {
         // Belady evicts the entry used farthest in the future = min of the
@@ -653,10 +654,10 @@ mod tests {
         };
         let mut p = ActivationPolicy::new();
         let entries = vec![k(0, 0), k(3, 0)];
-        let protected: HashSet<ExpertKey> = [k(3, 0)].into_iter().collect();
+        let protected: DetSet<ExpertKey> = [k(3, 0)].into_iter().collect();
         assert_eq!(p.victim(&entries, Some(&protected), &ctx), k(0, 0));
         // all-excluded: exclusion is void
-        let all: HashSet<ExpertKey> = entries.iter().copied().collect();
+        let all: DetSet<ExpertKey> = entries.iter().copied().collect();
         assert_eq!(p.victim(&entries, Some(&all), &ctx), k(3, 0));
     }
 
@@ -672,7 +673,7 @@ mod tests {
             scan.on_insert(e);
             heap.on_insert(e);
         }
-        let mut protected: HashSet<ExpertKey> = HashSet::new();
+        let mut protected: DetSet<ExpertKey> = DetSet::default();
         for step in 0..40u32 {
             // mutate a row between picks
             eam.record((step % 4) as usize, ((step * 3) % 8) as usize, 1 + step % 5);

@@ -550,7 +550,9 @@ impl ServeConfig {
         // runtime) is reserved before the leftover becomes expert cache.
         // 40% reservation matches the paper's Fig. 11 operating point
         // (switch-large-128 on a 24GB A5000 -> ~15GB expert cache).
+        // moelint: allow(float-cast, GB->bytes floor loses under one byte)
         let gpu_bytes = (self.memory.gpu_gb * 1e9 * 0.6) as u64;
+        // moelint: allow(float-cast, GB->bytes floor loses under one byte)
         let dram_bytes = (self.memory.dram_gb * 1e9) as u64;
         let gpu_capacity = (gpu_bytes.saturating_sub(spec.dense_bytes) / eb) as usize;
         let dram_capacity = (dram_bytes / eb) as usize;
@@ -792,7 +794,9 @@ mod tests {
         let spec = c.model_spec().unwrap();
         let t = c.tier_config().unwrap();
         let eb = spec.expert_bytes();
+        // moelint: allow(float-cast, test bound recomputes the same GB->bytes floor)
         assert!(t.gpu_capacity as u64 * eb <= (c.memory.gpu_gb * 1e9) as u64);
+        // moelint: allow(float-cast, test bound recomputes the same GB->bytes floor)
         assert!(t.dram_capacity as u64 * eb <= (c.memory.dram_gb * 1e9) as u64);
     }
 

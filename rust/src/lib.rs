@@ -31,6 +31,7 @@ pub mod cluster;
 pub mod config;
 pub mod engine;
 pub mod faults;
+pub mod lint;
 pub mod memory;
 pub mod metrics;
 pub mod model;

@@ -1,0 +1,447 @@
+//! A minimal hand-rolled Rust tokenizer for `moelint`.
+//!
+//! This is *not* a Rust parser: it only has to be precise about the things
+//! a token-level lint can get wrong — comments (so pragmas are found and
+//! code in doc examples is ignored), string/char literals (so rule fixtures
+//! embedded as strings are never mistaken for code), raw strings, lifetimes
+//! vs char literals, numeric literals (int vs float, for rule R4), and the
+//! `::` path separator (so `HashMap::new` / `Instant::now` match as token
+//! triples). Everything else is a single-character punct.
+
+/// Token kinds relevant to the rule walkers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `as`, `unsafe`, ...).
+    Ident,
+    /// `'a` — distinguished from char literals.
+    Lifetime,
+    /// String, raw-string, byte-string or char literal (contents opaque).
+    Str,
+    /// Integer literal (`42`, `0xFF`, `1_000u64`).
+    Int,
+    /// Float literal (`1.0`, `1e9`, `2f64`).
+    Float,
+    /// `::`
+    PathSep,
+    /// Any other single character (`!`, `(`, `<`, ...).
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Identifier text (empty for non-identifiers — the rules only ever
+    /// match on identifier spelling).
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A `//` line comment (block comments are skipped entirely — pragmas must
+/// be line comments so their anchor line is unambiguous).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Text after the `//` (doc-comment markers included verbatim).
+    pub text: String,
+    pub line: u32,
+    /// `true` when code tokens precede the comment on its line (a trailing
+    /// pragma applies to that line); `false` for a standalone comment line
+    /// (a standalone pragma applies to the next code line).
+    pub trailing: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Lexer {
+    cs: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+    line_had_token: bool,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    /// Advance one char, maintaining line/col counters.
+    fn bump(&mut self) {
+        if self.cs[self.i] == '\n' {
+            self.line += 1;
+            self.col = 1;
+            self.line_had_token = false;
+        } else {
+            self.col += 1;
+        }
+        self.i += 1;
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: u32, col: u32) {
+        self.line_had_token = true;
+        self.out.tokens.push(Token { kind, text, line, col });
+    }
+
+    fn line_comment(&mut self) {
+        let (line, trailing) = (self.line, self.line_had_token);
+        self.bump();
+        self.bump(); // the two slashes
+        let start = self.i;
+        while self.i < self.cs.len() && self.cs[self.i] != '\n' {
+            self.bump();
+        }
+        let text: String = self.cs[start..self.i].iter().collect();
+        self.out.comments.push(Comment { text, line, trailing });
+    }
+
+    fn block_comment(&mut self) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while self.i < self.cs.len() && depth > 0 {
+            if self.cs[self.i] == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if self.cs[self.i] == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump();
+                self.bump();
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    /// Normal (escaped) string body; the opening quote is current.
+    fn quoted_string(&mut self) {
+        self.bump(); // opening "
+        while self.i < self.cs.len() {
+            match self.cs[self.i] {
+                '\\' => {
+                    self.bump();
+                    if self.i < self.cs.len() {
+                        self.bump(); // the escaped char
+                    }
+                }
+                '"' => {
+                    self.bump();
+                    return;
+                }
+                _ => self.bump(),
+            }
+        }
+    }
+
+    /// Raw string body starting at the first `#` or `"` after the `r`
+    /// prefix. Returns `false` if this is not actually a raw string (e.g. a
+    /// raw identifier `r#foo`), in which case nothing is consumed.
+    fn raw_string(&mut self) -> bool {
+        let mut hashes = 0usize;
+        while self.peek(hashes) == Some('#') {
+            hashes += 1;
+        }
+        if self.peek(hashes) != Some('"') {
+            return false;
+        }
+        for _ in 0..=hashes {
+            self.bump(); // hashes + opening quote
+        }
+        'scan: while self.i < self.cs.len() {
+            if self.cs[self.i] == '"' {
+                for k in 0..hashes {
+                    if self.peek(1 + k) != Some('#') {
+                        self.bump();
+                        continue 'scan;
+                    }
+                }
+                for _ in 0..=hashes {
+                    self.bump(); // closing quote + hashes
+                }
+                return true;
+            }
+            self.bump();
+        }
+        true
+    }
+
+    /// Char literal or lifetime; the `'` is current.
+    fn char_or_lifetime(&mut self) {
+        let (line, col) = (self.line, self.col);
+        self.bump(); // '
+        match self.peek(0) {
+            Some('\\') => {
+                // escaped char literal: scan to the closing quote
+                while self.i < self.cs.len() {
+                    match self.cs[self.i] {
+                        '\\' => {
+                            self.bump();
+                            if self.i < self.cs.len() {
+                                self.bump();
+                            }
+                        }
+                        '\'' => {
+                            self.bump();
+                            break;
+                        }
+                        _ => self.bump(),
+                    }
+                }
+                self.push(TokKind::Str, String::new(), line, col);
+            }
+            Some(c) if is_ident_start(c) && self.peek(1) != Some('\'') => {
+                // lifetime: 'ident not closed by a quote
+                self.bump();
+                while self.peek(0).is_some_and(is_ident_continue) {
+                    self.bump();
+                }
+                self.push(TokKind::Lifetime, String::new(), line, col);
+            }
+            Some(_) => {
+                // plain char literal 'x' (including non-ident chars)
+                self.bump();
+                if self.peek(0) == Some('\'') {
+                    self.bump();
+                }
+                self.push(TokKind::Str, String::new(), line, col);
+            }
+            None => {}
+        }
+    }
+
+    /// Numeric literal; first digit is current.
+    fn number(&mut self) {
+        let (line, col) = (self.line, self.col);
+        let mut float = false;
+        if self.cs[self.i] == '0' && matches!(self.peek(1), Some('x' | 'o' | 'b' | 'X' | 'O' | 'B'))
+        {
+            self.bump();
+            self.bump();
+            while self.peek(0).is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+                self.bump();
+            }
+            self.push(TokKind::Int, String::new(), line, col);
+            return;
+        }
+        while self.peek(0).is_some_and(|c| c.is_ascii_digit() || c == '_') {
+            self.bump();
+        }
+        if self.peek(0) == Some('.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            float = true;
+            self.bump();
+            while self.peek(0).is_some_and(|c| c.is_ascii_digit() || c == '_') {
+                self.bump();
+            }
+        }
+        if matches!(self.peek(0), Some('e' | 'E'))
+            && (self.peek(1).is_some_and(|c| c.is_ascii_digit())
+                || (matches!(self.peek(1), Some('+' | '-'))
+                    && self.peek(2).is_some_and(|c| c.is_ascii_digit())))
+        {
+            float = true;
+            self.bump(); // e
+            if matches!(self.peek(0), Some('+' | '-')) {
+                self.bump();
+            }
+            while self.peek(0).is_some_and(|c| c.is_ascii_digit()) {
+                self.bump();
+            }
+        }
+        // type suffix (u64, f32, ...)
+        let suffix_start = self.i;
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump();
+        }
+        if self.cs.get(suffix_start) == Some(&'f') {
+            float = true;
+        }
+        let kind = if float { TokKind::Float } else { TokKind::Int };
+        self.push(kind, String::new(), line, col);
+    }
+
+    fn ident(&mut self) {
+        let (line, col) = (self.line, self.col);
+        let start = self.i;
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump();
+        }
+        let text: String = self.cs[start..self.i].iter().collect();
+        // raw / byte string prefixes
+        if matches!(text.as_str(), "r" | "br" | "rb") {
+            match self.peek(0) {
+                Some('"') | Some('#') => {
+                    if self.raw_string() {
+                        self.push(TokKind::Str, String::new(), line, col);
+                        return;
+                    }
+                    // r#ident — a raw identifier: fall through, consuming
+                    // the hash and the identifier proper
+                    if self.peek(0) == Some('#') {
+                        self.bump();
+                        let rs = self.i;
+                        while self.peek(0).is_some_and(is_ident_continue) {
+                            self.bump();
+                        }
+                        let raw: String = self.cs[rs..self.i].iter().collect();
+                        self.push(TokKind::Ident, raw, line, col);
+                        return;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if text == "b" && self.peek(0) == Some('"') {
+            self.quoted_string();
+            self.push(TokKind::Str, String::new(), line, col);
+            return;
+        }
+        self.push(TokKind::Ident, text, line, col);
+    }
+
+    fn run(mut self) -> Lexed {
+        while self.i < self.cs.len() {
+            let c = self.cs[self.i];
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '"' {
+                let (line, col) = (self.line, self.col);
+                self.quoted_string();
+                self.push(TokKind::Str, String::new(), line, col);
+            } else if c == '\'' {
+                self.char_or_lifetime();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if is_ident_start(c) {
+                self.ident();
+            } else if c == ':' && self.peek(1) == Some(':') {
+                let (line, col) = (self.line, self.col);
+                self.bump();
+                self.bump();
+                self.push(TokKind::PathSep, String::new(), line, col);
+            } else {
+                let (line, col) = (self.line, self.col);
+                self.bump();
+                self.push(TokKind::Punct(c), String::new(), line, col);
+            }
+        }
+        self.out
+    }
+}
+
+/// Tokenize `src`, returning code tokens and line comments.
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        cs: src.chars().collect(),
+        i: 0,
+        line: 1,
+        col: 1,
+        line_had_token: false,
+        out: Lexed::default(),
+    }
+    .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn idents_paths_and_macros() {
+        let l = lex("let m = HashMap::new(); q!();");
+        let kinds: Vec<_> = l.tokens.iter().map(|t| t.kind.clone()).collect();
+        assert_eq!(
+            idents("let m = HashMap::new(); q!();"),
+            vec!["let", "m", "HashMap", "new", "q"]
+        );
+        assert!(kinds.contains(&TokKind::PathSep));
+        assert!(kinds.contains(&TokKind::Punct('!')));
+    }
+
+    #[test]
+    fn strings_hide_code() {
+        // code inside string literals must not produce identifier tokens
+        assert_eq!(idents(r##"let s = "HashMap::new()"; "##), vec!["let", "s"]);
+        assert_eq!(
+            idents("let s = r#\"unsafe { Instant::now() }\"#;"),
+            vec!["let", "s"]
+        );
+        assert_eq!(idents("let s = \"esc \\\" HashMap\";"), vec!["let", "s"]);
+        assert_eq!(idents("let b = b\"HashMap\";"), vec!["let", "b"]);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("let x = 1; // trailing HashMap\n// standalone\nlet y = 2;");
+        assert_eq!(idents("let x = 1; // trailing HashMap\nlet y = 2;"), vec!["let", "x", "let", "y"]);
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].trailing && l.comments[0].text.contains("trailing"));
+        assert!(!l.comments[1].trailing);
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        assert_eq!(idents("/* a /* nested */ still */ let z = 3;"), vec!["let", "z"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = l.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = l.tokens.iter().filter(|t| t.kind == TokKind::Str).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 1);
+        // escaped char + whitespace char
+        let l2 = lex(r"let a = '\n'; let b = ' ';");
+        assert_eq!(l2.tokens.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn numbers_int_vs_float() {
+        let l = lex("let a = 1; let b = 1.5; let c = 1e9; let d = 2f64; let e = 0xFF; let r = 0..10;");
+        let floats = l.tokens.iter().filter(|t| t.kind == TokKind::Float).count();
+        let ints = l.tokens.iter().filter(|t| t.kind == TokKind::Int).count();
+        assert_eq!(floats, 3, "1.5, 1e9, 2f64");
+        assert_eq!(ints, 4, "1, 0xFF, 0, 10");
+    }
+
+    #[test]
+    fn line_and_col_positions() {
+        let l = lex("a\n  bb ccc");
+        let t: Vec<_> = l.tokens.iter().map(|t| (t.text.clone(), t.line, t.col)).collect();
+        assert_eq!(
+            t,
+            vec![
+                ("a".to_string(), 1, 1),
+                ("bb".to_string(), 2, 3),
+                ("ccc".to_string(), 2, 6)
+            ]
+        );
+    }
+}

@@ -1,0 +1,380 @@
+//! `moelint` — a dependency-free, source-level determinism & hot-path lint.
+//!
+//! Every guarantee this repo pins dynamically (lockstep ≡ calendar replay,
+//! pooled ≡ serial at any thread count, zero-allocation warmed windows) is
+//! only as strong as the differential tests that happen to cover the code.
+//! `moelint` makes the underlying properties *checked properties of the
+//! source*: no entropy-seeded hash containers on decision paths (R1), no
+//! wall-clock reads outside benches (R2), no parallelism outside the
+//! deterministic pool (R3), no silent float→int truncation of sim-time or
+//! byte quantities (R4), no `unsafe` outside the two Miri-audited files
+//! (R5), and no stray printing from library modules (R6).
+//!
+//! * Rule engine: [`rules`] (catalogue in [`rules::RULES`]).
+//! * Tokenizer: [`lex`] (comments, strings, lifetimes, numerics, `::`).
+//! * Suppression: `// moelint: allow(<rule>, <reason>)` on the offending
+//!   line, or on its own line directly above. The reason is **mandatory**;
+//!   a reasonless or unknown-rule pragma is itself a finding (`pragma`),
+//!   and `pragma` findings cannot be suppressed.
+//! * Binary: `cargo run --bin moelint [--json] [ROOT]` — exit 0 clean,
+//!   1 findings, 2 usage/IO error.
+//!
+//! The self-check test at the bottom runs the linter over the whole crate,
+//! so `cargo test` fails the moment a rule regresses — the same wall CI
+//! enforces via the `lint` job.
+
+pub mod lex;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lex::lex;
+use rules::{check_all, resolve_rule, FileClass};
+
+/// Directories (relative to the repo root) the linter walks.
+pub const LINT_ROOTS: [&str; 3] = ["rust/src", "rust/benches", "rust/tests"];
+
+/// One lint finding, addressed by repo-relative path and 1-based position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    /// Canonical rule name (`det-map`, `wall-clock`, ..., or `pragma`).
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: moelint({}): {}",
+            self.path, self.line, self.col, self.rule, self.msg
+        )
+    }
+}
+
+impl Finding {
+    /// One machine-readable JSON object (newline-delimited stream format).
+    pub fn to_json(&self) -> String {
+        format!(
+            r#"{{"path":"{}","line":{},"col":{},"rule":"{}","msg":"{}"}}"#,
+            json_escape(&self.path),
+            self.line,
+            self.col,
+            self.rule,
+            json_escape(&self.msg)
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A parsed `moelint:` pragma comment: either a valid suppression or a
+/// `pragma`-rule finding message.
+fn parse_pragma(text: &str) -> Option<Result<&'static str, String>> {
+    let rest = text.trim().strip_prefix("moelint:")?.trim();
+    let Some(inner) = rest.strip_prefix("allow(").and_then(|r| r.trim_end().strip_suffix(')'))
+    else {
+        return Some(Err(format!(
+            "malformed pragma `{}`: expected `moelint: allow(<rule>, <reason>)`",
+            rest
+        )));
+    };
+    let (rule_arg, reason) = match inner.split_once(',') {
+        Some((r, why)) => (r, why.trim()),
+        None => (inner, ""),
+    };
+    let Some(rule) = resolve_rule(rule_arg) else {
+        return Some(Err(format!(
+            "pragma names unknown rule `{}` (see rules::RULES)",
+            rule_arg.trim()
+        )));
+    };
+    if reason.is_empty() {
+        return Some(Err(format!(
+            "pragma for `{rule}` has no reason: suppressions must say why (`allow({rule}, \
+             <reason>)`)"
+        )));
+    }
+    Some(Ok(rule))
+}
+
+/// Lint one file's source. `rel_path` is the repo-relative path with
+/// forward slashes (it determines rule scope — see [`FileClass`]).
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let class = FileClass::classify(rel_path);
+    let lexed = lex(src);
+
+    let mut out = Vec::new();
+    let mut allow: Vec<(u32, &'static str)> = Vec::new();
+    for c in &lexed.comments {
+        match parse_pragma(&c.text) {
+            None => {}
+            Some(Ok(rule)) => {
+                allow.push((c.line, rule));
+                if !c.trailing {
+                    // standalone pragma: applies to the next code line
+                    if let Some(t) = lexed.tokens.iter().find(|t| t.line > c.line) {
+                        allow.push((t.line, rule));
+                    }
+                }
+            }
+            Some(Err(msg)) => out.push(Finding {
+                path: class.rel.clone(),
+                line: c.line,
+                col: 1,
+                rule: "pragma",
+                msg,
+            }),
+        }
+    }
+
+    let mut raw = Vec::new();
+    check_all(&class, &lexed, &mut raw);
+    out.extend(
+        raw.into_iter()
+            .filter(|f| !allow.iter().any(|&(l, r)| l == f.line && r == f.rule)),
+    );
+    out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole repo under `root` (the directory containing `rust/`),
+/// walking [`LINT_ROOTS`] in deterministic (sorted) order.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for sub in LINT_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut out = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(lint_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ------------------------------------------------------------ fixtures
+
+    #[test]
+    fn r1_trips_in_sim_modules_only() {
+        let fix = "use std::collections::{HashMap, HashSet};\n\
+                   fn f() { let _m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let hits = lint_source("rust/src/cache/fixture.rs", fix);
+        assert!(hits.iter().all(|f| f.rule == "det-map"), "{hits:?}");
+        assert_eq!(hits.len(), 4, "import x2 + type + ctor: {hits:?}");
+        // out of scope: non-sim module, tests, benches
+        assert!(lint_source("rust/src/metrics/fixture.rs", fix).is_empty());
+        assert!(lint_source("rust/tests/fixture.rs", fix).is_empty());
+        assert!(lint_source("rust/benches/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r1_catches_every_sim_module() {
+        let fix = "fn f() { let _s = std::collections::HashSet::<u32>::new(); }\n";
+        for m in rules::SIM_MODULES {
+            let hits = lint_source(&format!("rust/src/{m}/fixture.rs"), fix);
+            assert_eq!(rules_of(&hits), vec!["det-map"], "module {m}");
+        }
+    }
+
+    #[test]
+    fn r2_trips_on_wall_clock_outside_benches() {
+        let fix = "fn f() -> std::time::Instant { std::time::Instant::now() }\n\
+                   fn g() { let _t = std::time::SystemTime::now(); }\n";
+        let hits = lint_source("rust/src/server/fixture.rs", fix);
+        assert_eq!(rules_of(&hits), vec!["wall-clock", "wall-clock"]);
+        assert_eq!((hits[0].line, hits[1].line), (1, 2));
+        assert!(lint_source("rust/benches/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r3_trips_on_threads_outside_the_pool() {
+        let fix = "fn f() { std::thread::spawn(|| {}).join().unwrap(); }\n";
+        assert_eq!(rules_of(&lint_source("rust/src/trace/fixture.rs", fix)), vec!["thread"]);
+        assert_eq!(
+            rules_of(&lint_source("rust/src/whatever.rs", "use rayon::prelude::*;\n")),
+            vec!["thread"]
+        );
+        assert!(lint_source("rust/src/util/pool.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r4_trips_on_quantity_truncation_only() {
+        // float evidence + quantity hint on the line -> finding
+        let fix = "fn f(elapsed_s: f64) -> u64 { (elapsed_s * 1e3) as u64 }\n";
+        assert_eq!(rules_of(&lint_source("rust/src/memory/fixture.rs", fix)), vec!["float-cast"]);
+        // no quantity hint -> clean (a percentile rank, say)
+        let no_hint = "fn f(frac: f64, n: usize) -> usize { (frac * n as f64) as usize }\n";
+        assert!(lint_source("rust/src/metrics/fixture.rs", no_hint).is_empty());
+        // quantity hint but no float on the line -> clean (int-to-int)
+        let no_float = "fn f(byte_count: u32) -> u64 { byte_count as u64 }\n";
+        assert!(lint_source("rust/src/memory/fixture.rs", no_float).is_empty());
+        // int-to-float widening is never flagged
+        let widen = "fn f(bytes: u64) -> f64 { bytes as f64 }\n";
+        assert!(lint_source("rust/src/memory/fixture.rs", widen).is_empty());
+    }
+
+    #[test]
+    fn r5_trips_on_unsafe_outside_audited_files() {
+        let fix = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        assert_eq!(rules_of(&lint_source("rust/src/engine/fixture.rs", fix)), vec!["unsafe"]);
+        assert!(lint_source("rust/src/util/alloc.rs", fix).is_empty());
+        assert!(lint_source("rust/src/util/pool.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r6_trips_on_library_prints() {
+        let fix = "fn f() { println!(\"x\"); eprintln!(\"y\"); dbg!(1); }\n";
+        let hits = lint_source("rust/src/prefetch/fixture.rs", fix);
+        assert_eq!(rules_of(&hits), vec!["print", "print", "print"]);
+        assert!(lint_source("rust/src/main.rs", fix).is_empty());
+        assert!(lint_source("rust/src/bin/tool.rs", fix).is_empty());
+        assert!(lint_source("rust/tests/fixture.rs", fix).is_empty());
+        assert!(lint_source("rust/benches/fixture.rs", fix).is_empty());
+    }
+
+    // ------------------------------------------------------------- pragmas
+
+    #[test]
+    fn trailing_pragma_with_reason_suppresses() {
+        let fix = "fn f() { let _t = std::time::Instant::now(); } \
+                   // moelint: allow(wall-clock, fixture timing helper)\n";
+        assert!(lint_source("rust/src/server/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn standalone_pragma_covers_the_next_code_line() {
+        let fix = "// moelint: allow(det-map, fixture needs a std map)\n\
+                   fn f() { let _m = std::collections::HashMap::<u8, u8>::new(); }\n";
+        assert!(lint_source("rust/src/cache/fixture.rs", fix).is_empty());
+        // ...but not lines beyond it
+        let too_far = "// moelint: allow(det-map, fixture needs a std map)\n\
+                       fn ok() {}\n\
+                       fn f() { let _m = std::collections::HashMap::<u8, u8>::new(); }\n";
+        assert_eq!(
+            rules_of(&lint_source("rust/src/cache/fixture.rs", too_far)),
+            vec!["det-map"]
+        );
+    }
+
+    #[test]
+    fn pragma_accepts_rule_ids() {
+        let fix = "fn f() { let _t = std::time::Instant::now(); } \
+                   // moelint: allow(R2, id form is allowed)\n";
+        assert!(lint_source("rust/src/server/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn reasonless_pragma_is_itself_a_finding_and_suppresses_nothing() {
+        let fix = "// moelint: allow(wall-clock)\n\
+                   fn f() { let _t = std::time::Instant::now(); }\n";
+        let hits = lint_source("rust/src/server/fixture.rs", fix);
+        assert_eq!(rules_of(&hits), vec!["pragma", "wall-clock"], "{hits:?}");
+    }
+
+    #[test]
+    fn unknown_rule_and_malformed_pragmas_are_findings() {
+        let unknown = "// moelint: allow(no-such-rule, why)\nfn f() {}\n";
+        assert_eq!(rules_of(&lint_source("rust/src/x.rs", unknown)), vec!["pragma"]);
+        let malformed = "// moelint: deny(everything)\nfn f() {}\n";
+        assert_eq!(rules_of(&lint_source("rust/src/x.rs", malformed)), vec!["pragma"]);
+        // `pragma` itself is not a suppressible target
+        let meta = "// moelint: allow(pragma, nice try)\nfn f() {}\n";
+        assert_eq!(rules_of(&lint_source("rust/src/x.rs", meta)), vec!["pragma"]);
+    }
+
+    #[test]
+    fn pragma_only_suppresses_its_named_rule() {
+        let fix = "fn f() { let _t = std::time::Instant::now(); println!(\"x\"); } \
+                   // moelint: allow(wall-clock, only the clock is justified)\n";
+        let hits = lint_source("rust/src/server/fixture.rs", fix);
+        assert_eq!(rules_of(&hits), vec!["print"]);
+    }
+
+    // ------------------------------------------------------------- output
+
+    #[test]
+    fn display_and_json_are_machine_readable() {
+        let f = Finding {
+            path: "rust/src/cache/mod.rs".into(),
+            line: 3,
+            col: 7,
+            rule: "det-map",
+            msg: "a \"quoted\" message".into(),
+        };
+        assert_eq!(
+            f.to_string(),
+            "rust/src/cache/mod.rs:3:7: moelint(det-map): a \"quoted\" message"
+        );
+        assert_eq!(
+            f.to_json(),
+            r#"{"path":"rust/src/cache/mod.rs","line":3,"col":7,"rule":"det-map","msg":"a \"quoted\" message"}"#
+        );
+    }
+
+    // ---------------------------------------------------------- self-check
+
+    /// The ratchet: the crate must lint clean. Every suppression in the
+    /// tree carries a reason (reasonless pragmas surface here as `pragma`
+    /// findings — this test is the satellite's honesty check).
+    #[test]
+    fn crate_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_tree(root).expect("lint walk");
+        assert!(
+            findings.is_empty(),
+            "moelint found {} issue(s):\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

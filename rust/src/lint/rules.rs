@@ -1,0 +1,336 @@
+//! The `moelint` rule walkers (R1–R6).
+//!
+//! Each rule is a pure function over the token stream of one file plus its
+//! path-derived [`FileClass`]; findings are reported pre-suppression (the
+//! pragma filter in [`crate::lint`] applies `// moelint: allow(...)`
+//! afterwards). The catalogue, scopes and rationale are documented in
+//! EXPERIMENTS.md §Lint; rule text lives here so the binary, the fixtures
+//! and the docs can't drift apart silently.
+
+use super::lex::{Lexed, TokKind, Token};
+use super::Finding;
+
+/// Modules whose decision paths feed the replay/differential guarantees —
+/// rule R1 forbids default-hasher containers here.
+pub const SIM_MODULES: [&str; 7] = [
+    "cache", "prefetch", "memory", "server", "engine", "trace", "faults",
+];
+
+/// Integer target types of a truncating `as` cast (rule R4).
+const INT_TYPES: [&str; 12] = [
+    "usize", "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
+];
+
+/// Identifier fragments that mark a line as carrying simulated-time or
+/// byte-count quantities (rule R4's scope heuristic; substring match,
+/// case-insensitive).
+const QUANTITY_HINTS: [&str; 13] = [
+    "time", "secs", "byte", "bandwidth", "budget", "latenc", "duration", "deadline", "elapsed",
+    "clock", "rps", "_mb", "_gb",
+];
+
+/// One lint rule's identity: stable id, pragma name, one-line summary.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule catalogue. `pragma` is the meta-rule for malformed/reasonless
+/// suppressions; it cannot itself be suppressed.
+pub const RULES: [Rule; 7] = [
+    Rule {
+        id: "R1",
+        name: "det-map",
+        summary: "no default-hasher HashMap/HashSet in sim/serving modules (use DetMap/DetSet)",
+    },
+    Rule {
+        id: "R2",
+        name: "wall-clock",
+        summary: "no Instant::now/SystemTime::now outside benches (sim time is the only clock)",
+    },
+    Rule {
+        id: "R3",
+        name: "thread",
+        summary: "no thread spawning or rayon outside util/pool.rs (the deterministic pool)",
+    },
+    Rule {
+        id: "R4",
+        name: "float-cast",
+        summary: "no truncating float->int `as` cast on sim-time/byte-count expressions",
+    },
+    Rule {
+        id: "R5",
+        name: "unsafe",
+        summary: "no unsafe outside util/alloc.rs and util/pool.rs",
+    },
+    Rule {
+        id: "R6",
+        name: "print",
+        summary: "no println!/eprintln!/print!/eprint!/dbg! in library modules",
+    },
+    Rule {
+        id: "P0",
+        name: "pragma",
+        summary: "every moelint pragma must name a known rule and carry a reason",
+    },
+];
+
+/// Resolve a pragma's rule argument (accepts the name or the id, any case)
+/// to the canonical rule name. `pragma` itself is not a valid target.
+pub fn resolve_rule(arg: &str) -> Option<&'static str> {
+    let a = arg.trim().to_ascii_lowercase();
+    RULES
+        .iter()
+        .find(|r| r.name != "pragma" && (a == r.name || a == r.id.to_ascii_lowercase()))
+        .map(|r| r.name)
+}
+
+/// Path-derived scope of one file (paths are repo-relative with forward
+/// slashes, e.g. `rust/src/cache/policies.rs`).
+#[derive(Debug, Clone)]
+pub struct FileClass {
+    pub rel: String,
+    /// `rust/src/<module>/...` → `Some(module)`; top-level files → `None`.
+    pub module: Option<String>,
+    pub is_bench: bool,
+    pub is_test: bool,
+    /// `rust/src/main.rs` or anything under `rust/src/bin/`.
+    pub is_bin: bool,
+}
+
+impl FileClass {
+    pub fn classify(rel: &str) -> FileClass {
+        let rel = rel.replace('\\', "/");
+        let module = rel
+            .strip_prefix("rust/src/")
+            .and_then(|rest| rest.split_once('/'))
+            .map(|(m, _)| m.to_string());
+        FileClass {
+            is_bench: rel.starts_with("rust/benches/"),
+            is_test: rel.starts_with("rust/tests/"),
+            is_bin: rel == "rust/src/main.rs" || rel.starts_with("rust/src/bin/"),
+            module,
+            rel,
+        }
+    }
+
+    fn in_sim_module(&self) -> bool {
+        self.module
+            .as_deref()
+            .is_some_and(|m| SIM_MODULES.contains(&m))
+    }
+
+    fn ends_with(&self, suffix: &str) -> bool {
+        self.rel.ends_with(suffix)
+    }
+}
+
+fn ident_is(t: &Token, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn finding(class: &FileClass, t: &Token, rule: &'static str, msg: String) -> Finding {
+    Finding {
+        path: class.rel.clone(),
+        line: t.line,
+        col: t.col,
+        rule,
+        msg,
+    }
+}
+
+/// R1 `det-map`: any `HashMap`/`HashSet` identifier inside a sim/serving
+/// module — imports, fields, turbofish and constructions alike. After the
+/// DetMap migration those modules have no legitimate mention left, so the
+/// strictest possible match keeps the ratchet simple.
+fn r1_det_map(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if !class.in_sim_module() {
+        return;
+    }
+    for t in &lexed.tokens {
+        if ident_is(t, "HashMap") || ident_is(t, "HashSet") {
+            out.push(finding(
+                class,
+                t,
+                "det-map",
+                format!(
+                    "default-hasher `{}` in sim/serving module `{}`: decision paths must use \
+                     `util::detmap::{{DetMap, DetSet}}` so iteration order is replayable",
+                    t.text,
+                    class.module.as_deref().unwrap_or("?"),
+                ),
+            ));
+        }
+    }
+}
+
+/// R2 `wall-clock`: `Instant::now` / `SystemTime::now` anywhere outside
+/// `rust/benches/`. Host time on a decision path breaks bitwise replay;
+/// legitimate host-timing helpers carry a pragma with a reason.
+fn r2_wall_clock(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if class.is_bench {
+        return;
+    }
+    let ts = &lexed.tokens;
+    for w in ts.windows(3) {
+        if (ident_is(&w[0], "Instant") || ident_is(&w[0], "SystemTime"))
+            && w[1].kind == TokKind::PathSep
+            && ident_is(&w[2], "now")
+        {
+            out.push(finding(
+                class,
+                &w[0],
+                "wall-clock",
+                format!(
+                    "`{}::now` outside benches: simulated time is the only clock on \
+                     replayable paths",
+                    w[0].text
+                ),
+            ));
+        }
+    }
+}
+
+/// R3 `thread`: `thread::spawn`/`thread::scope`/`thread::Builder` or any
+/// `rayon` mention outside `util/pool.rs`. All parallelism goes through the
+/// deterministic pool, whose ordered reduction is what keeps pooled ≡
+/// serial bitwise.
+fn r3_thread(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if class.ends_with("util/pool.rs") {
+        return;
+    }
+    let ts = &lexed.tokens;
+    for (i, t) in ts.iter().enumerate() {
+        if ident_is(t, "rayon") {
+            out.push(finding(
+                class,
+                t,
+                "thread",
+                "`rayon` outside util/pool.rs: use util::Pool (deterministic ordered reduction)"
+                    .to_string(),
+            ));
+        }
+        if ident_is(t, "thread")
+            && ts.get(i + 1).is_some_and(|n| n.kind == TokKind::PathSep)
+            && ts.get(i + 2).is_some_and(|n| {
+                ident_is(n, "spawn") || ident_is(n, "scope") || ident_is(n, "Builder")
+            })
+        {
+            out.push(finding(
+                class,
+                t,
+                "thread",
+                format!(
+                    "`thread::{}` outside util/pool.rs: use util::Pool (deterministic \
+                     ordered reduction)",
+                    ts[i + 2].text
+                ),
+            ));
+        }
+    }
+}
+
+/// R4 `float-cast`: a truncating `as <int>` cast on a line that both (a)
+/// shows float evidence *before* the cast (a float literal or an `f64`/`f32`
+/// token) and (b) mentions a sim-time/byte-count quantity (identifier
+/// containing one of [`QUANTITY_HINTS`]). Line-scoped by design — the
+/// heuristic documents itself via the pragma it forces on intentional
+/// truncations.
+fn r4_float_cast(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let ts = &lexed.tokens;
+    let mut i = 0;
+    while i < ts.len() {
+        let line = ts[i].line;
+        let end = ts[i..].iter().position(|t| t.line != line).map_or(ts.len(), |p| i + p);
+        let toks = &ts[i..end];
+        let quantity = toks.iter().any(|t| {
+            t.kind == TokKind::Ident && {
+                let low = t.text.to_ascii_lowercase();
+                QUANTITY_HINTS.iter().any(|h| low.contains(h))
+            }
+        });
+        if quantity {
+            for j in 0..toks.len().saturating_sub(1) {
+                if ident_is(&toks[j], "as")
+                    && toks[j + 1].kind == TokKind::Ident
+                    && INT_TYPES.contains(&toks[j + 1].text.as_str())
+                {
+                    let float_before = toks[..j].iter().any(|t| {
+                        t.kind == TokKind::Float || ident_is(t, "f64") || ident_is(t, "f32")
+                    });
+                    if float_before {
+                        out.push(finding(
+                            class,
+                            &toks[j],
+                            "float-cast",
+                            format!(
+                                "float->`{}` truncation on a sim-time/byte-count line: make \
+                                 the rounding explicit or pragma the intentional floor",
+                                toks[j + 1].text
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        i = end;
+    }
+}
+
+/// R5 `unsafe`: the keyword anywhere outside the two audited homes
+/// (`util/alloc.rs` counting allocator, `util/pool.rs` scoped workers) —
+/// the same two files the CI Miri job executes.
+fn r5_unsafe(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if class.ends_with("util/alloc.rs") || class.ends_with("util/pool.rs") {
+        return;
+    }
+    for t in &lexed.tokens {
+        if ident_is(t, "unsafe") {
+            out.push(finding(
+                class,
+                t,
+                "unsafe",
+                "`unsafe` outside util/alloc.rs and util/pool.rs (the Miri-covered files)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// R6 `print`: `println!`-family macros in library modules. Libraries
+/// return data; narration belongs to `main.rs`, `bin/`, benches and tests.
+fn r6_print(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    if class.is_bench || class.is_test || class.is_bin {
+        return;
+    }
+    const MACROS: [&str; 5] = ["println", "eprintln", "print", "eprint", "dbg"];
+    let ts = &lexed.tokens;
+    for w in ts.windows(2) {
+        if w[0].kind == TokKind::Ident
+            && MACROS.contains(&w[0].text.as_str())
+            && w[1].kind == TokKind::Punct('!')
+        {
+            out.push(finding(
+                class,
+                &w[0],
+                "print",
+                format!(
+                    "`{}!` in a library module: return data; narration belongs to main/benches",
+                    w[0].text
+                ),
+            ));
+        }
+    }
+}
+
+/// Run every rule over one lexed file.
+pub fn check_all(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+    r1_det_map(class, lexed, out);
+    r2_wall_clock(class, lexed, out);
+    r3_thread(class, lexed, out);
+    r4_float_cast(class, lexed, out);
+    r5_unsafe(class, lexed, out);
+    r6_print(class, lexed, out);
+}

@@ -178,7 +178,7 @@ pub struct MemorySim {
     /// follow-up DRAM→GPU hop must run at MAX_PRIORITY, not the stale
     /// prefetch priority (otherwise the prefetch budget can starve a
     /// blocking demand forever).
-    demand_upgrades: std::collections::HashSet<ExpertKey>,
+    demand_upgrades: crate::util::DetSet<ExpertKey>,
     /// Fault-injection state; `None` (the default, and for any plan that
     /// does not perturb links) keeps the hot path to a single null check.
     faults: Option<Box<FaultState>>,
@@ -239,7 +239,7 @@ impl MemorySim {
             q_gpu: PrefetchQueue::new(),
             ssd_busy: None,
             gpu_busy: vec![None; cfg.n_gpus],
-            demand_upgrades: std::collections::HashSet::new(),
+            demand_upgrades: crate::util::DetSet::default(),
             faults: None,
             start_dirty: true,
             now: 0.0,
@@ -605,6 +605,7 @@ impl MemorySim {
             }
             // find the best queued item routed to this link
             let budget =
+                // moelint: allow(float-cast, budget fraction floors to whole cache slots)
                 (self.cfg.prefetch_gpu_budget * self.gpu_cache.capacity() as f64) as usize;
             let mut deferred: Vec<(ExpertKey, f64)> = Vec::new();
             let mut started = false;

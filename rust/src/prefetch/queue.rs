@@ -12,9 +12,10 @@
 //! pop are O(log n); priority updates don't rebuild the heap.
 
 use std::collections::hash_map::Entry;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::BinaryHeap;
 
 use crate::model::ExpertKey;
+use crate::util::{DetMap, DetSet};
 
 /// Priority used for on-demand (blocking) fetches — jumps all prefetches.
 pub const MAX_PRIORITY: f64 = f64::INFINITY;
@@ -59,8 +60,8 @@ impl Ord for HeapItem {
 pub struct PrefetchQueue {
     heap: BinaryHeap<HeapItem>,
     /// Latest (generation, priority) per enqueued key.
-    live: HashMap<ExpertKey, (u64, f64)>,
-    in_flight: HashSet<ExpertKey>,
+    live: DetMap<ExpertKey, (u64, f64)>,
+    in_flight: DetSet<ExpertKey>,
     gen: u64,
     /// Lazy-deletion bookkeeping: stale entries currently in the heap.
     stale: usize,

@@ -1,0 +1,157 @@
+//! Deterministic hash containers for the sim/serving decision paths.
+//!
+//! `std::collections::HashMap`'s default `RandomState` seeds its hasher from
+//! process-global entropy, so *iteration order* — and therefore any decision
+//! that ever walks a map — varies run to run. Every replay guarantee this
+//! repo pins (lockstep ≡ calendar, pooled ≡ serial, static ≡ continuous)
+//! would silently depend on no decision path ever iterating such a map.
+//! [`DetMap`]/[`DetSet`] close that hole structurally: the same `HashMap`/
+//! `HashSet` API over a fixed-seed hasher, so contents *and order* are a
+//! pure function of the insert/remove history. The `moelint` R1 rule
+//! (`det-map`) forbids the default-hasher types in the sim/serving modules
+//! (`cache`, `prefetch`, `memory`, `server`, `engine`, `trace`, `faults`),
+//! making this the only hash container those paths can construct.
+//!
+//! The hasher is FNV-1a over the written bytes with a SplitMix64-style
+//! finalizer for avalanche (the raw FNV low bits are too regular for
+//! `HashMap`'s power-of-two bucket masking). It is fully deterministic and
+//! dependency-free; it is **not** DoS-resistant, which is fine for a
+//! simulator whose keys are internal (`ExpertKey`, slot ids), not
+//! attacker-controlled.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasher, Hasher};
+
+/// FNV-1a offset basis (the fixed "seed" — identical in every process).
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Byte-stream hasher: FNV-1a accumulation, SplitMix64 finalization.
+#[derive(Debug, Clone)]
+pub struct DetHasher {
+    h: u64,
+}
+
+impl Default for DetHasher {
+    fn default() -> DetHasher {
+        DetHasher { h: FNV_OFFSET }
+    }
+}
+
+impl Hasher for DetHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h = (self.h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        // SplitMix64 finalizer: avalanches the regular FNV state so the low
+        // bits (HashMap's bucket index) depend on every input byte
+        let mut z = self.h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Zero-sized fixed-seed `BuildHasher` — the deterministic stand-in for
+/// `RandomState`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DetState;
+
+impl BuildHasher for DetState {
+    type Hasher = DetHasher;
+
+    fn build_hasher(&self) -> DetHasher {
+        DetHasher::default()
+    }
+}
+
+/// `HashMap` with run-to-run deterministic hashing and iteration order.
+/// Construct with `DetMap::default()` (or [`det_map_with_capacity`]); every
+/// other `HashMap` method is available unchanged.
+pub type DetMap<K, V> = HashMap<K, V, DetState>;
+
+/// `HashSet` with run-to-run deterministic hashing and iteration order.
+pub type DetSet<T> = HashSet<T, DetState>;
+
+/// `DetMap::with_capacity` — inherent impls can't be added to an alias of a
+/// foreign type, so capacity construction is a free function.
+pub fn det_map_with_capacity<K, V>(capacity: usize) -> DetMap<K, V> {
+    DetMap::with_capacity_and_hasher(capacity, DetState)
+}
+
+/// `DetSet::with_capacity` (see [`det_map_with_capacity`]).
+pub fn det_set_with_capacity<T>(capacity: usize) -> DetSet<T> {
+    DetSet::with_capacity_and_hasher(capacity, DetState)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ExpertKey;
+
+    #[test]
+    fn same_history_same_iteration_order() {
+        // two maps built through an identical insert/remove history iterate
+        // identically — the property RandomState denies
+        let build = || {
+            let mut m: DetMap<ExpertKey, u64> = DetMap::default();
+            for l in 0..8 {
+                for e in 0..16 {
+                    m.insert(ExpertKey::new(l, e), (l * 100 + e) as u64);
+                }
+            }
+            for e in 0..16 {
+                m.remove(&ExpertKey::new(3, e));
+            }
+            m
+        };
+        let (a, b) = (build(), build());
+        let ka: Vec<_> = a.iter().collect();
+        let kb: Vec<_> = b.iter().collect();
+        assert_eq!(ka, kb, "iteration order must be reproducible");
+    }
+
+    #[test]
+    fn set_order_is_reproducible() {
+        let build = || {
+            let mut s: DetSet<u64> = DetSet::default();
+            for i in 0..500u64 {
+                s.insert(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            }
+            s.iter().copied().collect::<Vec<_>>()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn behaves_like_a_map() {
+        let mut m = det_map_with_capacity::<&str, u32>(4);
+        assert!(m.capacity() >= 4);
+        m.insert("a", 1);
+        m.insert("b", 2);
+        assert_eq!(m.get("a"), Some(&1));
+        assert_eq!(m.insert("a", 3), Some(1));
+        assert_eq!(m.remove("b"), Some(2));
+        assert_eq!(m.len(), 1);
+        let s: DetSet<u32> = [1, 2, 3].into_iter().collect();
+        assert!(s.contains(&2) && !s.contains(&4));
+        let s2 = det_set_with_capacity::<u32>(16);
+        assert!(s2.is_empty() && s2.capacity() >= 16);
+    }
+
+    #[test]
+    fn hasher_disperses_sequential_keys() {
+        // sanity on the finalizer: sequential ExpertKeys must not collide in
+        // the low bits (HashMap masks finish() to the table size)
+        let mut low = DetSet::default();
+        for e in 0..64usize {
+            let mut h = DetHasher::default();
+            std::hash::Hash::hash(&ExpertKey::new(0, e), &mut h);
+            low.insert(h.finish() & 0xFF);
+        }
+        assert!(low.len() > 32, "low-bit dispersion too weak: {}", low.len());
+    }
+}

@@ -6,11 +6,13 @@
 //! no external randomness, no global state.
 
 pub mod alloc;
+pub mod detmap;
 pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod tomlmini;
 
+pub use detmap::{det_map_with_capacity, det_set_with_capacity, DetMap, DetSet};
 pub use pool::Pool;
 
 /// Deterministic xoshiro256++ PRNG seeded via SplitMix64.

@@ -2,8 +2,6 @@
 //! `util::proptest` — the image has no proptest crate). Each property runs
 //! hundreds of randomized cases; failures report the case index + seed.
 
-use std::collections::HashSet;
-
 use moe_infinity::cache::{
     ActivationPolicy, CacheCtx, ExpertCache, IndexedActivationPolicy, LruPolicy, Policy,
 };
@@ -12,7 +10,7 @@ use moe_infinity::prefetch::{PrefetchQueue, MAX_PRIORITY};
 use moe_infinity::server::Batcher;
 use moe_infinity::trace::{kmeans_medoids, Eam, Eamc, EamcMatcher};
 use moe_infinity::util::proptest::{forall, forall_res};
-use moe_infinity::util::Rng;
+use moe_infinity::util::{DetSet, Rng};
 use moe_infinity::workload::{DatasetPreset, Request, Workload};
 
 fn random_eam(rng: &mut Rng, layers: usize, experts: usize) -> Eam {
@@ -389,7 +387,7 @@ fn prop_indexed_victim_matches_scan_policy() {
             let mut scan = ActivationPolicy::new();
             let mut heap = IndexedActivationPolicy::new();
             let mut entries: Vec<ExpertKey> = Vec::new();
-            let mut protected: HashSet<ExpertKey> = HashSet::new();
+            let mut protected: DetSet<ExpertKey> = DetSet::default();
             for &(op, a, b, c) in ops {
                 match op {
                     0 => eam.record(a % l, b % e, 1 + c % 7),

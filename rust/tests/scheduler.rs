@@ -588,6 +588,36 @@ fn calendar_router_replays_lockstep_bitwise_across_the_matrix() {
     }
 }
 
+/// The DetMap-migration pin: with every decision-path container in
+/// cache/prefetch/memory on the fixed-seed hasher (`util::detmap`), a full
+/// 2-replica calendar replay must be a pure function of the config —
+/// bitwise-identical reports and per-request stat rows across independent
+/// runs, and still bitwise-equal to the retained lockstep reference. If a
+/// future change sneaks iteration-order dependence into a decision path
+/// (or swaps a container back to the entropy-seeded default hasher — which
+/// moelint R1 also rejects statically), this is the dynamic half of that
+/// ratchet.
+#[test]
+fn detmap_migration_replays_2replica_calendar_bitwise() {
+    let pool = Pool::serial();
+    let mut cfg = base_cfg(6.0);
+    cfg.replicas = 2;
+    cfg.routing = RoutingPolicy::TaskAffinity;
+    let reqs = build_requests(&cfg).expect("requests");
+    let (a, a_stats) = replay_router(&cfg, &pool, &reqs, None, None, false);
+    let (b, b_stats) = replay_router(&cfg, &pool, &reqs, None, None, false);
+    let (lock, lock_stats) = replay_router(&cfg, &pool, &reqs, None, None, true);
+    assert!(a.requests > 0, "detmap pin: replay must serve");
+    assert_bitwise(&a, &b, "detmap pin: calendar run 1 vs run 2");
+    assert_bitwise(&a, &lock, "detmap pin: calendar vs lockstep");
+    for (k, (xs, ys)) in a_stats.iter().zip(&b_stats).enumerate() {
+        assert_stats_bitwise(xs, ys, &format!("detmap pin replica {k} (rerun)"));
+    }
+    for (k, (xs, ys)) in a_stats.iter().zip(&lock_stats).enumerate() {
+        assert_stats_bitwise(xs, ys, &format!("detmap pin replica {k} (lockstep)"));
+    }
+}
+
 #[test]
 fn prefetch_cancellation_serves_identical_work() {
     // the dead-PCIe-traffic satellite is *quantified* by perf_router /

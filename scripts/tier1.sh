@@ -3,8 +3,11 @@
 #
 #   scripts/tier1.sh
 #
-# Runs the repo's tier-1 gate (release build + full test suite), the §Perf
-# hot-path micro-benchmarks, the offline-path benchmarks and the
+# Runs the repo's static gate first — `moelint`, the determinism & hot-path
+# source lint (exit 0 clean, 1 findings, 2 usage/IO error; any nonzero
+# aborts the gate — see rust/src/lint/ and EXPERIMENTS.md §Lint) — then the
+# tier-1 gate (release build + full test suite), the §Perf hot-path
+# micro-benchmarks, the offline-path benchmarks and the
 # scheduler comparison in smoke mode (emitting BENCH_hotpath.json,
 # BENCH_offline.json and BENCH_scheduler.json — diff runs with
 # scripts/bench_compare.sh), and a determinism re-check that pins the
@@ -12,6 +15,9 @@
 # Drop MOE_BENCH_SMOKE for full-length measurements.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "== tier-1: moelint (determinism & hot-path lint)"
+cargo run --release --bin moelint
 
 echo "== tier-1: cargo build --release"
 cargo build --release
