@@ -9,6 +9,7 @@
 use moe_infinity::benchsuite::Table;
 use moe_infinity::memory::Link;
 use moe_infinity::model::ModelSpec;
+use moe_infinity::util::units::Bytes;
 
 /// Per-expert copy-time model: `tensors` transfers of expert_bytes total,
 /// each paying `setup` latency; fused = one transfer; NUMA penalty scales
@@ -23,7 +24,7 @@ fn expert_copy_time(spec: &ModelSpec, link: &Link, fused: bool, numa_pool: bool)
         bandwidth: link.bandwidth * bw_factor,
         latency: link.latency,
     };
-    n_copies as f64 * setup + eff.transfer_time(spec.expert_bytes())
+    n_copies as f64 * setup + eff.transfer_time(Bytes::from_u64(spec.expert_bytes())).to_f64()
 }
 
 fn main() {

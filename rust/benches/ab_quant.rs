@@ -9,6 +9,7 @@ use moe_infinity::benchsuite::{build_eamc, tier_with, Table};
 use moe_infinity::cache::CacheKind;
 use moe_infinity::engine::{ComputeModel, EngineConfig, SimEngine};
 use moe_infinity::model::ModelSpec;
+use moe_infinity::util::units::floor_bytes;
 use moe_infinity::workload::{DatasetPreset, Workload};
 
 fn main() {
@@ -21,8 +22,7 @@ fn main() {
             let ds = DatasetPreset::by_name(dataset).unwrap();
             let eamc = build_eamc(&spec, &ds, 240, 80, 22);
             // fixed 15GB GPU expert budget: capacity doubles under bf16
-            // moelint: allow(float-cast, fixed 15GB budget floors to whole experts)
-            let cap = (15e9 as u64 / spec.expert_bytes()) as usize;
+            let cap = (floor_bytes(15e9) / spec.expert_bytes()) as usize;
             let mut engine = SimEngine::new(
                 spec.clone(),
                 tier_with(&spec, cap, spec.total_experts(), 6.0, 32.0, CacheKind::Activation),

@@ -12,6 +12,7 @@ use moe_infinity::cache::{
 use moe_infinity::engine::SimEngine;
 use moe_infinity::model::ModelSpec;
 use moe_infinity::trace::Eam;
+use moe_infinity::util::units::Bytes;
 use moe_infinity::workload::{DatasetPreset, Workload};
 
 fn main() {
@@ -35,8 +36,7 @@ fn main() {
 
         let mut table = Table::new(&["cache", "experts", "activation", "lru", "lfu", "neighbor", "oracle"]);
         for gb in sizes_gb {
-            // moelint: allow(float-cast, GB sweep point floors to whole experts)
-            let cap = ((gb * 1e9) as u64 / spec.expert_bytes()) as usize;
+            let cap = (Bytes::from_gb(gb).to_u64() / spec.expert_bytes()) as usize;
             let mut row = vec![format!("{gb}GB"), cap.to_string()];
             for policy_name in ["activation", "lru", "lfu", "neighbor", "oracle"] {
                 let policy: Box<dyn Policy> = match policy_name {

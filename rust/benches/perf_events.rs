@@ -27,6 +27,7 @@
 use moe_infinity::benchsuite::{build_replica_engines_with, build_requests, BenchJson, Table};
 use moe_infinity::config::{SchedulerKind, ServeConfig};
 use moe_infinity::faults::{CrashWindow, FaultPlan};
+use moe_infinity::util::units::SimTime;
 use moe_infinity::server::{Batcher, Router, Scheduler, ServeReport};
 use moe_infinity::util::Pool;
 use moe_infinity::workload::Request;
@@ -168,8 +169,8 @@ fn main() {
             plan.gpu_failure_p = 0.05;
             plan.crashes.push(CrashWindow {
                 replica: 0,
-                crash: fcfg.workload.duration * 0.35,
-                recover: fcfg.workload.duration * 0.7,
+                crash: SimTime::from_f64(fcfg.workload.duration * 0.35),
+                recover: SimTime::from_f64(fcfg.workload.duration * 0.7),
             });
             let (mut lock, _) = timed_replay(&fcfg, &pool, &reqs, Some(&plan), false);
             let (mut cal, _) = timed_replay(&fcfg, &pool, &reqs, Some(&plan), true);

@@ -33,6 +33,7 @@
 use moe_infinity::benchsuite::{build_engine_with, build_replica_engines_with, build_requests, run_grid, BenchJson, Table};
 use moe_infinity::config::{SchedulerKind, ServeConfig};
 use moe_infinity::faults::{CrashWindow, FaultPlan};
+use moe_infinity::util::units::SimTime;
 use moe_infinity::server::{AdmissionPolicy, Batcher, ContinuousScheduler, Router, Scheduler, ServeReport};
 use moe_infinity::util::{fmt_secs, Pool};
 
@@ -199,8 +200,8 @@ fn main() {
         let mut plan = FaultPlan::new(cfg.seed ^ 0xFA57);
         plan.crashes.push(CrashWindow {
             replica: 0,
-            crash: cfg.workload.duration * 0.3,
-            recover: f64::INFINITY,
+            crash: SimTime::from_f64(cfg.workload.duration * 0.3),
+            recover: SimTime::INFINITY,
         });
         let crashed = mk_router(Some(&plan));
         assert_eq!(

@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 use crate::cache::CacheKind;
 use crate::memory::{Tier, TierConfig};
 use crate::prefetch::PredictorKind;
+use crate::util::units::SimTime;
 
 /// All system bundle names.
 pub const SYSTEMS: &[&str] = &[
@@ -25,7 +26,7 @@ pub const SYSTEMS: &[&str] = &[
 
 /// CUDA-UM page-fault handling cost per on-demand miss (driver fault +
 /// page-table updates for a multi-MB expert's worth of pages).
-pub const UM_FAULT_OVERHEAD: f64 = 2e-3;
+pub const UM_FAULT_OVERHEAD: SimTime = SimTime::from_f64(2e-3);
 
 /// CUDA-UM effective-bandwidth fraction: on-touch page migration reaches
 /// roughly a tenth of the PCIe line rate (2-4 GB/s measured for on-touch
@@ -99,7 +100,7 @@ mod tests {
             ssd_to_dram: Link::new(6.0, 0.0),
             dram_to_gpu: Link::new(32.0, 0.0),
             n_gpus: 1,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: CacheKind::Activation,
             oracle_trace: Vec::new(),

@@ -323,7 +323,7 @@ pub fn tier_with(
         ssd_to_dram: crate::memory::Link::new(ssd_gb_s, 50e-6),
         dram_to_gpu: crate::memory::Link::new(pcie_gb_s, 10e-6),
         n_gpus: 1,
-        demand_extra_latency: 0.0,
+        demand_extra_latency: crate::util::units::SimTime::ZERO,
         demand_bw_factor: 1.0,
         cache_kind: cache,
         oracle_trace: Vec::new(),

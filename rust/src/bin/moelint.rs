@@ -1,39 +1,50 @@
 //! `moelint` CLI — lint the repo's determinism & hot-path rules.
 //!
-//! Usage: `moelint [--json] [--rules] [ROOT]`
+//! Usage: `moelint [--json] [--rules] [--stats] [ROOT]`
 //!
 //! * `ROOT` defaults to the current directory; it must contain `rust/src`
 //!   (the walk covers `rust/src`, `rust/benches`, `rust/tests`).
 //! * `--json` emits newline-delimited JSON objects instead of the
 //!   gcc-style `path:line:col: moelint(rule): msg` lines.
 //! * `--rules` prints the rule catalogue and exits 0.
+//! * `--stats` appends the per-rule finding/pragma tally (a table, or one
+//!   JSON object under `--json` — the CI artifact row).
+//!
+//! When `scripts/lint_budget.json` exists under ROOT, the per-rule pragma
+//! counts are checked against it: exceeding any rule's budgeted cap is a
+//! failure even with zero findings, so suppression debt can shrink
+//! silently but never grow.
 //!
 //! Exit codes (the contract `scripts/tier1.sh` and CI rely on):
-//!   0 — clean, no findings
-//!   1 — one or more findings (each printed to stdout)
+//!   0 — clean, no findings, within pragma budget
+//!   1 — one or more findings, or pragma budget exceeded
 //!   2 — usage error or I/O failure (message on stderr)
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use moe_infinity::lint::{lint_tree, rules::RULES, LINT_ROOTS};
+use moe_infinity::lint::{
+    check_budget, lint_tree_with_stats, parse_budget, rules::RULES, BUDGET_PATH, LINT_ROOTS,
+};
 
 fn main() -> ExitCode {
     let mut json = false;
+    let mut stats_out = false;
     let mut root: Option<PathBuf> = None;
     for arg in std::env::args().skip(1) {
         match arg.as_str() {
             "--json" => json = true,
+            "--stats" => stats_out = true,
             "--rules" => {
                 for r in RULES {
-                    println!("{}  {:<11} {}", r.id, r.name, r.summary);
+                    println!("{}  {:<16} {}", r.id, r.name, r.summary);
                 }
                 return ExitCode::SUCCESS;
             }
             "--help" | "-h" => {
-                println!("usage: moelint [--json] [--rules] [ROOT]");
+                println!("usage: moelint [--json] [--rules] [--stats] [ROOT]");
                 println!("lints {} for determinism & hot-path rules", LINT_ROOTS.join(", "));
-                println!("exit codes: 0 clean, 1 findings, 2 usage/IO error");
+                println!("exit codes: 0 clean, 1 findings/budget exceeded, 2 usage/IO error");
                 return ExitCode::SUCCESS;
             }
             a if a.starts_with('-') => {
@@ -58,8 +69,8 @@ fn main() -> ExitCode {
         return ExitCode::from(2);
     }
 
-    let findings = match lint_tree(&root) {
-        Ok(f) => f,
+    let (findings, stats) = match lint_tree_with_stats(&root) {
+        Ok(r) => r,
         Err(e) => {
             eprintln!("moelint: walk failed: {e}");
             return ExitCode::from(2);
@@ -72,11 +83,55 @@ fn main() -> ExitCode {
             println!("{f}");
         }
     }
-    if findings.is_empty() {
+
+    // pragma-budget ratchet: enforced whenever the budget file exists
+    let mut violations = Vec::new();
+    let budget_file = root.join(BUDGET_PATH);
+    if budget_file.is_file() {
+        match std::fs::read_to_string(&budget_file) {
+            Ok(src) => match parse_budget(&src) {
+                Some(budget) => violations = check_budget(&stats, &budget),
+                None => {
+                    eprintln!("moelint: `{}` is not a flat {{\"rule\": n}} object", BUDGET_PATH);
+                    return ExitCode::from(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("moelint: cannot read `{}`: {e}", BUDGET_PATH);
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for v in &violations {
+        eprintln!("moelint: {v}");
+    }
+
+    if stats_out {
+        if json {
+            println!("{}", stats.to_json());
+        } else {
+            println!("{:<16} {:>8} {:>8}", "rule", "findings", "pragmas");
+            for (name, f, p) in &stats.per_rule {
+                println!("{name:<16} {f:>8} {p:>8}");
+            }
+            println!(
+                "{:<16} {:>8} {:>8}",
+                "total",
+                stats.total_findings(),
+                stats.total_pragmas()
+            );
+        }
+    }
+
+    if findings.is_empty() && violations.is_empty() {
         eprintln!("moelint: clean");
         ExitCode::SUCCESS
     } else {
-        eprintln!("moelint: {} finding(s)", findings.len());
+        eprintln!(
+            "moelint: {} finding(s), {} budget violation(s)",
+            findings.len(),
+            violations.len()
+        );
         ExitCode::from(1)
     }
 }

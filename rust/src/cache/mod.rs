@@ -135,7 +135,7 @@ impl ExpertCache {
         }
         let evicted = if self.slots.len() == self.capacity {
             let old = self.choose_victim(ctx);
-            let v = *self.index.get(&old).expect("victim must be resident");
+            let v = *self.index.get(&old).expect("victim must be resident"); // moelint: allow(panic-free, choose_victim returns a key drawn from index; a miss is a corrupted-cache invariant worth crashing on)
             self.protected.remove(&old);
             self.policy.on_evict(old);
             self.index.remove(&old);

@@ -71,7 +71,7 @@ fn pick_min<K: PartialOrd>(
             break;
         }
     }
-    best.expect("non-empty entries always yield a victim").1
+    best.expect("non-empty entries always yield a victim").1 // moelint: allow(panic-free, callers guarantee entries is non-empty; the scan loop always sets best on its first pass)
 }
 
 // ---------------------------------------------------------------- Algorithm 2

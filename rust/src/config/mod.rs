@@ -13,6 +13,7 @@ use crate::model::ModelSpec;
 use crate::prefetch::PredictorKind;
 use crate::server::{check_max_wait, AdmissionPolicy, RoutingPolicy};
 use crate::util::tomlmini::TomlDoc;
+use crate::util::units::{floor_bytes, SimTime};
 
 /// Iteration-level scheduling policy of the serving loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -168,8 +169,8 @@ impl Default for FaultsConfig {
         FaultsConfig {
             ssd_failure_p: 0.0,
             gpu_failure_p: 0.0,
-            retry_base: retry.base_delay,
-            retry_max_delay: retry.max_delay,
+            retry_base: retry.base_delay.to_f64(),
+            retry_max_delay: retry.max_delay.to_f64(),
             max_retries: retry.max_retries as usize,
             brownout: 1.0,
             brownout_start: 0.0,
@@ -512,15 +513,15 @@ impl ServeConfig {
         plan.ssd_failure_p = f.ssd_failure_p;
         plan.gpu_failure_p = f.gpu_failure_p;
         plan.retry = RetryPolicy {
-            base_delay: f.retry_base,
-            max_delay: f.retry_max_delay,
+            base_delay: SimTime::from_f64(f.retry_base),
+            max_delay: SimTime::from_f64(f.retry_max_delay),
             max_retries: f.max_retries as u32,
         };
         if browned {
             plan.brownouts.push(Brownout {
                 link: FaultLink::DramToGpu,
-                start: f.brownout_start,
-                end: f.brownout_end,
+                start: SimTime::from_f64(f.brownout_start),
+                end: SimTime::from_f64(f.brownout_end),
                 factor: f.brownout,
             });
         }
@@ -550,10 +551,8 @@ impl ServeConfig {
         // runtime) is reserved before the leftover becomes expert cache.
         // 40% reservation matches the paper's Fig. 11 operating point
         // (switch-large-128 on a 24GB A5000 -> ~15GB expert cache).
-        // moelint: allow(float-cast, GB->bytes floor loses under one byte)
-        let gpu_bytes = (self.memory.gpu_gb * 1e9 * 0.6) as u64;
-        // moelint: allow(float-cast, GB->bytes floor loses under one byte)
-        let dram_bytes = (self.memory.dram_gb * 1e9) as u64;
+        let gpu_bytes = floor_bytes(self.memory.gpu_gb * 1e9 * 0.6);
+        let dram_bytes = floor_bytes(self.memory.dram_gb * 1e9);
         let gpu_capacity = (gpu_bytes.saturating_sub(spec.dense_bytes) / eb) as usize;
         let dram_capacity = (dram_bytes / eb) as usize;
         let base = TierConfig {
@@ -563,7 +562,7 @@ impl ServeConfig {
             ssd_to_dram: Link::new(self.memory.ssd_bw, 50e-6),
             dram_to_gpu: Link::new(self.memory.pcie_bw, 10e-6),
             n_gpus: self.memory.n_gpus,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: CacheKind::Activation,
             oracle_trace: Vec::new(),
@@ -794,10 +793,8 @@ mod tests {
         let spec = c.model_spec().unwrap();
         let t = c.tier_config().unwrap();
         let eb = spec.expert_bytes();
-        // moelint: allow(float-cast, test bound recomputes the same GB->bytes floor)
-        assert!(t.gpu_capacity as u64 * eb <= (c.memory.gpu_gb * 1e9) as u64);
-        // moelint: allow(float-cast, test bound recomputes the same GB->bytes floor)
-        assert!(t.dram_capacity as u64 * eb <= (c.memory.dram_gb * 1e9) as u64);
+        assert!(t.gpu_capacity as u64 * eb <= floor_bytes(c.memory.gpu_gb * 1e9));
+        assert!(t.dram_capacity as u64 * eb <= floor_bytes(c.memory.dram_gb * 1e9));
     }
 
     #[test]

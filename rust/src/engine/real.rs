@@ -19,6 +19,7 @@ use crate::model::{ExpertKey, ModelSpec};
 use crate::prefetch::{Predictor, PredictorKind};
 use crate::runtime::Runtime;
 use crate::trace::{Eam, Eamc};
+use crate::util::units::SimTime;
 
 /// Output of one batch generation on the real model.
 #[derive(Debug, Clone)]
@@ -269,7 +270,8 @@ impl RealMoeEngine {
                     };
                     for &(key, prio) in buf.iter() {
                         if prio > crate::prefetch::EPSILON {
-                            self.sim.submit_prefetch(key, prio, self.vtime, &ctx);
+                            self.sim
+                                .submit_prefetch(key, prio, SimTime::from_f64(self.vtime), &ctx);
                         }
                     }
                     self.pred_buf = buf;
@@ -291,7 +293,7 @@ impl RealMoeEngine {
                 let vt_before_wall = t0.elapsed().as_secs_f64();
                 let vt_now = self.vtime + vt_before_wall + stall;
                 let was_on_gpu = self.sim.is_on_gpu(key);
-                let ready = self.sim.demand(key, vt_now, &ctx);
+                let ready = self.sim.demand(key, SimTime::from_f64(vt_now), &ctx).to_f64();
                 out.demands += 1;
                 if was_on_gpu {
                     out.gpu_hits += 1;

@@ -7,6 +7,7 @@ use crate::memory::{MemorySim, TierConfig};
 use crate::model::{ExpertKey, ModelSpec};
 use crate::prefetch::{Predictor, PredictorKind};
 use crate::trace::{Eam, Eamc, EamcMatcher};
+use crate::util::units::SimTime;
 use crate::workload::SequenceActivation;
 
 /// Engine policy knobs (the ablation surface of §8.3/§8.4).
@@ -428,7 +429,7 @@ impl SimEngine {
                 cur_eam: &self.idle_eam,
                 n_layers: self.spec.n_layers,
             };
-            self.sim.advance_to(t, &ctx);
+            self.sim.advance_to(SimTime::from_f64(t), &ctx);
             self.clock = t;
         }
     }
@@ -455,6 +456,7 @@ impl SimEngine {
     /// output bitwise identical to the historical run-to-completion loop
     /// (slots are admitted in sequence order, so slot ids equal the old
     /// batch-local indices and every float op replays in the same order).
+    // moelint: hot
     pub fn run_batch_into(
         &mut self,
         seqs: &[SequenceActivation],
@@ -744,6 +746,7 @@ impl<'e> BatchSession<'e> {
     /// reset `run_batch` performs after idling to its start time, which is
     /// what keeps the single-slot continuous replay bitwise identical to
     /// the static path.
+    // moelint: hot
     pub fn admit(&mut self, ext_id: u64, seq: &SequenceActivation) -> usize {
         assert_ne!(ext_id, FREE_SLOT, "external id {FREE_SLOT} is reserved");
         assert!(seq.iterations() > 0, "cannot admit an empty sequence");
@@ -875,6 +878,7 @@ impl<'e> BatchSession<'e> {
     /// is active. Finished sequences retire at the iteration's end; with
     /// [`FeedbackMode::Immediate`] their recall feeds the EAMC right away,
     /// their counts leave the batch EAM and their slot frees up.
+    // moelint: hot
     pub fn step<'s, F>(&mut self, seq_of: F, out: &mut StepResult) -> bool
     where
         F: Fn(u64) -> &'s SequenceActivation,
@@ -1028,7 +1032,7 @@ impl<'e> BatchSession<'e> {
                             continue;
                         }
                         let p = if eng.cfg.priority_enabled { prio } else { 0.5 };
-                        eng.sim.submit_prefetch(key, p, t, &ctx);
+                        eng.sim.submit_prefetch(key, p, SimTime::from_f64(t), &ctx);
                         if eng.cfg.cancel_retired_prefetch {
                             // last predictor wins: retirement cancels only
                             // keys nobody re-predicted since
@@ -1051,7 +1055,7 @@ impl<'e> BatchSession<'e> {
                         cur_eam: &eng.batch_eam,
                         n_layers,
                     };
-                    let ready = eng.sim.demand(key, t, &ctx);
+                    let ready = eng.sim.demand(key, SimTime::from_f64(t), &ctx).to_f64();
                     t = ready;
                 }
             }
@@ -1067,7 +1071,7 @@ impl<'e> BatchSession<'e> {
                     n_layers,
                 };
                 let on_gpu_before = eng.sim.is_on_gpu(key);
-                let ready = eng.sim.demand(key, t, &ctx);
+                let ready = eng.sim.demand(key, SimTime::from_f64(t), &ctx).to_f64();
                 out.demands += 1;
                 out.stalls.push(ready - t);
                 for &slot in &eng.union_seqs[e as usize] {
@@ -1186,7 +1190,7 @@ mod tests {
             ssd_to_dram: Link::new(6.0, 50e-6),
             dram_to_gpu: Link::new(32.0, 10e-6),
             n_gpus: 1,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: kind,
             oracle_trace: Vec::new(),

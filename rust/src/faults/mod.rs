@@ -26,6 +26,7 @@
 //!   event loop always terminates (a real system would fail the request;
 //!   the simulator charges the time and keeps the replay total).
 
+use crate::util::units::SimTime;
 use crate::util::Rng;
 
 /// Stream id for the SSD→DRAM link's fault draws.
@@ -47,23 +48,23 @@ pub enum FaultLink {
 #[derive(Debug, Clone)]
 pub struct Brownout {
     pub link: FaultLink,
-    pub start: f64,
-    pub end: f64,
+    pub start: SimTime,
+    pub end: SimTime,
     pub factor: f64,
 }
 
 /// A replica crash window: the replica is dead for `[crash, recover)`.
-/// `recover = f64::INFINITY` means it never comes back.
+/// `recover = SimTime::INFINITY` means it never comes back.
 #[derive(Debug, Clone)]
 pub struct CrashWindow {
     pub replica: usize,
-    pub crash: f64,
-    pub recover: f64,
+    pub crash: SimTime,
+    pub recover: SimTime,
 }
 
 impl CrashWindow {
     /// Is the replica down at simulated time `t`?
-    pub fn down_at(&self, t: f64) -> bool {
+    pub fn down_at(&self, t: SimTime) -> bool {
         t >= self.crash && t < self.recover
     }
 
@@ -73,7 +74,7 @@ impl CrashWindow {
     /// a batched replica runs only until its clock crosses its earliest
     /// unfired crash instant, so the window fires at exactly the
     /// iteration boundary the per-tick polling loop fired it at.
-    pub fn fires_by(&self, t: f64) -> bool {
+    pub fn fires_by(&self, t: SimTime) -> bool {
         t >= self.crash
     }
 }
@@ -81,10 +82,10 @@ impl CrashWindow {
 /// Capped exponential backoff schedule for failed transfers.
 #[derive(Debug, Clone)]
 pub struct RetryPolicy {
-    /// Delay before the first retry (seconds, simulated).
-    pub base_delay: f64,
+    /// Delay before the first retry (simulated).
+    pub base_delay: SimTime,
     /// Ceiling on any single backoff delay.
-    pub max_delay: f64,
+    pub max_delay: SimTime,
     /// Retries granted after the initial attempt; attempt count is
     /// therefore `max_retries + 1`.
     pub max_retries: u32,
@@ -93,8 +94,8 @@ pub struct RetryPolicy {
 impl Default for RetryPolicy {
     fn default() -> RetryPolicy {
         RetryPolicy {
-            base_delay: 0.5e-3,
-            max_delay: 8e-3,
+            base_delay: SimTime::from_f64(0.5e-3),
+            max_delay: SimTime::from_f64(8e-3),
             max_retries: 4,
         }
     }
@@ -103,7 +104,7 @@ impl Default for RetryPolicy {
 /// The backoff before retry `attempt` (0-based): `base_delay * 2^attempt`,
 /// capped at `max_delay`. Pure — the property tests pin determinism and
 /// the cap on this function plus [`draw_transfer`].
-pub fn backoff(retry: &RetryPolicy, attempt: u32) -> f64 {
+pub fn backoff(retry: &RetryPolicy, attempt: u32) -> SimTime {
     let exp = attempt.min(52); // avoid 2^big overflowing the f64 exponent
     (retry.base_delay * (1u64 << exp) as f64).min(retry.max_delay)
 }
@@ -150,7 +151,7 @@ impl FaultPlan {
 
     /// Compounded brownout bandwidth multiplier for `link` at time `t`
     /// (1.0 outside every window).
-    pub fn brownout_factor(&self, link: FaultLink, t: f64) -> f64 {
+    pub fn brownout_factor(&self, link: FaultLink, t: SimTime) -> f64 {
         let mut f = 1.0;
         for b in &self.brownouts {
             if b.link == link && t >= b.start && t < b.end {
@@ -166,8 +167,8 @@ impl FaultPlan {
 /// fails having burned `delay` anyway.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TransferOutcome {
-    Lands { delay: f64, retries: u32 },
-    Failed { delay: f64, retries: u32 },
+    Lands { delay: SimTime, retries: u32 },
+    Failed { delay: SimTime, retries: u32 },
 }
 
 impl TransferOutcome {
@@ -178,7 +179,7 @@ impl TransferOutcome {
         }
     }
 
-    pub fn delay(&self) -> f64 {
+    pub fn delay(&self) -> SimTime {
         match *self {
             TransferOutcome::Lands { delay, .. } => delay,
             TransferOutcome::Failed { delay, .. } => delay,
@@ -193,9 +194,9 @@ impl TransferOutcome {
 /// `k + 1`. After `max_retries` retries the transfer is `Failed` — the
 /// caller decides whether that means *drop* (prefetch) or *force-land with
 /// a counted failure* (demand).
-pub fn draw_transfer(rng: &mut Rng, p: f64, retry: &RetryPolicy, dt: f64) -> TransferOutcome {
+pub fn draw_transfer(rng: &mut Rng, p: f64, retry: &RetryPolicy, dt: SimTime) -> TransferOutcome {
     debug_assert!((0.0..1.0).contains(&p), "failure probability {p} not in [0,1)");
-    let mut delay = 0.0;
+    let mut delay = SimTime::ZERO;
     let mut retries = 0u32;
     loop {
         if rng.f64() >= p {
@@ -242,19 +243,23 @@ mod tests {
     use super::*;
     use crate::util::proptest::forall_res;
 
+    fn st(secs: f64) -> SimTime {
+        SimTime::from_f64(secs)
+    }
+
     #[test]
     fn crash_window_edges_are_half_open() {
         let w = CrashWindow {
             replica: 0,
-            crash: 1.0,
-            recover: 2.0,
+            crash: st(1.0),
+            recover: st(2.0),
         };
-        assert!(!w.down_at(0.999) && w.down_at(1.0) && w.down_at(1.999));
-        assert!(!w.down_at(2.0), "recover instant is exclusive of downtime");
+        assert!(!w.down_at(st(0.999)) && w.down_at(st(1.0)) && w.down_at(st(1.999)));
+        assert!(!w.down_at(st(2.0)), "recover instant is exclusive of downtime");
         // the firing predicate is the crash edge alone: a clock that idles
         // past recover still fires the window if it ever crossed crash
-        assert!(!w.fires_by(0.999));
-        assert!(w.fires_by(1.0) && w.fires_by(5.0));
+        assert!(!w.fires_by(st(0.999)));
+        assert!(w.fires_by(st(1.0)) && w.fires_by(st(5.0)));
     }
 
     #[test]
@@ -262,7 +267,7 @@ mod tests {
         let p = FaultPlan::new(7);
         assert!(p.is_empty());
         assert!(!p.affects_links());
-        assert_eq!(p.brownout_factor(FaultLink::SsdToDram, 3.0), 1.0);
+        assert_eq!(p.brownout_factor(FaultLink::SsdToDram, st(3.0)), 1.0);
     }
 
     #[test]
@@ -270,32 +275,32 @@ mod tests {
         let mut p = FaultPlan::new(7);
         p.crashes.push(CrashWindow {
             replica: 1,
-            crash: 2.0,
-            recover: 5.0,
+            crash: st(2.0),
+            recover: st(5.0),
         });
         assert!(!p.is_empty());
         assert!(!p.affects_links());
-        assert!(p.crashes[0].down_at(2.0));
-        assert!(p.crashes[0].down_at(4.999));
-        assert!(!p.crashes[0].down_at(5.0));
-        assert!(!p.crashes[0].down_at(1.0));
+        assert!(p.crashes[0].down_at(st(2.0)));
+        assert!(p.crashes[0].down_at(st(4.999)));
+        assert!(!p.crashes[0].down_at(st(5.0)));
+        assert!(!p.crashes[0].down_at(st(1.0)));
     }
 
     #[test]
     fn permanent_crash_never_recovers() {
         let w = CrashWindow {
             replica: 0,
-            crash: 1.0,
-            recover: f64::INFINITY,
+            crash: st(1.0),
+            recover: SimTime::INFINITY,
         };
-        assert!(w.down_at(1e12));
+        assert!(w.down_at(st(1e12)));
     }
 
     #[test]
     fn backoff_doubles_then_caps() {
         let r = RetryPolicy {
-            base_delay: 1e-3,
-            max_delay: 5e-3,
+            base_delay: st(1e-3),
+            max_delay: st(5e-3),
             max_retries: 10,
         };
         assert_eq!(backoff(&r, 0), 1e-3);
@@ -310,21 +315,21 @@ mod tests {
         let mut p = FaultPlan::new(1);
         p.brownouts.push(Brownout {
             link: FaultLink::DramToGpu,
-            start: 1.0,
-            end: 3.0,
+            start: st(1.0),
+            end: st(3.0),
             factor: 0.5,
         });
         p.brownouts.push(Brownout {
             link: FaultLink::DramToGpu,
-            start: 2.0,
-            end: 4.0,
+            start: st(2.0),
+            end: st(4.0),
             factor: 0.5,
         });
-        assert_eq!(p.brownout_factor(FaultLink::DramToGpu, 0.5), 1.0);
-        assert_eq!(p.brownout_factor(FaultLink::DramToGpu, 1.5), 0.5);
-        assert_eq!(p.brownout_factor(FaultLink::DramToGpu, 2.5), 0.25);
+        assert_eq!(p.brownout_factor(FaultLink::DramToGpu, st(0.5)), 1.0);
+        assert_eq!(p.brownout_factor(FaultLink::DramToGpu, st(1.5)), 0.5);
+        assert_eq!(p.brownout_factor(FaultLink::DramToGpu, st(2.5)), 0.25);
         // other link untouched
-        assert_eq!(p.brownout_factor(FaultLink::SsdToDram, 2.5), 1.0);
+        assert_eq!(p.brownout_factor(FaultLink::SsdToDram, st(2.5)), 1.0);
     }
 
     #[test]
@@ -335,7 +340,7 @@ mod tests {
         // pins the pure function's behaviour at p = 0.
         let r = RetryPolicy::default();
         let mut rng = Rng::new(3);
-        match draw_transfer(&mut rng, 0.0, &r, 0.01) {
+        match draw_transfer(&mut rng, 0.0, &r, st(0.01)) {
             TransferOutcome::Lands { delay, retries } => {
                 assert_eq!(delay, 0.01);
                 assert_eq!(retries, 0);
@@ -351,8 +356,8 @@ mod tests {
         let mut b = Rng::for_stream(42, STREAM_SSD);
         for _ in 0..200 {
             assert_eq!(
-                draw_transfer(&mut a, 0.3, &r, 0.01),
-                draw_transfer(&mut b, 0.3, &r, 0.01)
+                draw_transfer(&mut a, 0.3, &r, st(0.01)),
+                draw_transfer(&mut b, 0.3, &r, st(0.01))
             );
         }
     }
@@ -370,8 +375,8 @@ mod tests {
             |rng| {
                 let p = 0.05 + 0.9 * rng.f64(); // [0.05, 0.95)
                 let retry = RetryPolicy {
-                    base_delay: 1e-4 * (1.0 + rng.f64()),
-                    max_delay: 1e-3 * (1.0 + 9.0 * rng.f64()),
+                    base_delay: st(1e-4 * (1.0 + rng.f64())),
+                    max_delay: st(1e-3 * (1.0 + 9.0 * rng.f64())),
                     max_retries: rng.below(8) as u32,
                 };
                 let dt = 1e-3 * (1.0 + rng.f64());
@@ -381,8 +386,8 @@ mod tests {
             |(p, retry, dt, seed)| {
                 let mut r1 = Rng::new(*seed);
                 let mut r2 = Rng::new(*seed);
-                let o1 = draw_transfer(&mut r1, *p, retry, *dt);
-                let o2 = draw_transfer(&mut r2, *p, retry, *dt);
+                let o1 = draw_transfer(&mut r1, *p, retry, st(*dt));
+                let o2 = draw_transfer(&mut r2, *p, retry, st(*dt));
                 if o1 != o2 {
                     return Err(format!("non-deterministic: {o1:?} vs {o2:?}"));
                 }
@@ -395,18 +400,18 @@ mod tests {
                 }
                 for k in 0..=retry.max_retries {
                     let b = backoff(retry, k);
-                    if b > retry.max_delay + 1e-15 {
+                    if b.to_f64() > retry.max_delay.to_f64() + 1e-15 {
                         return Err(format!("backoff({k}) = {b} exceeds cap {}", retry.max_delay));
                     }
                 }
                 // reconstruct the expected delay from the outcome shape
                 let retries = o1.retries();
-                let backoffs: f64 = (0..retries).map(|k| backoff(retry, k)).sum();
+                let backoffs: f64 = (0..retries).map(|k| backoff(retry, k).to_f64()).sum();
                 let want = match o1 {
                     TransferOutcome::Lands { .. } => (retries + 1) as f64 * dt + backoffs,
                     TransferOutcome::Failed { .. } => (retries + 1) as f64 * dt + backoffs,
                 };
-                if (o1.delay() - want).abs() > 1e-12 {
+                if (o1.delay().to_f64() - want).abs() > 1e-12 {
                     return Err(format!("delay {} != reconstructed {want}", o1.delay()));
                 }
                 Ok(())
@@ -418,18 +423,40 @@ mod tests {
     fn certain_failure_terminates_at_max_retries() {
         // p -> 1 must not stall: the attempt loop is bounded by max_retries.
         let r = RetryPolicy {
-            base_delay: 1e-3,
-            max_delay: 4e-3,
+            base_delay: st(1e-3),
+            max_delay: st(4e-3),
             max_retries: 3,
         };
         let mut rng = Rng::new(9);
-        match draw_transfer(&mut rng, 0.999_999, &r, 0.01) {
+        match draw_transfer(&mut rng, 0.999_999, &r, st(0.01)) {
             TransferOutcome::Failed { delay, retries } => {
                 assert_eq!(retries, 3);
-                let backoffs: f64 = (0..3).map(|k| backoff(&r, k)).sum();
-                assert!((delay - (4.0 * 0.01 + backoffs)).abs() < 1e-12);
+                let backoffs: f64 = (0..3).map(|k| backoff(&r, k).to_f64()).sum();
+                assert!((delay.to_f64() - (4.0 * 0.01 + backoffs)).abs() < 1e-12);
             }
             other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_backoff_is_bitwise_the_raw_expression() {
+        // the units migration contract: SimTime's operators replay
+        // `base * 2^k as f64, min cap` — identical ops, identical order
+        for &(base, cap) in &[(0.5e-3, 8e-3), (1e-4, 1e-3), (3.7e-5, 2.9e-2), (1e-2, 1e-2)] {
+            let r = RetryPolicy {
+                base_delay: st(base),
+                max_delay: st(cap),
+                max_retries: 8,
+            };
+            for k in 0..60u32 {
+                let exp = k.min(52);
+                let raw = (base * (1u64 << exp) as f64).min(cap);
+                assert_eq!(
+                    backoff(&r, k).to_bits(),
+                    raw.to_bits(),
+                    "base {base} cap {cap} attempt {k}"
+                );
+            }
         }
     }
 

@@ -1,0 +1,487 @@
+//! Flow-aware item parsing for `moelint` v2.
+//!
+//! PR 8's rules were line-scoped token walkers; the R7–R10 family needs
+//! *spans*: which tokens form a `fn` signature, where its body starts and
+//! ends, whether it sits under `#[cfg(test)]`, and which `fn` a
+//! `// moelint: hot` annotation anchors to. This module is a lightweight
+//! brace-matched pass over the existing [`Lexed`] token stream — still
+//! not a Rust parser (no expressions, no types), just enough item
+//! structure for function-scope rules:
+//!
+//! * [`FnItem`] — every `fn`, with its signature-paren span, body-brace
+//!   span, test-scope flag and hot annotation;
+//! * [`TypeBody`] — every braced `struct`/`enum` body (named fields live
+//!   here; tuple structs have no field names and are skipped);
+//! * stray `hot` annotations that anchored to nothing (R9 reports them —
+//!   a mis-anchored annotation is a silently unguarded window).
+//!
+//! Test scope is tracked two ways: a `#[cfg(test)]`/`#[test]` attribute
+//! directly on the item, or an enclosing `mod` carrying `#[cfg(test)]`.
+//! Between a `hot` annotation and its `fn`, only attribute/visibility
+//! tokens may appear (`#[inline]`, `pub(crate)`, `const`, `unsafe`,
+//! `async`, `extern`); anything else (a statement, another item's body)
+//! breaks the anchor and the annotation is reported stray.
+
+use super::lex::{Lexed, TokKind, Token};
+
+/// One `fn` item (free, inherent, trait-default or trait-declaration).
+#[derive(Debug)]
+pub struct FnItem {
+    /// Function name (`fn` followed by a non-identifier is skipped — that
+    /// shape is a `fn(...)` pointer type, not an item).
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token index of the `(` opening the parameter list.
+    pub sig_open: usize,
+    /// Token index of the matching `)`.
+    pub sig_close: usize,
+    /// Token index of the body `{`, or `usize::MAX` for bodyless
+    /// declarations (trait method signatures).
+    pub body_open: usize,
+    /// Token index of the matching `}` (meaningless when bodyless).
+    pub body_close: usize,
+    /// Inside `#[cfg(test)]` scope or annotated `#[test]`.
+    pub in_test: bool,
+    /// Carries an anchored `// moelint: hot` annotation (R9 scope).
+    pub is_hot: bool,
+}
+
+impl FnItem {
+    /// Token-index range of the parameter list, exclusive of the parens.
+    pub fn sig_range(&self) -> std::ops::Range<usize> {
+        if self.sig_open == usize::MAX || self.sig_open + 1 > self.sig_close {
+            return 0..0;
+        }
+        self.sig_open + 1..self.sig_close
+    }
+
+    /// Token-index range of the body, exclusive of the braces; empty for
+    /// bodyless declarations.
+    pub fn body_range(&self) -> std::ops::Range<usize> {
+        if self.body_open == usize::MAX || self.body_open + 1 > self.body_close {
+            return 0..0;
+        }
+        self.body_open + 1..self.body_close
+    }
+}
+
+/// A braced `struct` or `enum` body (named fields — including named
+/// fields of enum variants, which nest inside the enum's braces).
+#[derive(Debug)]
+pub struct TypeBody {
+    /// Token index of the opening `{`.
+    pub body_open: usize,
+    /// Token index of the matching `}`.
+    pub body_close: usize,
+    pub in_test: bool,
+}
+
+/// Parsed item structure of one source file.
+#[derive(Debug, Default)]
+pub struct Items {
+    pub fns: Vec<FnItem>,
+    pub types: Vec<TypeBody>,
+    /// Lines of `// moelint: hot` annotations that did not anchor to a
+    /// `fn` (reported by R9 — never silently dropped).
+    pub stray_hot: Vec<u32>,
+}
+
+impl Items {
+    /// Whether token index `i` falls inside any (non-bodyless) fn body —
+    /// used to exclude fn-local `struct`s from field rules and locals
+    /// from signature rules.
+    pub fn inside_fn_body(&self, i: usize) -> bool {
+        self.fns
+            .iter()
+            .any(|f| f.body_open != usize::MAX && i > f.body_open && i < f.body_close)
+    }
+}
+
+/// `// moelint: hot` (exact word after the `moelint:` prefix).
+pub fn is_hot_comment(text: &str) -> bool {
+    let t = text.trim_start_matches('/').trim();
+    match t.strip_prefix("moelint:") {
+        Some(rest) => rest.trim() == "hot",
+        None => false,
+    }
+}
+
+fn is_punct(t: &Token, c: char) -> bool {
+    t.kind == TokKind::Punct(c)
+}
+
+fn ident_text<'a>(t: &'a Token) -> Option<&'a str> {
+    if t.kind == TokKind::Ident {
+        Some(&t.text)
+    } else {
+        None
+    }
+}
+
+/// Skip a matched `<...>` generic-parameter span starting at `toks[i]`
+/// (which must be `<`); returns the index just past the closing `>`.
+/// `->` arrows inside bounds (`F: Fn(u64) -> u64`) are recognized so
+/// their `>` does not close the span.
+fn skip_generics(toks: &[Token], mut i: usize) -> usize {
+    let mut depth = 0usize;
+    while i < toks.len() {
+        if is_punct(&toks[i], '<') {
+            depth += 1;
+        } else if is_punct(&toks[i], '>') {
+            let arrow = i > 0 && is_punct(&toks[i - 1], '-');
+            if !arrow {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a matched bracket span (`(`/`[`/`{`) starting at `toks[i]`;
+/// returns the index of the closing token (or `toks.len()` if
+/// unbalanced — the walkers treat that as end-of-scan).
+pub(super) fn match_bracket(toks: &[Token], i: usize, open: char, close: char) -> usize {
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < toks.len() {
+        if is_punct(&toks[j], open) {
+            depth += 1;
+        } else if is_punct(&toks[j], close) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Tokens that may sit between a `hot` annotation (or an attribute) and
+/// the item it decorates: attributes and visibility/qualifier keywords.
+fn is_item_prelude(t: &Token) -> bool {
+    match &t.kind {
+        TokKind::Ident => true, // attr names, pub/const/unsafe/async/extern
+        TokKind::Str | TokKind::Int | TokKind::Lifetime => true, // attr args
+        TokKind::PathSep => true,
+        TokKind::Punct(c) => matches!(c, '#' | '[' | ']' | '(' | ')' | ',' | '=' | ':'),
+        _ => false,
+    }
+}
+
+/// Parse the item structure of a lexed file.
+pub fn parse_items(lexed: &Lexed) -> Items {
+    let toks = &lexed.tokens;
+    let mut items = Items::default();
+
+    // hot annotations, in line order (comments are emitted in order)
+    let hot_lines: Vec<u32> = lexed
+        .comments
+        .iter()
+        .filter(|c| is_hot_comment(&c.text))
+        .map(|c| c.line)
+        .collect();
+    let mut next_hot = 0usize;
+    // armed annotation line waiting for its fn
+    let mut hot_armed: Option<u32> = None;
+
+    let mut brace_depth = 0usize;
+    // depth at which #[cfg(test)] scope began (a test mod's body)
+    let mut test_depth: Option<usize> = None;
+    // attributes seen since the last item/statement boundary
+    let mut pending_test = false;
+    // the next `{` opens a #[cfg(test)]-marked mod
+    let mut arm_test_mod = false;
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        // absorb hot annotations that precede this token
+        while next_hot < hot_lines.len() && hot_lines[next_hot] < toks[i].line {
+            if let Some(prev) = hot_armed.replace(hot_lines[next_hot]) {
+                items.stray_hot.push(prev); // doubled annotation
+            }
+            next_hot += 1;
+        }
+        if hot_armed.is_some() && !is_item_prelude(&toks[i]) {
+            let fn_kw = ident_text(&toks[i]) == Some("fn");
+            if !fn_kw {
+                items.stray_hot.push(hot_armed.take().unwrap_or(0));
+            }
+        }
+
+        match &toks[i].kind {
+            TokKind::Punct('#') => {
+                // attribute: #[...] (or #![...]); test-marking if any
+                // inner identifier is `test` (#[test], #[cfg(test)])
+                let mut j = i + 1;
+                if j < toks.len() && is_punct(&toks[j], '!') {
+                    j += 1;
+                }
+                if j < toks.len() && is_punct(&toks[j], '[') {
+                    let end = match_bracket(toks, j, '[', ']');
+                    for t in &toks[j..end.min(toks.len())] {
+                        if ident_text(t) == Some("test") {
+                            pending_test = true;
+                        }
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+            TokKind::Punct('{') => {
+                brace_depth += 1;
+                if arm_test_mod && test_depth.is_none() {
+                    test_depth = Some(brace_depth);
+                }
+                arm_test_mod = false;
+                pending_test = false;
+            }
+            TokKind::Punct('}') => {
+                if test_depth == Some(brace_depth) {
+                    test_depth = None;
+                }
+                brace_depth = brace_depth.saturating_sub(1);
+                pending_test = false;
+            }
+            TokKind::Punct(';') | TokKind::Punct('=') => {
+                pending_test = false;
+            }
+            TokKind::Ident => {
+                let in_test = test_depth.is_some() || pending_test;
+                match toks[i].text.as_str() {
+                    "mod" => {
+                        // `mod name {` opens a scope; `mod name;` is a
+                        // file reference. Only the brace form scopes.
+                        if pending_test
+                            && i + 2 < toks.len()
+                            && toks[i + 1].kind == TokKind::Ident
+                            && is_punct(&toks[i + 2], '{')
+                        {
+                            arm_test_mod = true;
+                        }
+                        // keep pending_test until the `{`/`;` resets it
+                    }
+                    "fn" => {
+                        let hot = hot_armed.take();
+                        if i + 1 < toks.len() && toks[i + 1].kind == TokKind::Ident {
+                            let f = parse_fn(toks, i, in_test, hot.is_some());
+                            items.fns.push(f);
+                        } else if let Some(line) = hot {
+                            // `fn(...)` pointer type — not an item
+                            items.stray_hot.push(line);
+                        }
+                        pending_test = false;
+                    }
+                    "struct" | "enum" | "union" => {
+                        if let Some(tb) = parse_type_body(toks, i, in_test) {
+                            items.types.push(tb);
+                        }
+                        pending_test = false;
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    // trailing annotations past the last token never anchor; flush them
+    while next_hot < hot_lines.len() {
+        if let Some(prev) = hot_armed.replace(hot_lines[next_hot]) {
+            items.stray_hot.push(prev);
+        }
+        next_hot += 1;
+    }
+    if let Some(line) = hot_armed {
+        items.stray_hot.push(line);
+    }
+    items
+}
+
+/// Parse one `fn` item starting at the `fn` keyword (`toks[at]`); the
+/// caller guarantees `toks[at + 1]` is the name identifier.
+fn parse_fn(toks: &[Token], at: usize, in_test: bool, is_hot: bool) -> FnItem {
+    let name = toks[at + 1].text.clone();
+    let line = toks[at].line;
+    let mut j = at + 2;
+    if j < toks.len() && is_punct(&toks[j], '<') {
+        j = skip_generics(toks, j);
+    }
+    let (mut sig_open, mut sig_close) = (usize::MAX, usize::MAX);
+    if j < toks.len() && is_punct(&toks[j], '(') {
+        sig_open = j;
+        sig_close = match_bracket(toks, j, '(', ')');
+        j = sig_close + 1;
+    }
+    // return type / where clause: scan to the body `{` or a `;` at
+    // paren/bracket depth 0 (tuple returns carry parens, array types
+    // carry brackets; neither carries braces)
+    let (mut body_open, mut body_close) = (usize::MAX, usize::MAX);
+    let mut depth = 0i32;
+    while j < toks.len() {
+        match &toks[j].kind {
+            TokKind::Punct('(') | TokKind::Punct('[') => depth += 1,
+            TokKind::Punct(')') | TokKind::Punct(']') => depth -= 1,
+            TokKind::Punct('{') if depth == 0 => {
+                body_open = j;
+                body_close = match_bracket(toks, j, '{', '}');
+                break;
+            }
+            TokKind::Punct(';') if depth == 0 => break,
+            _ => {}
+        }
+        j += 1;
+    }
+    FnItem {
+        name,
+        line,
+        sig_open,
+        sig_close,
+        body_open,
+        body_close,
+        in_test,
+        is_hot,
+    }
+}
+
+/// Parse a `struct`/`enum`/`union` braced body starting at the keyword;
+/// returns `None` for tuple structs and unit structs (no named fields).
+fn parse_type_body(toks: &[Token], at: usize, in_test: bool) -> Option<TypeBody> {
+    let mut j = at + 1;
+    if j < toks.len() && toks[j].kind == TokKind::Ident {
+        j += 1;
+    } else {
+        return None;
+    }
+    if j < toks.len() && is_punct(&toks[j], '<') {
+        j = skip_generics(toks, j);
+    }
+    // where clause: scan to `{`, `;` or `(` at depth 0
+    let mut depth = 0i32;
+    while j < toks.len() {
+        match &toks[j].kind {
+            TokKind::Punct('(') if depth == 0 => return None, // tuple struct
+            TokKind::Punct('(') | TokKind::Punct('[') => depth += 1,
+            TokKind::Punct(')') | TokKind::Punct(']') => depth -= 1,
+            TokKind::Punct(';') if depth == 0 => return None, // unit struct
+            TokKind::Punct('{') if depth == 0 => {
+                let close = match_bracket(toks, j, '{', '}');
+                return Some(TypeBody {
+                    body_open: j,
+                    body_close: close,
+                    in_test,
+                });
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lex::lex;
+    use super::*;
+
+    fn parse(src: &str) -> Items {
+        parse_items(&lex(src))
+    }
+
+    #[test]
+    fn finds_fns_with_spans_and_names() {
+        let items = parse(
+            "pub fn alpha(x: u32) -> u32 { x + 1 }\n\
+             fn beta<F: Fn(u64) -> u64>(f: F) -> (f64, bool) where F: Clone { (0.0, f(1) > 0) }\n",
+        );
+        assert_eq!(items.fns.len(), 2);
+        assert_eq!(items.fns[0].name, "alpha");
+        assert_eq!(items.fns[1].name, "beta");
+        for f in &items.fns {
+            assert!(f.sig_open != usize::MAX && f.body_open != usize::MAX);
+            assert!(f.sig_open < f.sig_close && f.body_open < f.body_close);
+        }
+        // beta's generics contain a paren'd Fn bound and an arrow — the
+        // signature must still be the real param list
+        let beta = &items.fns[1];
+        assert!(!beta.sig_range().is_empty());
+    }
+
+    #[test]
+    fn trait_declarations_are_bodyless() {
+        let items = parse("trait S { fn tick(&mut self) -> bool; fn done(&self) -> bool { true } }");
+        assert_eq!(items.fns.len(), 2);
+        assert_eq!(items.fns[0].body_open, usize::MAX);
+        assert!(items.fns[1].body_open != usize::MAX);
+    }
+
+    #[test]
+    fn cfg_test_mod_and_test_attr_mark_fns() {
+        let items = parse(
+            "fn live() {}\n\
+             #[cfg(test)]\nmod tests {\n  fn helper() {}\n  #[test]\n  fn case() {}\n}\n\
+             fn live2() {}\n\
+             #[test]\nfn top_level_case() {}\n",
+        );
+        let by_name = |n: &str| items.fns.iter().find(|f| f.name == n).unwrap();
+        assert!(!by_name("live").in_test);
+        assert!(by_name("helper").in_test);
+        assert!(by_name("case").in_test);
+        assert!(!by_name("live2").in_test);
+        assert!(by_name("top_level_case").in_test);
+    }
+
+    #[test]
+    fn hot_annotation_anchors_through_attrs_and_qualifiers() {
+        let items = parse(
+            "// moelint: hot\n#[inline]\npub(crate) fn window(&mut self) {}\n\
+             fn cold() {}\n",
+        );
+        assert!(items.fns[0].is_hot);
+        assert!(!items.fns[1].is_hot);
+        assert!(items.stray_hot.is_empty());
+    }
+
+    #[test]
+    fn hot_annotation_broken_by_interleaving_code_is_stray() {
+        let items = parse("// moelint: hot\nconst X: u32 = 5;\nfn later() {}\n");
+        assert!(!items.fns[0].is_hot);
+        assert_eq!(items.stray_hot, vec![1]);
+        let items = parse("fn only() {}\n// moelint: hot\n");
+        assert!(!items.fns[0].is_hot);
+        assert_eq!(items.stray_hot, vec![2]);
+    }
+
+    #[test]
+    fn struct_bodies_found_tuple_structs_skipped() {
+        let items = parse(
+            "pub struct Named { pub t: f64 }\n\
+             pub struct Tup(f64);\n\
+             pub enum E { A { delay: f64 }, B }\n\
+             struct Unit;\n",
+        );
+        assert_eq!(items.types.len(), 2);
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_items() {
+        let items = parse("struct S { cb: fn(u32) -> u32 }\nfn real() {}\n");
+        assert_eq!(items.fns.len(), 1);
+        assert_eq!(items.fns[0].name, "real");
+    }
+
+    #[test]
+    fn nested_fns_and_bodies_tracked() {
+        let items = parse("fn outer() { fn inner() { let v = 1; } inner(); }");
+        assert_eq!(items.fns.len(), 2);
+        let outer = &items.fns[0];
+        let inner = &items.fns[1];
+        assert!(outer.body_open < inner.body_open && inner.body_close < outer.body_close);
+        assert!(items.inside_fn_body(inner.body_open + 1));
+    }
+}

@@ -6,23 +6,32 @@
 //! `moelint` makes the underlying properties *checked properties of the
 //! source*: no entropy-seeded hash containers on decision paths (R1), no
 //! wall-clock reads outside benches (R2), no parallelism outside the
-//! deterministic pool (R3), no silent float→int truncation of sim-time or
-//! byte quantities (R4), no `unsafe` outside the two Miri-audited files
-//! (R5), and no stray printing from library modules (R6).
+//! deterministic pool (R3), no `unsafe` outside the two Miri-audited files
+//! (R5), no stray printing from library modules (R6), no hint-named raw
+//! `f64` time/byte params or fields in the sim/serving modules (R7 — the
+//! `util::units` newtypes carry the unit in the type; this subsumed and
+//! retired the line-scoped R4 float-cast heuristic), no
+//! `unwrap`/`expect`/`panic!` on serving paths (R8), no allocation inside
+//! `// moelint: hot` windows (R9 — the static complement of
+//! `tests/alloc_guard.rs`), and no bound-mutating replica call without a
+//! calendar `refresh` in `server/router.rs` (R10).
 //!
 //! * Rule engine: [`rules`] (catalogue in [`rules::RULES`]).
+//! * Item structure for the flow-aware rules R7–R10: [`items`].
 //! * Tokenizer: [`lex`] (comments, strings, lifetimes, numerics, `::`).
 //! * Suppression: `// moelint: allow(<rule>, <reason>)` on the offending
 //!   line, or on its own line directly above. The reason is **mandatory**;
 //!   a reasonless or unknown-rule pragma is itself a finding (`pragma`),
-//!   and `pragma` findings cannot be suppressed.
-//! * Binary: `cargo run --bin moelint [--json] [ROOT]` — exit 0 clean,
-//!   1 findings, 2 usage/IO error.
+//!   and `pragma` findings cannot be suppressed. Total suppression debt is
+//!   capped by `scripts/lint_budget.json` ([`check_budget`]).
+//! * Binary: `cargo run --bin moelint [--json] [--stats] [ROOT]` — exit 0
+//!   clean, 1 findings/budget violation, 2 usage/IO error.
 //!
 //! The self-check test at the bottom runs the linter over the whole crate,
 //! so `cargo test` fails the moment a rule regresses — the same wall CI
 //! enforces via the `lint` job.
 
+pub mod items;
 pub mod lex;
 pub mod rules;
 
@@ -32,10 +41,115 @@ use std::io;
 use std::path::{Path, PathBuf};
 
 use lex::lex;
-use rules::{check_all, resolve_rule, FileClass};
+use rules::{check_all, resolve_rule, FileClass, RULES};
 
 /// Directories (relative to the repo root) the linter walks.
 pub const LINT_ROOTS: [&str; 3] = ["rust/src", "rust/benches", "rust/tests"];
+
+/// Repo-relative path of the pragma budget (`--stats` + CI enforcement).
+pub const BUDGET_PATH: &str = "scripts/lint_budget.json";
+
+/// Per-rule finding and suppression tallies for one lint run
+/// (`moelint --stats`, and the budget ratchet's input).
+#[derive(Debug, Clone)]
+pub struct LintStats {
+    /// Parallel to [`rules::RULES`]: `(rule name, emitted findings,
+    /// valid pragmas seen)`. Findings are counted *post*-suppression;
+    /// pragmas are counted whether or not they suppressed anything, so
+    /// dead suppressions still weigh against the budget.
+    pub per_rule: Vec<(&'static str, u32, u32)>,
+}
+
+impl Default for LintStats {
+    fn default() -> Self {
+        LintStats {
+            per_rule: RULES.iter().map(|r| (r.name, 0, 0)).collect(),
+        }
+    }
+}
+
+impl LintStats {
+    fn bump_finding(&mut self, rule: &str) {
+        if let Some(row) = self.per_rule.iter_mut().find(|(n, _, _)| *n == rule) {
+            row.1 += 1;
+        }
+    }
+
+    fn bump_pragma(&mut self, rule: &str) {
+        if let Some(row) = self.per_rule.iter_mut().find(|(n, _, _)| *n == rule) {
+            row.2 += 1;
+        }
+    }
+
+    pub fn findings_for(&self, rule: &str) -> u32 {
+        self.per_rule.iter().find(|(n, _, _)| *n == rule).map_or(0, |r| r.1)
+    }
+
+    pub fn pragmas_for(&self, rule: &str) -> u32 {
+        self.per_rule.iter().find(|(n, _, _)| *n == rule).map_or(0, |r| r.2)
+    }
+
+    pub fn total_findings(&self) -> u32 {
+        self.per_rule.iter().map(|r| r.1).sum()
+    }
+
+    pub fn total_pragmas(&self) -> u32 {
+        self.per_rule.iter().map(|r| r.2).sum()
+    }
+
+    /// One JSON object (the `--json --stats` artifact row).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .per_rule
+            .iter()
+            .map(|(name, f, p)| format!(r#""{name}":{{"findings":{f},"pragmas":{p}}}"#))
+            .collect();
+        format!(
+            r#"{{"stats":{{{}}},"total_findings":{},"total_pragmas":{}}}"#,
+            rows.join(","),
+            self.total_findings(),
+            self.total_pragmas()
+        )
+    }
+}
+
+/// Parse `scripts/lint_budget.json` — a flat `{"rule": max_pragmas}`
+/// object (hand-rolled: the budget file is the only JSON moelint reads,
+/// and the binary must stay dependency-free).
+pub fn parse_budget(src: &str) -> Option<Vec<(String, u32)>> {
+    let inner = src.trim().strip_prefix('{')?.strip_suffix('}')?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once(':')?;
+        let key = k.trim().strip_prefix('"')?.strip_suffix('"')?.to_string();
+        let val: u32 = v.trim().parse().ok()?;
+        out.push((key, val));
+    }
+    Some(out)
+}
+
+/// Budget violations: any rule whose pragma count exceeds its budgeted
+/// cap (rules absent from the budget file are capped at zero). The
+/// ratchet direction is deliberate — suppression debt can shrink without
+/// touching the budget file, but growing it means editing a reviewed,
+/// checked-in number.
+pub fn check_budget(stats: &LintStats, budget: &[(String, u32)]) -> Vec<String> {
+    let mut out = Vec::new();
+    for &(name, _, pragmas) in &stats.per_rule {
+        let cap = budget.iter().find(|(k, _)| k == name).map_or(0, |(_, v)| *v);
+        if pragmas > cap {
+            out.push(format!(
+                "rule `{name}`: {pragmas} pragma(s) exceed the checked-in budget of {cap} \
+                 ({BUDGET_PATH}) — pay down suppression debt instead of growing it"
+            ));
+        }
+    }
+    out
+}
 
 /// One lint finding, addressed by repo-relative path and 1-based position.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -90,6 +204,9 @@ fn json_escape(s: &str) -> String {
 /// A parsed `moelint:` pragma comment: either a valid suppression or a
 /// `pragma`-rule finding message.
 fn parse_pragma(text: &str) -> Option<Result<&'static str, String>> {
+    if items::is_hot_comment(text) {
+        return None; // R9's annotation, not a suppression — items.rs owns it
+    }
     let rest = text.trim().strip_prefix("moelint:")?.trim();
     let Some(inner) = rest.strip_prefix("allow(").and_then(|r| r.trim_end().strip_suffix(')'))
     else {
@@ -120,6 +237,12 @@ fn parse_pragma(text: &str) -> Option<Result<&'static str, String>> {
 /// Lint one file's source. `rel_path` is the repo-relative path with
 /// forward slashes (it determines rule scope — see [`FileClass`]).
 pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    lint_source_with_stats(rel_path, src, &mut LintStats::default())
+}
+
+/// [`lint_source`] that also tallies per-rule findings and pragmas into
+/// `stats` (the `--stats`/budget surface).
+pub fn lint_source_with_stats(rel_path: &str, src: &str, stats: &mut LintStats) -> Vec<Finding> {
     let class = FileClass::classify(rel_path);
     let lexed = lex(src);
 
@@ -129,6 +252,7 @@ pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
         match parse_pragma(&c.text) {
             None => {}
             Some(Ok(rule)) => {
+                stats.bump_pragma(rule);
                 allow.push((c.line, rule));
                 if !c.trailing {
                     // standalone pragma: applies to the next code line
@@ -154,6 +278,9 @@ pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
             .filter(|f| !allow.iter().any(|&(l, r)| l == f.line && r == f.rule)),
     );
     out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    for f in &out {
+        stats.bump_finding(f.rule);
+    }
     out
 }
 
@@ -174,6 +301,11 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
 /// Lint the whole repo under `root` (the directory containing `rust/`),
 /// walking [`LINT_ROOTS`] in deterministic (sorted) order.
 pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    lint_tree_with_stats(root).map(|(findings, _)| findings)
+}
+
+/// [`lint_tree`] that also returns the per-rule tallies.
+pub fn lint_tree_with_stats(root: &Path) -> io::Result<(Vec<Finding>, LintStats)> {
     let mut files = Vec::new();
     for sub in LINT_ROOTS {
         let dir = root.join(sub);
@@ -182,6 +314,7 @@ pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
         }
     }
     let mut out = Vec::new();
+    let mut stats = LintStats::default();
     for f in &files {
         let src = fs::read_to_string(f)?;
         let rel = f
@@ -189,9 +322,9 @@ pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
             .unwrap_or(f)
             .to_string_lossy()
             .replace('\\', "/");
-        out.extend(lint_source(&rel, &src));
+        out.extend(lint_source_with_stats(&rel, &src, &mut stats));
     }
-    Ok(out)
+    Ok((out, stats))
 }
 
 #[cfg(test)]
@@ -248,19 +381,146 @@ mod tests {
     }
 
     #[test]
-    fn r4_trips_on_quantity_truncation_only() {
-        // float evidence + quantity hint on the line -> finding
-        let fix = "fn f(elapsed_s: f64) -> u64 { (elapsed_s * 1e3) as u64 }\n";
-        assert_eq!(rules_of(&lint_source("rust/src/memory/fixture.rs", fix)), vec!["float-cast"]);
-        // no quantity hint -> clean (a percentile rank, say)
-        let no_hint = "fn f(frac: f64, n: usize) -> usize { (frac * n as f64) as usize }\n";
-        assert!(lint_source("rust/src/metrics/fixture.rs", no_hint).is_empty());
-        // quantity hint but no float on the line -> clean (int-to-int)
-        let no_float = "fn f(byte_count: u32) -> u64 { byte_count as u64 }\n";
-        assert!(lint_source("rust/src/memory/fixture.rs", no_float).is_empty());
-        // int-to-float widening is never flagged
-        let widen = "fn f(bytes: u64) -> f64 { bytes as f64 }\n";
-        assert!(lint_source("rust/src/memory/fixture.rs", widen).is_empty());
+    fn r7_trips_on_hinted_raw_f64_params_and_fields() {
+        let fix = "pub struct S { pub stall_time: f64, pub frac: f64 }\n\
+                   pub fn f(deadline: f64) -> f64 { deadline }\n\
+                   pub enum E { Lands { delay: f64, retries: u32 } }\n";
+        let hits = lint_source("rust/src/memory/fixture.rs", fix);
+        assert_eq!(rules_of(&hits), vec!["raw-units", "raw-units", "raw-units"], "{hits:?}");
+        assert_eq!((hits[0].line, hits[1].line, hits[2].line), (1, 2, 3));
+        // out of units scope: engine module, tests dir, benches
+        assert!(lint_source("rust/src/engine/fixture.rs", fix).is_empty());
+        assert!(lint_source("rust/tests/fixture.rs", fix).is_empty());
+        assert!(lint_source("rust/benches/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r7_ignores_containers_locals_returns_and_test_scope() {
+        // Vec<f64> buffers, Option<f64> knobs, fn-local lets, return
+        // types and neutral-named boundary params are all out of shape
+        let clean = "pub struct S { pub ttft_val: Vec<f64>, pub slo: Option<f64> }\n\
+                     pub fn new(window_s: f64) -> f64 { let stall_s: f64 = window_s; stall_s }\n\
+                     pub fn slots(slot_share: usize) -> usize { slot_share }\n";
+        assert!(lint_source("rust/src/server/fixture.rs", clean).is_empty());
+        // #[cfg(test)] scope is exempt (raw floats fine in test helpers)
+        let test_scoped = "#[cfg(test)]\nmod tests {\n  pub struct T { pub makespan: f64 }\n\
+                           fn f(latency: f64) -> f64 { latency }\n}\n";
+        assert!(lint_source("rust/src/memory/fixture.rs", test_scoped).is_empty());
+        // fn-local structs are not API surface
+        let local = "pub fn f() { struct L { wait: f64 } let _ = L { wait: 0.0 }; }\n";
+        assert!(lint_source("rust/src/cache/fixture.rs", local).is_empty());
+    }
+
+    #[test]
+    fn r7_catches_every_units_module_and_respects_pragmas() {
+        let fix = "pub fn f(elapsed: f64) -> f64 { elapsed }\n";
+        for m in rules::UNITS_MODULES {
+            let hits = lint_source(&format!("rust/src/{m}/fixture.rs"), fix);
+            assert_eq!(rules_of(&hits), vec!["raw-units"], "module {m}");
+        }
+        let pragmad = "pub fn f(elapsed: f64) -> f64 { elapsed } \
+                       // moelint: allow(raw-units, migration staging)\n";
+        assert!(lint_source("rust/src/memory/fixture.rs", pragmad).is_empty());
+    }
+
+    #[test]
+    fn r8_trips_on_serving_path_panics() {
+        let fix = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   fn g(x: Option<u32>) -> u32 { x.expect(\"y\") }\n\
+                   fn h() { panic!(\"boom\") }\n\
+                   fn i() { unreachable!() }\n";
+        let hits = lint_source("rust/src/server/fixture.rs", fix);
+        assert_eq!(
+            rules_of(&hits),
+            vec!["panic-free", "panic-free", "panic-free", "panic-free"],
+            "{hits:?}"
+        );
+        // out of scope: engine module (not a serving-path module), tests
+        assert!(lint_source("rust/src/engine/fixture.rs", fix).is_empty());
+        assert!(lint_source("rust/tests/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r8_allows_fallible_forms_asserts_and_test_scope() {
+        let ok = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n\
+                  fn g(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 7) }\n\
+                  fn h(t: bool) { assert!(t, \"invariant\"); debug_assert!(t); }\n";
+        assert!(lint_source("rust/src/memory/fixture.rs", ok).is_empty());
+        let test_scoped = "#[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(lint_source("rust/src/faults/fixture.rs", test_scoped).is_empty());
+        let pragmad = "fn f(x: Option<u32>) -> u32 {\n    \
+                       x.unwrap() // moelint: allow(panic-free, structurally Some: checked above)\n}\n";
+        assert!(lint_source("rust/src/cache/fixture.rs", pragmad).is_empty());
+    }
+
+    #[test]
+    fn r9_trips_on_allocation_inside_hot_windows() {
+        let fix = "// moelint: hot\n\
+                   #[inline]\n\
+                   pub fn window(out: &mut Vec<u32>) {\n\
+                       let v: Vec<u32> = Vec::new();\n\
+                       let s = format!(\"x\");\n\
+                       let w = vec![1u32];\n\
+                       let b = Box::new(1u32);\n\
+                       let t = s.to_string();\n\
+                       let c: Vec<u32> = v.iter().copied().collect();\n\
+                       out.extend(w.iter().chain(c.iter())); let _ = (b, t);\n\
+                   }\n";
+        let hits = lint_source("rust/src/engine/fixture.rs", fix);
+        assert_eq!(hits.len(), 6, "{hits:?}");
+        assert!(hits.iter().all(|f| f.rule == "hot-alloc"));
+        // the same body without the annotation is out of scope
+        let cold = fix.strip_prefix("// moelint: hot\n").unwrap();
+        assert!(lint_source("rust/src/engine/fixture.rs", cold).is_empty());
+    }
+
+    #[test]
+    fn r9_reports_stray_hot_annotations() {
+        // annotation anchored to a non-fn item is stray, not silent
+        let stray = "// moelint: hot\npub struct S { x: u32 }\nfn later() { vec![1]; }\n";
+        let hits = lint_source("rust/src/engine/fixture.rs", stray);
+        assert_eq!(rules_of(&hits), vec!["hot-alloc"], "{hits:?}");
+        assert_eq!(hits[0].line, 1);
+        // a trailing annotation at EOF is stray too
+        let eof = "fn only() {}\n// moelint: hot\n";
+        assert_eq!(rules_of(&lint_source("rust/src/engine/fixture.rs", eof)), vec!["hot-alloc"]);
+    }
+
+    #[test]
+    fn r9_pragma_interaction() {
+        let fix = "// moelint: hot\n\
+                   fn window() {\n\
+                       let v = vec![1u32]; // moelint: allow(hot-alloc, one-time warmup fill)\n\
+                       let _ = v;\n\
+                   }\n";
+        assert!(lint_source("rust/src/engine/fixture.rs", fix).is_empty());
+    }
+
+    #[test]
+    fn r10_trips_on_unrefreshed_replica_mutations() {
+        let bad = "impl R {\n\
+                   fn tick_all(&mut self) { for k in 0..2 { self.replicas[k].tick(); } }\n\
+                   fn hand_off(&mut self, w: W) { self.replicas[w.replica].fail_over(0); }\n\
+                   }\n";
+        let hits = lint_source("rust/src/server/router.rs", bad);
+        assert_eq!(rules_of(&hits), vec!["refresh-contract", "refresh-contract"], "{hits:?}");
+        // same shapes with a refresh in the same fn are the contract held
+        let good = "impl R {\n\
+                    fn tick_all(&mut self) {\n\
+                        for k in 0..2 { self.replicas[k].tick(); self.refresh(k); }\n\
+                    }\n\
+                    }\n";
+        assert!(lint_source("rust/src/server/router.rs", good).is_empty());
+        // non-mutating replica methods don't trip
+        let peek = "impl R { fn load(&self) -> f64 { self.replicas[0].now() } }\n";
+        assert!(lint_source("rust/src/server/router.rs", peek).is_empty());
+        // scope is router.rs only
+        assert!(lint_source("rust/src/server/mod.rs", bad).is_empty());
+        // the lockstep reference suppresses with a reason
+        let pragmad = "impl R { fn lockstep(&mut self) {\n\
+                       self.replicas[0].tick(); // moelint: allow(refresh-contract, lockstep reference invalidates wholesale)\n\
+                       } }\n";
+        assert!(lint_source("rust/src/server/router.rs", pragmad).is_empty());
     }
 
     #[test]
@@ -361,6 +621,56 @@ mod tests {
         );
     }
 
+    // --------------------------------------------------------------- stats
+
+    #[test]
+    fn stats_tally_findings_and_pragmas_per_rule() {
+        let fix = "fn f() { let _t = std::time::Instant::now(); }\n\
+                   fn g() { let _u = std::time::Instant::now(); } \
+                   // moelint: allow(wall-clock, host timing fixture)\n\
+                   fn h() { let _m = std::collections::HashMap::<u8, u8>::new(); }\n";
+        let mut stats = LintStats::default();
+        let hits = lint_source_with_stats("rust/src/server/fixture.rs", fix, &mut stats);
+        assert_eq!(hits.len(), 2, "{hits:?}"); // unsuppressed clock + det-map
+        assert_eq!(stats.findings_for("wall-clock"), 1);
+        assert_eq!(stats.pragmas_for("wall-clock"), 1);
+        assert_eq!(stats.findings_for("det-map"), 1);
+        assert_eq!(stats.pragmas_for("det-map"), 0);
+        assert_eq!(stats.total_findings(), 2);
+        assert_eq!(stats.total_pragmas(), 1);
+        // dead suppressions still count against the budget
+        let dead = "// moelint: allow(unsafe, nothing here is unsafe)\nfn f() {}\n";
+        let mut stats = LintStats::default();
+        assert!(lint_source_with_stats("rust/src/x.rs", dead, &mut stats).is_empty());
+        assert_eq!(stats.pragmas_for("unsafe"), 1);
+        // the stats JSON row names every rule
+        let json = stats.to_json();
+        for r in RULES {
+            assert!(json.contains(&format!("\"{}\"", r.name)), "{json}");
+        }
+    }
+
+    #[test]
+    fn budget_parses_and_ratchets() {
+        let src = "{\n  \"wall-clock\": 2,\n  \"print\": 4\n}\n";
+        let budget = parse_budget(src).expect("parse");
+        assert_eq!(budget, vec![("wall-clock".to_string(), 2), ("print".to_string(), 4)]);
+        let mut stats = LintStats::default();
+        stats.bump_pragma("wall-clock");
+        stats.bump_pragma("wall-clock");
+        assert!(check_budget(&stats, &budget).is_empty());
+        stats.bump_pragma("wall-clock");
+        let violations = check_budget(&stats, &budget);
+        assert_eq!(violations.len(), 1, "{violations:?}");
+        assert!(violations[0].contains("wall-clock"));
+        // rules absent from the budget are capped at zero
+        stats.bump_pragma("det-map");
+        assert_eq!(check_budget(&stats, &budget).len(), 2);
+        // malformed budgets are rejected, not guessed at
+        assert!(parse_budget("not json").is_none());
+        assert!(parse_budget("{\"x\": -1}").is_none());
+    }
+
     // ---------------------------------------------------------- self-check
 
     /// The ratchet: the crate must lint clean. Every suppression in the
@@ -376,5 +686,19 @@ mod tests {
             findings.len(),
             findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
         );
+    }
+
+    /// The debt ceiling: total pragmas per rule must stay within the
+    /// checked-in budget. Deleting a pragma never breaks this; adding one
+    /// means editing `scripts/lint_budget.json` in the same reviewed
+    /// change.
+    #[test]
+    fn pragma_debt_within_budget() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let (_, stats) = lint_tree_with_stats(root).expect("lint walk");
+        let src = std::fs::read_to_string(root.join(BUDGET_PATH)).expect("budget file");
+        let budget = parse_budget(&src).expect("budget parses");
+        let violations = check_budget(&stats, &budget);
+        assert!(violations.is_empty(), "{}", violations.join("\n"));
     }
 }

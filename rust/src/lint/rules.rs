@@ -1,12 +1,21 @@
-//! The `moelint` rule walkers (R1–R6).
+//! The `moelint` rule walkers (R1–R10, minus the retired R4).
 //!
 //! Each rule is a pure function over the token stream of one file plus its
 //! path-derived [`FileClass`]; findings are reported pre-suppression (the
 //! pragma filter in [`crate::lint`] applies `// moelint: allow(...)`
-//! afterwards). The catalogue, scopes and rationale are documented in
-//! EXPERIMENTS.md §Lint; rule text lives here so the binary, the fixtures
-//! and the docs can't drift apart silently.
+//! afterwards). R7–R10 additionally receive the flow-aware
+//! [`Items`] structure (fn/struct spans, test scope, `hot` anchors) built
+//! by [`super::items`]. The catalogue, scopes and rationale are documented
+//! in EXPERIMENTS.md §Lint; rule text lives here so the binary, the
+//! fixtures and the docs can't drift apart silently.
+//!
+//! **R4 `float-cast` is retired**: it was a line-scoped heuristic for the
+//! silent-truncation problem R7 now solves structurally — quantities carry
+//! their unit in the type (`util::units`), so a truncation requires a
+//! visible escape hatch (`to_f64`/`floor_bytes`) instead of a guessed-at
+//! pragma.
 
+use super::items::{self, Items};
 use super::lex::{Lexed, TokKind, Token};
 use super::Finding;
 
@@ -16,18 +25,27 @@ pub const SIM_MODULES: [&str; 7] = [
     "cache", "prefetch", "memory", "server", "engine", "trace", "faults",
 ];
 
-/// Integer target types of a truncating `as` cast (rule R4).
-const INT_TYPES: [&str; 12] = [
-    "usize", "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
+/// The sim/serving modules under the typed-units regime: R7 bans
+/// hint-named raw-`f64` params/fields here, and R8 requires their serving
+/// paths to be panic-free.
+pub const UNITS_MODULES: [&str; 5] = ["memory", "faults", "server", "cache", "prefetch"];
+
+/// Identifier fragments that mark a param/field as carrying a simulated
+/// time or byte quantity (rule R7; substring match, case-insensitive).
+/// `slo` is special-cased so `slot`-family names don't trip it.
+pub const UNIT_HINTS: [&str; 15] = [
+    "time", "secs", "bytes", "latency", "deadline", "duration", "delay", "wait", "elapsed",
+    "makespan", "ttft", "stall", "bandwidth", "backoff", "slo",
 ];
 
-/// Identifier fragments that mark a line as carrying simulated-time or
-/// byte-count quantities (rule R4's scope heuristic; substring match,
-/// case-insensitive).
-const QUANTITY_HINTS: [&str; 13] = [
-    "time", "secs", "byte", "bandwidth", "budget", "latenc", "duration", "deadline", "elapsed",
-    "clock", "rps", "_mb", "_gb",
-];
+/// Replica methods that mutate a replica's `next_event_bound` — rule R10
+/// requires `refresh` in any `server/router.rs` function calling them.
+const BOUND_MUTATORS: [&str; 4] = ["submit", "tick", "fail_over", "submit_failover"];
+
+/// Allocation surfaces banned inside `// moelint: hot` windows (rule R9).
+const HOT_ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+const HOT_ALLOC_METHODS: [&str; 2] = ["collect", "to_string"];
+const HOT_ALLOC_PATHS: [&str; 2] = ["Vec", "Box"];
 
 /// One lint rule's identity: stable id, pragma name, one-line summary.
 #[derive(Debug, Clone, Copy)]
@@ -39,7 +57,7 @@ pub struct Rule {
 
 /// The rule catalogue. `pragma` is the meta-rule for malformed/reasonless
 /// suppressions; it cannot itself be suppressed.
-pub const RULES: [Rule; 7] = [
+pub const RULES: [Rule; 10] = [
     Rule {
         id: "R1",
         name: "det-map",
@@ -56,11 +74,6 @@ pub const RULES: [Rule; 7] = [
         summary: "no thread spawning or rayon outside util/pool.rs (the deterministic pool)",
     },
     Rule {
-        id: "R4",
-        name: "float-cast",
-        summary: "no truncating float->int `as` cast on sim-time/byte-count expressions",
-    },
-    Rule {
         id: "R5",
         name: "unsafe",
         summary: "no unsafe outside util/alloc.rs and util/pool.rs",
@@ -69,6 +82,26 @@ pub const RULES: [Rule; 7] = [
         id: "R6",
         name: "print",
         summary: "no println!/eprintln!/print!/eprint!/dbg! in library modules",
+    },
+    Rule {
+        id: "R7",
+        name: "raw-units",
+        summary: "no hint-named raw-f64 params/fields in sim/serving modules (use util::units)",
+    },
+    Rule {
+        id: "R8",
+        name: "panic-free",
+        summary: "no unwrap/expect/panic!/unreachable! in serving-path functions",
+    },
+    Rule {
+        id: "R9",
+        name: "hot-alloc",
+        summary: "no Vec::new/vec!/format!/collect/Box::new/to_string in `moelint: hot` functions",
+    },
+    Rule {
+        id: "R10",
+        name: "refresh-contract",
+        summary: "bound-mutating replica calls in server/router.rs must pair with refresh",
     },
     Rule {
         id: "P0",
@@ -120,6 +153,12 @@ impl FileClass {
         self.module
             .as_deref()
             .is_some_and(|m| SIM_MODULES.contains(&m))
+    }
+
+    fn in_units_module(&self) -> bool {
+        self.module
+            .as_deref()
+            .is_some_and(|m| UNITS_MODULES.contains(&m))
     }
 
     fn ends_with(&self, suffix: &str) -> bool {
@@ -232,50 +271,213 @@ fn r3_thread(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
     }
 }
 
-/// R4 `float-cast`: a truncating `as <int>` cast on a line that both (a)
-/// shows float evidence *before* the cast (a float literal or an `f64`/`f32`
-/// token) and (b) mentions a sim-time/byte-count quantity (identifier
-/// containing one of [`QUANTITY_HINTS`]). Line-scoped by design — the
-/// heuristic documents itself via the pragma it forces on intentional
-/// truncations.
-fn r4_float_cast(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
+/// The [`UNIT_HINTS`] fragment a name carries, if any. `slo` is skipped
+/// for `slot`-family names (`slots`, `slot_rank`, ...).
+fn unit_hint(name: &str) -> Option<&'static str> {
+    let low = name.to_ascii_lowercase();
+    UNIT_HINTS
+        .iter()
+        .find(|&&h| low.contains(h) && !(h == "slo" && low.contains("slot")))
+        .copied()
+}
+
+/// R7 `raw-units`: a `name: f64` param or field whose name carries a
+/// time/byte hint, inside a [`UNITS_MODULES`] module and outside test
+/// scope. The token shape is exactly `Ident ':' Ident(f64)` — `Vec<f64>`
+/// buffers, `Option<f64>` knobs and fn-local `let` bindings don't match
+/// (locals live in body spans, which are not scanned). The fix is a
+/// `util::units` newtype on the field, or a neutral-named raw param
+/// converted at the boundary (`window_s: f64` → `SimTime::from_f64`).
+fn r7_raw_units(class: &FileClass, lexed: &Lexed, items: &Items, out: &mut Vec<Finding>) {
+    if !class.in_units_module() {
+        return;
+    }
     let ts = &lexed.tokens;
-    let mut i = 0;
-    while i < ts.len() {
-        let line = ts[i].line;
-        let end = ts[i..].iter().position(|t| t.line != line).map_or(ts.len(), |p| i + p);
-        let toks = &ts[i..end];
-        let quantity = toks.iter().any(|t| {
-            t.kind == TokKind::Ident && {
-                let low = t.text.to_ascii_lowercase();
-                QUANTITY_HINTS.iter().any(|h| low.contains(h))
-            }
-        });
-        if quantity {
-            for j in 0..toks.len().saturating_sub(1) {
-                if ident_is(&toks[j], "as")
-                    && toks[j + 1].kind == TokKind::Ident
-                    && INT_TYPES.contains(&toks[j + 1].text.as_str())
-                {
-                    let float_before = toks[..j].iter().any(|t| {
-                        t.kind == TokKind::Float || ident_is(t, "f64") || ident_is(t, "f32")
-                    });
-                    if float_before {
-                        out.push(finding(
-                            class,
-                            &toks[j],
-                            "float-cast",
-                            format!(
-                                "float->`{}` truncation on a sim-time/byte-count line: make \
-                                 the rounding explicit or pragma the intentional floor",
-                                toks[j + 1].text
-                            ),
-                        ));
-                    }
+    let mut scan = |range: std::ops::Range<usize>, what: &str, out: &mut Vec<Finding>| {
+        for j in range.start..range.end.saturating_sub(2) {
+            if ts[j].kind == TokKind::Ident
+                && ts[j + 1].kind == TokKind::Punct(':')
+                && ident_is(&ts[j + 2], "f64")
+            {
+                if let Some(hint) = unit_hint(&ts[j].text) {
+                    out.push(finding(
+                        class,
+                        &ts[j],
+                        "raw-units",
+                        format!(
+                            "raw `f64` {what} `{}` carries a unit hint (`{hint}`): use \
+                             util::units::{{SimTime, Bytes, Bandwidth}} or a neutral-named \
+                             boundary param converted via from_f64",
+                            ts[j].text
+                        ),
+                    ));
                 }
             }
         }
-        i = end;
+    };
+    for f in &items.fns {
+        if !f.in_test {
+            scan(f.sig_range(), "param", out);
+        }
+    }
+    for tb in &items.types {
+        if !tb.in_test && !items.inside_fn_body(tb.body_open) {
+            scan(tb.body_open + 1..tb.body_close, "field", out);
+        }
+    }
+}
+
+/// R8 `panic-free`: no `.unwrap()`/`.expect(...)`/`panic!`/`unreachable!`
+/// inside non-test functions of the serving-path modules
+/// ([`UNITS_MODULES`]). Degraded-mode serving (PR 6) only holds if the
+/// serving path propagates instead of aborting; `assert!` stays legal —
+/// invariant checks that *should* stop a corrupted replay are not the
+/// same as convenience unwraps. Structural can't-fail sites carry a
+/// reasoned pragma.
+fn r8_panic_free(class: &FileClass, lexed: &Lexed, items: &Items, out: &mut Vec<Finding>) {
+    if !class.in_units_module() {
+        return;
+    }
+    let ts = &lexed.tokens;
+    for f in &items.fns {
+        if f.in_test {
+            continue;
+        }
+        for j in f.body_range() {
+            if ts[j].kind != TokKind::Ident {
+                continue;
+            }
+            let name = ts[j].text.as_str();
+            let method_pos = j > 0
+                && (ts[j - 1].kind == TokKind::Punct('.') || ts[j - 1].kind == TokKind::PathSep)
+                && ts.get(j + 1).is_some_and(|n| n.kind == TokKind::Punct('('));
+            let macro_pos = ts.get(j + 1).is_some_and(|n| n.kind == TokKind::Punct('!'));
+            let hit = match name {
+                "unwrap" | "expect" => method_pos,
+                "panic" | "unreachable" => macro_pos,
+                _ => false,
+            };
+            if hit {
+                out.push(finding(
+                    class,
+                    &ts[j],
+                    "panic-free",
+                    format!(
+                        "`{name}` in serving-path fn `{}`: propagate a Result / early-return \
+                         (let-else) instead, or pragma a structural can't-fail with its reason",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// R9 `hot-alloc`: functions annotated `// moelint: hot` (the windows
+/// `tests/alloc_guard.rs` pins dynamically) must not reach an allocation
+/// surface: `Vec::new`/`Box::new`, `vec!`/`format!`, `.collect()`,
+/// `.to_string()`. A stray annotation (anchored to nothing) is itself a
+/// finding — a silently unguarded window is worse than a missing one.
+fn r9_hot_alloc(class: &FileClass, lexed: &Lexed, items: &Items, out: &mut Vec<Finding>) {
+    let ts = &lexed.tokens;
+    for &line in &items.stray_hot {
+        out.push(Finding {
+            path: class.rel.clone(),
+            line,
+            col: 1,
+            rule: "hot-alloc",
+            msg: "`moelint: hot` annotation does not anchor to a fn (only attributes and \
+                  visibility qualifiers may sit between the annotation and its `fn`)"
+                .to_string(),
+        });
+    }
+    for f in &items.fns {
+        if !f.is_hot {
+            continue;
+        }
+        for j in f.body_range() {
+            if ts[j].kind != TokKind::Ident {
+                continue;
+            }
+            let name = ts[j].text.as_str();
+            let next_bang = ts.get(j + 1).is_some_and(|n| n.kind == TokKind::Punct('!'));
+            let after_dot = j > 0 && ts[j - 1].kind == TokKind::Punct('.');
+            let path_new = HOT_ALLOC_PATHS.contains(&name)
+                && ts.get(j + 1).is_some_and(|n| n.kind == TokKind::PathSep)
+                && ts.get(j + 2).is_some_and(|n| ident_is(n, "new"));
+            let hit = (HOT_ALLOC_MACROS.contains(&name) && next_bang)
+                || (HOT_ALLOC_METHODS.contains(&name) && after_dot)
+                || path_new;
+            if hit {
+                let label = if path_new {
+                    format!("{}::new", name)
+                } else if next_bang {
+                    format!("{name}!")
+                } else {
+                    format!(".{name}()")
+                };
+                out.push(finding(
+                    class,
+                    &ts[j],
+                    "hot-alloc",
+                    format!(
+                        "`{label}` inside hot window `{}`: this fn is an alloc_guard-pinned \
+                         allocation-free window — reuse engine-owned scratch instead",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// R10 `refresh-contract`: in `server/router.rs`, any function calling a
+/// bound-mutating replica method (`replicas[..].submit/tick/fail_over/`
+/// `submit_failover`) must also call `refresh` — PR 7's calendar memoizes
+/// `next_event_bound` per replica, and a mutation without a re-push
+/// leaves a stale entry that can stall the event loop. The lockstep
+/// reference (`tick_lockstep`) invalidates wholesale via its stale flag
+/// and carries reasoned pragmas.
+fn r10_refresh_contract(class: &FileClass, lexed: &Lexed, items: &Items, out: &mut Vec<Finding>) {
+    if !class.ends_with("server/router.rs") {
+        return;
+    }
+    let ts = &lexed.tokens;
+    for f in &items.fns {
+        if f.in_test {
+            continue;
+        }
+        let body = f.body_range();
+        let has_refresh = body.clone().any(|j| ident_is(&ts[j], "refresh"));
+        if has_refresh {
+            continue;
+        }
+        for j in body.clone() {
+            if !ident_is(&ts[j], "replicas") {
+                continue;
+            }
+            let mut k = j + 1;
+            if ts.get(k).is_some_and(|t| t.kind == TokKind::Punct('[')) {
+                k = items::match_bracket(ts, k, '[', ']') + 1;
+            }
+            if ts.get(k).is_some_and(|t| t.kind == TokKind::Punct('.'))
+                && ts.get(k + 1).is_some_and(|t| {
+                    t.kind == TokKind::Ident && BOUND_MUTATORS.contains(&t.text.as_str())
+                })
+                && ts.get(k + 2).is_some_and(|t| t.kind == TokKind::Punct('('))
+            {
+                out.push(finding(
+                    class,
+                    &ts[k + 1],
+                    "refresh-contract",
+                    format!(
+                        "`replicas[..].{}` in `{}` without a `refresh` call: the calendar's \
+                         memoized bound goes stale (see PR 7's bound-stability contract)",
+                        ts[k + 1].text, f.name
+                    ),
+                ));
+            }
+        }
     }
 }
 
@@ -325,12 +527,17 @@ fn r6_print(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
     }
 }
 
-/// Run every rule over one lexed file.
+/// Run every rule over one lexed file. The flow-aware items pass runs
+/// once and feeds R7–R10.
 pub fn check_all(class: &FileClass, lexed: &Lexed, out: &mut Vec<Finding>) {
     r1_det_map(class, lexed, out);
     r2_wall_clock(class, lexed, out);
     r3_thread(class, lexed, out);
-    r4_float_cast(class, lexed, out);
     r5_unsafe(class, lexed, out);
     r6_print(class, lexed, out);
+    let items = items::parse_items(lexed);
+    r7_raw_units(class, lexed, &items, out);
+    r8_panic_free(class, lexed, &items, out);
+    r9_hot_alloc(class, lexed, &items, out);
+    r10_refresh_contract(class, lexed, &items, out);
 }

@@ -10,12 +10,16 @@
 //! in-flight transfer. Two-hop SSD→DRAM→GPU prefetching pipelines across
 //! both links (§5.3 "multi-tier memory").
 //!
-//! Time is a virtual `f64` clock in seconds, advanced by the engine; all
-//! behaviour is deterministic.
+//! Time is a virtual [`SimTime`] clock in seconds, advanced by the engine;
+//! all behaviour is deterministic. The cost model's unit algebra is typed
+//! (`util::units`): `Bytes / Bandwidth -> SimTime` is the only way to turn
+//! a transfer size into a duration.
 
 mod sim;
 
 pub use sim::{MemorySim, MemoryStats, TierConfig};
+
+use crate::util::units::{Bandwidth, Bytes, SimTime};
 
 /// Memory tiers, fastest last.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,24 +32,26 @@ pub enum Tier {
 /// One directional transfer link with FIFO, non-preemptible service.
 #[derive(Debug, Clone)]
 pub struct Link {
-    /// Effective bandwidth in bytes/second.
-    pub bandwidth: f64,
-    /// Fixed per-transfer setup latency in seconds (DMA setup, page-table
-    /// work; the §8.6 optimizations lower this).
-    pub latency: f64,
+    /// Effective bandwidth (bytes/second under the hood).
+    pub bandwidth: Bandwidth,
+    /// Fixed per-transfer setup latency (DMA setup, page-table work; the
+    /// §8.6 optimizations lower this).
+    pub latency: SimTime,
 }
 
 impl Link {
-    pub fn new(bandwidth_gb_s: f64, latency: f64) -> Link {
+    /// Raw-float boundary: GB/s and setup seconds straight from config
+    /// knobs (neutral-named params; the typed fields are the contract).
+    pub fn new(gb_s: f64, setup_s: f64) -> Link {
         Link {
-            bandwidth: bandwidth_gb_s * 1e9,
-            latency,
+            bandwidth: Bandwidth::from_gb_per_s(gb_s),
+            latency: SimTime::from_f64(setup_s),
         }
     }
 
     /// Service time for one expert of `bytes`.
-    pub fn transfer_time(&self, bytes: u64) -> f64 {
-        self.latency + bytes as f64 / self.bandwidth
+    pub fn transfer_time(&self, bytes: Bytes) -> SimTime {
+        self.latency + bytes / self.bandwidth
     }
 }
 
@@ -56,14 +62,30 @@ mod tests {
     #[test]
     fn transfer_time_scales_with_bytes() {
         let l = Link::new(32.0, 0.0); // PCIe 4.0 x16
-        let t = l.transfer_time(32_000_000_000);
-        assert!((t - 1.0).abs() < 1e-9);
-        assert!(l.transfer_time(100) < l.transfer_time(1000));
+        let t = l.transfer_time(Bytes::from_u64(32_000_000_000));
+        assert!((t.to_f64() - 1.0).abs() < 1e-9);
+        assert!(l.transfer_time(Bytes::from_u64(100)) < l.transfer_time(Bytes::from_u64(1000)));
     }
 
     #[test]
     fn latency_adds_fixed_cost() {
         let l = Link::new(1.0, 0.5);
-        assert!((l.transfer_time(0) - 0.5).abs() < 1e-12);
+        assert!((l.transfer_time(Bytes::ZERO).to_f64() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn typed_transfer_time_is_bitwise_the_raw_expression() {
+        // the migration contract: lat + bytes as f64 / (gb_s * 1e9),
+        // identical operations in identical order
+        for &(gb_s, lat, bytes) in &[
+            (32.0, 50e-6, 350_000_000u64),
+            (1.6, 1e-4, 26_214_400),
+            (12.0, 0.0, 1),
+            (0.5, 2.5e-3, 9_999_999_999),
+        ] {
+            let l = Link::new(gb_s, lat);
+            let raw = lat + bytes as f64 / (gb_s * 1e9);
+            assert_eq!(l.transfer_time(Bytes::from_u64(bytes)).to_bits(), raw.to_bits());
+        }
     }
 }

@@ -7,6 +7,7 @@ use crate::faults::{draw_transfer, FaultLink, FaultPlan, FaultState, TransferOut
 use crate::memory::{Link, Tier};
 use crate::model::{ExpertKey, ModelSpec};
 use crate::prefetch::{PrefetchQueue, MAX_PRIORITY};
+use crate::util::units::{budget_slots, Bytes, SimTime};
 
 /// Static configuration of the memory hierarchy.
 #[derive(Debug, Clone)]
@@ -26,7 +27,7 @@ pub struct TierConfig {
     pub n_gpus: usize,
     /// Extra fixed latency per *on-demand* miss (CUDA-UM page-fault model
     /// for the PyTorch-UM baseline; 0 for everything else).
-    pub demand_extra_latency: f64,
+    pub demand_extra_latency: SimTime,
     /// Effective-bandwidth multiplier for *on-demand* transfers (CUDA-UM
     /// migrates at page granularity on touch, reaching only a fraction of
     /// the PCIe line rate; 1.0 for explicit-copy systems).
@@ -58,7 +59,7 @@ impl TierConfig {
             ssd_to_dram: Link::new(6.0, 50e-6),
             dram_to_gpu: Link::new(32.0, 10e-6),
             n_gpus: 1,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: CacheKind::Activation,
             oracle_trace: Vec::new(),
@@ -86,7 +87,7 @@ pub struct MemoryStats {
     /// been used yet — the paper's Fig. 10 "covered by prefetching" events.
     pub demand_prefetch_hits: u64,
     /// Total time the GPU spent blocked waiting for experts.
-    pub stall_time: f64,
+    pub stall_time: SimTime,
     pub transfers_completed: u64,
     /// Fault layer: retry attempts burned by transient transfer failures
     /// (zero unless a fault plan with link failures is installed).
@@ -143,7 +144,7 @@ impl MemoryStats {
 #[derive(Debug, Clone, Copy)]
 struct InFlight {
     key: ExpertKey,
-    finish: f64,
+    finish: SimTime,
     prio: f64,
     /// True when this transfer was started by a blocking demand.
     demand: bool,
@@ -163,7 +164,7 @@ struct Residency {
 /// The simulator. One instance per served model replica.
 pub struct MemorySim {
     cfg: TierConfig,
-    expert_bytes: u64,
+    expert_bytes: Bytes,
     experts_per_layer: usize,
     residency: Vec<Residency>,
     gpu_cache: ExpertCache,
@@ -191,7 +192,7 @@ pub struct MemorySim {
     /// (only transfer *durations* read `now`), so skipping is
     /// behavior-preserving.
     start_dirty: bool,
-    now: f64,
+    now: SimTime,
     stats: MemoryStats,
 }
 
@@ -219,11 +220,11 @@ impl MemorySim {
         );
         // release builds sanitize once here (the seed code clamped per
         // demand); `demand` can then add the value unconditionally
-        cfg.demand_extra_latency = cfg.demand_extra_latency.max(0.0);
+        cfg.demand_extra_latency = cfg.demand_extra_latency.max(SimTime::ZERO);
         let total = spec.total_experts();
         let gpu_cap = cfg.gpu_capacity * cfg.n_gpus;
         let mut sim = MemorySim {
-            expert_bytes: spec.expert_bytes(),
+            expert_bytes: Bytes::from_u64(spec.expert_bytes()),
             experts_per_layer: spec.experts_per_layer,
             residency: vec![Residency::default(); total],
             gpu_cache: ExpertCache::new(gpu_cap.min(total), make_policy(&cfg)),
@@ -242,7 +243,7 @@ impl MemorySim {
             demand_upgrades: crate::util::DetSet::default(),
             faults: None,
             start_dirty: true,
-            now: 0.0,
+            now: SimTime::ZERO,
             stats: MemoryStats::default(),
             cfg,
         };
@@ -282,7 +283,7 @@ impl MemorySim {
         self.dram_cache.reset_stats();
     }
 
-    pub fn now(&self) -> f64 {
+    pub fn now(&self) -> SimTime {
         self.now
     }
 
@@ -321,7 +322,7 @@ impl MemorySim {
 
     /// Queue a prefetch (Alg. 1 step 27 / `q.submit(e, p)`). Routes to the
     /// SSD→DRAM stage or the DRAM→GPU stage based on current residency.
-    pub fn submit_prefetch(&mut self, key: ExpertKey, prio: f64, t: f64, ctx: &CacheCtx) {
+    pub fn submit_prefetch(&mut self, key: ExpertKey, prio: f64, t: SimTime, ctx: &CacheCtx) {
         self.advance_to(t, ctx);
         if self.is_on_gpu(key) {
             return;
@@ -358,7 +359,7 @@ impl MemorySim {
     /// Blocking demand (Alg. 1 steps 9-12): returns the time at which the
     /// expert is available on the GPU. Jumps the queues at MAX_PRIORITY but
     /// never preempts in-flight transfers; accounts the stall.
-    pub fn demand(&mut self, key: ExpertKey, t: f64, ctx: &CacheCtx) -> f64 {
+    pub fn demand(&mut self, key: ExpertKey, t: SimTime, ctx: &CacheCtx) -> SimTime {
         self.advance_to(t, ctx);
         // everything below mutates start-gating state (protection counts,
         // queue submits, cache accesses)
@@ -391,7 +392,7 @@ impl MemorySim {
             self.demand_upgrades.insert(key);
             self.q_ssd.submit(key, MAX_PRIORITY);
         }
-        self.stats.demand_bytes += self.expert_bytes;
+        self.stats.demand_bytes += self.expert_bytes.to_u64();
         self.try_start(ctx);
         // run the event loop forward until the expert lands on GPU
         let mut guard = 0u32;
@@ -402,6 +403,7 @@ impl MemorySim {
                 "demand for {key} cannot complete — simulator wedged"
             );
             let next = self.next_event_time().unwrap_or_else(|| {
+                // moelint: allow(panic-free, wedge detector; a reachable panic here IS the reported bug)
                 panic!(
                     "demand for {key}: no pending transfers but not resident \
                      (q_ssd={} q_gpu={} gpu_res={} dram_res={} in_flight_ssd={} in_flight_gpu={} protected={} now={} ssd_busy={} gpu_busy={:?} in_gpu_cache={} in_dram_cache={})",
@@ -432,7 +434,7 @@ impl MemorySim {
 
     /// Advance the virtual clock, completing transfers and starting queued
     /// ones, without blocking on anything.
-    pub fn advance_to(&mut self, t: f64, ctx: &CacheCtx) {
+    pub fn advance_to(&mut self, t: SimTime, ctx: &CacheCtx) {
         self.process_events_until(t, ctx);
         if t > self.now {
             self.now = t;
@@ -445,8 +447,8 @@ impl MemorySim {
         }
     }
 
-    fn next_event_time(&self) -> Option<f64> {
-        let mut m: Option<f64> = self.ssd_busy.map(|f| f.finish);
+    fn next_event_time(&self) -> Option<SimTime> {
+        let mut m: Option<SimTime> = self.ssd_busy.map(|f| f.finish);
         for b in self.gpu_busy.iter().flatten() {
             m = Some(match m {
                 Some(x) => x.min(b.finish),
@@ -458,7 +460,7 @@ impl MemorySim {
 
     /// Complete every transfer finishing at or before `t` (in time order),
     /// starting follow-up transfers at each completion instant.
-    fn process_events_until(&mut self, t: f64, ctx: &CacheCtx) {
+    fn process_events_until(&mut self, t: SimTime, ctx: &CacheCtx) {
         loop {
             let Some(next) = self.next_event_time() else {
                 break;
@@ -506,7 +508,7 @@ impl MemorySim {
         self.residency[idx].dram = true;
         self.stats.transfers_completed += 1;
         if !f.demand {
-            self.stats.prefetch_bytes_ssd += self.expert_bytes;
+            self.stats.prefetch_bytes_ssd += self.expert_bytes.to_u64();
         }
         // §5.3: re-enqueue for the DRAM→GPU stage at the same priority —
         // unless a demand is blocked on this key, which upgrades the hop.
@@ -540,7 +542,7 @@ impl MemorySim {
         // is blocked waiting for it; evicting it before use would deadlock).
         self.gpu_cache.protect(f.key);
         if !f.demand {
-            self.stats.prefetch_bytes_gpu += self.expert_bytes;
+            self.stats.prefetch_bytes_gpu += self.expert_bytes.to_u64();
         }
     }
 
@@ -604,9 +606,7 @@ impl MemorySim {
                 continue;
             }
             // find the best queued item routed to this link
-            let budget =
-                // moelint: allow(float-cast, budget fraction floors to whole cache slots)
-                (self.cfg.prefetch_gpu_budget * self.gpu_cache.capacity() as f64) as usize;
+            let budget = budget_slots(self.cfg.prefetch_gpu_budget, self.gpu_cache.capacity());
             let mut deferred: Vec<(ExpertKey, f64)> = Vec::new();
             let mut started = false;
             while let Some((key, prio)) = self.q_gpu.pop() {
@@ -664,16 +664,16 @@ impl MemorySim {
     /// drop): it occupies the link for the burned duration but moves
     /// nothing. Without an installed fault state this reproduces
     /// `Link::transfer_time` (+ the demand bandwidth factor) bit for bit.
-    fn transfer_duration(&mut self, link: FaultLink, g: usize, key: ExpertKey, prio: f64) -> (f64, bool) {
+    fn transfer_duration(&mut self, link: FaultLink, g: usize, key: ExpertKey, prio: f64) -> (SimTime, bool) {
         let (lat, bw) = match link {
             FaultLink::SsdToDram => (self.cfg.ssd_to_dram.latency, self.cfg.ssd_to_dram.bandwidth),
             FaultLink::DramToGpu => (self.cfg.dram_to_gpu.latency, self.cfg.dram_to_gpu.bandwidth),
         };
-        let mut dt = lat + self.expert_bytes as f64 / bw;
+        let mut dt = lat + self.expert_bytes / bw;
         if let Some(fs) = self.faults.as_deref() {
             let bf = fs.plan.brownout_factor(link, self.now);
             if bf < 1.0 {
-                dt = lat + self.expert_bytes as f64 / (bw * bf);
+                dt = lat + self.expert_bytes / (bw * bf);
             }
         }
         if prio == MAX_PRIORITY && self.cfg.demand_bw_factor < 1.0 {
@@ -691,7 +691,10 @@ impl MemorySim {
         // either it started at MAX_PRIORITY or a demand latched onto it
         // while queued/in-flight (`demand_upgrades`)
         let demanded = prio == MAX_PRIORITY || self.demand_upgrades.contains(&key);
-        let fs = self.faults.as_deref_mut().expect("fault state checked above");
+        // `faults` was matched Some above; the fallback keeps this panic-free
+        let Some(fs) = self.faults.as_deref_mut() else {
+            return (dt, false);
+        };
         let rng = match link {
             FaultLink::SsdToDram => &mut fs.rng_ssd,
             FaultLink::DramToGpu => &mut fs.rng_gpu[g],
@@ -748,7 +751,7 @@ mod tests {
             ssd_to_dram: Link::new(1.0, 0.0),
             dram_to_gpu: Link::new(10.0, 0.0),
             n_gpus: 1,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: CacheKind::Lru,
             oracle_trace: Vec::new(),
@@ -759,6 +762,10 @@ mod tests {
 
     fn eam() -> Eam {
         Eam::new(4, 8)
+    }
+
+    fn st(secs: f64) -> SimTime {
+        SimTime::from_f64(secs)
     }
 
     #[test]
@@ -784,7 +791,7 @@ mod tests {
             n_layers: 4,
         };
         let mut sim = MemorySim::new(&s, cfg(10, 10, Tier::Ssd));
-        let t = sim.demand(ExpertKey::new(0, 0), 1.0, &ctx);
+        let t = sim.demand(ExpertKey::new(0, 0), st(1.0), &ctx);
         assert_eq!(t, 1.0);
         assert_eq!(sim.stats().demand_gpu_hits, 1);
         assert_eq!(sim.stats().stall_time, 0.0);
@@ -802,7 +809,7 @@ mod tests {
         let key = ExpertKey::new(2, 0); // in DRAM (flat idx 16 < 10+32)
         assert!(sim.is_in_dram(key));
         let t0 = 0.5;
-        let ready = sim.demand(key, t0, &ctx);
+        let ready = sim.demand(key, st(t0), &ctx).to_f64();
         let expect = t0 + s.expert_bytes() as f64 / 10e9;
         assert!((ready - expect).abs() < 1e-9, "ready {ready} expect {expect}");
         assert!(sim.is_on_gpu(key));
@@ -820,7 +827,7 @@ mod tests {
         let mut sim = MemorySim::new(&s, cfg(4, 4, Tier::Ssd));
         let key = ExpertKey::new(3, 7); // beyond both caches
         assert!(!sim.is_in_dram(key) && !sim.is_on_gpu(key));
-        let ready = sim.demand(key, 0.0, &ctx);
+        let ready = sim.demand(key, st(0.0), &ctx).to_f64();
         let eb = s.expert_bytes() as f64;
         let expect = eb / 1e9 + eb / 10e9;
         assert!((ready - expect).abs() < 1e-9, "ready {ready} expect {expect}");
@@ -839,7 +846,7 @@ mod tests {
         let mut sim = MemorySim::new(&s, cfg(2, 0, Tier::Dram));
         let key = ExpertKey::new(3, 7);
         assert!(sim.is_in_dram(key));
-        let ready = sim.demand(key, 0.0, &ctx);
+        let ready = sim.demand(key, st(0.0), &ctx).to_f64();
         let expect = s.expert_bytes() as f64 / 10e9;
         assert!((ready - expect).abs() < 1e-9);
         assert_eq!(sim.stats().demand_dram_hits, 1);
@@ -856,13 +863,13 @@ mod tests {
         };
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         let key = ExpertKey::new(2, 5); // DRAM-resident
-        sim.submit_prefetch(key, 0.9, 0.0, &ctx);
+        sim.submit_prefetch(key, 0.9, st(0.0), &ctx);
         // give it time to complete
         let dt = s.expert_bytes() as f64 / 10e9;
-        sim.advance_to(dt + 1e-6, &ctx);
+        sim.advance_to(st(dt + 1e-6), &ctx);
         assert!(sim.is_on_gpu(key));
         // now the demand is free
-        let ready = sim.demand(key, dt + 1e-5, &ctx);
+        let ready = sim.demand(key, st(dt + 1e-5), &ctx);
         assert_eq!(ready, dt + 1e-5);
         assert_eq!(sim.stats().demand_gpu_hits, 1);
         assert_eq!(sim.stats().prefetch_bytes_gpu, s.expert_bytes());
@@ -878,12 +885,12 @@ mod tests {
         };
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         // fill the DRAM→GPU link with a prefetch, queue two more
-        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, 0.0, &ctx);
-        sim.submit_prefetch(ExpertKey::new(2, 1), 0.8, 0.0, &ctx);
-        sim.submit_prefetch(ExpertKey::new(2, 2), 0.7, 0.0, &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 1), 0.8, st(0.0), &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 2), 0.7, st(0.0), &ctx);
         let dt = s.expert_bytes() as f64 / 10e9;
         // demand a third DRAM expert mid-first-transfer
-        let ready = sim.demand(ExpertKey::new(3, 0), dt / 2.0, &ctx);
+        let ready = sim.demand(ExpertKey::new(3, 0), st(dt / 2.0), &ctx).to_f64();
         // must wait for in-flight (finishes at dt), then its own dt
         let expect = dt + dt;
         assert!(
@@ -902,9 +909,9 @@ mod tests {
         };
         let mut sim = MemorySim::new(&s, cfg(4, 8, Tier::Ssd));
         let key = ExpertKey::new(3, 6); // SSD-only
-        sim.submit_prefetch(key, 0.5, 0.0, &ctx);
+        sim.submit_prefetch(key, 0.5, st(0.0), &ctx);
         let eb = s.expert_bytes() as f64;
-        sim.advance_to(eb / 1e9 + eb / 10e9 + 1e-6, &ctx);
+        sim.advance_to(st(eb / 1e9 + eb / 10e9 + 1e-6), &ctx);
         assert!(sim.is_on_gpu(key), "prefetch should pipeline across both links");
     }
 
@@ -918,7 +925,7 @@ mod tests {
         };
         let mut sim = MemorySim::new(&s, cfg(2, 30, Tier::Ssd));
         // GPU holds L0E0, L0E1. Demand L0E2 -> eviction of LRU (L0E0).
-        let ready = sim.demand(ExpertKey::new(0, 2), 0.0, &ctx);
+        let ready = sim.demand(ExpertKey::new(0, 2), st(0.0), &ctx);
         assert!(ready > 0.0);
         assert!(sim.is_on_gpu(ExpertKey::new(0, 2)));
         let on_gpu = (0..8)
@@ -939,10 +946,10 @@ mod tests {
         c.n_gpus = 2;
         let mut sim = MemorySim::new(&s, c);
         // two DRAM-resident experts with different link routing (even/odd)
-        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, 0.0, &ctx);
-        sim.submit_prefetch(ExpertKey::new(2, 1), 0.9, 0.0, &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 1), 0.9, st(0.0), &ctx);
         let dt = s.expert_bytes() as f64 / 10e9;
-        sim.advance_to(dt + 1e-9, &ctx);
+        sim.advance_to(st(dt + 1e-9), &ctx);
         assert!(sim.is_on_gpu(ExpertKey::new(2, 0)));
         assert!(sim.is_on_gpu(ExpertKey::new(2, 1)), "parallel links should both finish");
     }
@@ -956,10 +963,10 @@ mod tests {
             n_layers: 4,
         };
         let mut c = cfg(2, 0, Tier::Dram);
-        c.demand_extra_latency = 0.01;
+        c.demand_extra_latency = st(0.01);
         let mut sim = MemorySim::new(&s, c);
         let key = ExpertKey::new(3, 7);
-        let ready = sim.demand(key, 0.0, &ctx);
+        let ready = sim.demand(key, st(0.0), &ctx).to_f64();
         let expect = s.expert_bytes() as f64 / 10e9 + 0.01;
         assert!((ready - expect).abs() < 1e-9);
     }
@@ -988,15 +995,15 @@ mod tests {
         };
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         // first submit occupies the DRAM→GPU link; the next two queue behind
-        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, 0.0, &ctx);
-        sim.submit_prefetch(ExpertKey::new(2, 1), 0.8, 0.0, &ctx);
-        sim.submit_prefetch(ExpertKey::new(2, 2), 0.7, 0.0, &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 1), 0.8, st(0.0), &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 2), 0.7, st(0.0), &ctx);
         assert_eq!(sim.queued(), 2);
         sim.cancel_prefetch(ExpertKey::new(2, 1));
         sim.cancel_prefetch(ExpertKey::new(2, 0)); // in flight: no-op
         assert_eq!(sim.queued(), 1);
         let dt = s.expert_bytes() as f64 / 10e9;
-        sim.advance_to(3.0 * dt, &ctx);
+        sim.advance_to(st(3.0 * dt), &ctx);
         assert!(sim.is_on_gpu(ExpertKey::new(2, 0)), "in-flight completes");
         assert!(!sim.is_on_gpu(ExpertKey::new(2, 1)), "cancelled never moves");
         assert!(sim.is_on_gpu(ExpertKey::new(2, 2)), "uncancelled proceeds");
@@ -1011,9 +1018,9 @@ mod tests {
             n_layers: 4,
         };
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
-        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, 0.0, &ctx);
-        sim.advance_to(1.0, &ctx);
-        sim.demand(ExpertKey::new(3, 0), 1.0, &ctx);
+        sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
+        sim.advance_to(st(1.0), &ctx);
+        sim.demand(ExpertKey::new(3, 0), st(1.0), &ctx);
         let st = sim.stats();
         assert_eq!(st.prefetch_bytes_gpu, s.expert_bytes());
         assert_eq!(st.demand_bytes, s.expert_bytes());
@@ -1035,12 +1042,12 @@ mod tests {
                 sim.set_fault_plan(&p);
             }
             let mut readies = Vec::new();
-            sim.submit_prefetch(ExpertKey::new(2, 5), 0.9, 0.0, &ctx);
-            sim.submit_prefetch(ExpertKey::new(3, 6), 0.8, 0.0, &ctx);
+            sim.submit_prefetch(ExpertKey::new(2, 5), 0.9, st(0.0), &ctx);
+            sim.submit_prefetch(ExpertKey::new(3, 6), 0.8, st(0.0), &ctx);
             let mut t = 0.001;
             for l in 0..4 {
                 for ex in [0usize, 3, 7] {
-                    let r = sim.demand(ExpertKey::new(l, ex), t, &ctx);
+                    let r = sim.demand(ExpertKey::new(l, ex), st(t), &ctx).to_f64();
                     readies.push(r.to_bits());
                     t = r + 0.0005;
                 }
@@ -1052,8 +1059,8 @@ mod tests {
         let mut crash_only = FaultPlan::new(99);
         crash_only.crashes.push(crate::faults::CrashWindow {
             replica: 0,
-            crash: 0.0,
-            recover: 1.0,
+            crash: st(0.0),
+            recover: st(1.0),
         });
         for plan in [FaultPlan::new(7), crash_only] {
             let (got, gstats) = run(Some(plan));
@@ -1079,13 +1086,13 @@ mod tests {
         let mut plan = FaultPlan::new(1);
         plan.brownouts.push(Brownout {
             link: FaultLink::DramToGpu,
-            start: 0.0,
-            end: 10.0,
+            start: st(0.0),
+            end: st(10.0),
             factor: 0.5,
         });
         sim.set_fault_plan(&plan);
         let key = ExpertKey::new(2, 0); // DRAM-resident
-        let ready = sim.demand(key, 0.0, &ctx);
+        let ready = sim.demand(key, st(0.0), &ctx).to_f64();
         let nominal = s.expert_bytes() as f64 / 10e9;
         assert!(
             (ready - 2.0 * nominal).abs() < 1e-9,
@@ -1093,8 +1100,33 @@ mod tests {
         );
         // outside the window the link is back to full speed
         let key2 = ExpertKey::new(2, 1);
-        let r2 = sim.demand(key2, 20.0, &ctx);
+        let r2 = sim.demand(key2, st(20.0), &ctx).to_f64();
         assert!(((r2 - 20.0) - nominal).abs() < 1e-9, "post-window hop {}", r2 - 20.0);
+    }
+
+    #[test]
+    fn typed_degraded_duration_is_bitwise_the_raw_expression() {
+        use crate::faults::{Brownout, FaultLink, FaultPlan};
+        // the units migration contract for the browned-out hop: SimTime and
+        // Bandwidth operators replay `lat + bytes as f64 / (bw * bf)` exactly
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx {
+            cur_eam: &e,
+            n_layers: 4,
+        };
+        let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
+        let mut plan = FaultPlan::new(1);
+        plan.brownouts.push(Brownout {
+            link: FaultLink::DramToGpu,
+            start: st(0.0),
+            end: st(10.0),
+            factor: 0.7,
+        });
+        sim.set_fault_plan(&plan);
+        let ready = sim.demand(ExpertKey::new(2, 0), st(0.0), &ctx);
+        let raw = (0.0 + s.expert_bytes() as f64 / ((10.0 * 1e9) * 0.7)) + 0.0;
+        assert_eq!(ready.to_bits(), raw.to_bits());
     }
 
     #[test]
@@ -1110,19 +1142,19 @@ mod tests {
         let mut plan = FaultPlan::new(3);
         plan.gpu_failure_p = 0.999_999; // every attempt fails (deterministically, per stream)
         plan.retry = RetryPolicy {
-            base_delay: 1e-4,
-            max_delay: 1e-3,
+            base_delay: st(1e-4),
+            max_delay: st(1e-3),
             max_retries: 1,
         };
         sim.set_fault_plan(&plan);
         let key = ExpertKey::new(2, 0); // DRAM-resident
-        sim.submit_prefetch(key, 0.9, 0.0, &ctx);
-        sim.advance_to(1.0, &ctx);
+        sim.submit_prefetch(key, 0.9, st(0.0), &ctx);
+        sim.advance_to(st(1.0), &ctx);
         assert!(!sim.is_on_gpu(key), "the dropped prefetch must not land");
         assert_eq!(sim.stats().prefetch_drops, 1);
         assert!(sim.stats().transfer_retries >= 1);
         // the later demand force-lands through the same faulty link
-        let ready = sim.demand(key, 1.0, &ctx);
+        let ready = sim.demand(key, st(1.0), &ctx);
         assert!(sim.is_on_gpu(key), "demand must land despite permanent failures");
         assert!(ready > 1.0, "the fetch cost real (degraded) time");
         assert_eq!(sim.stats().demand_failures, 1);
@@ -1142,13 +1174,13 @@ mod tests {
         plan.ssd_failure_p = 0.999_999;
         plan.gpu_failure_p = 0.999_999;
         plan.retry = RetryPolicy {
-            base_delay: 1e-4,
-            max_delay: 1e-3,
+            base_delay: st(1e-4),
+            max_delay: st(1e-3),
             max_retries: 2,
         };
         sim.set_fault_plan(&plan);
         let key = ExpertKey::new(3, 7); // SSD-only: both hops on faulty links
-        let ready = sim.demand(key, 0.0, &ctx);
+        let ready = sim.demand(key, st(0.0), &ctx);
         assert!(sim.is_on_gpu(key));
         let eb = s.expert_bytes() as f64;
         let nominal = eb / 1e9 + eb / 10e9;
@@ -1179,7 +1211,7 @@ mod tests {
             let mut t = 0.0;
             for l in 0..4 {
                 for ex in 0..8 {
-                    let r = sim.demand(ExpertKey::new(l, ex), t, &ctx);
+                    let r = sim.demand(ExpertKey::new(l, ex), st(t), &ctx).to_f64();
                     out.push(r.to_bits());
                     t = r;
                 }

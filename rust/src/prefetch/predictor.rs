@@ -41,7 +41,7 @@ impl Prediction {
             .filter(|(k, _)| k.layer as usize == layer)
             .cloned()
             .collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v.into_iter().map(|(k, _)| k).collect()
     }
 }

@@ -57,6 +57,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::engine::{BatchResult, FeedbackMode, PreemptedSeq, SessionState, SimEngine, StepResult};
 use crate::metrics::LatencyRecorder;
+use crate::util::units::SimTime;
 use crate::workload::{Priority, Request, SequenceActivation};
 
 /// Upper bound on the iterations a request will *execute* — the
@@ -80,11 +81,11 @@ pub(crate) fn expected_iterations(seq: &SequenceActivation, prefill_chunk: u32) 
 /// assert) and `config::ServeConfig::validate` (soft error): a NaN or
 /// negative window would poison the static batcher's dispatch arithmetic
 /// and silently mis-batch every request.
-pub fn check_max_wait(max_wait: f64) -> Result<(), String> {
-    if max_wait.is_finite() && max_wait >= 0.0 {
+pub fn check_max_wait(window_s: f64) -> Result<(), String> {
+    if window_s.is_finite() && window_s >= 0.0 {
         Ok(())
     } else {
-        Err(format!("max_wait must be finite and >= 0, got {max_wait}"))
+        Err(format!("max_wait must be finite and >= 0, got {window_s}"))
     }
 }
 
@@ -94,28 +95,30 @@ pub fn check_max_wait(max_wait: f64) -> Result<(), String> {
 #[derive(Debug, Clone, Copy)]
 pub struct Batcher {
     pub max_batch: usize,
-    pub max_wait: f64,
+    pub max_wait: SimTime,
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize, max_wait: f64) -> Batcher {
-        match Batcher::try_new(max_batch, max_wait) {
+    /// `window_s` is the raw-float config boundary for the batching window
+    /// in seconds; it becomes the typed `max_wait` field.
+    pub fn new(max_batch: usize, window_s: f64) -> Batcher {
+        match Batcher::try_new(max_batch, window_s) {
             Ok(b) => b,
-            Err(e) => panic!("{e}"),
+            Err(e) => panic!("{e}"), // moelint: allow(panic-free, assert-style ctor; try_new is the fallible form)
         }
     }
 
     /// Fallible form of [`Batcher::new`]: returns the validation message
     /// instead of aborting the process, so replay drivers (`benchsuite`'s
     /// per-point grid errors) can surface a bad batching window as data.
-    pub fn try_new(max_batch: usize, max_wait: f64) -> Result<Batcher, String> {
+    pub fn try_new(max_batch: usize, window_s: f64) -> Result<Batcher, String> {
         if max_batch < 1 {
             return Err(format!("max_batch must be >= 1, got {max_batch}"));
         }
-        check_max_wait(max_wait)?;
+        check_max_wait(window_s)?;
         Ok(Batcher {
             max_batch,
-            max_wait,
+            max_wait: SimTime::from_f64(window_s),
         })
     }
 
@@ -129,7 +132,7 @@ impl Batcher {
         engine_free: f64,
     ) -> (f64, usize) {
         let first = &requests[start_idx];
-        let window_end = first.arrival + self.max_wait;
+        let window_end = first.arrival + self.max_wait.to_f64();
         // time at which the batch would be full
         let full_idx = start_idx + self.max_batch - 1;
         let fill_time = if full_idx < requests.len() {
@@ -217,7 +220,7 @@ pub struct ServeReport {
     /// iterations summed over replicas.
     pub batches: u64,
     /// Virtual makespan of the replay (max over replicas for the router).
-    pub makespan: f64,
+    pub makespan: SimTime,
     /// Aggregate expert-demand outcomes from the memory simulator (summed
     /// over replicas): total demands and how many were already GPU-resident.
     pub demands: u64,
@@ -247,7 +250,7 @@ impl ServeReport {
         if self.makespan <= 0.0 {
             0.0
         } else {
-            self.tokens as f64 / self.makespan
+            self.tokens as f64 / self.makespan.to_f64()
         }
     }
 
@@ -260,7 +263,7 @@ impl ServeReport {
         if self.makespan <= 0.0 {
             0.0
         } else {
-            self.goodput_tokens as f64 / self.makespan
+            self.goodput_tokens as f64 / self.makespan.to_f64()
         }
     }
 
@@ -441,7 +444,7 @@ impl<'r> Scheduler<'r> for StaticScheduler<'r> {
         }
         self.drained = true;
         while self.tick() {}
-        self.report.makespan = self.engine_free;
+        self.report.makespan = SimTime::from_f64(self.engine_free);
         self.report.absorb_sim_stats(&self.engine);
         std::mem::take(&mut self.report)
     }
@@ -480,9 +483,9 @@ pub struct RequestStat {
     pub outcome: RequestOutcome,
     /// Mean per-token latency, queueing and suspension charges included
     /// (the `request_latency` sample of this request).
-    pub latency: f64,
+    pub latency: SimTime,
     /// Time to first token (0 if nothing executed).
-    pub ttft: f64,
+    pub ttft: SimTime,
     /// How many times the sequence was preempted.
     pub preemptions: u32,
 }
@@ -634,7 +637,7 @@ pub fn pick_candidate(
 pub struct AdmitKey {
     priority: Priority,
     /// `arrival + slo`, `+inf` when the class carries no SLO.
-    deadline: f64,
+    deadline: SimTime,
     arrival: f64,
     idx: u32,
 }
@@ -644,8 +647,8 @@ pub fn admit_key(r: &Request, idx: u32) -> AdmitKey {
     AdmitKey {
         priority: r.class.priority,
         deadline: match r.class.slo {
-            Some(s) => r.arrival + s,
-            None => f64::INFINITY,
+            Some(s) => SimTime::from_f64(r.arrival + s),
+            None => SimTime::INFINITY,
         },
         arrival: r.arrival,
         idx,
@@ -884,12 +887,12 @@ impl<'r> ContinuousScheduler<'r> {
                 arrival: self.reqs[i].arrival,
                 finished: self.done[i],
                 outcome: self.outcome[i],
-                latency: if self.lat_n[i] == 0 {
+                latency: SimTime::from_f64(if self.lat_n[i] == 0 {
                     0.0
                 } else {
                     self.lat_sum[i] / self.lat_n[i] as f64
-                },
-                ttft: self.ttft_val[i],
+                }),
+                ttft: SimTime::from_f64(self.ttft_val[i]),
                 preemptions: self.preemptions[i],
             })
             .collect()
@@ -907,7 +910,9 @@ impl<'r> ContinuousScheduler<'r> {
     /// bitwise (pinned in `rust/tests/scheduler.rs`). Victim selection
     /// still scans `active`, which is bounded by `max_batch`.
     fn admit_and_preempt(&mut self) {
-        let state = self.session.take().expect("live session");
+        let Some(state) = self.session.take() else {
+            return; // drained replica: nothing to admit into
+        };
         let now = state.now();
         let mut session = self.engine.resume_session(state);
         loop {
@@ -995,10 +1000,14 @@ impl<'r> ContinuousScheduler<'r> {
             // admit the candidate into the free slot; a park slot marks it
             // as a preempted sequence to resume rather than a fresh admit
             let i = match self.admission {
-                AdmissionPolicy::Fifo => self.waiting.pop_front().expect("peeked") as usize,
-                AdmissionPolicy::Classes => {
-                    self.class_heap.pop().expect("peeked").idx() as usize
-                }
+                AdmissionPolicy::Fifo => match self.waiting.pop_front() {
+                    Some(i) => i as usize,
+                    None => break, // peeked above — an empty pop means no candidate
+                },
+                AdmissionPolicy::Classes => match self.class_heap.pop() {
+                    Some(k) => k.idx() as usize,
+                    None => break,
+                },
             };
             debug_assert_eq!(i, cand, "pop must return the peeked candidate");
             let slot;
@@ -1042,7 +1051,9 @@ impl<'r> ContinuousScheduler<'r> {
         if !self.active.iter().any(|&i| past_deadline(self.reqs[i as usize])) {
             return;
         }
-        let state = self.session.take().expect("live session");
+        let Some(state) = self.session.take() else {
+            return; // drained replica: no in-flight sequences to abort
+        };
         let mut session = self.engine.resume_session(state);
         let mut pos = 0;
         while pos < self.active.len() {
@@ -1082,7 +1093,9 @@ impl<'r> ContinuousScheduler<'r> {
     /// token samples of iterations it actually executed) — and rejoins
     /// the dispatch set on recovery via plain `submit`.
     pub fn fail_over(&mut self, out: &mut Vec<(&'r Request, Option<PreemptedSeq>)>) {
-        let state = self.session.take().expect("fail_over after drain");
+        let Some(state) = self.session.take() else {
+            return; // fail_over after drain: already inert, nothing owned
+        };
         let mut session = self.engine.resume_session(state);
         for i in 0..self.reqs.len() {
             if self.done[i] {
@@ -1235,7 +1248,9 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
                 }
                 debug_assert!(self.backlog() == 0);
                 let t = self.reqs[self.next_arrival].arrival;
-                let state = self.session.take().expect("live session");
+                let Some(state) = self.session.take() else {
+                    return false; // drained: no session left to idle forward
+                };
                 let mut session = self.engine.resume_session(state);
                 session.idle_until(t);
                 self.session = Some(session.suspend());
@@ -1243,7 +1258,9 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
             }
             // execute one forward iteration for everything in flight, the
             // prompt tokens of joining sequences capped by the chunk budget
-            let state = self.session.take().expect("live session");
+            let Some(state) = self.session.take() else {
+                return false; // drained: no session left to step
+            };
             let reqs = &self.reqs;
             let mut session = self.engine.resume_session(state);
             session.set_prefill_limit(self.prefill_chunk);
@@ -1334,7 +1351,7 @@ impl<'r> Scheduler<'r> for ContinuousScheduler<'r> {
         while self.tick() {}
         match self.session.take() {
             Some(state) => {
-                self.report.makespan = self.engine.resume_session(state).finish();
+                self.report.makespan = SimTime::from_f64(self.engine.resume_session(state).finish());
                 self.report.absorb_sim_stats(&self.engine);
                 std::mem::take(&mut self.report)
             }
@@ -1489,7 +1506,7 @@ mod tests {
             ssd_to_dram: Link::new(6.0, 50e-6),
             dram_to_gpu: Link::new(32.0, 10e-6),
             n_gpus: 1,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: CacheKind::Activation,
             oracle_trace: Vec::new(),
@@ -1692,7 +1709,7 @@ mod tests {
             for s in stats {
                 if s.priority == Priority::Interactive {
                     assert!(s.finished, "interactive request must finish");
-                    rec.record(s.latency);
+                    rec.record(s.latency.to_f64());
                 }
             }
             assert!(rec.len() > 0);

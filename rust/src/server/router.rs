@@ -67,6 +67,7 @@ use crate::server::{
     expected_iterations, AdmissionPolicy, Batcher, ContinuousScheduler, Scheduler, ServeReport,
 };
 use crate::trace::{EamcMatcher, MatcherIndex};
+use crate::util::units::SimTime;
 use crate::workload::{Request, SequenceActivation};
 
 /// Per-replica fault-stream seed stride: replica `k` draws its link faults
@@ -122,7 +123,7 @@ const AFFINITY_LOAD_WEIGHT: f64 = 0.25;
 /// stale and is discarded lazily when it surfaces at the top.
 #[derive(Debug, Clone, Copy)]
 struct CalEntry {
-    time: f64,
+    time: SimTime,
     idx: u32,
     version: u64,
 }
@@ -298,7 +299,9 @@ impl<'r> Router<'r> {
     /// idle-hops it to the arrival instant, past the window.
     fn window_blocks(&self, w: &CrashWindow, k: usize, t: f64) -> bool {
         w.replica == k
-            && (w.down_at(t) || (self.replicas[k].has_work() && w.down_at(self.replicas[k].now())))
+            && (w.down_at(SimTime::from_f64(t))
+                || (self.replicas[k].has_work()
+                    && w.down_at(SimTime::from_f64(self.replicas[k].now()))))
     }
 
     /// Is replica `k` inside any crash window at dispatch instant `t`?
@@ -320,9 +323,9 @@ impl<'r> Router<'r> {
             // recovers soonest — it waits in that backlog instead of
             // deadlocking the dispatch gate
             let mut best = 0;
-            let mut best_rec = f64::INFINITY;
+            let mut best_rec = SimTime::INFINITY;
             for k in 0..n {
-                let mut rec = 0.0f64;
+                let mut rec = SimTime::ZERO;
                 for wi in 0..self.fault_windows.len() {
                     let w = self.fault_windows[wi].clone();
                     if self.window_blocks(&w, k, t) {
@@ -410,7 +413,7 @@ impl<'r> Router<'r> {
                 continue;
             }
             let w = self.fault_windows[wi].clone();
-            if !w.fires_by(self.replicas[w.replica].now()) {
+            if !w.fires_by(SimTime::from_f64(self.replicas[w.replica].now())) {
                 continue;
             }
             self.fired[wi] = true;
@@ -481,7 +484,7 @@ impl<'r> Router<'r> {
             self.calendar.push(CalEntry {
                 // `+ 0.0` maps a (theoretical) -0.0 bound to +0.0 so the
                 // heap's total_cmp agrees with the scan's `<` on ties
-                time: t + 0.0,
+                time: SimTime::from_f64(t + 0.0),
                 idx: k as u32,
                 version: self.versions[k],
             });
@@ -494,7 +497,7 @@ impl<'r> Router<'r> {
     fn calendar_min(&mut self) -> Option<(f64, usize)> {
         while let Some(e) = self.calendar.peek() {
             if self.versions[e.idx as usize] == e.version {
-                return Some((e.time, e.idx as usize));
+                return Some((e.time.to_f64(), e.idx as usize));
             }
             self.calendar.pop();
         }
@@ -517,8 +520,8 @@ impl<'r> Router<'r> {
     /// crosses it, so the window fires at exactly the iteration boundary
     /// the lockstep loop fired it at. Only `k`'s clock moves during a
     /// batch, so only `k`'s windows can newly fire.
-    fn next_unfired_crash(&self, k: usize) -> f64 {
-        let mut m = f64::INFINITY;
+    fn next_unfired_crash(&self, k: usize) -> SimTime {
+        let mut m = SimTime::INFINITY;
         for (wi, w) in self.fault_windows.iter().enumerate() {
             if !self.fired[wi] && w.replica == k && w.crash < m {
                 m = w.crash;
@@ -565,7 +568,7 @@ impl<'r> Router<'r> {
                 self.pending.pop_front();
                 let k = self.pick_replica(req, req.arrival);
                 self.ensure_presized(k);
-                self.replicas[k].submit(req);
+                self.replicas[k].submit(req); // moelint: allow(refresh-contract, lockstep reference keeps no memoized bounds — calendar_stale forces a wholesale rebuild)
                 return true;
             }
         }
@@ -580,7 +583,7 @@ impl<'r> Router<'r> {
         }
         match best {
             Some((t, k)) => {
-                let stepped = self.replicas[k].tick();
+                let stepped = self.replicas[k].tick(); // moelint: allow(refresh-contract, lockstep reference keeps no memoized bounds — calendar_stale forces a wholesale rebuild)
                 // a hard error in every profile: a bound with no progress
                 // would spin `drain` forever in release builds
                 assert!(
@@ -673,6 +676,7 @@ impl<'r> Scheduler<'r> for Router<'r> {
     /// earliest-bounded replica and run it to the frontier (see the module
     /// docs). Bitwise-equivalent to [`Router::tick_lockstep`] iterated
     /// over the same span.
+    // moelint: hot
     fn tick(&mut self) -> bool {
         if self.calendar_stale {
             self.rebuild_calendar();
@@ -784,7 +788,7 @@ mod tests {
             ssd_to_dram: Link::new(6.0, 50e-6),
             dram_to_gpu: Link::new(32.0, 10e-6),
             n_gpus: 1,
-            demand_extra_latency: 0.0,
+            demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
             cache_kind: CacheKind::Activation,
             oracle_trace: Vec::new(),
@@ -834,10 +838,10 @@ mod tests {
         // scan's strict `t < bt` keeps the first minimum it saw)
         let mut h = BinaryHeap::new();
         for (t, i) in [(0.5, 3u32), (0.25, 2), (0.25, 1), (1.0, 0)] {
-            h.push(CalEntry { time: t, idx: i, version: 0 });
+            h.push(CalEntry { time: SimTime::from_f64(t), idx: i, version: 0 });
         }
-        let order: Vec<(f64, u32)> = std::iter::from_fn(|| h.pop().map(|e| (e.time, e.idx)))
-            .collect();
+        let order: Vec<(f64, u32)> =
+            std::iter::from_fn(|| h.pop().map(|e| (e.time.to_f64(), e.idx))).collect();
         assert_eq!(order, vec![(0.25, 1), (0.25, 2), (0.5, 3), (1.0, 0)]);
         // -0.0 normalization: `t + 0.0` folds the signed zero away so
         // total_cmp can't order it before a +0.0 tie partner
@@ -920,7 +924,7 @@ mod tests {
                 ssd_to_dram: Link::new(6.0, 50e-6),
                 dram_to_gpu: Link::new(32.0, 10e-6),
                 n_gpus: 1,
-                demand_extra_latency: 0.0,
+                demand_extra_latency: SimTime::ZERO,
                 demand_bw_factor: 1.0,
                 cache_kind: CacheKind::Activation,
                 oracle_trace: Vec::new(),
@@ -992,7 +996,7 @@ mod tests {
                 ssd_to_dram: Link::new(6.0, 50e-6),
                 dram_to_gpu: Link::new(32.0, 10e-6),
                 n_gpus: 1,
-                demand_extra_latency: 0.0,
+                demand_extra_latency: SimTime::ZERO,
                 demand_bw_factor: 1.0,
                 cache_kind: CacheKind::Activation,
                 oracle_trace: Vec::new(),
@@ -1082,8 +1086,8 @@ mod tests {
             plan.gpu_failure_p = 0.05;
             plan.crashes.push(CrashWindow {
                 replica: 0,
-                crash: 0.05,
-                recover: 1.5,
+                crash: SimTime::from_f64(0.05),
+                recover: SimTime::from_f64(1.5),
             });
             plan
         };
@@ -1177,8 +1181,8 @@ mod tests {
         let mut plan = FaultPlan::new(5);
         plan.crashes.push(CrashWindow {
             replica: 0,
-            crash: 0.02,
-            recover: f64::INFINITY, // never comes back
+            crash: SimTime::from_f64(0.02),
+            recover: SimTime::INFINITY, // never comes back
         });
         let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
         let mut router = Router::new(
@@ -1221,8 +1225,8 @@ mod tests {
         let mut plan = FaultPlan::new(5);
         plan.crashes.push(CrashWindow {
             replica: 0,
-            crash: 0.02,
-            recover: 500.0,
+            crash: SimTime::from_f64(0.02),
+            recover: SimTime::from_f64(500.0),
         });
         let engines = vec![mk_engine(1, 64).1, mk_engine(2, 64).1];
         let mut router = Router::new(

@@ -11,9 +11,11 @@ pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod tomlmini;
+pub mod units;
 
 pub use detmap::{det_map_with_capacity, det_set_with_capacity, DetMap, DetSet};
 pub use pool::Pool;
+pub use units::{Bandwidth, Bytes, SimTime};
 
 /// Deterministic xoshiro256++ PRNG seeded via SplitMix64.
 #[derive(Debug, Clone)]

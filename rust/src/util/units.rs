@@ -1,0 +1,411 @@
+//! Typed simulation units: [`SimTime`], [`Bytes`] and [`Bandwidth`].
+//!
+//! The cost model's headline arithmetic is `dt = lat + bytes / bw` — an
+//! expression that silently accepts seconds, bytes and bytes/s in any
+//! combination when everything is a raw `f64`. These newtypes make the
+//! unit algebra part of the type system: only unit-correct combinations
+//! have operators (`Bytes / Bandwidth -> SimTime`, `SimTime + SimTime`,
+//! `Bandwidth * f64` for brownout factors), and every crossing back into
+//! raw floats goes through a named, grep-able escape hatch
+//! (`to_f64`/`from_f64`, `to_u64`/`from_u64`, [`floor_bytes`]).
+//! `moelint`'s R7 `raw-units` rule bans hint-named raw-`f64` params and
+//! fields in the sim/serving modules, so new quantities either carry
+//! their unit in the type or show a visible conversion at the boundary.
+//!
+//! **Bitwise contract:** every operator here is a `#[inline]` transparent
+//! wrapper around exactly the `f64`/`u64` operation the raw code
+//! performed, in the same order — the 2-replica calendar replay and the
+//! empty-fault-plan differential stay bitwise identical across the
+//! migration (pinned in `rust/tests/scheduler.rs` and `memory/sim.rs`
+//! tests; the arithmetic identities themselves are pinned below).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, Sub, SubAssign};
+
+/// A point or span on the simulated clock, in seconds.
+///
+/// Arithmetic closes over `SimTime` (`+`, `-`) and scales by
+/// dimensionless `f64` factors (`*`, `/`); mixing with raw floats
+/// requires [`SimTime::from_f64`]/[`SimTime::to_f64`]. Comparisons
+/// against raw `f64` are allowed (asserts like `makespan > 0.0` stay
+/// readable) — only *arithmetic* must be unit-correct.
+#[derive(Debug, Clone, Copy, Default, PartialEq, PartialOrd)]
+pub struct SimTime(f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+    pub const INFINITY: SimTime = SimTime(f64::INFINITY);
+
+    /// Escape hatch in: wrap a raw seconds value. Boundary use only —
+    /// constructor params, config plumbing, engine call sites.
+    #[inline]
+    pub const fn from_f64(secs: f64) -> SimTime {
+        SimTime(secs)
+    }
+
+    /// Escape hatch out: the raw seconds value. Boundary use only —
+    /// reporting, JSON rows, engine call sites.
+    #[inline]
+    pub const fn to_f64(self) -> f64 {
+        self.0
+    }
+
+    /// Raw IEEE-754 bits — the currency of the bitwise differential pins.
+    #[inline]
+    pub fn to_bits(self) -> u64 {
+        self.0.to_bits()
+    }
+
+    /// Total order over the underlying float (`f64::total_cmp`).
+    #[inline]
+    pub fn total_cmp(&self, other: &SimTime) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+
+    #[inline]
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+
+    #[inline]
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.0.is_finite()
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl SubAssign for SimTime {
+    #[inline]
+    fn sub_assign(&mut self, rhs: SimTime) {
+        self.0 -= rhs.0;
+    }
+}
+
+/// Scaling by a dimensionless factor (retry multipliers, slack fractions).
+impl Mul<f64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn mul(self, rhs: f64) -> SimTime {
+        SimTime(self.0 * rhs)
+    }
+}
+
+/// Scaling by a dimensionless factor (demand-priority bandwidth boost).
+impl Div<f64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn div(self, rhs: f64) -> SimTime {
+        SimTime(self.0 / rhs)
+    }
+}
+
+impl DivAssign<f64> for SimTime {
+    #[inline]
+    fn div_assign(&mut self, rhs: f64) {
+        self.0 /= rhs;
+    }
+}
+
+/// `makespan > 0.0`-style comparisons stay readable without an escape
+/// hatch: comparison against raw floats is unit-safe (it cannot produce
+/// a wrongly-united value), unlike arithmetic.
+impl PartialEq<f64> for SimTime {
+    #[inline]
+    fn eq(&self, other: &f64) -> bool {
+        self.0 == *other
+    }
+}
+
+impl PartialOrd<f64> for SimTime {
+    #[inline]
+    fn partial_cmp(&self, other: &f64) -> Option<std::cmp::Ordering> {
+        self.0.partial_cmp(other)
+    }
+}
+
+impl PartialEq<SimTime> for f64 {
+    #[inline]
+    fn eq(&self, other: &SimTime) -> bool {
+        *self == other.0
+    }
+}
+
+impl PartialOrd<SimTime> for f64 {
+    #[inline]
+    fn partial_cmp(&self, other: &SimTime) -> Option<std::cmp::Ordering> {
+        self.partial_cmp(&other.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// A byte count (expert tensor sizes, cache budgets).
+///
+/// Exact integer arithmetic; the only float crossing is
+/// [`Bytes::from_gb`] (via [`floor_bytes`]) and the cost-model division
+/// [`Bytes`]` / `[`Bandwidth`]` -> `[`SimTime`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Bytes(u64);
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+
+    /// Escape hatch in: wrap a raw byte count.
+    #[inline]
+    pub const fn from_u64(bytes: u64) -> Bytes {
+        Bytes(bytes)
+    }
+
+    /// Escape hatch out: the raw byte count (accounting counters, JSON).
+    #[inline]
+    pub const fn to_u64(self) -> u64 {
+        self.0
+    }
+
+    /// Checked GB→bytes floor: `(gb * 1e9) as u64` with the floor made
+    /// explicit and the domain asserted (finite, non-negative, in range).
+    /// This is the shared helper behind every config/bench capacity knob;
+    /// see [`floor_bytes`].
+    #[inline]
+    pub fn from_gb(gb: f64) -> Bytes {
+        Bytes(floor_bytes(gb * 1e9))
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    #[inline]
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Bytes {
+    #[inline]
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Bytes {
+    type Output = Bytes;
+    #[inline]
+    fn sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 - rhs.0)
+    }
+}
+
+/// The cost model's core identity: bytes over bandwidth is a duration.
+/// Bit-for-bit the raw expression `bytes as f64 / bw`.
+impl Div<Bandwidth> for Bytes {
+    type Output = SimTime;
+    #[inline]
+    fn div(self, rhs: Bandwidth) -> SimTime {
+        SimTime(self.0 as f64 / rhs.0)
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// A transfer rate in bytes per second.
+///
+/// Constructed from the config's GB/s knobs; scaled by dimensionless
+/// brownout factors; consumed by [`Bytes`]` / `[`Bandwidth`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, PartialOrd)]
+pub struct Bandwidth(f64);
+
+impl Bandwidth {
+    /// GB/s config knob → bytes/s (the raw code's `gb_s * 1e9`).
+    #[inline]
+    pub fn from_gb_per_s(gb_s: f64) -> Bandwidth {
+        Bandwidth(gb_s * 1e9)
+    }
+
+    /// Escape hatch in: wrap a raw bytes/s value.
+    #[inline]
+    pub const fn from_f64(bytes_per_s: f64) -> Bandwidth {
+        Bandwidth(bytes_per_s)
+    }
+
+    /// Escape hatch out: the raw bytes/s value.
+    #[inline]
+    pub const fn to_f64(self) -> f64 {
+        self.0
+    }
+}
+
+/// Brownout scaling: a degraded link is the same link at a fraction of
+/// its rate.
+impl Mul<f64> for Bandwidth {
+    type Output = Bandwidth;
+    #[inline]
+    fn mul(self, rhs: f64) -> Bandwidth {
+        Bandwidth(self.0 * rhs)
+    }
+}
+
+/// Checked float→bytes floor: the one sanctioned truncating cast for
+/// byte quantities. Debug builds assert the domain (finite, non-negative,
+/// below 2^53 so the f64 grid still resolves individual bytes); release
+/// builds keep the raw cast's exact semantics (`as u64` floors).
+///
+/// Replaces the retired R4 `float-cast` pragma sites: instead of a
+/// heuristic lint plus per-line suppressions, the floor is a named
+/// function you can grep for.
+#[inline]
+pub fn floor_bytes(x: f64) -> u64 {
+    debug_assert!(
+        x.is_finite() && x >= 0.0 && x < 9_007_199_254_740_992.0,
+        "floor_bytes domain: {x}"
+    );
+    x as u64
+}
+
+/// Checked fraction-of-capacity floor for slot budgets
+/// (`prefetch_gpu_budget * cache capacity`). Same contract as
+/// [`floor_bytes`]: debug-asserted domain, bit-identical
+/// `(frac * slots as f64) as usize` floor in release.
+#[inline]
+pub fn budget_slots(frac: f64, slots: usize) -> usize {
+    debug_assert!(
+        frac.is_finite() && frac >= 0.0,
+        "budget_slots fraction domain: {frac}"
+    );
+    (frac * slots as f64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_arithmetic_matches_raw_f64_bitwise() {
+        let xs = [0.0, 1.5e-3, 0.1, 7.25, 1e9, f64::INFINITY];
+        let ys = [0.0, 3.0e-4, 0.9, 2.5, 1e-9];
+        for &a in &xs {
+            for &b in &ys {
+                let (ta, tb) = (SimTime::from_f64(a), SimTime::from_f64(b));
+                assert_eq!((ta + tb).to_bits(), (a + b).to_bits());
+                assert_eq!((ta - tb).to_bits(), (a - b).to_bits());
+                assert_eq!((ta * b).to_bits(), (a * b).to_bits());
+                if b != 0.0 {
+                    assert_eq!((ta / b).to_bits(), (a / b).to_bits());
+                }
+                assert_eq!(ta.max(tb).to_bits(), a.max(b).to_bits());
+                assert_eq!(ta.min(tb).to_bits(), a.min(b).to_bits());
+                assert_eq!(ta.partial_cmp(&tb), a.partial_cmp(&b));
+            }
+        }
+        let mut acc = SimTime::ZERO;
+        let mut raw = 0.0f64;
+        for &a in &xs[..4] {
+            acc += SimTime::from_f64(a);
+            raw += a;
+        }
+        assert_eq!(acc.to_bits(), raw.to_bits());
+        acc -= SimTime::from_f64(0.125);
+        raw -= 0.125;
+        assert_eq!(acc.to_bits(), raw.to_bits());
+        acc /= 3.0;
+        raw /= 3.0;
+        assert_eq!(acc.to_bits(), raw.to_bits());
+    }
+
+    #[test]
+    fn simtime_compares_against_raw_floats() {
+        let t = SimTime::from_f64(1.5);
+        assert!(t > 0.0);
+        assert!(t == 1.5);
+        assert!(0.0 < t);
+        assert!(2.0 > t);
+        assert!(!SimTime::INFINITY.is_finite());
+        assert_eq!(SimTime::ZERO, 0.0);
+        assert_eq!(
+            SimTime::from_f64(-0.0).total_cmp(&SimTime::ZERO),
+            std::cmp::Ordering::Less
+        );
+    }
+
+    #[test]
+    fn bytes_over_bandwidth_is_the_raw_division() {
+        // the cost-model identity: dt = bytes as f64 / bw, bit-for-bit
+        for &bytes in &[1u64, 4096, 350_000_000, u64::MAX >> 12] {
+            for &gb_s in &[0.5, 1.0, 12.0, 64.0] {
+                let raw = bytes as f64 / (gb_s * 1e9);
+                let typed = Bytes::from_u64(bytes) / Bandwidth::from_gb_per_s(gb_s);
+                assert_eq!(typed.to_bits(), raw.to_bits());
+                // brownout scaling composes identically
+                let raw_b = bytes as f64 / (gb_s * 1e9 * 0.35);
+                let typed_b = Bytes::from_u64(bytes) / (Bandwidth::from_gb_per_s(gb_s) * 0.35);
+                assert_eq!(typed_b.to_bits(), raw_b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_integer_arithmetic() {
+        let a = Bytes::from_u64(10);
+        let b = Bytes::from_u64(3);
+        assert_eq!((a + b).to_u64(), 13);
+        assert_eq!((a - b).to_u64(), 7);
+        let mut acc = Bytes::ZERO;
+        acc += a;
+        acc += b;
+        assert_eq!(acc.to_u64(), 13);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn checked_floors_match_raw_casts() {
+        for &gb in &[0.0, 0.5, 1.0, 15.0, 23.999] {
+            assert_eq!(Bytes::from_gb(gb).to_u64(), (gb * 1e9) as u64);
+        }
+        assert_eq!(floor_bytes(1.9), 1);
+        assert_eq!(floor_bytes(15e9), 15e9 as u64);
+        for &(frac, slots) in &[(0.0, 10usize), (0.3, 7), (0.99, 128), (1.0, 0)] {
+            assert_eq!(budget_slots(frac, slots), (frac * slots as f64) as usize);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "floor_bytes domain")]
+    #[cfg(debug_assertions)]
+    fn floor_bytes_rejects_negative() {
+        floor_bytes(-1.0);
+    }
+}

@@ -20,6 +20,7 @@ use moe_infinity::model::ModelSpec;
 use moe_infinity::server::{AdmissionPolicy, Batcher, Router, RoutingPolicy, Scheduler};
 use moe_infinity::trace::Eamc;
 use moe_infinity::util::alloc::{measure, CountingAlloc};
+use moe_infinity::util::units::SimTime;
 use moe_infinity::workload::{DatasetPreset, Request, SequenceActivation, Workload};
 
 #[global_allocator]
@@ -33,7 +34,7 @@ fn tier(spec: &ModelSpec, gpu: usize) -> TierConfig {
         ssd_to_dram: Link::new(6.0, 50e-6),
         dram_to_gpu: Link::new(32.0, 10e-6),
         n_gpus: 1,
-        demand_extra_latency: 0.0,
+        demand_extra_latency: SimTime::ZERO,
         demand_bw_factor: 1.0,
         cache_kind: CacheKind::Activation,
         oracle_trace: Vec::new(),
@@ -182,8 +183,8 @@ fn steady_state_fault_injected_window_is_allocation_free() {
     plan.gpu_failure_p = 0.2;
     plan.brownouts.push(Brownout {
         link: FaultLink::DramToGpu,
-        start: 0.0,
-        end: f64::MAX,
+        start: SimTime::ZERO,
+        end: SimTime::from_f64(f64::MAX),
         factor: 0.5,
     });
     eng.set_fault_plan(&plan); // the one Box lands here, before the window

@@ -35,6 +35,7 @@ use moe_infinity::server::{
     RequestStat, Router, RoutingPolicy, Scheduler, ServeReport, StaticScheduler,
 };
 use moe_infinity::trace::Eam;
+use moe_infinity::util::units::SimTime;
 use moe_infinity::util::{Pool, Rng};
 use moe_infinity::workload::{DatasetPreset, Priority, Request, RequestClass, Workload};
 
@@ -295,7 +296,7 @@ fn replica_crash_failover_preserves_per_token_expert_demands() {
     for frac in [0.5, 0.65, 0.8, 0.9, 0.35, 0.95] {
         let mut crashed = mk();
         crashed.submit(req);
-        let t_mid = req.arrival + frac * (whole.makespan - req.arrival);
+        let t_mid = req.arrival + frac * (whole.makespan.to_f64() - req.arrival);
         while crashed.now() < t_mid {
             if !crashed.tick() {
                 break;
@@ -561,8 +562,8 @@ fn calendar_router_replays_lockstep_bitwise_across_the_matrix() {
                     p.gpu_failure_p = 0.05;
                     p.crashes.push(CrashWindow {
                         replica: 0,
-                        crash: cfg.workload.duration * 0.3,
-                        recover: cfg.workload.duration * 0.6,
+                        crash: SimTime::from_f64(cfg.workload.duration * 0.3),
+                        recover: SimTime::from_f64(cfg.workload.duration * 0.6),
                     });
                     p
                 });
