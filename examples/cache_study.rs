@@ -8,8 +8,8 @@
 
 use moe_infinity::benchsuite::Table;
 use moe_infinity::cache::{
-    ActivationPolicy, CacheCtx, CacheKind, ExpertCache, LfuPolicy, LruPolicy, NeighborPolicy,
-    OraclePolicy, Policy,
+    ActivationPolicy, CacheCtx, CacheKind, ExpertCache, GdsfPolicy, LfuDaPolicy, LfuPolicy,
+    LruPolicy, NeighborPolicy, OraclePolicy, Policy, SlruPolicy,
 };
 use moe_infinity::engine::SimEngine;
 use moe_infinity::model::{ExpertKey, ModelSpec};
@@ -39,6 +39,9 @@ fn main() {
         ("activation (Alg. 2)", CacheKind::Activation),
         ("lru", CacheKind::Lru),
         ("lfu", CacheKind::Lfu),
+        ("lfuda", CacheKind::Lfuda),
+        ("slru", CacheKind::Slru),
+        ("gdsf", CacheKind::Gdsf),
         ("neighbor", CacheKind::Neighbor),
         ("oracle (Belady)", CacheKind::Oracle),
     ];
@@ -50,6 +53,9 @@ fn main() {
                 CacheKind::Activation => Box::new(ActivationPolicy::new()),
                 CacheKind::Lru => Box::new(LruPolicy::new()),
                 CacheKind::Lfu => Box::new(LfuPolicy::new()),
+                CacheKind::Lfuda => Box::new(LfuDaPolicy::new()),
+                CacheKind::Slru => Box::new(SlruPolicy::new(cap)),
+                CacheKind::Gdsf => Box::new(GdsfPolicy::new()),
                 CacheKind::Neighbor => Box::new(NeighborPolicy::new()),
                 CacheKind::Oracle => Box::new(OraclePolicy::from_trace(&trace)),
             };
@@ -58,10 +64,7 @@ fn main() {
             let mut i = 0;
             for (si, b) in batches.iter().enumerate() {
                 let n: usize = demands_of(&spec, &b[0]);
-                let ctx = CacheCtx {
-                    cur_eam: &seq_eams[si],
-                    n_layers: spec.n_layers,
-                };
+                let ctx = CacheCtx::new(&seq_eams[si], spec.n_layers);
                 for key in &trace[i..i + n] {
                     if !cache.access(*key) {
                         cache.insert(*key, &ctx);

@@ -22,10 +22,7 @@ fn hit_ratio(
     let mut cache = ExpertCache::new(cap, policy);
     let mut i = 0;
     for (si, &n) in seq_lens.iter().enumerate() {
-        let ctx = CacheCtx {
-            cur_eam: &seq_eams[si],
-            n_layers: spec.n_layers,
-        };
+        let ctx = CacheCtx::new(&seq_eams[si], spec.n_layers);
         for key in &trace[i..i + n] {
             if !cache.access(*key) {
                 cache.insert(*key, &ctx);

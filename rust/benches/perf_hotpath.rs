@@ -143,10 +143,7 @@ fn main() {
     // heap-indexed Alg. 2 victim selection)
     let mut cache = ExpertCache::new(535, Box::new(IndexedActivationPolicy::new()));
     let eam = probe.clone();
-    let ctx = CacheCtx {
-        cur_eam: &eam,
-        n_layers: spec.n_layers,
-    };
+    let ctx = CacheCtx::new(&eam, spec.n_layers);
     for l in 0..spec.n_layers {
         for e in 0..(535 / spec.n_layers + 1) {
             cache.insert(ExpertKey::new(l, e), &ctx);

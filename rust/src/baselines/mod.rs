@@ -39,24 +39,30 @@ pub const UM_BW_FACTOR: f64 = 0.1;
 /// performance tuning toolkit ... for exhibiting the best performance").
 pub const ZERO_TOPK: usize = 8;
 
-/// Adjust a base tier config for the selected system.
+/// Adjust a base tier config for the selected system. Each bundle runs the
+/// same policy on both cache tiers (the paper's systems do not distinguish
+/// them); per-tier overrides layer on top via `ServeConfig::tier_config`.
 pub fn apply_system(system: &str, mut base: TierConfig) -> Result<TierConfig> {
+    fn set_policy(base: &mut TierConfig, kind: CacheKind) {
+        base.gpu_policy = kind;
+        base.dram_policy = kind;
+    }
     match system {
         "moe-infinity" => {
             base.backing = Tier::Ssd;
-            base.cache_kind = CacheKind::Activation;
+            set_policy(&mut base, CacheKind::Activation);
         }
         "zero-infinity" => {
             base.backing = Tier::Ssd;
-            base.cache_kind = CacheKind::Neighbor;
+            set_policy(&mut base, CacheKind::Neighbor);
         }
         "zero-offload" => {
             base.backing = Tier::Dram;
-            base.cache_kind = CacheKind::Neighbor;
+            set_policy(&mut base, CacheKind::Neighbor);
         }
         "pytorch-um" => {
             base.backing = Tier::Dram;
-            base.cache_kind = CacheKind::Lru;
+            set_policy(&mut base, CacheKind::Lru);
             base.demand_extra_latency = UM_FAULT_OVERHEAD;
             base.demand_bw_factor = UM_BW_FACTOR;
         }
@@ -102,7 +108,8 @@ mod tests {
             n_gpus: 1,
             demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
-            cache_kind: CacheKind::Activation,
+            gpu_policy: CacheKind::Activation,
+            dram_policy: CacheKind::Activation,
             oracle_trace: Vec::new(),
             activation_terms: (true, true),
             prefetch_gpu_budget: 0.5,
@@ -113,17 +120,20 @@ mod tests {
     fn bundles_match_paper_table() {
         let mi = apply_system("moe-infinity", base()).unwrap();
         assert_eq!(mi.backing, Tier::Ssd);
-        assert_eq!(mi.cache_kind, CacheKind::Activation);
+        assert_eq!(mi.gpu_policy, CacheKind::Activation);
+        assert_eq!(mi.dram_policy, CacheKind::Activation);
 
         let zi = apply_system("zero-infinity", base()).unwrap();
         assert_eq!(zi.backing, Tier::Ssd);
-        assert_eq!(zi.cache_kind, CacheKind::Neighbor);
+        assert_eq!(zi.gpu_policy, CacheKind::Neighbor);
+        assert_eq!(zi.dram_policy, CacheKind::Neighbor);
 
         let zo = apply_system("zero-offload", base()).unwrap();
         assert_eq!(zo.backing, Tier::Dram);
 
         let um = apply_system("pytorch-um", base()).unwrap();
-        assert_eq!(um.cache_kind, CacheKind::Lru);
+        assert_eq!(um.gpu_policy, CacheKind::Lru);
+        assert_eq!(um.dram_policy, CacheKind::Lru);
         assert!(um.demand_extra_latency > 0.0);
     }
 

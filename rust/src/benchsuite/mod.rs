@@ -325,7 +325,8 @@ pub fn tier_with(
         n_gpus: 1,
         demand_extra_latency: crate::util::units::SimTime::ZERO,
         demand_bw_factor: 1.0,
-        cache_kind: cache,
+        gpu_policy: cache,
+        dram_policy: cache,
         oracle_trace: Vec::new(),
         activation_terms: (true, true),
         prefetch_gpu_budget: 0.5,

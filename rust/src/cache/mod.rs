@@ -1,9 +1,14 @@
-//! Activation-aware expert caching (paper §6) and the baseline policies the
-//! paper compares against (§8.4).
+//! Activation-aware expert caching (paper §6) and the replacement-policy
+//! zoo it is benchmarked against (§8.4 baselines plus the classic
+//! web-cache designs).
 //!
 //! A cache tier holds up to `capacity` experts (experts are uniformly sized,
 //! so capacity is expressed in expert slots; byte budgets are converted by
-//! the caller). Replacement is pluggable:
+//! the caller). Replacement is pluggable **per tier**: `TierConfig` carries
+//! independent `gpu_policy` / `dram_policy` kinds, and every policy receives
+//! a [`CacheCtx`] stamped with the tier it serves ([`CacheTier`]) and the
+//! cost of re-fetching an evicted entry from that tier's backing store
+//! (`fetch_cost`, derived from the inbound [`crate::memory::Link`]):
 //!
 //! * [`ActivationPolicy`] — the paper's Algorithm 2: victim = cached expert
 //!   with minimal `(cur_ratio + ε) · (1 − layer_idx/L)` (reference scan).
@@ -13,26 +18,78 @@
 //! * [`LruPolicy`] — CUDA-unified-memory-style least-recently-used.
 //! * [`LfuPolicy`] — BrainStorm-style least-frequently-used (counter resets
 //!   on eviction, the weakness §8.4 calls out).
+//! * [`LfuDaPolicy`] — LFU with dynamic aging (`K = freq + age`, age jumps
+//!   to the victim's K on eviction), fixing the counter-reset weakness:
+//!   re-inserted entries start competitive with long-resident ones.
+//! * [`SlruPolicy`] — segmented LRU: probation/protected segments, so one
+//!   scan cannot flush entries that were ever re-referenced.
+//! * [`GdsfPolicy`] — GreedyDual-Size-Frequency: priority
+//!   `H = age + freq · fetch_cost`, the first cost-aware policy (uses the
+//!   per-tier `fetch_cost` in [`CacheCtx`]).
 //! * [`NeighborPolicy`] — ZeRO-Infinity-style: keep id-neighbors together.
 //! * [`OraclePolicy`] — Belady's optimal from a known future access trace,
 //!   the §8.4 upper bound.
+//!
+//! Every O(log n) heap policy is pinned by a differential proptest against
+//! a naive reference scan (`tests/properties.rs`); `perf_tiers` sweeps the
+//! zoo across tier shapes into `BENCH_tiers.json`.
 
 mod policies;
 
 pub use policies::{
-    ActivationPolicy, IndexedActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy,
-    OraclePolicy, Policy,
+    ActivationPolicy, GdsfPolicy, IndexedActivationPolicy, LfuDaPolicy, LfuPolicy, LruPolicy,
+    NeighborPolicy, OraclePolicy, Policy, SlruPolicy,
 };
 
 use crate::model::ExpertKey;
 use crate::util::{det_map_with_capacity, DetMap, DetSet};
 use crate::trace::Eam;
 
+/// Which tier of the memory hierarchy a cache instance serves. Kept local
+/// to `cache/` (rather than reusing [`crate::memory::Tier`]) so policies
+/// never depend on the simulator's tier topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheTier {
+    Gpu,
+    Dram,
+}
+
 /// Replacement-decision context: Algorithm 2 consults the EAM of the
-/// sequence *currently being processed*.
+/// sequence *currently being processed*; cost-aware policies (GDSF)
+/// additionally consult the tier identity and backing-fetch cost.
+#[derive(Clone, Copy)]
 pub struct CacheCtx<'a> {
     pub cur_eam: &'a Eam,
     pub n_layers: usize,
+    /// Which tier this decision is for. [`MemorySim`](crate::memory::MemorySim)
+    /// re-stamps the context per tier; standalone callers default to `Gpu`.
+    pub tier: CacheTier,
+    /// Relative cost of re-fetching an evicted entry from this tier's
+    /// backing store — the inbound link's per-expert service time, as a
+    /// unit-free weight. `1.0` when unknown (standalone callers); the
+    /// activation policy and all §8.4 baselines ignore it.
+    pub fetch_cost: f64,
+}
+
+impl<'a> CacheCtx<'a> {
+    /// Context with default tier identity (`Gpu`) and unit fetch cost —
+    /// what every caller outside `MemorySim` wants.
+    pub fn new(cur_eam: &'a Eam, n_layers: usize) -> CacheCtx<'a> {
+        CacheCtx {
+            cur_eam,
+            n_layers,
+            tier: CacheTier::Gpu,
+            fetch_cost: 1.0,
+        }
+    }
+
+    /// Re-stamp the tier identity and fetch cost (used by `MemorySim` to
+    /// specialize one engine-provided context per cache tier).
+    pub fn for_tier(mut self, tier: CacheTier, fetch_cost: f64) -> CacheCtx<'a> {
+        self.tier = tier;
+        self.fetch_cost = fetch_cost;
+        self
+    }
 }
 
 /// Which policy to instantiate (config / bench matrix).
@@ -41,6 +98,9 @@ pub enum CacheKind {
     Activation,
     Lru,
     Lfu,
+    Lfuda,
+    Slru,
+    Gdsf,
     Neighbor,
     Oracle,
 }
@@ -51,8 +111,26 @@ impl CacheKind {
             CacheKind::Activation => "activation",
             CacheKind::Lru => "lru",
             CacheKind::Lfu => "lfu",
+            CacheKind::Lfuda => "lfuda",
+            CacheKind::Slru => "slru",
+            CacheKind::Gdsf => "gdsf",
             CacheKind::Neighbor => "neighbor",
             CacheKind::Oracle => "oracle",
+        }
+    }
+
+    /// Inverse of [`CacheKind::name`] (config / CLI parsing).
+    pub fn by_name(s: &str) -> Option<CacheKind> {
+        match s {
+            "activation" => Some(CacheKind::Activation),
+            "lru" => Some(CacheKind::Lru),
+            "lfu" => Some(CacheKind::Lfu),
+            "lfuda" => Some(CacheKind::Lfuda),
+            "slru" => Some(CacheKind::Slru),
+            "gdsf" => Some(CacheKind::Gdsf),
+            "neighbor" => Some(CacheKind::Neighbor),
+            "oracle" => Some(CacheKind::Oracle),
+            _ => None,
         }
     }
 }
@@ -205,10 +283,14 @@ impl ExpertCache {
         }
     }
 
+    /// Fraction of accesses that hit. Zero-access convention: `1.0` — an
+    /// empty denominator means "nothing missed", not "everything missed" —
+    /// matching [`crate::memory::MemoryStats::gpu_hit_ratio`],
+    /// `MemoryStats::prefetch_coverage`, and `BatchResult::recall`.
     pub fn hit_ratio(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
-            0.0
+            1.0
         } else {
             self.hits as f64 / total as f64
         }
@@ -242,10 +324,7 @@ mod tests {
     use super::*;
 
     fn ctx_with(eam: &Eam) -> CacheCtx<'_> {
-        CacheCtx {
-            cur_eam: eam,
-            n_layers: eam.layers(),
-        }
+        CacheCtx::new(eam, eam.layers())
     }
 
     #[test]
@@ -318,5 +397,54 @@ mod tests {
         assert!(c.insert(ExpertKey::new(0, 0), &ctx_with(&eam)).is_none());
         assert_eq!(c.len(), 0);
         assert!(!c.contains(ExpertKey::new(0, 0)));
+    }
+
+    #[test]
+    fn zero_access_hit_ratio_is_unity() {
+        // the cross-crate zero-denominator convention: an untouched cache
+        // reports 1.0 ("nothing missed"), exactly like
+        // MemoryStats::gpu_hit_ratio and prefetch_coverage
+        let c = ExpertCache::new(4, Box::new(LruPolicy::new()));
+        assert_eq!(c.hit_ratio(), 1.0);
+        let mut c2 = ExpertCache::new(4, Box::new(LruPolicy::new()));
+        assert!(!c2.access(ExpertKey::new(0, 0)));
+        assert_eq!(c2.hit_ratio(), 0.0, "one miss drops the ratio to 0");
+        c2.reset_stats();
+        assert_eq!(c2.hit_ratio(), 1.0, "reset restores the empty convention");
+    }
+
+    #[test]
+    fn all_protected_voids_protection() {
+        // §6.2 edge case: when every resident is protected, protection is
+        // void and the policy still yields a victim (no wedge, no panic)
+        let eam = Eam::new(1, 8);
+        let mut c = ExpertCache::new(2, Box::new(LruPolicy::new()));
+        let (a, b, d) = (ExpertKey::new(0, 0), ExpertKey::new(0, 1), ExpertKey::new(0, 2));
+        c.insert(a, &ctx_with(&eam));
+        c.insert(b, &ctx_with(&eam));
+        c.protect(a);
+        c.protect(b);
+        assert_eq!(c.protected_count(), 2);
+        let ev = c.insert(d, &ctx_with(&eam));
+        assert_eq!(ev, Some(a), "LRU victim despite both entries being protected");
+        assert!(!c.is_protected(a), "eviction clears the victim's protection");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn remove_clears_protection() {
+        let eam = Eam::new(1, 8);
+        let mut c = ExpertCache::new(3, Box::new(LruPolicy::new()));
+        let (a, b) = (ExpertKey::new(0, 0), ExpertKey::new(0, 1));
+        c.insert(a, &ctx_with(&eam));
+        c.insert(b, &ctx_with(&eam));
+        c.protect(a);
+        assert!(c.is_protected(a));
+        assert!(c.remove(a));
+        assert!(!c.is_protected(a), "remove() must clear the protected set");
+        assert_eq!(c.protected_count(), 0);
+        // a re-inserted key does not inherit stale protection
+        c.insert(a, &ctx_with(&eam));
+        assert!(!c.is_protected(a));
     }
 }

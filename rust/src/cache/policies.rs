@@ -587,10 +587,461 @@ impl Policy for OraclePolicy {
     }
 }
 
+// ------------------------------------------------------------- shared machinery
+
+/// Lazy-deletion min-heap over `(priority, key)` shared by the O(log n)
+/// zoo policies (LFU-DA, SLRU, GDSF). Same idiom as the heap inside
+/// [`IndexedActivationPolicy`] — generation stamps for O(1) invalidation,
+/// `NEEDS_PRIORITY` sentinels resolved at victim time, an exclusion stash,
+/// periodic in-place compaction — without that policy's EAM-row tracking.
+#[derive(Debug, Default)]
+struct LazyMinHeap {
+    heap: BinaryHeap<Reverse<VictimEntry>>,
+    /// Tracked keys → current generation (an entry is live iff it matches).
+    gen: DetMap<ExpertKey, u64>,
+    next_gen: u64,
+    /// Stale heap entries awaiting lazy deletion.
+    stale: usize,
+    /// Reusable stash for excluded-but-live entries popped mid-search.
+    scratch: Vec<Reverse<VictimEntry>>,
+}
+
+impl LazyMinHeap {
+    /// Number of tracked (live) keys.
+    fn len(&self) -> usize {
+        self.gen.len()
+    }
+
+    /// Insert or re-key `key` at priority `p` (supersedes any live entry).
+    fn update(&mut self, key: ExpertKey, p: f64) {
+        let g = self.next_gen;
+        self.next_gen += 1;
+        if self.gen.insert(key, g).is_some() {
+            self.stale += 1;
+        }
+        self.heap.push(Reverse(VictimEntry { p, key, gen: g }));
+    }
+
+    /// Stop tracking `key` (its heap entries become stale).
+    fn remove(&mut self, key: ExpertKey) {
+        if self.gen.remove(&key).is_some() {
+            self.stale += 1;
+        }
+    }
+
+    /// Sorted tracked keys (deterministic re-key sweeps).
+    fn sorted_keys(&self) -> Vec<ExpertKey> {
+        let mut keys: Vec<ExpertKey> = self.gen.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Drop stale entries in place once they dominate (no allocation:
+    /// `retain` filters the heap's own buffer).
+    fn maybe_compact(&mut self) {
+        if self.stale > 64 && self.stale > 4 * self.gen.len() {
+            let gen = &self.gen;
+            self.heap
+                .retain(|Reverse(v)| gen.get(&v.key).is_some_and(|&g| g == v.gen));
+            self.stale = 0;
+        }
+    }
+
+    /// Pop the live minimum: stale entries are discarded, `NEEDS_PRIORITY`
+    /// sentinels are resolved through `resolve` and re-pushed (same
+    /// generation), excluded live entries are stashed and restored. The
+    /// winner is pushed back — it stays resident until the cache calls
+    /// `on_evict`. `None` iff every live entry is excluded.
+    fn min_entry(
+        &mut self,
+        excluded: Option<&DetSet<ExpertKey>>,
+        mut resolve: impl FnMut(ExpertKey) -> f64,
+    ) -> Option<VictimEntry> {
+        self.scratch.clear();
+        let winner = loop {
+            let Some(Reverse(top)) = self.heap.pop() else {
+                break None;
+            };
+            match self.gen.get(&top.key) {
+                Some(&g) if g == top.gen => {}
+                _ => {
+                    self.stale = self.stale.saturating_sub(1);
+                    continue;
+                }
+            }
+            if top.p == NEEDS_PRIORITY {
+                let p = resolve(top.key);
+                self.heap.push(Reverse(VictimEntry { p, ..top }));
+                continue;
+            }
+            if excluded.is_some_and(|x| x.contains(&top.key)) {
+                self.scratch.push(Reverse(top));
+                continue;
+            }
+            break Some(top);
+        };
+        // excluded entries popped along the way stay resident — restore
+        while let Some(e) = self.scratch.pop() {
+            self.heap.push(e);
+        }
+        winner.map(|top| {
+            self.heap.push(Reverse(top));
+            self.maybe_compact();
+            top
+        })
+    }
+}
+
+// --------------------------------------------------------------------- LFU-DA
+
+/// LFU with dynamic aging (squid-style): priority `K = freq + age`, where
+/// `age` jumps to the evicted entry's K. This fixes the counter-reset
+/// weakness §8.4 demonstrates for plain LFU — a re-inserted entry starts at
+/// `K = 1 + age`, immediately competitive with long-resident entries, so a
+/// stale-hot entry cannot pin its slot forever.
+///
+/// O(log n) victim picks via [`LazyMinHeap`]; decisions are pinned against
+/// a naive reference scan by a differential proptest.
+#[derive(Debug, Default)]
+pub struct LfuDaPolicy {
+    age: u64,
+    freq: DetMap<ExpertKey, u64>,
+    /// Cached `K = freq + age` as of the key's last touch (the heap
+    /// priority, and the value `age` jumps to on eviction).
+    kval: DetMap<ExpertKey, u64>,
+    heap: LazyMinHeap,
+    /// Victim chosen by the last `victim()` call and its K; consumed by
+    /// `on_evict` to advance the age (a bare `remove()` is a deletion, not
+    /// an eviction decision, and must not age the cache).
+    last_victim: Option<(ExpertKey, u64)>,
+}
+
+impl LfuDaPolicy {
+    pub fn new() -> LfuDaPolicy {
+        LfuDaPolicy::default()
+    }
+
+    fn touch(&mut self, key: ExpertKey) {
+        let f = self.freq.entry(key).or_insert(0);
+        *f += 1;
+        let k = *f + self.age;
+        self.kval.insert(key, k);
+        // counts stay far below 2^53: u64 -> f64 is exact here
+        self.heap.update(key, k as f64);
+    }
+}
+
+impl Policy for LfuDaPolicy {
+    fn name(&self) -> &'static str {
+        "lfuda"
+    }
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&DetSet<ExpertKey>>,
+        _ctx: &CacheCtx,
+    ) -> ExpertKey {
+        let key = if self.heap.len() == entries.len() {
+            // no sentinels are ever pushed (K is computed at touch time),
+            // so the resolve hook is unreachable
+            match self.heap.min_entry(excluded, |_| 0.0) {
+                Some(top) => top.key,
+                // every resident entry excluded: exclusion is void
+                None => pick_min(entries, None, |e| {
+                    (self.kval.get(e).copied().unwrap_or(0), *e)
+                }),
+            }
+        } else {
+            // ad-hoc slice use (caller not driving callbacks) — reference scan
+            pick_min(entries, excluded, |e| {
+                (self.kval.get(e).copied().unwrap_or(0), *e)
+            })
+        };
+        self.last_victim = Some((key, self.kval.get(&key).copied().unwrap_or(0)));
+        key
+    }
+    fn on_access(&mut self, key: ExpertKey) {
+        self.touch(key);
+    }
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.touch(key);
+    }
+    fn on_evict(&mut self, key: ExpertKey) {
+        if let Some((vk, k)) = self.last_victim {
+            if vk == key {
+                // dynamic aging: the cache "ages" to the level the victim
+                // had reached, so future inserts start competitive
+                self.age = k;
+                self.last_victim = None;
+            }
+        }
+        self.freq.remove(&key);
+        self.kval.remove(&key);
+        self.heap.remove(key);
+    }
+}
+
+// ----------------------------------------------------------------------- SLRU
+
+/// Probation/protected scores live in disjoint bands: segment 1 entries
+/// always outrank (survive) segment 0, and within a band the unique access
+/// tick orders entries LRU-first. Ticks stay far below 2^40, so the packed
+/// f64 is exact.
+const SLRU_SEG_BASE: f64 = (1u64 << 40) as f64;
+
+#[inline]
+fn slru_score(seg: u8, tick: u64) -> f64 {
+    seg as f64 * SLRU_SEG_BASE + tick as f64
+}
+
+/// Segmented LRU: new entries enter a *probation* segment; a re-reference
+/// promotes to a *protected* segment capped at 4/5 of capacity (overflow
+/// demotes the protected LRU back to probation MRU). Victims drain
+/// probation LRU-first, so a one-pass scan cannot flush entries that were
+/// ever re-referenced.
+///
+/// Not to be confused with [`crate::cache::ExpertCache`]'s eviction
+/// *protection* (§6.2 prefetch pinning) — that is an exclusion filter
+/// applied on top of any policy, while SLRU's protected *segment* is this
+/// policy's own notion of re-referenced entries.
+///
+/// O(log n) via two [`LazyMinHeap`]s: the victim heap (packed
+/// `segment · 2^40 + tick` scores) and a protected-segment heap keyed by
+/// tick for O(log n) demotion.
+#[derive(Debug)]
+pub struct SlruPolicy {
+    clock: u64,
+    /// 0 = probation, 1 = protected segment.
+    seg: DetMap<ExpertKey, u8>,
+    tick: DetMap<ExpertKey, u64>,
+    protected_count: usize,
+    protected_budget: usize,
+    heap: LazyMinHeap,
+    /// Protected-segment entries by tick (demotion picks its minimum).
+    prot_heap: LazyMinHeap,
+}
+
+impl SlruPolicy {
+    /// `capacity` is the owning cache tier's slot count; the protected
+    /// segment is budgeted at 4/5 of it (at least one slot).
+    pub fn new(capacity: usize) -> SlruPolicy {
+        SlruPolicy {
+            clock: 0,
+            seg: DetMap::default(),
+            tick: DetMap::default(),
+            protected_count: 0,
+            protected_budget: (capacity * 4 / 5).clamp(1, capacity.max(1)),
+            heap: LazyMinHeap::default(),
+            prot_heap: LazyMinHeap::default(),
+        }
+    }
+
+    fn place(&mut self, key: ExpertKey, seg: u8) {
+        self.clock += 1;
+        self.seg.insert(key, seg);
+        self.tick.insert(key, self.clock);
+        self.heap.update(key, slru_score(seg, self.clock));
+        if seg == 1 {
+            self.prot_heap.update(key, self.clock as f64);
+        }
+    }
+
+    /// Demote the protected segment's LRU entry back to probation MRU.
+    fn demote_lru(&mut self) {
+        // the protected heap carries no sentinels and no exclusions
+        if let Some(top) = self.prot_heap.min_entry(None, |_| 0.0) {
+            self.prot_heap.remove(top.key);
+            self.protected_count -= 1;
+            self.place(top.key, 0);
+        }
+    }
+}
+
+impl Policy for SlruPolicy {
+    fn name(&self) -> &'static str {
+        "slru"
+    }
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&DetSet<ExpertKey>>,
+        _ctx: &CacheCtx,
+    ) -> ExpertKey {
+        let seg = &self.seg;
+        let tick = &self.tick;
+        let scan = |e: &ExpertKey| {
+            (
+                seg.get(e).copied().unwrap_or(0),
+                tick.get(e).copied().unwrap_or(0),
+                *e,
+            )
+        };
+        if self.heap.len() == entries.len() {
+            match self.heap.min_entry(excluded, |_| 0.0) {
+                Some(top) => top.key,
+                None => pick_min(entries, None, scan),
+            }
+        } else {
+            pick_min(entries, excluded, scan)
+        }
+    }
+    fn on_access(&mut self, key: ExpertKey) {
+        match self.seg.get(&key).copied() {
+            // already protected: refresh recency within the segment
+            Some(1) => self.place(key, 1),
+            // probation hit: promote, demoting on segment overflow
+            Some(0) => {
+                self.protected_count += 1;
+                self.place(key, 1);
+                if self.protected_count > self.protected_budget {
+                    // the just-promoted key holds the newest tick, so the
+                    // demotion can never pick it back
+                    self.demote_lru();
+                }
+            }
+            // untracked (ad-hoc slice use without on_insert)
+            _ => {}
+        }
+    }
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.place(key, 0);
+    }
+    fn on_evict(&mut self, key: ExpertKey) {
+        self.tick.remove(&key);
+        self.heap.remove(key);
+        if self.seg.remove(&key) == Some(1) {
+            self.protected_count -= 1;
+            self.prot_heap.remove(key);
+        }
+    }
+}
+
+// ----------------------------------------------------------------------- GDSF
+
+/// GreedyDual-Size-Frequency: priority `H = age_at_last_touch +
+/// freq · fetch_cost`, victim = min H, and the global age jumps to the
+/// victim's H on eviction. With uniformly sized experts the size term is a
+/// constant, leaving the *fetch cost* — [`CacheCtx::fetch_cost`], the
+/// per-tier cost of re-fetching from the backing store — to weight
+/// frequency against recency-of-touch: an expensive backing link (SSD)
+/// makes GDSF hold frequent entries longer; a cheap one lets age win.
+///
+/// The fetch cost is only known at victim time (it rides on the context,
+/// not the callbacks), so touches push `NEEDS_PRIORITY` sentinels that the
+/// victim pick resolves under the current cost; if the cost itself changed
+/// since the last pick, every tracked key is re-keyed first so the heap
+/// always agrees with a reference scan under the current cost. (In serving
+/// use the cost is a per-tier constant, so the sweep never triggers.)
+///
+/// `on_evict` after a `victim()` pick advances the age; a bare `remove()`
+/// (upper tier stealing the slot) is a deletion and leaves the age alone.
+#[derive(Debug, Default)]
+pub struct GdsfPolicy {
+    age: f64,
+    freq: DetMap<ExpertKey, u64>,
+    /// Global age captured at the key's last touch.
+    snap: DetMap<ExpertKey, f64>,
+    heap: LazyMinHeap,
+    /// `fetch_cost` the live heap priorities were resolved under.
+    last_cost: f64,
+    /// Victim of the last `victim()` call and its H (consumed by `on_evict`).
+    last_victim: Option<(ExpertKey, f64)>,
+}
+
+impl GdsfPolicy {
+    pub fn new() -> GdsfPolicy {
+        GdsfPolicy {
+            // matches CacheCtx::new's default; any value works (priorities
+            // are sentinels until first resolved)
+            last_cost: 1.0,
+            ..Default::default()
+        }
+    }
+
+    fn touch(&mut self, key: ExpertKey) {
+        *self.freq.entry(key).or_insert(0) += 1;
+        self.snap.insert(key, self.age);
+        self.heap.update(key, NEEDS_PRIORITY);
+    }
+}
+
+impl Policy for GdsfPolicy {
+    fn name(&self) -> &'static str {
+        "gdsf"
+    }
+    fn victim(
+        &mut self,
+        entries: &[ExpertKey],
+        excluded: Option<&DetSet<ExpertKey>>,
+        ctx: &CacheCtx,
+    ) -> ExpertKey {
+        let fc = ctx.fetch_cost;
+        if self.heap.len() != entries.len() {
+            // ad-hoc slice use — reference scan
+            let (snap, freq, age) = (&self.snap, &self.freq, self.age);
+            let h = |e: &ExpertKey| {
+                snap.get(e).copied().unwrap_or(age)
+                    + freq.get(e).copied().unwrap_or(0) as f64 * fc
+            };
+            let key = pick_min(entries, excluded, |e| (h(e), *e));
+            self.last_victim = Some((key, h(&key)));
+            return key;
+        }
+        if fc != self.last_cost {
+            // the cost changed under us: resolved priorities are stale for
+            // every key, not just touched ones — re-key the whole heap
+            // (sorted sweep for determinism)
+            for key in self.heap.sorted_keys() {
+                self.heap.update(key, NEEDS_PRIORITY);
+            }
+            self.last_cost = fc;
+        }
+        let (snap, freq, age) = (&self.snap, &self.freq, self.age);
+        let resolve = |k: ExpertKey| {
+            snap.get(&k).copied().unwrap_or(age) + freq.get(&k).copied().unwrap_or(0) as f64 * fc
+        };
+        match self.heap.min_entry(excluded, resolve) {
+            Some(top) => {
+                self.last_victim = Some((top.key, top.p));
+                top.key
+            }
+            None => {
+                // every resident entry excluded: exclusion is void
+                let (snap, freq, age) = (&self.snap, &self.freq, self.age);
+                let h = |e: &ExpertKey| {
+                    snap.get(e).copied().unwrap_or(age)
+                        + freq.get(e).copied().unwrap_or(0) as f64 * fc
+                };
+                let key = pick_min(entries, None, |e| (h(e), *e));
+                self.last_victim = Some((key, h(&key)));
+                key
+            }
+        }
+    }
+    fn on_access(&mut self, key: ExpertKey) {
+        self.touch(key);
+    }
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.touch(key);
+    }
+    fn on_evict(&mut self, key: ExpertKey) {
+        if let Some((vk, h)) = self.last_victim {
+            if vk == key {
+                // greedy-dual inflation: the floor rises to the evicted H
+                self.age = h;
+                self.last_victim = None;
+            }
+        }
+        self.freq.remove(&key);
+        self.snap.remove(&key);
+        self.heap.remove(key);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::{CacheCtx, ExpertCache};
+    use crate::cache::{CacheCtx, CacheTier, ExpertCache};
     use crate::trace::Eam;
 
     fn k(l: usize, e: usize) -> ExpertKey {
@@ -603,10 +1054,7 @@ mod tests {
         eam.record(0, 0, 10); // L0E0 hot
         eam.record(3, 1, 1); // L3E1 cold-ish, late layer
         eam.record(1, 2, 5); // L1E2 warm
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&eam, 4);
         let mut p = ActivationPolicy::new();
         let entries = vec![k(0, 0), k(3, 1), k(1, 2)];
         // L3E1: ratio 1.0 but decay 0.25; L0E0: ratio 1.0 decay 1.0;
@@ -617,10 +1065,7 @@ mod tests {
     #[test]
     fn activation_policy_prefers_early_layers_at_equal_ratio() {
         let eam = Eam::new(4, 4); // all ratios zero
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&eam, 4);
         let mut p = ActivationPolicy::new();
         let entries = vec![k(0, 0), k(2, 0), k(3, 0)];
         assert_eq!(p.victim(&entries, None, &ctx), k(3, 0), "latest layer evicted first");
@@ -632,10 +1077,7 @@ mod tests {
         eam.record(3, 0, 10); // late layer, hot (ratio 1.0 in its row)
         eam.record(0, 1, 1); // early layer, cold (ratio 0.1 in its row)
         eam.record(0, 3, 9); // make layer-0 row sum 10 so E1's ratio is low
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&eam, 4);
         let entries = vec![k(3, 0), k(0, 1)];
         // ratio-only: evicts the cold one
         let mut ratio_only = ActivationPolicy::with_terms(true, false);
@@ -648,10 +1090,7 @@ mod tests {
     #[test]
     fn activation_victim_respects_exclusion() {
         let eam = Eam::new(4, 4);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&eam, 4);
         let mut p = ActivationPolicy::new();
         let entries = vec![k(0, 0), k(3, 0)];
         let protected: DetSet<ExpertKey> = [k(3, 0)].into_iter().collect();
@@ -683,10 +1122,7 @@ mod tests {
             if step % 11 == 0 {
                 protected.clear();
             }
-            let ctx = CacheCtx {
-                cur_eam: &eam,
-                n_layers: 4,
-            };
+            let ctx = CacheCtx::new(&eam, 4);
             let excl = if protected.is_empty() { None } else { Some(&protected) };
             let a = scan.victim(&entries, excl, &ctx);
             let b = heap.victim(&entries, excl, &ctx);
@@ -698,10 +1134,7 @@ mod tests {
     fn indexed_tracks_evictions_and_inserts() {
         let mut eam = Eam::new(2, 8);
         eam.record(0, 0, 10);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 2,
-        };
+        let ctx = CacheCtx::new(&eam, 2);
         let mut c = ExpertCache::new(2, Box::new(IndexedActivationPolicy::new()));
         c.insert(k(0, 0), &ctx); // hot (ratio 1.0)
         c.insert(k(0, 1), &ctx); // cold
@@ -716,10 +1149,7 @@ mod tests {
     #[test]
     fn lru_evicts_least_recent() {
         let eam = Eam::new(1, 8);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 1,
-        };
+        let ctx = CacheCtx::new(&eam, 1);
         let mut c = ExpertCache::new(2, Box::new(LruPolicy::new()));
         c.insert(k(0, 0), &ctx);
         c.insert(k(0, 1), &ctx);
@@ -731,10 +1161,7 @@ mod tests {
     #[test]
     fn lfu_evicts_least_frequent_and_resets() {
         let eam = Eam::new(1, 8);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 1,
-        };
+        let ctx = CacheCtx::new(&eam, 1);
         let mut c = ExpertCache::new(2, Box::new(LfuPolicy::new()));
         c.insert(k(0, 0), &ctx);
         for _ in 0..5 {
@@ -754,10 +1181,7 @@ mod tests {
     #[test]
     fn neighbor_keeps_contiguous_runs() {
         let eam = Eam::new(1, 8);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 1,
-        };
+        let ctx = CacheCtx::new(&eam, 1);
         let mut p = NeighborPolicy::new();
         // 0,1,2 contiguous; 5 isolated
         let entries = vec![k(0, 0), k(0, 1), k(0, 2), k(0, 5)];
@@ -770,10 +1194,7 @@ mod tests {
         // A next at 3, B at 4 -> evict B.
         let trace = vec![k(0, 0), k(0, 1), k(0, 2), k(0, 0), k(0, 1)];
         let eam = Eam::new(1, 8);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 1,
-        };
+        let ctx = CacheCtx::new(&eam, 1);
         let mut c = ExpertCache::new(2, Box::new(OraclePolicy::from_trace(&trace)));
         // replay
         c.access(trace[0]);
@@ -787,6 +1208,102 @@ mod tests {
     }
 
     #[test]
+    fn lfuda_aging_lets_new_entries_displace_stale_hot_ones() {
+        // Plain LFU would pin a once-hot entry forever; LFU-DA's age term
+        // (K = freq + age, age := K(victim) on evict) lets a stream of
+        // newcomers catch up with and displace it.
+        let eam = Eam::new(1, 8);
+        let ctx = CacheCtx::new(&eam, 1);
+        let mut c = ExpertCache::new(2, Box::new(LfuDaPolicy::new()));
+        let hot = k(0, 0);
+        c.insert(hot, &ctx);
+        for _ in 0..4 {
+            c.access(hot); // freq 5 -> K = 5 at age 0
+        }
+        // each one-shot newcomer evicts its predecessor (K = 1 + age) and
+        // raises the age; by the 6th the age has climbed to 4, the newcomer
+        // ties the hot entry at K = 5, and the key tie-break evicts hot.
+        let mut hot_evicted_at = None;
+        for e in 1..8 {
+            if let Some(ev) = c.insert(k(0, e), &ctx) {
+                if ev == hot {
+                    hot_evicted_at = Some(e);
+                    break;
+                }
+            }
+        }
+        assert_eq!(hot_evicted_at, Some(6), "aging displaced the stale hot entry");
+    }
+
+    #[test]
+    fn slru_protects_reaccessed_entries_from_scan_flush() {
+        // One-touch entries stay in probation and absorb a scan; the
+        // re-accessed entry sits in the protected segment and survives.
+        let eam = Eam::new(1, 16);
+        let ctx = CacheCtx::new(&eam, 1);
+        let mut c = ExpertCache::new(4, Box::new(SlruPolicy::new(4)));
+        let a = k(0, 0);
+        let b = k(0, 1);
+        c.insert(a, &ctx);
+        c.insert(b, &ctx);
+        assert!(c.access(a), "a must hit"); // promotes a to protected
+        for e in 2..8 {
+            if !c.access(k(0, e)) {
+                c.insert(k(0, e), &ctx);
+            }
+        }
+        assert!(c.contains(a), "protected entry survives the scan");
+        assert!(!c.contains(b), "one-touch probation entry is flushed");
+    }
+
+    #[test]
+    fn slru_demotes_protected_lru_when_segment_overflows() {
+        // capacity 5 -> protected budget 4; the 5th promotion demotes the
+        // least-recently-promoted protected entry back to probation, where
+        // the next insert evicts it.
+        let eam = Eam::new(1, 16);
+        let ctx = CacheCtx::new(&eam, 1);
+        let mut c = ExpertCache::new(5, Box::new(SlruPolicy::new(5)));
+        for e in 0..5 {
+            c.insert(k(0, e), &ctx);
+        }
+        for e in 0..5 {
+            assert!(c.access(k(0, e)), "warm-up access must hit");
+        }
+        // k(0,0) was promoted first, so the budget overflow demoted it; it
+        // is now the only probation entry and the unique eviction candidate.
+        let ev = c.insert(k(0, 5), &ctx).unwrap();
+        assert_eq!(ev, k(0, 0), "demoted protected-LRU entry is evicted");
+    }
+
+    #[test]
+    fn gdsf_fetch_cost_flips_frequency_vs_recency() {
+        // GDSF scores H = age-at-touch + freq * fetch_cost: a cheap tier
+        // (low cost) discounts frequency and evicts the hot-but-stale entry;
+        // an expensive tier keeps it. Changing the cost between picks also
+        // exercises the heap's re-key sweep.
+        let eam = Eam::new(1, 8);
+        let ctx = CacheCtx::new(&eam, 1);
+        let (a, b, d) = (k(0, 0), k(0, 1), k(0, 3));
+        let mut p = GdsfPolicy::new();
+        p.on_insert(a);
+        p.on_access(a);
+        p.on_access(a); // freq 3, snapped age 0
+        p.on_insert(d); // freq 1, snapped age 0
+        // cost 2.0: H_a = 0 + 3*2 = 6, H_d = 0 + 1*2 = 2 -> evict d
+        let v = p.victim(&[a, d], None, &ctx.for_tier(CacheTier::Gpu, 2.0));
+        assert_eq!(v, d);
+        p.on_evict(d); // age := H(d) = 2
+        p.on_insert(b); // freq 1, snapped age 2
+        // cost 0.5: H_a = 0 + 1.5 = 1.5, H_b = 2 + 0.5 = 2.5 -> evict a
+        let v = p.victim(&[a, b], None, &ctx.for_tier(CacheTier::Gpu, 0.5));
+        assert_eq!(v, a, "cheap refills discount frequency");
+        // cost 3.0: H_a = 0 + 9 = 9, H_b = 2 + 3 = 5 -> evict b
+        let v = p.victim(&[a, b], None, &ctx.for_tier(CacheTier::Gpu, 3.0));
+        assert_eq!(v, b, "expensive refills protect the frequent entry");
+    }
+
+    #[test]
     fn oracle_beats_lru_on_looping_trace() {
         // classic LRU-adversarial loop: 0 1 2 0 1 2 ... with capacity 2.
         let mut trace = Vec::new();
@@ -796,10 +1313,7 @@ mod tests {
             }
         }
         let eam = Eam::new(1, 8);
-        let ctx = CacheCtx {
-            cur_eam: &eam,
-            n_layers: 1,
-        };
+        let ctx = CacheCtx::new(&eam, 1);
         let run = |policy: Box<dyn Policy>| -> f64 {
             let mut c = ExpertCache::new(2, policy);
             for &key in &trace {

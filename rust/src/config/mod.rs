@@ -199,6 +199,22 @@ pub struct MemoryConfig {
     /// DRAM→GPU (PCIe) bandwidth, GB/s.
     pub pcie_bw: f64,
     pub n_gpus: usize,
+    /// GPU-tier eviction policy override: a [`CacheKind`] name
+    /// ("activation", "lru", "lfu", "lfuda", "slru", "gdsf", "neighbor"),
+    /// or "auto" to keep whatever the system bundle selects. "oracle"
+    /// is rejected here — it needs a programmatic future trace and is
+    /// bench-only.
+    pub gpu_policy: String,
+    /// DRAM-tier eviction policy override (same names as `gpu_policy`).
+    pub dram_policy: String,
+    /// SSD rated IOPS for the per-op cost model on the SSD→DRAM link
+    /// (FlashMoE: per-op service cost, not bandwidth, bottlenecks expert
+    /// reads on edge SSDs). 0.0 — the default — disables the term, which
+    /// is the bitwise-pinned pre-IOPS link model.
+    pub ssd_iops: f64,
+    /// Queue depth the IOPS term charges per op (>= 1.0; only read when
+    /// `ssd_iops > 0`).
+    pub ssd_queue_depth: f64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -241,6 +257,10 @@ impl Default for ServeConfig {
                 ssd_bw: 6.0,
                 pcie_bw: 32.0,
                 n_gpus: 1,
+                gpu_policy: "auto".into(),
+                dram_policy: "auto".into(),
+                ssd_iops: 0.0,
+                ssd_queue_depth: 1.0,
             },
             eamc: EamcConfig {
                 capacity: 120,
@@ -312,6 +332,10 @@ impl ServeConfig {
         c.memory.ssd_bw = gf(&doc, "memory.ssd_bw", c.memory.ssd_bw);
         c.memory.pcie_bw = gf(&doc, "memory.pcie_bw", c.memory.pcie_bw);
         c.memory.n_gpus = gu(&doc, "memory.n_gpus", c.memory.n_gpus);
+        c.memory.gpu_policy = gs(&doc, "memory.gpu_policy", &c.memory.gpu_policy);
+        c.memory.dram_policy = gs(&doc, "memory.dram_policy", &c.memory.dram_policy);
+        c.memory.ssd_iops = gf(&doc, "memory.ssd_iops", c.memory.ssd_iops);
+        c.memory.ssd_queue_depth = gf(&doc, "memory.ssd_queue_depth", c.memory.ssd_queue_depth);
         c.eamc.capacity = gu(&doc, "eamc.capacity", c.eamc.capacity);
         c.eamc.trace_sequences = gu(&doc, "eamc.trace_sequences", c.eamc.trace_sequences);
         c.faults.ssd_failure_p = gf(&doc, "faults.ssd_failure_p", c.faults.ssd_failure_p);
@@ -364,6 +388,10 @@ impl ServeConfig {
         d.set_num("memory.ssd_bw", self.memory.ssd_bw);
         d.set_num("memory.pcie_bw", self.memory.pcie_bw);
         d.set_num("memory.n_gpus", self.memory.n_gpus as f64);
+        d.set_str("memory.gpu_policy", &self.memory.gpu_policy);
+        d.set_str("memory.dram_policy", &self.memory.dram_policy);
+        d.set_num("memory.ssd_iops", self.memory.ssd_iops);
+        d.set_num("memory.ssd_queue_depth", self.memory.ssd_queue_depth);
         d.set_num("eamc.capacity", self.eamc.capacity as f64);
         d.set_num("eamc.trace_sequences", self.eamc.trace_sequences as f64);
         d.set_num("faults.ssd_failure_p", self.faults.ssd_failure_p);
@@ -442,6 +470,44 @@ impl ServeConfig {
                 "workload flash window [{}, {}) must be finite with end >= start",
                 self.workload.flash_start,
                 self.workload.flash_end
+            ));
+        }
+        for (knob, name) in [
+            ("memory.gpu_policy", &self.memory.gpu_policy),
+            ("memory.dram_policy", &self.memory.dram_policy),
+        ] {
+            if name.as_str() == "auto" {
+                continue; // keep the system bundle's choice
+            }
+            match CacheKind::by_name(name) {
+                Some(CacheKind::Oracle) => {
+                    return Err(anyhow!(
+                        "{knob} = \"oracle\" is bench-only: Belady needs a \
+                         programmatic future access trace, which a static \
+                         config cannot carry (perf_tiers builds one)"
+                    ));
+                }
+                Some(_) => {}
+                None => {
+                    return Err(anyhow!(
+                        "unknown {knob} '{name}' (expected \"auto\" or one of \
+                         activation|lru|lfu|lfuda|slru|gdsf|neighbor)"
+                    ));
+                }
+            }
+        }
+        if !self.memory.ssd_iops.is_finite() || self.memory.ssd_iops < 0.0 {
+            return Err(anyhow!(
+                "memory.ssd_iops must be finite and >= 0 (0 disables the \
+                 per-op cost model), got {}",
+                self.memory.ssd_iops
+            ));
+        }
+        if !self.memory.ssd_queue_depth.is_finite() || self.memory.ssd_queue_depth <= 0.0 {
+            return Err(anyhow!(
+                "memory.ssd_queue_depth must be finite and > 0 (each op \
+                 queues behind that many outstanding ops), got {}",
+                self.memory.ssd_queue_depth
             ));
         }
         let f = &self.faults;
@@ -564,12 +630,31 @@ impl ServeConfig {
             n_gpus: self.memory.n_gpus,
             demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
-            cache_kind: CacheKind::Activation,
+            gpu_policy: CacheKind::Activation,
+            dram_policy: CacheKind::Activation,
             oracle_trace: Vec::new(),
             activation_terms: (true, true),
             prefetch_gpu_budget: 0.5,
         };
-        crate::baselines::apply_system(&self.system, base)
+        let mut t = crate::baselines::apply_system(&self.system, base)?;
+        // per-tier overrides layer on top of the bundle ("auto" = keep);
+        // validate() already rejected unknown names and "oracle"
+        if self.memory.gpu_policy != "auto" {
+            if let Some(kind) = CacheKind::by_name(&self.memory.gpu_policy) {
+                t.gpu_policy = kind;
+            }
+        }
+        if self.memory.dram_policy != "auto" {
+            if let Some(kind) = CacheKind::by_name(&self.memory.dram_policy) {
+                t.dram_policy = kind;
+            }
+        }
+        if self.memory.ssd_iops > 0.0 {
+            t.ssd_to_dram = t
+                .ssd_to_dram
+                .with_iops(self.memory.ssd_iops, self.memory.ssd_queue_depth);
+        }
+        Ok(t)
     }
 
     pub fn predictor_kind(&self) -> Result<PredictorKind> {
@@ -785,6 +870,53 @@ mod tests {
             ServeConfig::from_toml("[workload]\nflash_rps = 100.0\nflash_start = 2.0\nflash_end = 2.0")
                 .is_ok()
         );
+    }
+
+    #[test]
+    fn per_tier_policies_parse_roundtrip_and_apply() {
+        let c = ServeConfig::from_toml(
+            "[memory]\ngpu_policy = \"slru\"\ndram_policy = \"gdsf\"\nssd_iops = 50000.0\nssd_queue_depth = 8.0\n",
+        )
+        .unwrap();
+        assert_eq!(c.memory.gpu_policy, "slru");
+        assert_eq!(c.memory.dram_policy, "gdsf");
+        let back = ServeConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, back);
+        let t = c.tier_config().unwrap();
+        assert_eq!(t.gpu_policy, CacheKind::Slru);
+        assert_eq!(t.dram_policy, CacheKind::Gdsf);
+        assert!(t.ssd_to_dram.iops.is_some(), "iops term attached to SSD link");
+        assert!(t.dram_to_gpu.iops.is_none(), "PCIe link stays pure-bandwidth");
+        // "auto" defers to the system bundle and leaves the link plain —
+        // the bitwise-default serving path
+        let d = ServeConfig::default();
+        assert_eq!(d.memory.gpu_policy, "auto");
+        assert_eq!(d.memory.ssd_iops, 0.0);
+        let td = d.tier_config().unwrap();
+        assert_eq!(td.gpu_policy, CacheKind::Activation);
+        assert_eq!(td.dram_policy, CacheKind::Activation);
+        assert!(td.ssd_to_dram.iops.is_none());
+        // an override on one tier keeps the bundle's choice on the other
+        let g = ServeConfig::from_toml("[memory]\ndram_policy = \"lfuda\"\n").unwrap();
+        let tg = g.tier_config().unwrap();
+        assert_eq!(tg.gpu_policy, CacheKind::Activation);
+        assert_eq!(tg.dram_policy, CacheKind::Lfuda);
+    }
+
+    #[test]
+    fn invalid_tier_policy_configs_rejected() {
+        assert!(ServeConfig::from_toml("[memory]\ngpu_policy = \"belady\"").is_err());
+        assert!(ServeConfig::from_toml("[memory]\ndram_policy = \"fifo\"").is_err());
+        // oracle is bench-only: a static config cannot carry its trace
+        assert!(ServeConfig::from_toml("[memory]\ngpu_policy = \"oracle\"").is_err());
+        assert!(ServeConfig::from_toml("[memory]\nssd_iops = -1.0").is_err());
+        assert!(ServeConfig::from_toml("[memory]\nssd_queue_depth = 0.0").is_err());
+        assert!(ServeConfig::from_toml("[memory]\nssd_queue_depth = -2.0").is_err());
+        // every non-oracle zoo member is accepted on either tier
+        for kind in ["activation", "lru", "lfu", "lfuda", "slru", "gdsf", "neighbor"] {
+            let toml = format!("[memory]\ngpu_policy = \"{kind}\"\ndram_policy = \"{kind}\"\n");
+            assert!(ServeConfig::from_toml(&toml).is_ok(), "{kind} must validate");
+        }
     }
 
     #[test]

@@ -264,10 +264,7 @@ impl RealMoeEngine {
                     // the tiny real model re-predicts rarely; the naive
                     // nearest scan is fine here (no matcher handle threaded)
                     self.predictor.predict(&cur_eams[row], &self.eamc, None, l, &mut buf);
-                    let ctx = CacheCtx {
-                        cur_eam: batch_eam,
-                        n_layers: c.n_layers,
-                    };
+                    let ctx = CacheCtx::new(batch_eam, c.n_layers);
                     for &(key, prio) in buf.iter() {
                         if prio > crate::prefetch::EPSILON {
                             self.sim
@@ -285,10 +282,7 @@ impl RealMoeEngine {
             experts.dedup();
             for &e in &experts {
                 let key = ExpertKey::new(l, e as usize);
-                let ctx = CacheCtx {
-                    cur_eam: batch_eam,
-                    n_layers: c.n_layers,
-                };
+                let ctx = CacheCtx::new(batch_eam, c.n_layers);
                 // virtual-time offloading accounting
                 let vt_before_wall = t0.elapsed().as_secs_f64();
                 let vt_now = self.vtime + vt_before_wall + stall;

@@ -425,10 +425,7 @@ impl SimEngine {
     /// Idle the engine until `t` (arrivals later than the current clock).
     pub fn idle_until(&mut self, t: f64) {
         if t > self.clock {
-            let ctx = CacheCtx {
-                cur_eam: &self.idle_eam,
-                n_layers: self.spec.n_layers,
-            };
+            let ctx = CacheCtx::new(&self.idle_eam, self.spec.n_layers);
             self.sim.advance_to(SimTime::from_f64(t), &ctx);
             self.clock = t;
         }
@@ -1017,10 +1014,7 @@ impl<'e> BatchSession<'e> {
                     };
                     eng.predictor
                         .predict(&eng.cur_eams[slot], &eng.eamc, matcher, l, &mut buf);
-                    let ctx = CacheCtx {
-                        cur_eam: &eng.batch_eam,
-                        n_layers,
-                    };
+                    let ctx = CacheCtx::new(&eng.batch_eam, n_layers);
                     for &(key, prio) in buf.iter() {
                         // Only experts with a positive predicted
                         // activation ratio are worth PCIe bandwidth;
@@ -1051,10 +1045,7 @@ impl<'e> BatchSession<'e> {
                         continue; // demanded (and counted) below
                     }
                     let key = ExpertKey::new(l, e);
-                    let ctx = CacheCtx {
-                        cur_eam: &eng.batch_eam,
-                        n_layers,
-                    };
+                    let ctx = CacheCtx::new(&eng.batch_eam, n_layers);
                     let ready = eng.sim.demand(key, SimTime::from_f64(t), &ctx).to_f64();
                     t = ready;
                 }
@@ -1066,10 +1057,7 @@ impl<'e> BatchSession<'e> {
                 let e = eng.union_active[idx];
                 let tokens = eng.union_tokens[e as usize];
                 let key = ExpertKey::new(l, e as usize);
-                let ctx = CacheCtx {
-                    cur_eam: &eng.batch_eam,
-                    n_layers,
-                };
+                let ctx = CacheCtx::new(&eng.batch_eam, n_layers);
                 let on_gpu_before = eng.sim.is_on_gpu(key);
                 let ready = eng.sim.demand(key, SimTime::from_f64(t), &ctx).to_f64();
                 out.demands += 1;
@@ -1192,7 +1180,8 @@ mod tests {
             n_gpus: 1,
             demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
-            cache_kind: kind,
+            gpu_policy: kind,
+            dram_policy: kind,
             oracle_trace: Vec::new(),
             activation_terms: (true, true),
             prefetch_gpu_budget: 0.5,

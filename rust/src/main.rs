@@ -97,6 +97,12 @@ fn run() -> Result<()> {
                  \x20        [--flash-rps <f>] [--flash-start <s>] [--flash-end <s>]  flash-crowd\n\
                  \x20        overlay: arrivals draw at flash-rps inside the window (0 = off,\n\
                  \x20        the historical single-rate stream)\n\
+                 \x20        [--gpu-policy <kind>] [--dram-policy <kind>]  per-tier eviction\n\
+                 \x20        override: activation|lru|lfu|lfuda|slru|gdsf|neighbor (default\n\
+                 \x20        \"auto\" keeps the system bundle's choice; oracle is bench-only)\n\
+                 \x20        [--ssd-iops <f>] [--ssd-queue-depth <f>]  SSD per-op cost model:\n\
+                 \x20        each SSD->DRAM transfer pays queue-depth/IOPS on top of the\n\
+                 \x20        bandwidth term (0 IOPS = off, the pre-IOPS link model)\n\
                  \x20        [--ssd-failure-p <p>] [--gpu-failure-p <p>]  per-transfer transient\n\
                  \x20        failure probability on each link (deterministic, seeded; retried\n\
                  \x20        with capped exponential backoff in simulated time)\n\
@@ -189,6 +195,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     if let Some(t) = args.get_f64("flash-end")? {
         cfg.workload.flash_end = t;
+    }
+    if let Some(p) = args.get("gpu-policy") {
+        cfg.memory.gpu_policy = p.into();
+    }
+    if let Some(p) = args.get("dram-policy") {
+        cfg.memory.dram_policy = p.into();
+    }
+    if let Some(i) = args.get_f64("ssd-iops")? {
+        cfg.memory.ssd_iops = i;
+    }
+    if let Some(q) = args.get_f64("ssd-queue-depth")? {
+        cfg.memory.ssd_queue_depth = q;
     }
     if let Some(p) = args.get_f64("ssd-failure-p")? {
         cfg.faults.ssd_failure_p = p;

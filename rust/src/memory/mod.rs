@@ -29,6 +29,28 @@ pub enum Tier {
     Gpu,
 }
 
+/// Per-operation I/O cost for links whose bottleneck is request service
+/// rate, not stream bandwidth (SSDs under small expert reads — FlashMoE's
+/// observation that per-op cost, not bandwidth, is the edge bottleneck).
+///
+/// Each transfer pays `queue_depth / iops` on top of the bandwidth term:
+/// at the device's rated IOPS, an op admitted behind `queue_depth`
+/// outstanding ops waits that many service slots.
+#[derive(Debug, Clone, Copy)]
+pub struct IopsModel {
+    /// Rated operations per second of the device.
+    pub iops: f64,
+    /// Outstanding ops an arrival queues behind (≥ 1.0; 1.0 = unloaded).
+    pub queue_depth: f64,
+}
+
+impl IopsModel {
+    /// Per-op service cost added to every transfer on the link.
+    pub fn op_cost(&self) -> SimTime {
+        SimTime::from_f64(self.queue_depth / self.iops)
+    }
+}
+
 /// One directional transfer link with FIFO, non-preemptible service.
 #[derive(Debug, Clone)]
 pub struct Link {
@@ -37,6 +59,9 @@ pub struct Link {
     /// Fixed per-transfer setup latency (DMA setup, page-table work; the
     /// §8.6 optimizations lower this).
     pub latency: SimTime,
+    /// Optional per-op IOPS cost (None = pure bandwidth/latency model,
+    /// bitwise-identical to the pre-IOPS link).
+    pub iops: Option<IopsModel>,
 }
 
 impl Link {
@@ -46,12 +71,24 @@ impl Link {
         Link {
             bandwidth: Bandwidth::from_gb_per_s(gb_s),
             latency: SimTime::from_f64(setup_s),
+            iops: None,
         }
+    }
+
+    /// Attach an IOPS/queue-depth term (builder over [`Link::new`]).
+    pub fn with_iops(mut self, iops: f64, queue_depth: f64) -> Link {
+        self.iops = Some(IopsModel { iops, queue_depth });
+        self
     }
 
     /// Service time for one expert of `bytes`.
     pub fn transfer_time(&self, bytes: Bytes) -> SimTime {
-        self.latency + bytes / self.bandwidth
+        match self.iops {
+            // default path: literally the pre-IOPS expression (bitwise pin
+            // below relies on this arm staying untouched)
+            None => self.latency + bytes / self.bandwidth,
+            Some(m) => self.latency + bytes / self.bandwidth + m.op_cost(),
+        }
     }
 }
 
@@ -71,6 +108,30 @@ mod tests {
     fn latency_adds_fixed_cost() {
         let l = Link::new(1.0, 0.5);
         assert!((l.transfer_time(Bytes::ZERO).to_f64() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iops_term_adds_per_op_cost() {
+        // 100k IOPS at queue depth 8 -> 80us per op on top of the stream
+        let base = Link::new(3.2, 0.0);
+        let l = Link::new(3.2, 0.0).with_iops(100_000.0, 8.0);
+        let b = Bytes::from_u64(26_214_400);
+        let dt = l.transfer_time(b) - base.transfer_time(b);
+        assert!((dt.to_f64() - 8.0e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iops_off_is_bitwise_the_plain_link() {
+        // the default-off contract: a Link without with_iops() must produce
+        // bit-identical times to the pre-IOPS model
+        let plain = Link::new(1.6, 1e-4);
+        for &bytes in &[1u64, 350_000_000, 9_999_999_999] {
+            let raw = 1e-4 + bytes as f64 / (1.6 * 1e9);
+            assert_eq!(
+                plain.transfer_time(Bytes::from_u64(bytes)).to_bits(),
+                raw.to_bits()
+            );
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! The discrete-event core: residency tracking, per-link in-flight
 //! transfers, queue drain, demand stalls.
 
-use crate::cache::{CacheCtx, CacheKind, ExpertCache, Policy};
-use crate::cache::{IndexedActivationPolicy, LfuPolicy, LruPolicy, NeighborPolicy, OraclePolicy};
+use crate::cache::{CacheCtx, CacheKind, CacheTier, ExpertCache, Policy};
+use crate::cache::{
+    GdsfPolicy, IndexedActivationPolicy, LfuDaPolicy, LfuPolicy, LruPolicy, NeighborPolicy,
+    OraclePolicy, SlruPolicy,
+};
 use crate::faults::{draw_transfer, FaultLink, FaultPlan, FaultState, TransferOutcome};
 use crate::memory::{Link, Tier};
 use crate::model::{ExpertKey, ModelSpec};
@@ -32,8 +35,12 @@ pub struct TierConfig {
     /// migrates at page granularity on touch, reaching only a fraction of
     /// the PCIe line rate; 1.0 for explicit-copy systems).
     pub demand_bw_factor: f64,
-    /// Replacement policy for both cache tiers.
-    pub cache_kind: CacheKind,
+    /// Replacement policy for the GPU expert cache. Each tier gets its own
+    /// independently configured policy (the policies themselves see which
+    /// tier they serve and its backing-fetch cost via [`CacheCtx`]).
+    pub gpu_policy: CacheKind,
+    /// Replacement policy for the host-memory expert cache.
+    pub dram_policy: CacheKind,
     /// Future access trace for `CacheKind::Oracle`.
     pub oracle_trace: Vec<ExpertKey>,
     /// Ablation terms for the activation policy (§8.4 breakdown).
@@ -61,7 +68,8 @@ impl TierConfig {
             n_gpus: 1,
             demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
-            cache_kind: CacheKind::Activation,
+            gpu_policy: CacheKind::Activation,
+            dram_policy: CacheKind::Activation,
             oracle_trace: Vec::new(),
             activation_terms: (true, true),
             prefetch_gpu_budget: 0.5,
@@ -130,7 +138,9 @@ impl MemoryStats {
     }
 
     /// Fraction of expert demands served without any blocking transfer.
-    /// Zero-demand convention: 1.0 (see [`MemoryStats::prefetch_coverage`]).
+    /// Zero-demand convention: 1.0 (see [`MemoryStats::prefetch_coverage`];
+    /// [`crate::cache::ExpertCache::hit_ratio`] follows the same
+    /// empty-denominator convention).
     pub fn gpu_hit_ratio(&self) -> f64 {
         let t = self.demand_total();
         if t == 0 {
@@ -165,6 +175,14 @@ struct Residency {
 pub struct MemorySim {
     cfg: TierConfig,
     expert_bytes: Bytes,
+    /// Per-tier backing-fetch costs stamped onto [`CacheCtx`] at insert
+    /// time so cost-aware policies (GDSF) can weigh eviction against the
+    /// price of re-fetching into that tier: the GPU tier refills over
+    /// DRAM→GPU, the DRAM tier over SSD→DRAM. Unitless from the policies'
+    /// point of view (only ratios matter), derived from one expert's
+    /// nominal transfer seconds on the tier's inbound link.
+    gpu_fetch_cost: f64,
+    dram_fetch_cost: f64,
     experts_per_layer: usize,
     residency: Vec<Residency>,
     gpu_cache: ExpertCache,
@@ -196,8 +214,10 @@ pub struct MemorySim {
     stats: MemoryStats,
 }
 
-fn make_policy(cfg: &TierConfig) -> Box<dyn Policy> {
-    match cfg.cache_kind {
+/// Build one tier's replacement policy. `capacity` is that tier's slot
+/// count (SLRU sizes its protected segment from it).
+fn make_policy(kind: CacheKind, cfg: &TierConfig, capacity: usize) -> Box<dyn Policy> {
+    match kind {
         // serving uses the O(log n) heap-indexed form of Alg. 2; it makes
         // the same decisions as the reference `ActivationPolicy` scan
         CacheKind::Activation => Box::new(IndexedActivationPolicy::with_terms(
@@ -206,6 +226,9 @@ fn make_policy(cfg: &TierConfig) -> Box<dyn Policy> {
         )),
         CacheKind::Lru => Box::new(LruPolicy::new()),
         CacheKind::Lfu => Box::new(LfuPolicy::new()),
+        CacheKind::Lfuda => Box::new(LfuDaPolicy::new()),
+        CacheKind::Slru => Box::new(SlruPolicy::new(capacity)),
+        CacheKind::Gdsf => Box::new(GdsfPolicy::new()),
         CacheKind::Neighbor => Box::new(NeighborPolicy::new()),
         CacheKind::Oracle => Box::new(OraclePolicy::from_trace(&cfg.oracle_trace)),
     }
@@ -222,20 +245,21 @@ impl MemorySim {
         // demand); `demand` can then add the value unconditionally
         cfg.demand_extra_latency = cfg.demand_extra_latency.max(SimTime::ZERO);
         let total = spec.total_experts();
-        let gpu_cap = cfg.gpu_capacity * cfg.n_gpus;
+        let gpu_cap = (cfg.gpu_capacity * cfg.n_gpus).min(total);
+        let dram_cap = if cfg.backing == Tier::Dram {
+            total
+        } else {
+            cfg.dram_capacity.min(total)
+        };
+        let eb = Bytes::from_u64(spec.expert_bytes());
         let mut sim = MemorySim {
-            expert_bytes: Bytes::from_u64(spec.expert_bytes()),
+            expert_bytes: eb,
+            gpu_fetch_cost: cfg.dram_to_gpu.transfer_time(eb).to_f64(),
+            dram_fetch_cost: cfg.ssd_to_dram.transfer_time(eb).to_f64(),
             experts_per_layer: spec.experts_per_layer,
             residency: vec![Residency::default(); total],
-            gpu_cache: ExpertCache::new(gpu_cap.min(total), make_policy(&cfg)),
-            dram_cache: ExpertCache::new(
-                if cfg.backing == Tier::Dram {
-                    total
-                } else {
-                    cfg.dram_capacity.min(total)
-                },
-                make_policy(&cfg),
-            ),
+            gpu_cache: ExpertCache::new(gpu_cap, make_policy(cfg.gpu_policy, &cfg, gpu_cap)),
+            dram_cache: ExpertCache::new(dram_cap, make_policy(cfg.dram_policy, &cfg, dram_cap)),
             q_ssd: PrefetchQueue::new(),
             q_gpu: PrefetchQueue::new(),
             ssd_busy: None,
@@ -256,10 +280,9 @@ impl MemorySim {
     /// DRAM everything is DRAM-resident by definition.
     fn initial_placement(&mut self, spec: &ModelSpec) {
         let dummy = crate::trace::Eam::new(spec.n_layers, spec.experts_per_layer);
-        let ctx = CacheCtx {
-            cur_eam: &dummy,
-            n_layers: spec.n_layers,
-        };
+        let ctx = CacheCtx::new(&dummy, spec.n_layers);
+        let gpu_ctx = ctx.for_tier(CacheTier::Gpu, self.gpu_fetch_cost);
+        let dram_ctx = ctx.for_tier(CacheTier::Dram, self.dram_fetch_cost);
         let mut placed_gpu = 0;
         let mut placed_dram = 0;
         for l in 0..spec.n_layers {
@@ -267,13 +290,13 @@ impl MemorySim {
                 let key = ExpertKey::new(l, e);
                 let idx = key.flat(self.experts_per_layer);
                 if placed_gpu < self.gpu_cache.capacity() {
-                    self.gpu_cache.insert(key, &ctx);
+                    self.gpu_cache.insert(key, &gpu_ctx);
                     self.residency[idx].gpu = true;
                     placed_gpu += 1;
                 } else if self.cfg.backing == Tier::Dram {
                     self.residency[idx].dram = true;
                 } else if placed_dram < self.dram_cache.capacity() {
-                    self.dram_cache.insert(key, &ctx);
+                    self.dram_cache.insert(key, &dram_ctx);
                     self.residency[idx].dram = true;
                     placed_dram += 1;
                 }
@@ -502,7 +525,10 @@ impl MemorySim {
             return;
         }
         let idx = f.key.flat(self.experts_per_layer);
-        if let Some(evicted) = self.dram_cache.insert(f.key, ctx) {
+        // re-stamp the caller's ctx with this tier's identity and fetch
+        // cost so the DRAM policy sees its own backing link, not the GPU's
+        let ctx = ctx.for_tier(CacheTier::Dram, self.dram_fetch_cost);
+        if let Some(evicted) = self.dram_cache.insert(f.key, &ctx) {
             self.residency[evicted.flat(self.experts_per_layer)].dram = false;
         }
         self.residency[idx].dram = true;
@@ -530,7 +556,9 @@ impl MemorySim {
             return;
         }
         let idx = f.key.flat(self.experts_per_layer);
-        if let Some(evicted) = self.gpu_cache.insert(f.key, ctx) {
+        // GPU-tier identity: refills come over the DRAM→GPU link
+        let ctx = ctx.for_tier(CacheTier::Gpu, self.gpu_fetch_cost);
+        if let Some(evicted) = self.gpu_cache.insert(f.key, &ctx) {
             self.residency[evicted.flat(self.experts_per_layer)].gpu = false;
         }
         self.residency[idx].gpu = true;
@@ -665,9 +693,17 @@ impl MemorySim {
     /// nothing. Without an installed fault state this reproduces
     /// `Link::transfer_time` (+ the demand bandwidth factor) bit for bit.
     fn transfer_duration(&mut self, link: FaultLink, g: usize, key: ExpertKey, prio: f64) -> (SimTime, bool) {
-        let (lat, bw) = match link {
-            FaultLink::SsdToDram => (self.cfg.ssd_to_dram.latency, self.cfg.ssd_to_dram.bandwidth),
-            FaultLink::DramToGpu => (self.cfg.dram_to_gpu.latency, self.cfg.dram_to_gpu.bandwidth),
+        let (lat, bw, op) = match link {
+            FaultLink::SsdToDram => (
+                self.cfg.ssd_to_dram.latency,
+                self.cfg.ssd_to_dram.bandwidth,
+                self.cfg.ssd_to_dram.iops,
+            ),
+            FaultLink::DramToGpu => (
+                self.cfg.dram_to_gpu.latency,
+                self.cfg.dram_to_gpu.bandwidth,
+                self.cfg.dram_to_gpu.iops,
+            ),
         };
         let mut dt = lat + self.expert_bytes / bw;
         if let Some(fs) = self.faults.as_deref() {
@@ -678,6 +714,14 @@ impl MemorySim {
         }
         if prio == MAX_PRIORITY && self.cfg.demand_bw_factor < 1.0 {
             dt /= self.cfg.demand_bw_factor;
+        }
+        // per-op I/O service cost (IOPS model): an I/O-scheduler term, not a
+        // bandwidth term — added after brownout scaling and the UM demand
+        // factor, which both model stream-rate degradation. `if let` gating
+        // (not `+ 0.0`) keeps the default path instruction-identical, so the
+        // bitwise replays below hold with the model off.
+        if let Some(m) = op {
+            dt += m.op_cost();
         }
         let p = match (self.faults.as_deref(), link) {
             (None, _) => return (dt, false),
@@ -753,7 +797,8 @@ mod tests {
             n_gpus: 1,
             demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
-            cache_kind: CacheKind::Lru,
+            gpu_policy: CacheKind::Lru,
+            dram_policy: CacheKind::Lru,
             oracle_trace: Vec::new(),
             activation_terms: (true, true),
             prefetch_gpu_budget: 0.5,
@@ -786,10 +831,7 @@ mod tests {
     fn demand_gpu_hit_costs_nothing() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(10, 10, Tier::Ssd));
         let t = sim.demand(ExpertKey::new(0, 0), st(1.0), &ctx);
         assert_eq!(t, 1.0);
@@ -801,10 +843,7 @@ mod tests {
     fn demand_from_dram_takes_one_hop() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
         let key = ExpertKey::new(2, 0); // in DRAM (flat idx 16 < 10+32)
         assert!(sim.is_in_dram(key));
@@ -820,10 +859,7 @@ mod tests {
     fn demand_from_ssd_takes_two_hops() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 4, Tier::Ssd));
         let key = ExpertKey::new(3, 7); // beyond both caches
         assert!(!sim.is_in_dram(key) && !sim.is_on_gpu(key));
@@ -839,10 +875,7 @@ mod tests {
     fn dram_backing_never_touches_ssd() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(2, 0, Tier::Dram));
         let key = ExpertKey::new(3, 7);
         assert!(sim.is_in_dram(key));
@@ -857,10 +890,7 @@ mod tests {
     fn prefetch_hides_transfer_latency() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         let key = ExpertKey::new(2, 5); // DRAM-resident
         sim.submit_prefetch(key, 0.9, st(0.0), &ctx);
@@ -879,10 +909,7 @@ mod tests {
     fn demand_jumps_prefetch_queue_but_not_in_flight() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         // fill the DRAM→GPU link with a prefetch, queue two more
         sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
@@ -903,10 +930,7 @@ mod tests {
     fn two_hop_pipeline_reenqueues_for_gpu() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 8, Tier::Ssd));
         let key = ExpertKey::new(3, 6); // SSD-only
         sim.submit_prefetch(key, 0.5, st(0.0), &ctx);
@@ -919,10 +943,7 @@ mod tests {
     fn gpu_eviction_clears_residency() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(2, 30, Tier::Ssd));
         // GPU holds L0E0, L0E1. Demand L0E2 -> eviction of LRU (L0E0).
         let ready = sim.demand(ExpertKey::new(0, 2), st(0.0), &ctx);
@@ -938,10 +959,7 @@ mod tests {
     fn multi_gpu_links_parallelize() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut c = cfg(4, 32, Tier::Ssd);
         c.n_gpus = 2;
         let mut sim = MemorySim::new(&s, c);
@@ -958,10 +976,7 @@ mod tests {
     fn um_fault_overhead_applies_to_demand() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut c = cfg(2, 0, Tier::Dram);
         c.demand_extra_latency = st(0.01);
         let mut sim = MemorySim::new(&s, c);
@@ -969,6 +984,46 @@ mod tests {
         let ready = sim.demand(key, st(0.0), &ctx).to_f64();
         let expect = s.expert_bytes() as f64 / 10e9 + 0.01;
         assert!((ready - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ssd_iops_term_charges_per_op_cost() {
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx::new(&e, 4);
+        // 10k IOPS at queue depth 4 -> 0.4ms per SSD op
+        let mut c = cfg(4, 4, Tier::Ssd);
+        c.ssd_to_dram = Link::new(1.0, 0.0).with_iops(10_000.0, 4.0);
+        let mut sim = MemorySim::new(&s, c);
+        let key = ExpertKey::new(3, 7); // SSD-only: two hops
+        let ready = sim.demand(key, st(0.0), &ctx).to_f64();
+        let eb = s.expert_bytes() as f64;
+        let expect = (eb / 1e9 + 4.0 / 10_000.0) + eb / 10e9;
+        assert!(
+            (ready - expect).abs() < 1e-9,
+            "ready {ready} expect {expect} (op cost only on the SSD hop)"
+        );
+    }
+
+    #[test]
+    fn tiers_run_independent_policies() {
+        // GPU on LRU, DRAM on LFU-DA: construction and a demand sweep work
+        // end to end with heterogeneous per-tier policies
+        let s = spec();
+        let e = eam();
+        let ctx = CacheCtx::new(&e, 4);
+        let mut c = cfg(4, 8, Tier::Ssd);
+        c.gpu_policy = CacheKind::Lru;
+        c.dram_policy = CacheKind::Lfuda;
+        let mut sim = MemorySim::new(&s, c);
+        let mut t = 0.0;
+        for l in 0..4 {
+            for ex in 0..8 {
+                t = sim.demand(ExpertKey::new(l, ex), st(t), &ctx).to_f64() + 1e-4;
+            }
+        }
+        assert_eq!(sim.stats().demand_total(), 32);
+        assert!(sim.stats().demand_ssd_misses > 0, "sweep must spill to SSD");
     }
 
     #[test]
@@ -989,10 +1044,7 @@ mod tests {
     fn cancel_prefetch_drops_queued_but_not_in_flight() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         // first submit occupies the DRAM→GPU link; the next two queue behind
         sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
@@ -1013,10 +1065,7 @@ mod tests {
     fn stats_track_traffic_split() {
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 32, Tier::Ssd));
         sim.submit_prefetch(ExpertKey::new(2, 0), 0.9, st(0.0), &ctx);
         sim.advance_to(st(1.0), &ctx);
@@ -1032,10 +1081,7 @@ mod tests {
         use crate::faults::FaultPlan;
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let run = |plan: Option<FaultPlan>| -> (Vec<u64>, MemoryStats) {
             let mut sim = MemorySim::new(&s, cfg(4, 8, Tier::Ssd));
             if let Some(p) = plan {
@@ -1078,10 +1124,7 @@ mod tests {
         use crate::faults::{Brownout, FaultLink, FaultPlan};
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
         let mut plan = FaultPlan::new(1);
         plan.brownouts.push(Brownout {
@@ -1111,10 +1154,7 @@ mod tests {
         // Bandwidth operators replay `lat + bytes as f64 / (bw * bf)` exactly
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
         let mut plan = FaultPlan::new(1);
         plan.brownouts.push(Brownout {
@@ -1134,10 +1174,7 @@ mod tests {
         use crate::faults::{FaultPlan, RetryPolicy};
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(10, 32, Tier::Ssd));
         let mut plan = FaultPlan::new(3);
         plan.gpu_failure_p = 0.999_999; // every attempt fails (deterministically, per stream)
@@ -1165,10 +1202,7 @@ mod tests {
         use crate::faults::{FaultPlan, RetryPolicy};
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let mut sim = MemorySim::new(&s, cfg(4, 4, Tier::Ssd));
         let mut plan = FaultPlan::new(5);
         plan.ssd_failure_p = 0.999_999;
@@ -1197,10 +1231,7 @@ mod tests {
         use crate::faults::FaultPlan;
         let s = spec();
         let e = eam();
-        let ctx = CacheCtx {
-            cur_eam: &e,
-            n_layers: 4,
-        };
+        let ctx = CacheCtx::new(&e, 4);
         let run = |seed: u64| -> Vec<u64> {
             let mut sim = MemorySim::new(&s, cfg(4, 8, Tier::Ssd));
             let mut plan = FaultPlan::new(seed);

@@ -1508,7 +1508,8 @@ mod tests {
             n_gpus: 1,
             demand_extra_latency: SimTime::ZERO,
             demand_bw_factor: 1.0,
-            cache_kind: CacheKind::Activation,
+            gpu_policy: CacheKind::Activation,
+            dram_policy: CacheKind::Activation,
             oracle_trace: Vec::new(),
             activation_terms: (true, true),
             prefetch_gpu_budget: 0.5,

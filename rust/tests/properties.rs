@@ -3,7 +3,8 @@
 //! hundreds of randomized cases; failures report the case index + seed.
 
 use moe_infinity::cache::{
-    ActivationPolicy, CacheCtx, ExpertCache, IndexedActivationPolicy, LruPolicy, Policy,
+    ActivationPolicy, CacheCtx, CacheTier, ExpertCache, GdsfPolicy, IndexedActivationPolicy,
+    LfuDaPolicy, LruPolicy, Policy, SlruPolicy,
 };
 use moe_infinity::model::{ExpertKey, ModelSpec};
 use moe_infinity::prefetch::{PrefetchQueue, MAX_PRIORITY};
@@ -147,10 +148,7 @@ fn prop_cache_capacity_and_residency_invariants() {
             };
             let mut cache = ExpertCache::new(*cap, policy);
             let eam = Eam::new(6, 32);
-            let ctx = CacheCtx {
-                cur_eam: &eam,
-                n_layers: 6,
-            };
+            let ctx = CacheCtx::new(&eam, 6);
             let mut resident = std::collections::HashSet::new();
             for &k in ops {
                 if !cache.access(k) {
@@ -403,10 +401,7 @@ fn prop_indexed_victim_matches_scan_policy() {
                         if entries.is_empty() {
                             continue;
                         }
-                        let ctx = CacheCtx {
-                            cur_eam: &eam,
-                            n_layers: l,
-                        };
+                        let ctx = CacheCtx::new(&eam, l);
                         let excl = if !protected.is_empty() && protected.len() < entries.len()
                         {
                             Some(&protected)
@@ -480,10 +475,7 @@ fn prop_cache_with_indexed_policy_matches_scan_cache() {
                     eam.record(ka % l, kb % e, 1 + tokens);
                 }
                 let key = ExpertKey::new(ka % l, kb % e);
-                let ctx = CacheCtx {
-                    cur_eam: &eam,
-                    n_layers: l,
-                };
+                let ctx = CacheCtx::new(&eam, l);
                 let hit_a = a.access(key);
                 let hit_b = b.access(key);
                 if hit_a != hit_b {
@@ -508,6 +500,371 @@ fn prop_cache_with_indexed_policy_matches_scan_cache() {
             Ok(())
         },
     );
+}
+
+/// Shared op-stream generator for the zoo-policy differentials: random
+/// interleavings of accesses, inserts, victim picks and protection toggles
+/// over a small key space.
+fn policy_ops(rng: &mut moe_infinity::util::Rng) -> Vec<(u8, usize, usize, u32)> {
+    (0..40 + rng.below(80))
+        .map(|_| {
+            (
+                rng.below(4) as u8,
+                rng.below(64),
+                rng.below(64),
+                rng.below(16) as u32,
+            )
+        })
+        .collect()
+}
+
+/// Differential: the heap-backed LFU-DA policy must pick exactly the same
+/// victim as a naive reference (scan over `K = freq-at-touch + age`, age
+/// jumping to the victim's K on eviction) under arbitrary interleavings.
+#[test]
+fn prop_lfuda_heap_matches_naive_reference() {
+    use std::collections::HashMap;
+
+    #[derive(Default)]
+    struct Naive {
+        age: u64,
+        freq: HashMap<ExpertKey, u64>,
+        kval: HashMap<ExpertKey, u64>,
+    }
+    impl Naive {
+        fn touch(&mut self, key: ExpertKey) {
+            let f = self.freq.entry(key).or_insert(0);
+            *f += 1;
+            self.kval.insert(key, *f + self.age);
+        }
+        fn victim(&self, entries: &[ExpertKey], excl: Option<&DetSet<ExpertKey>>) -> ExpertKey {
+            entries
+                .iter()
+                .copied()
+                .filter(|e| !excl.is_some_and(|x| x.contains(e)))
+                .min_by_key(|e| (self.kval.get(e).copied().unwrap_or(0), *e))
+                .expect("guard keeps at least one entry unprotected")
+        }
+        fn evict(&mut self, key: ExpertKey) {
+            self.age = self.kval.get(&key).copied().unwrap_or(0);
+            self.freq.remove(&key);
+            self.kval.remove(&key);
+        }
+    }
+
+    let eam = Eam::new(4, 8);
+    forall_res(0x1F0A, 120, policy_ops, |ops| {
+        let mut heap = LfuDaPolicy::new();
+        let mut naive = Naive::default();
+        let mut entries: Vec<ExpertKey> = Vec::new();
+        let mut protected: DetSet<ExpertKey> = DetSet::default();
+        let ctx = CacheCtx::new(&eam, 4);
+        for &(op, a, b, _c) in ops {
+            match op {
+                0 => {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    let k = entries[a % entries.len()];
+                    heap.on_access(k);
+                    naive.touch(k);
+                }
+                1 => {
+                    let k = ExpertKey::new(a % 4, b % 12);
+                    if !entries.contains(&k) {
+                        entries.push(k);
+                        heap.on_insert(k);
+                        naive.touch(k);
+                    }
+                }
+                2 => {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    let excl = if !protected.is_empty() && protected.len() < entries.len() {
+                        Some(&protected)
+                    } else {
+                        None
+                    };
+                    let va = naive.victim(&entries, excl);
+                    let vb = heap.victim(&entries, excl, &ctx);
+                    if va != vb {
+                        return Err(format!(
+                            "victims diverged: naive {va} vs heap {vb} \
+                             ({} entries, {} protected)",
+                            entries.len(),
+                            protected.len()
+                        ));
+                    }
+                    naive.evict(va);
+                    heap.on_evict(va);
+                    protected.remove(&va);
+                    entries.retain(|&k| k != va);
+                }
+                _ => {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    let k = entries[a % entries.len()];
+                    if !protected.remove(&k) {
+                        protected.insert(k);
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Differential: the two-heap SLRU policy must agree with a naive reference
+/// (full scans over segment/tick maps, argmin-tick demotion) on every
+/// victim pick and on segment membership after every op.
+#[test]
+fn prop_slru_heap_matches_naive_reference() {
+    use std::collections::HashMap;
+
+    struct Naive {
+        clock: u64,
+        seg: HashMap<ExpertKey, u8>,
+        tick: HashMap<ExpertKey, u64>,
+        budget: usize,
+    }
+    impl Naive {
+        fn place(&mut self, key: ExpertKey, s: u8) {
+            self.clock += 1;
+            self.seg.insert(key, s);
+            self.tick.insert(key, self.clock);
+        }
+        fn access(&mut self, key: ExpertKey) {
+            match self.seg.get(&key).copied() {
+                Some(1) => self.place(key, 1),
+                Some(0) => {
+                    self.place(key, 1);
+                    let protected = self.seg.values().filter(|&&s| s == 1).count();
+                    if protected > self.budget {
+                        let lru = self
+                            .seg
+                            .iter()
+                            .filter(|(_, &s)| s == 1)
+                            .map(|(k, _)| (self.tick[k], *k))
+                            .min()
+                            .expect("protected segment non-empty")
+                            .1;
+                        self.place(lru, 0);
+                    }
+                }
+                _ => {}
+            }
+        }
+        fn victim(&self, entries: &[ExpertKey], excl: Option<&DetSet<ExpertKey>>) -> ExpertKey {
+            entries
+                .iter()
+                .copied()
+                .filter(|e| !excl.is_some_and(|x| x.contains(e)))
+                .min_by_key(|e| {
+                    (
+                        self.seg.get(e).copied().unwrap_or(0),
+                        self.tick.get(e).copied().unwrap_or(0),
+                        *e,
+                    )
+                })
+                .expect("guard keeps at least one entry unprotected")
+        }
+        fn evict(&mut self, key: ExpertKey) {
+            self.seg.remove(&key);
+            self.tick.remove(&key);
+        }
+    }
+
+    let eam = Eam::new(4, 8);
+    forall_res(
+        0x51C0,
+        120,
+        |rng| (1 + rng.below(12), policy_ops(rng)),
+        |(cap, ops)| {
+            let cap = *cap;
+            let mut heap = SlruPolicy::new(cap);
+            let mut naive = Naive {
+                clock: 0,
+                seg: HashMap::new(),
+                tick: HashMap::new(),
+                // same formula as SlruPolicy::new
+                budget: (cap * 4 / 5).clamp(1, cap.max(1)),
+            };
+            let mut entries: Vec<ExpertKey> = Vec::new();
+            let mut protected: DetSet<ExpertKey> = DetSet::default();
+            let ctx = CacheCtx::new(&eam, 4);
+            for &(op, a, b, _c) in ops {
+                match op {
+                    0 => {
+                        if entries.is_empty() {
+                            continue;
+                        }
+                        let k = entries[a % entries.len()];
+                        heap.on_access(k);
+                        naive.access(k);
+                    }
+                    1 => {
+                        let k = ExpertKey::new(a % 4, b % 12);
+                        if !entries.contains(&k) {
+                            entries.push(k);
+                            heap.on_insert(k);
+                            naive.place(k, 0);
+                        }
+                    }
+                    2 => {
+                        if entries.is_empty() {
+                            continue;
+                        }
+                        let excl = if !protected.is_empty() && protected.len() < entries.len() {
+                            Some(&protected)
+                        } else {
+                            None
+                        };
+                        let va = naive.victim(&entries, excl);
+                        let vb = heap.victim(&entries, excl, &ctx);
+                        if va != vb {
+                            return Err(format!(
+                                "victims diverged: naive {va} vs heap {vb} \
+                                 ({} entries, {} protected)",
+                                entries.len(),
+                                protected.len()
+                            ));
+                        }
+                        naive.evict(va);
+                        heap.on_evict(va);
+                        protected.remove(&va);
+                        entries.retain(|&k| k != va);
+                    }
+                    _ => {
+                        if entries.is_empty() {
+                            continue;
+                        }
+                        let k = entries[a % entries.len()];
+                        if !protected.remove(&k) {
+                            protected.insert(k);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Differential: the heap-backed GDSF policy (sentinel resolution + re-key
+/// sweeps when the fetch cost changes between picks) must agree with a
+/// naive reference scanning `H = age-at-touch + freq * fetch_cost` — the
+/// per-pick cost varies, so the sweep path is exercised constantly.
+#[test]
+fn prop_gdsf_heap_matches_naive_reference_across_cost_changes() {
+    use std::collections::HashMap;
+
+    #[derive(Default)]
+    struct Naive {
+        age: f64,
+        freq: HashMap<ExpertKey, u64>,
+        snap: HashMap<ExpertKey, f64>,
+    }
+    impl Naive {
+        fn touch(&mut self, key: ExpertKey) {
+            *self.freq.entry(key).or_insert(0) += 1;
+            self.snap.insert(key, self.age);
+        }
+        fn h(&self, e: &ExpertKey, fc: f64) -> f64 {
+            self.snap.get(e).copied().unwrap_or(self.age)
+                + self.freq.get(e).copied().unwrap_or(0) as f64 * fc
+        }
+        fn victim(
+            &self,
+            entries: &[ExpertKey],
+            excl: Option<&DetSet<ExpertKey>>,
+            fc: f64,
+        ) -> (ExpertKey, f64) {
+            let key = entries
+                .iter()
+                .copied()
+                .filter(|e| !excl.is_some_and(|x| x.contains(e)))
+                .min_by(|x, y| {
+                    (self.h(x, fc), *x)
+                        .partial_cmp(&(self.h(y, fc), *y))
+                        .expect("H is finite")
+                })
+                .expect("guard keeps at least one entry unprotected");
+            (key, self.h(&key, fc))
+        }
+        fn evict(&mut self, key: ExpertKey, h: f64) {
+            self.age = h;
+            self.freq.remove(&key);
+            self.snap.remove(&key);
+        }
+    }
+
+    let eam = Eam::new(4, 8);
+    forall_res(0x6D5F, 120, policy_ops, |ops| {
+        let mut heap = GdsfPolicy::new();
+        let mut naive = Naive::default();
+        let mut entries: Vec<ExpertKey> = Vec::new();
+        let mut protected: DetSet<ExpertKey> = DetSet::default();
+        for &(op, a, b, c) in ops {
+            match op {
+                0 => {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    let k = entries[a % entries.len()];
+                    heap.on_access(k);
+                    naive.touch(k);
+                }
+                1 => {
+                    let k = ExpertKey::new(a % 4, b % 12);
+                    if !entries.contains(&k) {
+                        entries.push(k);
+                        heap.on_insert(k);
+                        naive.touch(k);
+                    }
+                }
+                2 => {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    // vary the backing-fetch cost between picks to force
+                    // whole-heap re-key sweeps
+                    let fc = [0.5, 1.0, 2.0, 4.0][c as usize % 4];
+                    let ctx = CacheCtx::new(&eam, 4).for_tier(CacheTier::Gpu, fc);
+                    let excl = if !protected.is_empty() && protected.len() < entries.len() {
+                        Some(&protected)
+                    } else {
+                        None
+                    };
+                    let (va, hv) = naive.victim(&entries, excl, fc);
+                    let vb = heap.victim(&entries, excl, &ctx);
+                    if va != vb {
+                        return Err(format!(
+                            "victims diverged at cost {fc}: naive {va} vs heap {vb} \
+                             ({} entries, {} protected)",
+                            entries.len(),
+                            protected.len()
+                        ));
+                    }
+                    naive.evict(va, hv);
+                    heap.on_evict(va);
+                    protected.remove(&va);
+                    entries.retain(|&k| k != va);
+                }
+                _ => {
+                    if entries.is_empty() {
+                        continue;
+                    }
+                    let k = entries[a % entries.len()];
+                    if !protected.remove(&k) {
+                        protected.insert(k);
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -7,6 +7,7 @@
 #   scripts/bench_compare.sh BENCH_router.before.json BENCH_router.json
 #   scripts/bench_compare.sh BENCH_prefill.before.json BENCH_prefill.json
 #   scripts/bench_compare.sh BENCH_faults.before.json BENCH_faults.json
+#   scripts/bench_compare.sh BENCH_tiers.before.json BENCH_tiers.json
 #
 # Values are ns/op for the perf_* benches and seconds / tokens-per-second
 # for BENCH_scheduler.json and BENCH_router.json (`*_p50_s`/`*_p99_s`/
@@ -25,7 +26,11 @@
 # `_tput` (ratio < 1 means the new run is better); `*_shed`/`*_timeout`/
 # `*_retries`/`*_demand_failures` are counts (lower is better, so
 # speedup > 1 means fewer); `failover_*_requests` must stay equal
-# between the clean and crashed runs. Rows present
+# between the clean and crashed runs. BENCH_tiers.json rows are per
+# (tier shape, GPU-tier policy) point: `<shape>_<policy>` is a GPU hit
+# ratio in [0,1] and behaves like `*_hit_*` (higher is better, so
+# ratio < 1 means the new run hits more); `<shape>_<policy>_stall_s` is
+# total demand-stall seconds (lower is better). Rows present
 # in only one file print with a '-' placeholder. `*_speedup_*` rows are
 # already ratios; the old/new columns still show them, the speedup column
 # then compares the ratios themselves.

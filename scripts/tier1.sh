@@ -63,6 +63,12 @@ echo "== perf_events (smoke mode -> BENCH_events.json)"
 # first host-time regression surface
 MOE_BENCH_SMOKE=1 cargo bench --bench perf_events
 
+echo "== perf_tiers (smoke mode -> BENCH_tiers.json)"
+# per-tier eviction policy zoo across memory-hierarchy shapes (incl. the
+# SSD IOPS point); asserts the activation-aware policy matches or beats
+# every non-oracle baseline on GPU hit ratio at the paper-default shape
+MOE_BENCH_SMOKE=1 cargo bench --bench perf_tiers
+
 echo "== determinism re-check: parallel differential suite at MOE_POOL_THREADS=1"
 # the suite pins explicit pool sizes internally (and now also the
 # scheduler differential: continuous at max_batch=1 == static, bitwise);
@@ -83,3 +89,4 @@ cat BENCH_router.json
 cat BENCH_prefill.json
 cat BENCH_faults.json
 cat BENCH_events.json
+cat BENCH_tiers.json
